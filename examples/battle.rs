@@ -1,0 +1,46 @@
+//! "The Battle" (paper §IV): SVD vs AWQ vs SpQR vs Random on one task,
+//! across the full protection-budget grid — a single-task version of the
+//! sweep, printed as the paper's table layout.
+//!
+//! ```sh
+//! cargo run --release --offline --example battle [task]
+//! ```
+
+use svdquant::calib::CalibStats;
+use svdquant::coordinator::sweep::{run_sweep, SweepConfig};
+use svdquant::coordinator::Artifacts;
+use svdquant::model::Engine;
+use svdquant::report;
+use svdquant::runtime::Runtime;
+use svdquant::saliency::Method;
+
+fn main() -> anyhow::Result<()> {
+    let task = std::env::args().nth(1).unwrap_or_else(|| "rte".to_string());
+    let art = Artifacts::open("artifacts")?;
+    anyhow::ensure!(art.tasks().contains(&task), "unknown task {task}");
+    let rt = Runtime::cpu()?;
+
+    // show what the data-aware baselines consume and SVD doesn't
+    let ckpt = art.checkpoint(&task)?;
+    let calib_data = art.dataset(&task, "calib")?;
+    let engine = Engine::new(art.model_cfg, ckpt)?;
+    let stats = CalibStats::collect(&engine, &calib_data, art.calib_samples(), 16)?;
+    let tokens: usize = stats.layers.values().map(|l| l.rows).sum::<usize>()
+        / stats.layers.len().max(1);
+    println!(
+        "calibration for AWQ/SpQR: {} sequences (~{} tokens/layer) — \
+         the SVD method uses none of it\n",
+        stats.samples, tokens
+    );
+
+    let out = std::path::PathBuf::from("results");
+    let mut cfg = SweepConfig::paper_defaults(&art, &out);
+    cfg.tasks = vec![task.clone()];
+    cfg.methods = vec![Method::Random, Method::Awq, Method::Spqr, Method::Svd];
+    let res = run_sweep(&art, &rt, &cfg)?;
+
+    println!("\n{}", report::accuracy_table(&res, &task, &cfg.budgets));
+    println!("{}", report::fig1_panel(&res, &task, &cfg.budgets));
+    println!("{}", report::fig2_chart(&res));
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Fig. 2 deep-dive: *is SVD finding the same weights as the Hessian?*
+//!
+//! Reproduces the paper's overlap analysis per layer (not just the
+//! aggregate): IoU of the SVD-selected index set vs AWQ and SpQR at each
+//! budget, plus the exact-vs-randomized SVD agreement ablation
+//! (DESIGN.md §5).
+//!
+//! ```sh
+//! cargo run --release --offline --example overlap_analysis [task]
+//! ```
+
+use svdquant::calib::CalibStats;
+use svdquant::coordinator::{score_layer, Artifacts, PreserveSpec};
+use svdquant::model::Engine;
+use svdquant::saliency::{iou, select_topk, Method, SvdScoreMode};
+
+fn main() -> anyhow::Result<()> {
+    let task = std::env::args().nth(1).unwrap_or_else(|| "mrpc".to_string());
+    let art = Artifacts::open("artifacts")?;
+    let ckpt = art.checkpoint(&task)?;
+    let calib_data = art.dataset(&task, "calib")?;
+    let engine = Engine::new(art.model_cfg, ckpt)?;
+    let calib = CalibStats::collect(&engine, &calib_data, art.calib_samples(), 16)?;
+    let ckpt = engine.params();
+
+    let spec_of = |m: Method| PreserveSpec {
+        method: m,
+        spqr_damp: art.spqr_damp(),
+        ..Default::default()
+    };
+
+    let budgets = [16usize, 256, 4096];
+    println!("per-layer IoU of SVD selections vs baselines ({task})\n");
+    println!("{:<22} {:>6}  {:>8} {:>8} {:>10}", "layer", "k", "vs AWQ", "vs SpQR", "rsvd/exact");
+    let names = art.model_cfg.quantizable_names();
+    for name in &names {
+        let w = ckpt.get(name)?;
+        let svd = score_layer(name, w, &spec_of(Method::Svd), None)?;
+        let svd_exact = {
+            let spec = PreserveSpec {
+                method: Method::Svd,
+                svd_mode: SvdScoreMode::Exact,
+                ..Default::default()
+            };
+            score_layer(name, w, &spec, None)?
+        };
+        let awq = score_layer(name, w, &spec_of(Method::Awq), Some(&calib))?;
+        let spqr = score_layer(name, w, &spec_of(Method::Spqr), Some(&calib))?;
+        for &k in &budgets {
+            let s_svd = select_topk(&svd, k);
+            let i_awq = iou(&s_svd, &select_topk(&awq, k));
+            let i_spqr = iou(&s_svd, &select_topk(&spqr, k));
+            let i_exact = iou(&s_svd, &select_topk(&svd_exact, k));
+            println!(
+                "{:<22} {:>6}  {:>8.3} {:>8.3} {:>10.3}",
+                name, k, i_awq, i_spqr, i_exact
+            );
+        }
+    }
+    println!(
+        "\nreading: high vs-SpQR + low vs-AWQ = the paper's claim that \
+         principal structure proxies Hessian sensitivity, not activation \
+         magnitude. rsvd/exact near 1.0 justifies the O(r·d²) fast path."
+    );
+    Ok(())
+}

@@ -1,0 +1,260 @@
+"""AOT build entrypoint: data → train → export. Runs ONCE under
+`make artifacts`; nothing in python/ is imported at runtime.
+
+Outputs (under --out, default ../artifacts):
+
+    data/<task>_{train,dev,calib}.qtz     datasets (tensorfile)
+    ckpt/<task>.qtz                       trained FP32 parameters
+    hlo/model_<task>.hlo.txt              fwd logits, plain-jnp path
+    hlo/model_<task>_pallas.hlo.txt       fwd logits, Pallas-kernel path
+    hlo/fake_quant.hlo.txt                standalone L1 kernel artifact
+    hlo/svd_score.hlo.txt                 standalone L1 kernel artifact
+    parity/vectors.qtz                    oracle vectors for the rust tests
+    manifest.json                         shapes, arg order, config, hashes
+
+Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the `xla` rust crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+The model HLOs take (input_ids i32[B,S], attention_mask i32[B,S], <params in
+model.param_names() order>) and return a 1-tuple (logits f32[B,classes]) —
+weights are *arguments*, so the rust side feeds arbitrarily quantized
+parameters through one compiled executable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as datamod
+from . import tensorfile
+from .config import (
+    BUDGETS, CALIB_SAMPLES, CLIP_SIGMA, MODEL, QUANT_BITS, SPQR_DAMP,
+    SVD_RANK, TASKS,
+)
+from .kernels import ref
+from .kernels.fake_quant import fake_quant
+from .kernels.svd_score import svd_score
+from .model import forward, param_names
+from .train import train_task
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sha(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def export_model_hlo(params, cfg, out_path: str, use_pallas: bool, batch: int):
+    names = param_names(cfg)
+
+    def fn(ids, mask, *flat):
+        p = dict(zip(names, flat))
+        return (forward(p, ids, mask, cfg, use_pallas=use_pallas),)
+
+    specs = [
+        jax.ShapeDtypeStruct((batch, cfg.max_len), jnp.int32),
+        jax.ShapeDtypeStruct((batch, cfg.max_len), jnp.int32),
+    ] + [jax.ShapeDtypeStruct(params[n].shape, params[n].dtype) for n in names]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return text
+
+
+def export_kernel_hlos(out_dir: str, cfg):
+    """Standalone L1 kernel artifacts (used by rust parity tests)."""
+    h, f = cfg.hidden, cfg.ffn
+    # fake_quant over one ffn-shaped matrix
+    fq = jax.jit(
+        lambda w, c, s: (fake_quant(w, c, s, bits=QUANT_BITS),)
+    ).lower(
+        jax.ShapeDtypeStruct((f, h), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    with open(os.path.join(out_dir, "fake_quant.hlo.txt"), "w") as fh:
+        fh.write(to_hlo_text(fq))
+    # svd_score from rank-r factors
+    sv = jax.jit(lambda u, s, v: (svd_score(u, s, v),)).lower(
+        jax.ShapeDtypeStruct((f, SVD_RANK), jnp.float32),
+        jax.ShapeDtypeStruct((SVD_RANK,), jnp.float32),
+        jax.ShapeDtypeStruct((h, SVD_RANK), jnp.float32),
+    )
+    with open(os.path.join(out_dir, "svd_score.hlo.txt"), "w") as fh:
+        fh.write(to_hlo_text(sv))
+
+
+def export_parity_vectors(out_path: str):
+    """Small oracle tensors the rust test-suite replays bit-for-bit
+    (rust/tests/parity.rs): quantization, scoring, and top-k semantics."""
+    rng = np.random.default_rng(0xDEC0DE)
+    w = rng.normal(0, 0.05, size=(96, 160)).astype(np.float32)
+    w[3, 7] = 0.9  # planted outliers exercise the clip path
+    w[60, 100] = -0.8
+    clip, scale = ref.quant_params(jnp.asarray(w), QUANT_BITS, CLIP_SIGMA)
+    deq = ref.fake_quant_ref(jnp.asarray(w), clip, scale, QUANT_BITS)
+    svd_sc = ref.svd_score_ref(jnp.asarray(w), SVD_RANK)
+
+    x = rng.normal(0, 1.0, size=(64, 160)).astype(np.float32)
+    colnorm = np.linalg.norm(x, axis=0).astype(np.float32)
+    awq_sc = ref.awq_score_ref(jnp.asarray(w), jnp.asarray(colnorm))
+    xtx = (x.T @ x).astype(np.float32)
+    spqr_sc = ref.spqr_score_ref(
+        jnp.asarray(w), jnp.asarray(xtx), x.shape[0], SPQR_DAMP
+    )
+    k = 64
+    mask = ref.topk_mask(svd_sc, k)
+    preserved = ref.preserve_ref(jnp.asarray(w), mask, clip, scale, QUANT_BITS)
+
+    tensorfile.write(
+        out_path,
+        {
+            "w": w,
+            "x": x,
+            "colnorm": colnorm,
+            "xtx": xtx,
+            "clip": np.asarray(clip, np.float32).reshape(1),
+            "scale": np.asarray(scale, np.float32).reshape(1),
+            "deq": np.asarray(deq),
+            "svd_score": np.asarray(svd_sc),
+            "awq_score": np.asarray(awq_sc),
+            "spqr_score": np.asarray(spqr_sc),
+            "topk_mask": np.asarray(mask).astype(np.uint8),
+            "preserved": np.asarray(preserved),
+        },
+        meta={
+            "bits": QUANT_BITS,
+            "clip_sigma": CLIP_SIGMA,
+            "svd_rank": SVD_RANK,
+            "spqr_damp": SPQR_DAMP,
+            "n_calib_rows": x.shape[0],
+            "k": k,
+        },
+    )
+
+
+def build(out_dir: str, tasks, skip_train: bool = False, quick: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    for sub in ("data", "ckpt", "hlo", "parity"):
+        os.makedirs(os.path.join(out_dir, sub), exist_ok=True)
+
+    manifest = {
+        "model": MODEL.to_dict(),
+        "param_names": param_names(MODEL),
+        "budgets": BUDGETS,
+        "svd_rank": SVD_RANK,
+        "quant_bits": QUANT_BITS,
+        "clip_sigma": CLIP_SIGMA,
+        "spqr_damp": SPQR_DAMP,
+        "calib_samples": CALIB_SAMPLES,
+        "tasks": {},
+        "files": {},
+    }
+
+    for name in tasks:
+        task = TASKS[name]
+        print(f"=== {name}: generating data ===", flush=True)
+        splits = datamod.generate_task(name)
+        for split, s in splits.items():
+            path = os.path.join(out_dir, "data", f"{name}_{split}.qtz")
+            tensorfile.write(
+                path,
+                {
+                    "input_ids": s.input_ids,
+                    "attention_mask": s.attention_mask,
+                    "labels": s.labels,
+                },
+                meta={"task": name, "split": split, "n": int(s.labels.shape[0])},
+            )
+
+        ckpt_path = os.path.join(out_dir, "ckpt", f"{name}.qtz")
+        if skip_train and os.path.exists(ckpt_path):
+            print(f"=== {name}: reusing checkpoint ===", flush=True)
+            arrays, meta = tensorfile.read(ckpt_path)
+            params = {k: jnp.asarray(v) for k, v in arrays.items()}
+            stats = meta.get("stats", {})
+        else:
+            print(f"=== {name}: training ===", flush=True)
+            train_cfg = task
+            if quick:
+                import dataclasses
+
+                train_cfg = dataclasses.replace(task, train_steps=30)
+            params, stats = train_task(train_cfg, splits)
+            tensorfile.write(
+                ckpt_path,
+                {k: np.asarray(v) for k, v in params.items()},
+                meta={"task": name, "stats": stats, "model": MODEL.to_dict()},
+            )
+
+        print(f"=== {name}: exporting HLO ===", flush=True)
+        t0 = time.time()
+        hlo_path = os.path.join(out_dir, "hlo", f"model_{name}.hlo.txt")
+        export_model_hlo(params, MODEL, hlo_path, use_pallas=False,
+                         batch=MODEL.export_batch)
+        # pallas variant at small batch: parity proof, not the sweep engine
+        hlo_pallas = os.path.join(out_dir, "hlo", f"model_{name}_pallas.hlo.txt")
+        export_model_hlo(params, MODEL, hlo_pallas, use_pallas=True, batch=8)
+        print(f"    ({time.time()-t0:.0f}s)", flush=True)
+        manifest["tasks"][name] = {
+            "stats": stats,
+            "paper_fp32": task.paper_fp32,
+            "paper_q4_floor": task.paper_q4_floor,
+            "n_train": task.n_train,
+            "n_dev": task.n_dev,
+            "n_calib": task.n_calib,
+        }
+
+    print("=== kernel artifacts + parity vectors ===", flush=True)
+    export_kernel_hlos(os.path.join(out_dir, "hlo"), MODEL)
+    export_parity_vectors(os.path.join(out_dir, "parity", "vectors.qtz"))
+
+    for root, _, files in os.walk(out_dir):
+        for fn in files:
+            p = os.path.join(root, fn)
+            rel = os.path.relpath(p, out_dir)
+            if rel != "manifest.json":
+                manifest["files"][rel] = _sha(p)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print("artifacts complete:", out_dir, flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--tasks", default=",".join(TASKS))
+    ap.add_argument("--skip-train", action="store_true",
+                    help="reuse existing checkpoints if present")
+    ap.add_argument("--quick", action="store_true",
+                    help="30-step training (CI smoke only)")
+    args = ap.parse_args()
+    build(os.path.abspath(args.out), args.tasks.split(","),
+          skip_train=args.skip_train, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

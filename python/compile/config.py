@@ -1,0 +1,91 @@
+"""Model + task configuration shared by data generation, training and AOT
+export. The rust side reads the same values from artifacts/manifest.json —
+change them here, re-run `make artifacts`, and everything stays consistent.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """DistilBERT-style encoder (post-LN, GELU FFN, learned positions)."""
+
+    vocab_size: int = 2048
+    max_len: int = 48
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 4
+    ffn: int = 1024
+    n_classes: int = 2
+    # batch size baked into the exported HLO (shape-static executable);
+    # the rust eval harness pads the last batch.
+    export_batch: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+
+@dataclass(frozen=True)
+class TaskConfig:
+    """One synthetic GLUE-analogue task."""
+
+    name: str
+    n_train: int
+    n_dev: int
+    n_calib: int
+    label_noise: float
+    train_steps: int
+    lr: float
+    seed: int
+    # paper reference points (FP32 ceiling / Q4 floor) for EXPERIMENTS.md
+    paper_fp32: float = 0.0
+    paper_q4_floor: float = 0.0
+
+
+# Train-set sizes mirror the real GLUE splits in spirit: RTE is deliberately
+# small (the paper's "regularization effect" on RTE depends on mild
+# overfitting), QNLI largest. Dev sizes match the real dev splits.
+TASKS: Dict[str, TaskConfig] = {
+    "mrpc": TaskConfig(
+        name="mrpc", n_train=6000, n_dev=408, n_calib=128,
+        label_noise=0.08, train_steps=500, lr=3e-4, seed=101,
+        paper_fp32=0.8578, paper_q4_floor=0.8358,
+    ),
+    "rte": TaskConfig(
+        name="rte", n_train=2490, n_dev=277, n_calib=128,
+        label_noise=0.08, train_steps=600, lr=3e-4, seed=202,
+        paper_fp32=0.6570, paper_q4_floor=0.6245,
+    ),
+    "qnli": TaskConfig(
+        name="qnli", n_train=8000, n_dev=1000, n_calib=128,
+        label_noise=0.05, train_steps=500, lr=3e-4, seed=303,
+        paper_fp32=0.8849, paper_q4_floor=0.8775,
+    ),
+}
+
+TASK_NAMES: List[str] = list(TASKS)
+
+MODEL = ModelConfig()
+
+# Paper §IV-B protection budgets (salient weights kept FP32, per linear layer)
+BUDGETS: List[int] = [1, 16, 64, 256, 1024, 4096]
+
+# Paper §III-A4: rank of the principal reconstruction (PiSSA convention)
+SVD_RANK: int = 8
+
+# Paper §III-B: symmetric linear quantization of the residual
+QUANT_BITS: int = 4
+CLIP_SIGMA: float = 2.5  # |w| clipped at 2.5·std(W) before scale computation
+
+# Paper §III-A3: damping for the SpQR Hessian inverse
+SPQR_DAMP: float = 0.01
+
+# Paper §IV-B: calibration samples for AWQ / SpQR
+CALIB_SAMPLES: int = 128

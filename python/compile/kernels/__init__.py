@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered into HLO by aot.py)."""
+from . import ref  # noqa: F401
+from .fake_quant import fake_quant  # noqa: F401
+from .svd_score import svd_score  # noqa: F401
+from .salient_matmul import salient_matmul  # noqa: F401
+from .attention import attention  # noqa: F401

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: fused masked SDPA for the encoder (one block per
+(batch·head) grid cell).
+
+Used by the `pallas` variant of the L2 model (model.py) so that the exported
+model_*_pallas.hlo.txt artifact exercises a Pallas kernel *inside* the same
+HLO the rust runtime executes — the L1↔L2↔L3 composition proof.
+
+Sequence length here is small (max_len = 48), so one grid cell holds the
+whole (s, dh) problem in VMEM and the softmax needs no online/flash
+decomposition: VMEM/step = 3·s·dh·4 + s²·4 + s·dh·4 ≈ 58 KiB at s=48,
+dh=64. On a real TPU with long sequences this kernel is where a flash-style
+k-loop would go; the paper's workloads (GLUE, ≤128 tokens) never need it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, sm_scale: float):
+    q = q_ref[0]  # [s, dh]
+    k = k_ref[0]
+    v = v_ref[0]
+    mask = m_ref[0]  # [s]
+    logits = (
+        jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * sm_scale
+    )
+    logits = jnp.where(mask[None, :] > 0, logits, -1e9)
+    p = jax.nn.softmax(logits, axis=-1)
+    o_ref[0] = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@jax.jit
+def attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Masked multi-head attention.
+
+    q,k,v: [bh, s, dh] (batch·heads flattened), mask: [bh, s] {0,1} f32
+    → [bh, s, dh].
+    """
+    bh, s, dh = q.shape
+    sm_scale = 1.0 / (dh**0.5)
+    return pl.pallas_call(
+        functools.partial(_kernel, sm_scale=sm_scale),
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, s, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, s), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, dh), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), jnp.float32),
+        interpret=True,
+    )(
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        mask.astype(jnp.float32),
+    )

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: simulated symmetric quantize→dequantize with clipping.
+
+Paper §III-B (eq. 8–9): the residual component Q is quantized to b bits with
+a per-tensor scale derived from the clipped max. The clip threshold and the
+scale are *global* reductions, so they are computed once on the host side
+(`quant_params` in ref.py / aot callers) and fed to the kernel as scalars in
+SMEM — the kernel itself is a purely elementwise HBM-bandwidth-bound pass
+over W, tiled so each (block_m, block_n) tile lives in VMEM.
+
+TPU mapping (DESIGN.md §6): one input tile + one output tile per grid step,
+VMEM footprint = 2·bm·bn·4 bytes (default 2·128·256·4 = 256 KiB), no MXU use
+— the roofline is HBM bandwidth and the kernel reads W exactly once.
+
+interpret=True everywhere in this repo: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; numerics are identical (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(params_ref, w_ref, o_ref, *, qmax: float):
+    clip = params_ref[0]
+    scale = params_ref[1]
+    w = w_ref[...]
+    wc = jnp.clip(w, -clip, clip)
+    q = jnp.clip(jnp.round(wc / scale), -qmax, qmax)
+    o_ref[...] = q * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_m", "block_n"))
+def fake_quant(
+    w: jnp.ndarray,
+    clip: jnp.ndarray,
+    scale: jnp.ndarray,
+    bits: int = 4,
+    block_m: int = 128,
+    block_n: int = 256,
+) -> jnp.ndarray:
+    """Quantize-dequantize `w` (2-D, f32) to `bits` with clipping.
+
+    clip/scale are scalars (see ref.quant_params). Shapes that do not divide
+    the block are handled by Pallas' implicit padding: the padded lanes are
+    written but never read back (out_shape == w.shape).
+    """
+    assert w.ndim == 2, "fake_quant expects a weight matrix"
+    m, n = w.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    params = jnp.stack([clip.astype(w.dtype), scale.astype(w.dtype)])
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        functools.partial(_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            # scalar params are replicated to every grid step
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=True,
+    )(params, w)

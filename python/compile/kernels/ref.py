@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every Pallas kernel (and for the rust quantizer).
+
+These are the single source of truth for numerics: pytest checks each Pallas
+kernel against its oracle here, and the rust test-suite checks the rust
+implementations against values exported from these functions (see
+aot.py --parity which emits artifacts/parity/vectors.qtz).
+
+Conventions (paper §III):
+    W ≈ S + Q      S: top-k salient entries kept FP32 (dense-with-zeros here)
+                   Q: symmetric b-bit quantization of the residual
+    scale = max|clip(W)| / (2^{b-1} - 1), per-tensor   (eq. 8–9)
+    clip at CLIP_SIGMA · std(W)                         (§III-B)
+    Score_SVD(w_ij) = |(U_r Σ_r V_rᵀ)_ij|, r = 8        (eq. 5–7)
+    Score_AWQ(w_ij) = |w_ij| · ‖X_j‖₂                   (eq. 3)
+    Score_SpQR(w_ij) = w_ij² / [H⁻¹]_jj, H = (2/N)XᵀX + λ·mean(diag)·I  (eq. 4)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_params(w: jnp.ndarray, bits: int = 4, clip_sigma: float = 2.5):
+    """(clip threshold, scale) for symmetric linear quantization, eq. 8-9."""
+    sigma = jnp.std(w)
+    clip = clip_sigma * sigma
+    wc = jnp.clip(w, -clip, clip)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.max(jnp.abs(wc)) / qmax
+    # degenerate all-zero matrix: scale 1 avoids 0/0 and round-trips zeros
+    scale = jnp.where(scale > 0, scale, 1.0)
+    return clip, scale
+
+
+def fake_quant_ref(
+    w: jnp.ndarray, clip: jnp.ndarray, scale: jnp.ndarray, bits: int = 4
+) -> jnp.ndarray:
+    """Simulated quantize→dequantize of a weight tensor (eq. 8)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    wc = jnp.clip(w, -clip, clip)
+    q = jnp.clip(jnp.round(wc / scale), -qmax, qmax)
+    return q * scale
+
+
+def svd_score_ref(w: jnp.ndarray, rank: int = 8) -> jnp.ndarray:
+    """|rank-r principal reconstruction| of w (eq. 5-7)."""
+    u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+    r = min(rank, s.shape[0])
+    w_pri = (u[:, :r] * s[:r]) @ vt[:r, :]
+    return jnp.abs(w_pri)
+
+
+def svd_score_from_factors_ref(
+    u_r: jnp.ndarray, s_r: jnp.ndarray, v_r: jnp.ndarray
+) -> jnp.ndarray:
+    """Score map given precomputed factors: |U_r diag(s) V_rᵀ|.
+
+    (u_r: [dout, r], s_r: [r], v_r: [din, r]) — the shape the Pallas kernel
+    consumes; the SVD factorization itself is not a kernel-friendly op.
+    """
+    return jnp.abs((u_r * s_r) @ v_r.T)
+
+
+def awq_score_ref(w: jnp.ndarray, x_colnorm: jnp.ndarray) -> jnp.ndarray:
+    """AWQ saliency |w_ij|·‖X_j‖₂ (eq. 3). x_colnorm: [din]."""
+    return jnp.abs(w) * x_colnorm[None, :]
+
+
+def spqr_score_ref(
+    w: jnp.ndarray, xtx: jnp.ndarray, n: int, damp: float = 0.01
+) -> jnp.ndarray:
+    """SpQR/OBS saliency w²/[H⁻¹]_jj (eq. 4) with damped empirical Hessian."""
+    d = xtx.shape[0]
+    h = (2.0 / n) * xtx
+    h = h + damp * jnp.mean(jnp.diag(h)) * jnp.eye(d, dtype=w.dtype)
+    hinv = jnp.linalg.inv(h)
+    return w**2 / jnp.diag(hinv)[None, :]
+
+
+def topk_mask(score: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask of the k highest-scoring entries (ties broken by index)."""
+    flat = score.reshape(-1)
+    k = min(k, flat.shape[0])
+    idx = jnp.argsort(-flat, stable=True)[:k]
+    mask = jnp.zeros_like(flat, dtype=bool).at[idx].set(True)
+    return mask.reshape(score.shape)
+
+
+def preserve_ref(
+    w: jnp.ndarray,
+    mask: jnp.ndarray,
+    clip: jnp.ndarray,
+    scale: jnp.ndarray,
+    bits: int = 4,
+) -> jnp.ndarray:
+    """W ≈ S + Q: salient entries exact, the rest fake-quantized (eq. 1)."""
+    return jnp.where(mask, w, fake_quant_ref(w, clip, scale, bits))
+
+
+def salient_matmul_ref(
+    x: jnp.ndarray,
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    s_dense: jnp.ndarray,
+    mask: jnp.ndarray,
+) -> jnp.ndarray:
+    """y = x @ W_effᵀ with W_eff = (1-mask)·scale·q + mask·s_dense.
+
+    x: [m, din], q: int8 codes [dout, din], scale: [dout] (per-row),
+    s_dense: salient FP32 values (0 off-mask), mask: {0,1} f32.
+    """
+    w_eff = (1.0 - mask) * (scale[:, None] * q.astype(x.dtype)) + mask * s_dense
+    return x @ w_eff.T
+
+
+def attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Masked scaled-dot-product attention for one (batch, head) slice.
+
+    q,k,v: [s, dh]; mask: [s] with 1=real token, 0=pad.
+    """
+    dh = q.shape[-1]
+    logits = (q @ k.T) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    neg = jnp.asarray(-1e9, q.dtype)
+    logits = jnp.where(mask[None, :] > 0, logits, neg)
+    p = jax.nn.softmax(logits, axis=-1)
+    return p @ v

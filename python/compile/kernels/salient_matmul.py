@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: mixed-precision linear  y = x @ ((1-M)·s·Q + M·S)ᵀ.
+
+The deploy-time hot path of the paper's scheme (eq. 1): the weight is stored
+as 4-bit codes Q (int8 container here; 2-nibble packing is a storage detail
+handled by the rust engine) plus a sparse FP32 salient component S. The
+kernel dequantizes per-tile and applies the salient entries as a dense
+mask-add *on the tile* before the MXU contraction.
+
+Why mask-add instead of scatter (DESIGN.md §6): a sparse scatter into the
+systolic pipeline stalls the MXU; merging S as `(1-M)·deq + M·S` keeps the
+contraction dense and the epilogue elementwise, which is exactly the trade
+AWQ/SpQR inference kernels make on GPU (dense compute + sparse side-channel
+folded in). k ≤ 4096 per layer → M is extremely sparse, but the tile-level
+mask-add costs the same regardless of sparsity and never branches.
+
+Grid: (m-tiles, dout-tiles, din-tiles); the f32 accumulator tile lives in
+VMEM across the din-contraction (out_spec index ignores the k axis, so the
+same output block is revisited — standard Pallas accumulation pattern).
+VMEM/step ≈ bm·bk·4 + 3·bn·bk·4 + bm·bn·4 + bn·4 bytes
+(defaults 64·256·4 + 3·128·256·4 + 64·128·4 + 128·4 ≈ 480 KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, scale_ref, s_ref, m_ref, o_ref, *, k_steps: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [bm, bk] f32
+    q = q_ref[...].astype(jnp.float32)  # [bn, bk] codes
+    scale = scale_ref[...]  # [bn] per-row scales
+    s = s_ref[...]  # [bn, bk] salient values (0 off-mask)
+    m = m_ref[...]  # [bn, bk] {0,1}
+    w_eff = (1.0 - m) * (scale[:, None] * q) + m * s
+    o_ref[...] += jax.lax.dot_general(
+        x, w_eff, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def salient_matmul(
+    x: jnp.ndarray,
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    s_dense: jnp.ndarray,
+    mask: jnp.ndarray,
+    block_m: int = 64,
+    block_n: int = 128,
+    block_k: int = 256,
+) -> jnp.ndarray:
+    """Mixed-precision linear layer.
+
+    x: [m, din] f32, q: [dout, din] int8 codes, scale: [dout] f32,
+    s_dense: [dout, din] f32 (salient values, 0 elsewhere),
+    mask: [dout, din] f32 {0,1} → y: [m, dout] f32.
+    """
+    m, din = x.shape
+    dout, din2 = q.shape
+    assert din == din2 and scale.shape == (dout,)
+    assert s_dense.shape == q.shape and mask.shape == q.shape
+    bm, bn, bk = min(block_m, m), min(block_n, dout), min(block_k, din)
+    # The contraction axis must divide bk exactly: the accumulating
+    # multi-k-step pattern is not safe under implicit block padding
+    # (observed NaN/garbage on the ragged final block in interpret mode).
+    # Zero-pad explicitly — zero columns contribute nothing to the dot.
+    if din % bk != 0:
+        pad = bk - din % bk
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        s_dense = jnp.pad(s_dense, ((0, 0), (0, pad)))
+        # padded mask = 1 with s=0 keeps w_eff exactly 0 there
+        mask = jnp.pad(mask, ((0, 0), (0, pad)), constant_values=1.0)
+        din = din + pad
+    k_steps = pl.cdiv(din, bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(dout, bn), k_steps)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, dout), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), q, scale.astype(jnp.float32), s_dense, mask)

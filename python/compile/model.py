@@ -1,0 +1,212 @@
+"""L2: DistilBERT-style encoder classifier in JAX.
+
+Two execution paths over identical parameters:
+
+* ``forward(..., use_pallas=False)`` — plain jnp. Used for training and for
+  the fast exported artifact (model_<task>.hlo.txt) that the rust sweep
+  executes thousands of times.
+* ``forward(..., use_pallas=True)`` — attention runs through the L1 Pallas
+  kernel (kernels/attention.py) and every quantizable linear runs through
+  kernels/salient_matmul.py with a trivial (all-quantized-bits-off) salient
+  mask when no quantization is requested. Exported as
+  model_<task>_pallas.hlo.txt; the rust parity test checks both executables
+  agree on the same batch — the L1↔L2↔L3 composition proof.
+
+Architecture (post-LN, matching distilbert-base-uncased):
+    emb = LN(tok_emb[ids] + pos_emb[:s])
+    per layer:  h = LN(h + MHSA(h));  h = LN(h + FFN(h)),  FFN = GELU
+    head: CLS hidden → pre_classifier (h→h, ReLU) → classifier (h→classes)
+
+Parameters live in a flat {name: array} dict — the same names appear in the
+checkpoint .qtz files, in artifacts/manifest.json (as the HLO argument
+order), and in the rust engine. See param_names().
+
+Quantizable matrices (the paper's "per linear layer" budget applies to
+each): layer{i}.{wq,wk,wv,wo,wf1,wf2} + pre_classifier.w + classifier.w.
+Embeddings, biases and LayerNorms stay FP32, as in the paper's setup.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ------------------------------------------------------------- param layout
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Canonical parameter order — also the HLO argument order after
+    (input_ids, attention_mask)."""
+    names = ["tok_emb", "pos_emb", "emb_ln_g", "emb_ln_b"]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        names += [
+            p + "wq", p + "bq", p + "wk", p + "bk", p + "wv", p + "bv",
+            p + "wo", p + "bo", p + "ln1_g", p + "ln1_b",
+            p + "wf1", p + "bf1", p + "wf2", p + "bf2",
+            p + "ln2_g", p + "ln2_b",
+        ]
+    names += ["pre_classifier.w", "pre_classifier.b", "classifier.w", "classifier.b"]
+    return names
+
+
+def quantizable_names(cfg: ModelConfig) -> List[str]:
+    """The linear weight matrices subject to the paper's per-layer budget."""
+    names = []
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        names += [p + "wq", p + "wk", p + "wv", p + "wo", p + "wf1", p + "wf2"]
+    names += ["pre_classifier.w", "classifier.w"]
+    return names
+
+
+def init_params(cfg: ModelConfig, seed: int) -> Params:
+    """Truncated-normal-ish init (scaled normal), biases zero, LN unit."""
+    rng = np.random.default_rng(seed)
+
+    def dense(dout, din):
+        return jnp.asarray(
+            rng.normal(0.0, 0.02, size=(dout, din)).astype(np.float32)
+        )
+
+    h, f = cfg.hidden, cfg.ffn
+    p: Params = {
+        "tok_emb": jnp.asarray(
+            rng.normal(0.0, 0.02, size=(cfg.vocab_size, h)).astype(np.float32)
+        ),
+        "pos_emb": jnp.asarray(
+            rng.normal(0.0, 0.02, size=(cfg.max_len, h)).astype(np.float32)
+        ),
+        "emb_ln_g": jnp.ones(h, jnp.float32),
+        "emb_ln_b": jnp.zeros(h, jnp.float32),
+    }
+    for i in range(cfg.layers):
+        pre = f"layer{i}."
+        p[pre + "wq"] = dense(h, h)
+        p[pre + "bq"] = jnp.zeros(h, jnp.float32)
+        p[pre + "wk"] = dense(h, h)
+        p[pre + "bk"] = jnp.zeros(h, jnp.float32)
+        p[pre + "wv"] = dense(h, h)
+        p[pre + "bv"] = jnp.zeros(h, jnp.float32)
+        p[pre + "wo"] = dense(h, h)
+        p[pre + "bo"] = jnp.zeros(h, jnp.float32)
+        p[pre + "ln1_g"] = jnp.ones(h, jnp.float32)
+        p[pre + "ln1_b"] = jnp.zeros(h, jnp.float32)
+        p[pre + "wf1"] = dense(f, h)
+        p[pre + "bf1"] = jnp.zeros(f, jnp.float32)
+        p[pre + "wf2"] = dense(h, f)
+        p[pre + "bf2"] = jnp.zeros(h, jnp.float32)
+        p[pre + "ln2_g"] = jnp.ones(h, jnp.float32)
+        p[pre + "ln2_b"] = jnp.zeros(h, jnp.float32)
+    p["pre_classifier.w"] = dense(h, h)
+    p["pre_classifier.b"] = jnp.zeros(h, jnp.float32)
+    p["classifier.w"] = dense(cfg.n_classes, h)
+    p["classifier.b"] = jnp.zeros(cfg.n_classes, jnp.float32)
+    return p
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _ln(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-12):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, use_pallas: bool):
+    """y = x @ wᵀ + b. The pallas path routes through salient_matmul with an
+    identity configuration (mask=1 everywhere, s_dense=w): the kernel then
+    computes exactly x@wᵀ while exercising the deploy-time code path."""
+    if not use_pallas:
+        return x @ w.T + b
+    from .kernels.salient_matmul import salient_matmul
+
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    dout = w.shape[0]
+    q = jnp.zeros(w.shape, jnp.int8)
+    scale = jnp.ones((dout,), jnp.float32)
+    mask = jnp.ones(w.shape, jnp.float32)
+    y = salient_matmul(x2, q, scale, w, mask)
+    return y.reshape(*shp[:-1], dout) + b
+
+
+def _attention_block(
+    h: jnp.ndarray, mask: jnp.ndarray, p: Params, pre: str, cfg: ModelConfig,
+    use_pallas: bool,
+) -> jnp.ndarray:
+    b, s, d = h.shape
+    nh, dh = cfg.heads, cfg.head_dim
+    q = _linear(h, p[pre + "wq"], p[pre + "bq"], use_pallas)
+    k = _linear(h, p[pre + "wk"], p[pre + "bk"], use_pallas)
+    v = _linear(h, p[pre + "wv"], p[pre + "bv"], use_pallas)
+
+    def split(t):
+        return t.reshape(b, s, nh, dh).transpose(0, 2, 1, 3).reshape(b * nh, s, dh)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    mh = jnp.repeat(mask.astype(jnp.float32), nh, axis=0)  # [b*nh, s]
+    if use_pallas:
+        from .kernels.attention import attention as attn_kernel
+
+        ctx = attn_kernel(qh, kh, vh, mh)
+    else:
+        logits = jnp.einsum("bqd,bkd->bqk", qh, kh) / jnp.sqrt(
+            jnp.asarray(dh, jnp.float32)
+        )
+        logits = jnp.where(mh[:, None, :] > 0, logits, -1e9)
+        ctx = jax.nn.softmax(logits, axis=-1) @ vh
+    ctx = ctx.reshape(b, nh, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return _linear(ctx, p[pre + "wo"], p[pre + "bo"], use_pallas)
+
+
+def forward(
+    p: Params,
+    input_ids: jnp.ndarray,
+    attention_mask: jnp.ndarray,
+    cfg: ModelConfig,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Logits [B, n_classes] from token ids [B, S] and mask [B, S]."""
+    b, s = input_ids.shape
+    h = p["tok_emb"][input_ids] + p["pos_emb"][None, :s, :]
+    h = _ln(h, p["emb_ln_g"], p["emb_ln_b"])
+    for i in range(cfg.layers):
+        pre = f"layer{i}."
+        attn = _attention_block(h, attention_mask, p, pre, cfg, use_pallas)
+        h = _ln(h + attn, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        f = _linear(h, p[pre + "wf1"], p[pre + "bf1"], use_pallas)
+        f = jax.nn.gelu(f, approximate=False)
+        f = _linear(f, p[pre + "wf2"], p[pre + "bf2"], use_pallas)
+        h = _ln(h + f, p[pre + "ln2_g"], p[pre + "ln2_b"])
+    cls = h[:, 0, :]
+    z = jax.nn.relu(
+        _linear(cls, p["pre_classifier.w"], p["pre_classifier.b"], use_pallas)
+    )
+    return _linear(z, p["classifier.w"], p["classifier.b"], use_pallas)
+
+
+# --------------------------------------------------------------------- loss
+
+
+def loss_fn(
+    p: Params,
+    input_ids: jnp.ndarray,
+    attention_mask: jnp.ndarray,
+    labels: jnp.ndarray,
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    logits = forward(p, input_ids, attention_mask, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (jnp.argmax(logits, -1) == labels).mean()
+    return nll, acc

@@ -1,0 +1,96 @@
+"""qtz tensor container — the interchange format between the python compile
+path and the rust runtime.
+
+Layout (all little-endian):
+
+    bytes 0..4    magic  b"QTZ1"
+    bytes 4..8    u32    header_len (bytes of JSON that follow)
+    bytes 8..8+h  JSON   {"tensors": {name: {"dtype", "shape", "offset",
+                          "nbytes"}}, "meta": {...}}
+    then          raw tensor bytes; each tensor's offset is relative to the
+                  start of the data section and 64-byte aligned.
+
+dtypes: "f32", "i32", "i64", "u8", "i8". The rust reader lives in
+rust/src/tensorfile/. Keep the two implementations in lock-step; the format
+is deliberately trivial (safetensors-like) so both sides stay small.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, Any, Tuple
+
+import numpy as np
+
+MAGIC = b"QTZ1"
+ALIGN = 64
+
+_DTYPES = {
+    "f32": np.float32,
+    "i32": np.int32,
+    "i64": np.int64,
+    "u8": np.uint8,
+    "i8": np.int8,
+}
+_NP2STR = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def _align(n: int) -> int:
+    return (n + ALIGN - 1) // ALIGN * ALIGN
+
+
+def write(path: str, tensors: Dict[str, np.ndarray], meta: Dict[str, Any] | None = None) -> None:
+    """Write a dict of numpy arrays (+ JSON-able metadata) to `path`."""
+    entries: Dict[str, Any] = {}
+    blobs = []
+    offset = 0
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name])
+        if arr.dtype not in _NP2STR:
+            raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+        raw = arr.tobytes()
+        entries[name] = {
+            "dtype": _NP2STR[arr.dtype],
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": len(raw),
+        }
+        blobs.append((offset, raw))
+        offset = _align(offset + len(raw))
+    header = json.dumps(
+        {"tensors": entries, "meta": meta or {}}, separators=(",", ":"), sort_keys=True
+    ).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        written = 0
+        for off, raw in blobs:
+            if off > written:  # inter-tensor alignment padding
+                f.write(b"\x00" * (off - written))
+                written = off
+            f.write(raw)
+            written += len(raw)
+        # pad the tail so the file size is also aligned (simplifies mmap)
+        end = _align(written)
+        if end > written:
+            f.write(b"\x00" * (end - written))
+
+
+def read(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Read a qtz file back into {name: array}, meta."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    if blob[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {blob[:4]!r}")
+    (hlen,) = struct.unpack("<I", blob[4:8])
+    header = json.loads(blob[8 : 8 + hlen].decode("utf-8"))
+    data = blob[8 + hlen :]
+    out: Dict[str, np.ndarray] = {}
+    for name, ent in header["tensors"].items():
+        dt = _DTYPES[ent["dtype"]]
+        start, n = ent["offset"], ent["nbytes"]
+        arr = np.frombuffer(data[start : start + n], dtype=dt).reshape(ent["shape"])
+        out[name] = arr.copy()
+    return out, header.get("meta", {})

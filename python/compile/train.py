@@ -1,0 +1,127 @@
+"""Build-time fine-tuning of the task backbones (hand-rolled Adam — no optax
+in this offline environment).
+
+This stands in for the paper's TextAttack fine-tuned DistilBERT checkpoints
+(DESIGN.md §2): each task gets its own trained model, saved as a .qtz
+checkpoint that both the rust engine and the AOT-exported HLO consume.
+
+Training runs once inside `make artifacts` and never on the request path.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MODEL, ModelConfig, TaskConfig
+from .data import Split
+from .model import Params, forward, init_params, loss_fn
+
+WARMUP_FRAC = 0.1
+
+
+def _adam_step(p, g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+    v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+    mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    p = jax.tree.map(
+        lambda w, a, b: w - lr * (a / (jnp.sqrt(b) + eps) + wd * w), p, mh, vh
+    )
+    return p, m, v
+
+
+def train_task(
+    task: TaskConfig,
+    splits: Dict[str, Split],
+    cfg: ModelConfig = MODEL,
+    batch_size: int = 32,
+    log_every: int = 100,
+    verbose: bool = True,
+) -> Tuple[Params, Dict[str, float]]:
+    """Train one backbone; returns (params, {train_acc, dev_acc, ...})."""
+    params = init_params(cfg, seed=task.seed + 7)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    grad_fn = jax.jit(
+        jax.value_and_grad(
+            lambda p, i, a, y: loss_fn(p, i, a, y, cfg), has_aux=True
+        )
+    )
+
+    tr = splits["train"]
+    n = tr.input_ids.shape[0]
+    rng = np.random.default_rng(task.seed + 13)
+    steps = task.train_steps
+    warm = max(1, int(steps * WARMUP_FRAC))
+
+    t0 = time.time()
+    order = rng.permutation(n)
+    cursor = 0
+    for step in range(1, steps + 1):
+        if cursor + batch_size > n:
+            order = rng.permutation(n)
+            cursor = 0
+        idx = order[cursor : cursor + batch_size]
+        cursor += batch_size
+        bi = jnp.asarray(tr.input_ids[idx])
+        ba = jnp.asarray(tr.attention_mask[idx])
+        by = jnp.asarray(tr.labels[idx])
+        # linear warmup then cosine decay
+        if step <= warm:
+            lr = task.lr * step / warm
+        else:
+            prog = (step - warm) / max(1, steps - warm)
+            lr = task.lr * 0.5 * (1 + np.cos(np.pi * prog))
+        (loss, acc), grads = grad_fn(params, bi, ba, by)
+        params, m, v = _adam_step(params, grads, m, v, step, lr)
+        if verbose and (step % log_every == 0 or step == 1):
+            print(
+                f"[{task.name}] step {step:4d}/{steps} "
+                f"loss {float(loss):.4f} acc {float(acc):.3f} "
+                f"lr {lr:.2e} ({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+
+    stats = {
+        "train_steps": float(steps),
+        "final_train_loss": float(loss),
+        "dev_acc": evaluate(params, splits["dev"], cfg),
+        "train_acc": evaluate(params, splits["train"], cfg, limit=1024),
+        "wall_s": time.time() - t0,
+    }
+    if verbose:
+        print(
+            f"[{task.name}] done: dev_acc {stats['dev_acc']:.4f} "
+            f"train_acc {stats['train_acc']:.4f} ({stats['wall_s']:.0f}s)",
+            flush=True,
+        )
+    return params, stats
+
+
+def evaluate(
+    params: Params, split: Split, cfg: ModelConfig = MODEL, batch_size: int = 64,
+    limit: int | None = None,
+) -> float:
+    """Dev accuracy of the FP32 model (python-side reference number)."""
+    fwd = jax.jit(lambda p, i, a: jnp.argmax(forward(p, i, a, cfg), -1))
+    ids, mask, labels = split.input_ids, split.attention_mask, split.labels
+    if limit is not None:
+        ids, mask, labels = ids[:limit], mask[:limit], labels[:limit]
+    n = ids.shape[0]
+    correct = 0
+    for lo in range(0, n, batch_size):
+        hi = min(lo + batch_size, n)
+        # pad final batch to the jit shape
+        bi = np.zeros((batch_size, cfg.max_len), np.int32)
+        ba = np.zeros((batch_size, cfg.max_len), np.int32)
+        bi[: hi - lo] = ids[lo:hi]
+        ba[: hi - lo] = mask[lo:hi]
+        pred = np.asarray(fwd(params, jnp.asarray(bi), jnp.asarray(ba)))
+        correct += int((pred[: hi - lo] == labels[lo:hi]).sum())
+    return correct / n

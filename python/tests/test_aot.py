@@ -1,0 +1,81 @@
+"""AOT export path: HLO text emission, argument ordering, parity-vector
+export. Does not train (uses random params)."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import tensorfile
+from compile.aot import export_kernel_hlos, export_model_hlo, export_parity_vectors, to_hlo_text
+from compile.config import MODEL
+from compile.model import forward, init_params, param_names
+
+
+def test_to_hlo_text_smoke():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_model_hlo_export_has_all_args(tmp_path):
+    p = init_params(MODEL, 0)
+    out = str(tmp_path / "m.hlo.txt")
+    export_model_hlo(p, MODEL, out, use_pallas=False, batch=8)
+    text = open(out).read()
+    assert "HloModule" in text
+    # 2 data args + all params
+    n_params = len(param_names(MODEL))
+    # HLO text lists parameters as parameter(0..n)
+    assert f"parameter({n_params + 1})" in text
+    assert f"parameter({n_params + 2})" not in text
+
+
+def test_pallas_model_hlo_differs(tmp_path):
+    p = init_params(MODEL, 1)
+    a = str(tmp_path / "a.hlo.txt")
+    b = str(tmp_path / "b.hlo.txt")
+    export_model_hlo(p, MODEL, a, use_pallas=False, batch=4)
+    export_model_hlo(p, MODEL, b, use_pallas=True, batch=4)
+    # different lowering (pallas interpret inserts while-loops), same entry
+    ta, tb = open(a).read(), open(b).read()
+    assert ta != tb
+    assert "HloModule" in tb
+
+
+def test_kernel_hlos_export(tmp_path):
+    export_kernel_hlos(str(tmp_path), MODEL)
+    for f in ("fake_quant.hlo.txt", "svd_score.hlo.txt"):
+        text = open(os.path.join(str(tmp_path), f)).read()
+        assert "HloModule" in text, f
+
+
+def test_parity_vectors_selfconsistent(tmp_path):
+    """The exported parity file must satisfy its own documented relations
+    (the rust side re-checks the same relations against its own impls)."""
+    path = str(tmp_path / "vectors.qtz")
+    export_parity_vectors(path)
+    t, meta = tensorfile.read(path)
+    w = t["w"]
+    assert meta["bits"] == 4 and meta["k"] == 64
+    # deq lies on the scale grid
+    codes = t["deq"] / t["scale"][0]
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+    # colnorm matches x
+    np.testing.assert_allclose(
+        t["colnorm"], np.linalg.norm(t["x"], axis=0), rtol=1e-5
+    )
+    # xtx matches x
+    np.testing.assert_allclose(t["xtx"], t["x"].T @ t["x"], rtol=1e-4, atol=1e-2)
+    # topk mask has k ones and preserved keeps w there
+    assert int(t["topk_mask"].sum()) == 64
+    m = t["topk_mask"].astype(bool)
+    np.testing.assert_array_equal(t["preserved"][m], w[m])
+    # awq/svd/spqr scores nonnegative, right shape
+    for k in ("awq_score", "svd_score", "spqr_score"):
+        assert t[k].shape == w.shape
+        assert (t[k] >= 0).all()

@@ -1,0 +1,208 @@
+"""Data generators, tensorfile container, model forward, and the
+jnp↔pallas model parity (the L1-inside-L2 composition proof)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import data as dm
+from compile import tensorfile
+from compile.config import MODEL, TASKS
+from compile.model import (
+    forward, init_params, loss_fn, param_names, quantizable_names,
+)
+
+# ------------------------------------------------------------------- data
+
+
+@pytest.mark.parametrize("task", list(TASKS))
+def test_split_shapes_and_determinism(task):
+    a = dm.generate_split(TASKS[task], "dev")
+    b = dm.generate_split(TASKS[task], "dev")
+    assert a.input_ids.shape == (TASKS[task].n_dev, MODEL.max_len)
+    np.testing.assert_array_equal(a.input_ids, b.input_ids)
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+@pytest.mark.parametrize("task", list(TASKS))
+def test_labels_roughly_balanced(task):
+    s = dm.generate_split(TASKS[task], "dev")
+    bal = s.labels.mean()
+    assert 0.38 < bal < 0.62, f"label balance {bal}"
+
+
+def test_splits_are_distinct():
+    tr = dm.generate_split(TASKS["rte"], "train")
+    dv = dm.generate_split(TASKS["rte"], "dev")
+    assert not np.array_equal(tr.input_ids[: dv.input_ids.shape[0]], dv.input_ids)
+
+
+def test_token_ranges_valid():
+    for task in TASKS:
+        s = dm.generate_split(TASKS[task], "calib")
+        assert s.input_ids.min() >= 0
+        assert s.input_ids.max() < MODEL.vocab_size
+        # CLS always first, mask covers it
+        assert (s.input_ids[:, 0] == dm.CLS).all()
+        assert (s.attention_mask[:, 0] == 1).all()
+        # mask is a prefix (no holes)
+        diffs = np.diff(s.attention_mask, axis=1)
+        assert (diffs <= 0).all()
+
+
+def _polarity_margin(tokens):
+    """(#positive-synset tokens) − (#negative-synset tokens)."""
+    syn = [(int(t) - dm.SYN_BASE) // dm.SYNSET_SIZE
+           for t in tokens if dm.SYN_BASE <= t < dm.ENT_BASE]
+    pos = sum(1 for s in syn if s < dm.POS_SYNSETS)
+    return pos - (len(syn) - pos)
+
+
+@pytest.mark.parametrize(
+    "gen,margins,strip_prefix",
+    [
+        (dm._mrpc_example, {1, 2, 4}, False),
+        (dm._rte_example, {1}, False),
+        (dm._qnli_example, {1, 3, 3}, True),
+    ],
+)
+def test_majority_semantics(gen, margins, strip_prefix):
+    # label == sign of the latent polarity margin, margin magnitude from
+    # the task's knob set
+    rng = np.random.default_rng(123)
+    for _ in range(60):
+        a, b, label = gen(rng)
+        if strip_prefix:
+            assert dm.QTY_BASE <= a[0] < dm.FIL_BASE
+            a = a[1:]
+        m = _polarity_margin(np.concatenate([a, b]))
+        assert abs(m) in margins, m
+        assert (m > 0) == (label == 1)
+
+
+def test_difficulty_ordering_of_margins():
+    # difficulty ∝ margin-per-token (how strongly the mean latent polarity
+    # separates the classes): rte hardest < mrpc < qnli easiest
+    rng = np.random.default_rng(7)
+
+    def mean_margin_ratio(gen, strip):
+        ms = []
+        for _ in range(300):
+            a, b, _ = gen(rng)
+            if strip:
+                a = a[1:]
+            n = len(a) + len(b)
+            ms.append(abs(_polarity_margin(np.concatenate([a, b]))) / n)
+        return float(np.mean(ms))
+
+    m_rte = mean_margin_ratio(dm._rte_example, False)
+    m_mrpc = mean_margin_ratio(dm._mrpc_example, False)
+    m_qnli = mean_margin_ratio(dm._qnli_example, True)
+    assert m_rte < m_mrpc < m_qnli, (m_rte, m_mrpc, m_qnli)
+
+
+# -------------------------------------------------------------- tensorfile
+
+
+def test_tensorfile_roundtrip(tmp_path):
+    path = str(tmp_path / "t.qtz")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([1, -2, 3], dtype=np.int32),
+        "c": np.array([7], dtype=np.uint8),
+    }
+    tensorfile.write(path, tensors, meta={"task": "x", "n": 3})
+    back, meta = tensorfile.read(path)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+    assert meta == {"task": "x", "n": 3}
+
+
+def test_tensorfile_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.qtz"
+    p.write_bytes(b"NOPE" + b"\0" * 16)
+    with pytest.raises(ValueError):
+        tensorfile.read(str(p))
+
+
+def test_tensorfile_alignment(tmp_path):
+    path = str(tmp_path / "a.qtz")
+    tensorfile.write(path, {"x": np.ones(3, np.uint8), "y": np.ones(5, np.uint8)})
+    back, _ = tensorfile.read(path)
+    np.testing.assert_array_equal(back["y"], 1)
+
+
+# ------------------------------------------------------------------ model
+
+
+def tiny_batch(b=4):
+    rng = np.random.default_rng(11)
+    ids = rng.integers(4, 500, size=(b, MODEL.max_len)).astype(np.int32)
+    ids[:, 0] = dm.CLS
+    mask = np.ones((b, MODEL.max_len), np.int32)
+    mask[:, 40:] = 0
+    return jnp.asarray(ids), jnp.asarray(mask)
+
+
+def test_param_names_cover_init():
+    p = init_params(MODEL, 0)
+    assert set(param_names(MODEL)) == set(p.keys())
+    assert len(quantizable_names(MODEL)) == 6 * MODEL.layers + 2
+
+
+def test_forward_shapes_and_grad():
+    p = init_params(MODEL, 1)
+    ids, mask = tiny_batch()
+    logits = forward(p, ids, mask, MODEL)
+    assert logits.shape == (4, MODEL.n_classes)
+    labels = jnp.array([0, 1, 0, 1])
+    (loss, acc), grads = jax.value_and_grad(
+        lambda pp: loss_fn(pp, ids, mask, labels, MODEL), has_aux=True
+    )(p)
+    assert np.isfinite(float(loss))
+    g = grads["layer0.wq"]
+    assert float(jnp.abs(g).max()) > 0.0
+
+
+def test_forward_pad_invariance():
+    p = init_params(MODEL, 2)
+    ids, mask = tiny_batch(2)
+    a = forward(p, ids, mask, MODEL)
+    ids2 = np.asarray(ids).copy()
+    ids2[:, 40:] = 77  # garbage under the pad mask
+    b = forward(p, jnp.asarray(ids2), mask, MODEL)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_pallas_path_matches_jnp_path():
+    """The composition proof at python level: the model with Pallas
+    attention + salient_matmul linears must match the plain-jnp model."""
+    p = init_params(MODEL, 3)
+    ids, mask = tiny_batch(2)
+    a = forward(p, ids, mask, MODEL, use_pallas=False)
+    b = forward(p, ids, mask, MODEL, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_loss_decreases_on_tiny_overfit():
+    # 30 adam steps on one batch must reduce the loss (training sanity)
+    import dataclasses
+
+    from compile.train import _adam_step
+
+    p = init_params(MODEL, 4)
+    ids, mask = tiny_batch(8)
+    labels = jnp.array([0, 1] * 4)
+    grad_fn = jax.jit(
+        jax.value_and_grad(lambda pp: loss_fn(pp, ids, mask, labels, MODEL), has_aux=True)
+    )
+    m = jax.tree.map(jnp.zeros_like, p)
+    v = jax.tree.map(jnp.zeros_like, p)
+    (l0, _), g = grad_fn(p)
+    for t in range(1, 31):
+        (l, _), g = grad_fn(p)
+        p, m, v = _adam_step(p, g, m, v, t, 3e-4)
+    (l1, _), _ = grad_fn(p)
+    assert float(l1) < float(l0) * 0.8, f"{float(l0)} -> {float(l1)}"

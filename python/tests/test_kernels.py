@@ -1,0 +1,215 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes (hypothesis) — the CORE correctness signal of the
+compile path."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.fake_quant import fake_quant
+from compile.kernels.salient_matmul import salient_matmul
+from compile.kernels.svd_score import svd_score
+
+settings.register_profile("kernels", max_examples=12, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# -------------------------------------------------------------- fake_quant
+
+
+@given(
+    m=st.integers(1, 200),
+    n=st.integers(1, 300),
+    bits=st.sampled_from([3, 4, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_fake_quant_matches_ref(m, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, m, n) * 0.05
+    clip, scale = ref.quant_params(w, bits=bits)
+    got = fake_quant(w, clip, scale, bits=bits)
+    want = ref.fake_quant_ref(w, clip, scale, bits=bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_fake_quant_respects_block_boundaries():
+    # shape deliberately not divisible by the block size
+    rng = np.random.default_rng(0)
+    w = rand(rng, 129, 257)
+    clip, scale = ref.quant_params(w)
+    got = fake_quant(w, clip, scale, block_m=64, block_n=64)
+    want = ref.fake_quant_ref(w, clip, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_fake_quant_output_on_grid():
+    rng = np.random.default_rng(1)
+    w = rand(rng, 32, 32)
+    clip, scale = ref.quant_params(w)
+    got = np.asarray(fake_quant(w, clip, scale))
+    codes = got / np.asarray(scale)
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+    assert np.abs(codes).max() <= 7 + 1e-4
+
+
+def test_quant_params_zero_matrix():
+    w = jnp.zeros((4, 4))
+    clip, scale = ref.quant_params(w)
+    assert float(scale) == 1.0
+    out = ref.fake_quant_ref(w, clip, scale)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+# --------------------------------------------------------------- svd_score
+
+
+@given(
+    dout=st.integers(1, 150),
+    din=st.integers(1, 200),
+    r=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_svd_score_matches_factor_ref(dout, din, r, seed):
+    rng = np.random.default_rng(seed)
+    u = rand(rng, dout, r)
+    s = jnp.abs(rand(rng, r)) + 0.1
+    v = rand(rng, din, r)
+    got = svd_score(u, s, v)
+    want = ref.svd_score_from_factors_ref(u, s, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_svd_score_end_to_end_vs_full_svd():
+    # factor via jnp SVD then feed the kernel; must equal ref.svd_score_ref
+    rng = np.random.default_rng(2)
+    w = rand(rng, 60, 90)
+    u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+    got = svd_score(u[:, :8], s[:8], vt[:8, :].T)
+    want = ref.svd_score_ref(w, rank=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ----------------------------------------------------------- salient_matmul
+
+
+@given(
+    m=st.integers(1, 40),
+    din=st.integers(1, 130),
+    dout=st.integers(1, 90),
+    density=st.floats(0.0, 0.2),
+    seed=st.integers(0, 2**31),
+)
+def test_salient_matmul_matches_ref(m, din, dout, density, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, din)
+    q = jnp.asarray(rng.integers(-7, 8, size=(dout, din)).astype(np.int8))
+    scale = jnp.abs(rand(rng, dout)) * 0.1 + 1e-3
+    mask = jnp.asarray((rng.random((dout, din)) < density).astype(np.float32))
+    s_dense = rand(rng, dout, din) * mask
+    got = salient_matmul(x, q, scale, s_dense, mask)
+    want = ref.salient_matmul_ref(x, q, scale, s_dense, mask)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-4
+    )
+
+
+def test_salient_matmul_identity_mask_is_dense_matmul():
+    # mask all ones + s_dense = w → plain x @ w.T (the pallas-model path)
+    rng = np.random.default_rng(3)
+    x = rand(rng, 8, 32)
+    w = rand(rng, 16, 32)
+    q = jnp.zeros((16, 32), jnp.int8)
+    scale = jnp.ones(16)
+    mask = jnp.ones((16, 32))
+    got = salient_matmul(x, q, scale, w, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w.T), atol=1e-4)
+
+
+def test_salient_matmul_k_accumulation():
+    # din spanning multiple k-blocks exercises the accumulator init logic
+    rng = np.random.default_rng(4)
+    x = rand(rng, 4, 600)
+    q = jnp.asarray(rng.integers(-7, 8, size=(8, 600)).astype(np.int8))
+    scale = jnp.ones(8) * 0.01
+    mask = jnp.zeros((8, 600))
+    s_dense = jnp.zeros((8, 600))
+    got = salient_matmul(x, q, scale, s_dense, mask, block_k=128)
+    want = ref.salient_matmul_ref(x, q, scale, s_dense, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+# ---------------------------------------------------------------- attention
+
+
+@given(
+    bh=st.integers(1, 6),
+    s=st.sampled_from([4, 16, 48]),
+    dh=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31),
+)
+def test_attention_matches_ref(bh, s, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, bh, s, dh)
+    k = rand(rng, bh, s, dh)
+    v = rand(rng, bh, s, dh)
+    mask = jnp.asarray((rng.random((bh, s)) < 0.7).astype(np.float32))
+    mask = mask.at[:, 0].set(1.0)  # at least one live token
+    got = attention(q, k, v, mask)
+    want = jnp.stack([ref.attention_ref(q[i], k[i], v[i], mask[i]) for i in range(bh)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_attention_fully_masked_keys_ignored():
+    rng = np.random.default_rng(5)
+    q = rand(rng, 1, 8, 16)
+    k = rand(rng, 1, 8, 16)
+    v = rand(rng, 1, 8, 16)
+    mask = jnp.ones((1, 8)).at[0, 4:].set(0.0)
+    base = np.asarray(attention(q, k, v, mask))
+    # changing masked-out V rows must not change the output
+    v2 = v.at[0, 4:].set(99.0)
+    got = np.asarray(attention(q, k, v2, mask))
+    np.testing.assert_allclose(got, base, atol=1e-5)
+
+
+# ------------------------------------------------------------ score oracles
+
+
+def test_topk_mask_selects_k():
+    rng = np.random.default_rng(6)
+    s = rand(rng, 10, 10)
+    for k in [0, 1, 7, 100]:
+        m = ref.topk_mask(s, k)
+        assert int(np.asarray(m).sum()) == min(k, 100)
+
+
+def test_preserve_keeps_salient_exact():
+    rng = np.random.default_rng(7)
+    w = rand(rng, 20, 20) * 0.05
+    clip, scale = ref.quant_params(w)
+    score = ref.svd_score_ref(w)
+    mask = ref.topk_mask(score, 17)
+    out = np.asarray(ref.preserve_ref(w, mask, clip, scale))
+    wnp = np.asarray(w)
+    mnp = np.asarray(mask)
+    np.testing.assert_array_equal(out[mnp], wnp[mnp])
+    assert not np.allclose(out[~mnp], wnp[~mnp])
+
+
+def test_spqr_score_damping_keeps_finite():
+    rng = np.random.default_rng(8)
+    w = rand(rng, 6, 12)
+    # rank-deficient activations (fewer rows than dims)
+    x = rand(rng, 3, 12)
+    xtx = x.T @ x
+    s = np.asarray(ref.spqr_score_ref(w, xtx, 3))
+    assert np.isfinite(s).all()
+    assert (s >= 0).all()

@@ -1,0 +1,69 @@
+//! Shared helpers for the bench binaries (each bench is its own crate
+//! root, so this module is include!'d by path).
+
+use svdquant::coordinator::Artifacts;
+
+/// Open artifacts or skip the bench gracefully (pre-`make artifacts` runs
+/// of `cargo bench` must not fail the build pipeline).
+#[allow(dead_code)]
+pub fn artifacts_or_skip(bench: &str) -> Option<Artifacts> {
+    match Artifacts::open("artifacts") {
+        Ok(a) => Some(a),
+        Err(e) => {
+            println!("== bench: {bench} == SKIPPED (no artifacts: {e})");
+            println!("   run `make artifacts` first");
+            None
+        }
+    }
+}
+
+/// One-task accuracy-table bench body (tables I–III share it).
+#[allow(dead_code)] // each bench binary uses a subset of this module
+pub fn table_bench(bench_name: &'static str, task: &str, paper_rows: &[(usize, f64, f64, f64)]) {
+    use svdquant::coordinator::sweep::{run_sweep, SweepConfig};
+    use svdquant::report;
+    use svdquant::runtime::Runtime;
+    use svdquant::saliency::Method;
+    use svdquant::util::bench::Bench;
+
+    let Some(art) = artifacts_or_skip(bench_name) else { return };
+    let mut b = Bench::new(bench_name).quick();
+    let rt = Runtime::cpu().expect("pjrt client");
+    let out = std::path::PathBuf::from("results");
+    let mut cfg = SweepConfig::paper_defaults(&art, &out);
+    cfg.tasks = vec![task.to_string()];
+    cfg.methods = vec![Method::Random, Method::Awq, Method::Spqr, Method::Svd];
+    let res = run_sweep(&art, &rt, &cfg).expect("sweep");
+
+    // rendered table (ours)
+    let md = report::accuracy_table(&res, task, &cfg.budgets);
+    println!("{md}");
+
+    // ours-vs-paper rows for EXPERIMENTS.md
+    let mut rows = Vec::new();
+    for &(k, p_awq, p_spqr, p_svd) in paper_rows {
+        let g = |m: &str| {
+            res.accuracy(task, m, k)
+                .map(|a| format!("{a:.4}"))
+                .unwrap_or_else(|| "—".into())
+        };
+        rows.push(vec![
+            k.to_string(),
+            format!("{p_awq:.4}"),
+            g("awq"),
+            format!("{p_spqr:.4}"),
+            g("spqr"),
+            format!("{p_svd:.4}"),
+            g("svd"),
+        ]);
+    }
+    b.table(
+        &format!("{task}: paper vs measured"),
+        ["k", "AWQ(paper)", "AWQ(ours)", "SpQR(paper)", "SpQR(ours)", "SVD(paper)", "SVD(ours)"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        rows,
+    );
+    b.finish();
+}

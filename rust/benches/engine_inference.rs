@@ -1,0 +1,123 @@
+//! Deploy-path benches: engine forward latency (fp32 vs packed-int4
+//! fused), PJRT executable latency, and the batching server under Poisson
+//! and bursty traces — the paper's deployment headline (compressed model,
+//! served). `harness = false`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Duration;
+
+use svdquant::coordinator::server::{serve_trace, ServerConfig};
+use svdquant::coordinator::{quantize_checkpoint, PreserveSpec};
+use svdquant::data::TraceGenerator;
+use svdquant::eval::eval_pjrt;
+use svdquant::model::{Engine, QuantizedModel};
+use svdquant::runtime::Runtime;
+use svdquant::saliency::Method;
+use svdquant::util::bench::Bench;
+
+fn main() {
+    let Some(art) = common::artifacts_or_skip("engine_inference") else { return };
+    let mut b = Bench::new("engine_inference").quick();
+    let task = "mrpc";
+    let ckpt = art.checkpoint(task).expect("ckpt");
+    let dev = art.dataset(task, "dev").expect("dev");
+    let cfg = art.model_cfg;
+
+    let spec = PreserveSpec { method: Method::Svd, k_per_layer: 256, ..Default::default() };
+    let (qp, sels) = quantize_checkpoint(&cfg, &ckpt, &spec, None).expect("quantize");
+    let engine = Engine::new(cfg, ckpt.clone()).expect("engine");
+    let qm = QuantizedModel::build(cfg, ckpt.clone(), &spec.qcfg, &sels).expect("qm");
+    let (qb, db) = qm.quantized_bytes();
+    println!(
+        "  weights: dense {} -> packed {} ({:.2}x)",
+        svdquant::util::human_bytes(db),
+        svdquant::util::human_bytes(qb),
+        db as f64 / qb as f64
+    );
+
+    for &batch in &[1usize, 8, 16] {
+        let (ids, mask) = dev.batch_slices(0, batch);
+        b.timeit_throughput(&format!("engine fp32 fwd b={batch}"), batch as f64, "seq", || {
+            engine.forward(&ids, &mask).unwrap()
+        });
+        b.timeit_throughput(&format!("engine int4-fused fwd b={batch}"), batch as f64, "seq", || {
+            qm.forward_fused(&ids, &mask).unwrap()
+        });
+    }
+
+    // PJRT path (the sweep engine)
+    let rt = Runtime::cpu().expect("pjrt");
+    let exe = art.compile_model(&rt, task, false).expect("compile");
+    let small = {
+        // eval over one export batch worth of samples
+        let n = cfg.export_batch.min(dev.len());
+        let (ids, mask) = dev.batch_slices(0, n);
+        let labels = dev.labels()[..n].to_vec();
+        svdquant::data::Dataset::from_raw("bench", ids, mask, labels, cfg.max_len).unwrap()
+    };
+    b.timeit_throughput(
+        &format!("pjrt eval {} seqs (weights as args)", small.len()),
+        small.len() as f64,
+        "seq",
+        || eval_pjrt(&exe, &cfg, &qp, &small).unwrap(),
+    );
+
+    // serving under load
+    let mut rows = Vec::new();
+    for (name, gen, rate) in [
+        ("poisson@30", TraceGenerator::poisson(30.0), 30.0),
+        ("poisson@80", TraceGenerator::poisson(80.0), 80.0),
+        ("bursty@30", TraceGenerator::bursty(30.0, 0.25, 8), 30.0),
+    ] {
+        let trace = gen.generate(120, dev.len(), 0xBE9C);
+        let scfg = ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(4),
+            queue_cap: 512,
+        };
+        let s = serve_trace(&qm, &dev, &trace, &scfg).expect("serve");
+        rows.push(vec![
+            name.to_string(),
+            format!("{rate:.0}"),
+            format!("{:.1}", s.throughput_rps),
+            format!("{:.1}", s.p50_ms),
+            format!("{:.1}", s.p95_ms),
+            format!("{:.1}", s.mean_batch),
+            format!("{:.4}", s.accuracy),
+        ]);
+    }
+    b.table(
+        "serving (svd k=256 packed int4, single worker)",
+        ["trace", "offered rps", "achieved rps", "p50 ms", "p95 ms", "mean batch", "acc"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        rows,
+    );
+
+    // batching ablation: max_batch sensitivity under the same trace
+    let mut rows = Vec::new();
+    let trace = TraceGenerator::bursty(60.0, 0.25, 8).generate(120, dev.len(), 0xAB);
+    for mb in [1usize, 4, 16] {
+        let scfg = ServerConfig {
+            max_batch: mb,
+            max_wait: Duration::from_millis(4),
+            queue_cap: 512,
+        };
+        let s = serve_trace(&qm, &dev, &trace, &scfg).expect("serve");
+        rows.push(vec![
+            mb.to_string(),
+            format!("{:.1}", s.throughput_rps),
+            format!("{:.1}", s.p95_ms),
+            format!("{:.1}", s.mean_batch),
+        ]);
+    }
+    b.table(
+        "batching ablation (bursty@60)",
+        ["max_batch", "rps", "p95 ms", "mean batch"].iter().map(|s| s.to_string()).collect(),
+        rows,
+    );
+    b.finish();
+}

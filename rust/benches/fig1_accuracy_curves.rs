@@ -1,0 +1,40 @@
+//! Regenerates paper Fig. 1: accuracy-vs-budget curves, one panel per task
+//! (SVD vs AWQ vs SpQR vs Random, with FP32 ceiling and Q4 floor lines).
+//! Panels are written to results/figures/fig1_<task>.txt. `harness = false`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use svdquant::coordinator::sweep::{run_sweep, SweepConfig};
+use svdquant::report;
+use svdquant::runtime::Runtime;
+use svdquant::util::bench::Bench;
+
+fn main() {
+    let Some(art) = common::artifacts_or_skip("fig1_accuracy_curves") else { return };
+    let mut b = Bench::new("fig1_accuracy_curves").quick();
+    let rt = Runtime::cpu().expect("pjrt");
+    let out = std::path::PathBuf::from("results");
+    let cfg = SweepConfig::paper_defaults(&art, &out);
+    let res = run_sweep(&art, &rt, &cfg).expect("sweep");
+
+    std::fs::create_dir_all("results/figures").ok();
+    for task in art.tasks() {
+        let panel = report::fig1_panel(&res, &task, &cfg.budgets);
+        println!("{panel}");
+        std::fs::write(format!("results/figures/fig1_{task}.txt"), &panel).ok();
+        // shape checks the paper's qualitative claims (logged as table rows)
+        let svd_hi = res.accuracy(&task, "svd", 4096).unwrap_or(0.0);
+        let rand_hi = res.accuracy(&task, "random", 4096).unwrap_or(0.0);
+        let floor = res.accuracy(&task, "q4_floor", 0).unwrap_or(0.0);
+        b.table(
+            &format!("fig1 shape checks ({task})"),
+            vec!["check".into(), "value".into()],
+            vec![
+                vec!["svd@4096 - floor".into(), format!("{:+.4}", svd_hi - floor)],
+                vec!["svd@4096 - random@4096".into(), format!("{:+.4}", svd_hi - rand_hi)],
+            ],
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,84 @@
+//! Regenerates paper Fig. 2: IoU of the SVD-selected weight indices vs the
+//! AWQ and SpQR selections, per protection budget, aggregated over all
+//! quantizable layers of every task. The paper's qualitative claim — high
+//! overlap with SpQR (~60-70% at low k), lower with AWQ (~30%) — is what
+//! the shape check rows record. `harness = false`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use svdquant::calib::CalibStats;
+use svdquant::coordinator::{score_layer, PreserveSpec};
+use svdquant::model::Engine;
+use svdquant::report;
+use svdquant::saliency::{iou, select_topk, Method};
+use svdquant::util::bench::Bench;
+
+fn main() {
+    let Some(art) = common::artifacts_or_skip("fig2_overlap") else { return };
+    let mut b = Bench::new("fig2_overlap").quick();
+    let mut results = svdquant::coordinator::sweep::SweepResults::default();
+    let budgets = art.budgets();
+
+    for task in art.tasks() {
+        let ckpt = art.checkpoint(&task).expect("ckpt");
+        let calib_data = art.dataset(&task, "calib").expect("calib data");
+        let engine = Engine::new(art.model_cfg, ckpt).expect("engine");
+        let calib =
+            CalibStats::collect(&engine, &calib_data, art.calib_samples(), 16).expect("calib");
+        let ckpt = engine.params();
+        for name in art.model_cfg.quantizable_names() {
+            let w = ckpt.get(&name).unwrap();
+            let svd = score_layer(
+                &name,
+                w,
+                &PreserveSpec { method: Method::Svd, ..Default::default() },
+                None,
+            )
+            .unwrap();
+            let awq = score_layer(
+                &name,
+                w,
+                &PreserveSpec { method: Method::Awq, ..Default::default() },
+                Some(&calib),
+            )
+            .unwrap();
+            let spqr = score_layer(
+                &name,
+                w,
+                &PreserveSpec {
+                    method: Method::Spqr,
+                    spqr_damp: art.spqr_damp(),
+                    ..Default::default()
+                },
+                Some(&calib),
+            )
+            .unwrap();
+            for &k in &budgets {
+                let s = select_topk(&svd, k);
+                results.overlap.record("awq", k, iou(&s, &select_topk(&awq, k)));
+                results.overlap.record("spqr", k, iou(&s, &select_topk(&spqr, k)));
+            }
+        }
+    }
+
+    let chart = report::fig2_chart(&results);
+    println!("{chart}");
+    std::fs::create_dir_all("results/figures").ok();
+    std::fs::write("results/figures/fig2_overlap.txt", &chart).ok();
+
+    let mut rows = Vec::new();
+    for &k in &budgets {
+        rows.push(vec![
+            k.to_string(),
+            format!("{:.3}", results.overlap.mean("awq", k).unwrap_or(0.0)),
+            format!("{:.3}", results.overlap.mean("spqr", k).unwrap_or(0.0)),
+        ]);
+    }
+    b.table(
+        "Fig.2 IoU summary (paper: awq ≈ 0.30, spqr ≈ 0.60-0.70 at low k)",
+        vec!["k".into(), "IoU vs AWQ".into(), "IoU vs SpQR".into()],
+        rows,
+    );
+    b.finish();
+}

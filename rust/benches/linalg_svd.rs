@@ -1,0 +1,55 @@
+//! Linalg substrate roofline: blocked matmul GFLOP/s (the ceiling every
+//! other kernel is judged against), Jacobi SVD and randomized SVD scaling,
+//! Cholesky + inverse-diagonal (the SpQR kernel). `harness = false`.
+
+use svdquant::linalg::{cholesky, inverse_diagonal, matmul, matmul_a_bt, qr_thin, rsvd, svd_jacobi, Matrix};
+use svdquant::util::bench::Bench;
+use svdquant::util::rng::Rng;
+
+fn rand_m(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+    let mut m = Matrix::zeros(r, c);
+    rng.fill_normal(m.data_mut(), 1.0);
+    m
+}
+
+fn main() {
+    let mut b = Bench::new("linalg_svd");
+    let mut rng = Rng::new(0x11A6);
+
+    for &n in &[128usize, 256, 512] {
+        let a = rand_m(&mut rng, n, n);
+        let c = rand_m(&mut rng, n, n);
+        let flops = 2.0 * (n as f64).powi(3);
+        b.timeit_throughput(&format!("matmul {n}³"), flops, "flop", || matmul(&a, &c));
+        b.timeit_throughput(&format!("matmul_a_bt {n}³"), flops, "flop", || {
+            matmul_a_bt(&a, &c)
+        });
+    }
+
+    for &(m, n) in &[(256usize, 64usize), (1024, 16)] {
+        let a = rand_m(&mut rng, m, n);
+        b.timeit(&format!("qr_thin {m}x{n}"), || qr_thin(&a));
+    }
+
+    for &(m, n) in &[(64usize, 64usize), (128, 128), (256, 256)] {
+        let a = rand_m(&mut rng, m, n);
+        b.timeit(&format!("svd_jacobi {m}x{n}"), || svd_jacobi(&a));
+    }
+
+    for &(m, n) in &[(256usize, 256usize), (256, 1024), (1024, 1024)] {
+        let a = rand_m(&mut rng, m, n);
+        b.timeit(&format!("rsvd_r8 {m}x{n}"), || rsvd(&a, 8, 8, 2, 1));
+    }
+
+    for &n in &[256usize, 1024] {
+        let x = rand_m(&mut rng, 2 * n, n);
+        let mut spd = svdquant::linalg::matmul_at_b(&x, &x);
+        for i in 0..n {
+            spd[(i, i)] += n as f32 * 0.01;
+        }
+        let l = cholesky(&spd).unwrap();
+        b.timeit(&format!("cholesky {n}²"), || cholesky(&spd).unwrap());
+        b.timeit(&format!("inverse_diagonal {n}²"), || inverse_diagonal(&l));
+    }
+    b.finish();
+}

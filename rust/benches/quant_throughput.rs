@@ -1,0 +1,125 @@
+//! §III-B mechanism benches: quantize/dequantize/pack bandwidth, the fused
+//! mixed-precision matvec, and the clip/bits/NF4 ablations (DESIGN.md §5).
+//! `harness = false`.
+
+use svdquant::linalg::Matrix;
+use svdquant::quant::nf4::nf4_fake_quant;
+use svdquant::quant::symmetric::mse;
+use svdquant::quant::{
+    dequantize, fake_quant, pack_nibbles, quant_params, quantize_codes, unpack_nibbles,
+    QuantConfig, QuantizedMatrix,
+};
+use svdquant::sparse::Coo;
+use svdquant::util::bench::Bench;
+use svdquant::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("quant_throughput");
+    let mut rng = Rng::new(0x0B17);
+    let (rows, cols) = (1024usize, 1024usize);
+    let mut w = Matrix::zeros(rows, cols);
+    rng.fill_normal(w.data_mut(), 0.05);
+    let bytes = (rows * cols * 4) as f64;
+    let cfg = QuantConfig::default();
+
+    let p = quant_params(&w, &cfg);
+    let codes = quantize_codes(&w, &p);
+    let packed = pack_nibbles(&codes);
+
+    b.timeit_throughput("quant_params 1024² (std+max scan)", bytes, "B", || {
+        quant_params(&w, &cfg)
+    });
+    b.timeit_throughput("quantize_codes 1024²", bytes, "B", || {
+        quantize_codes(&w, &p)
+    });
+    b.timeit_throughput("dequantize 1024²", bytes, "B", || {
+        dequantize(&codes, &p, rows, cols)
+    });
+    b.timeit_throughput("pack_nibbles 1024²", (rows * cols) as f64, "codes", || {
+        pack_nibbles(&codes)
+    });
+    b.timeit_throughput("unpack_nibbles 1024²", (rows * cols) as f64, "codes", || {
+        unpack_nibbles(&packed, rows * cols)
+    });
+    b.timeit_throughput("fake_quant 1024² end-to-end", bytes, "B", || {
+        fake_quant(&w, &cfg)
+    });
+
+    // fused mixed-precision matvec vs dense f32 matvec
+    let mut sal = Coo::new(rows, cols);
+    for idx in Rng::new(7).sample_distinct(rows * cols, 4096) {
+        sal.push(idx / cols, idx % cols, w[(idx / cols, idx % cols)]);
+    }
+    let qm = QuantizedMatrix::from_dense(&w, &cfg, &sal);
+    let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut y = vec![0.0f32; rows];
+    let flops = (2 * rows * cols) as f64;
+    b.timeit_throughput("qmatvec packed+salient 1024² (LUT)", flops, "flop", || {
+        qm.matvec(&x, &mut y)
+    });
+    // the pre-optimization baseline (EXPERIMENTS.md §Perf L3): unpack the
+    // row into a scratch buffer with scalar shift/sign-extend, then dot
+    let mut scratch = vec![0i8; cols];
+    b.timeit_throughput("qmatvec naive unpack (before)", flops, "flop", || {
+        for i in 0..rows {
+            let row_packed = &packed[0..(cols + 1) / 2]; // same bytes/row layout
+            for (j, s) in scratch.iter_mut().enumerate() {
+                *s = svdquant::quant::packing::unpack_at(row_packed, j);
+            }
+            y[i] = scratch
+                .iter()
+                .zip(&x)
+                .map(|(&c, &xv)| c as f32 * xv)
+                .sum::<f32>()
+                * p.scales[0];
+        }
+    });
+    let dense = qm.dequantize_dense();
+    b.timeit_throughput("dense f32 matvec 1024² (reference)", flops, "flop", || {
+        let mut acc = vec![0.0f32; rows];
+        for i in 0..rows {
+            acc[i] = svdquant::linalg::matmul::dot(dense.row(i), &x, cols);
+        }
+        acc
+    });
+
+    // --- ablations: quantization error by config --------------------------
+    let mut rows_t = Vec::new();
+    for (name, cfg) in [
+        ("int4 clip=2.5 (paper)", QuantConfig { bits: 4, clip_sigma: Some(2.5), per_row: false }),
+        ("int4 no clip", QuantConfig { bits: 4, clip_sigma: None, per_row: false }),
+        ("int4 clip=3.5", QuantConfig { bits: 4, clip_sigma: Some(3.5), per_row: false }),
+        ("int4 per-row", QuantConfig { bits: 4, clip_sigma: Some(2.5), per_row: true }),
+        ("int3 clip=2.5", QuantConfig { bits: 3, clip_sigma: Some(2.5), per_row: false }),
+        ("int8 clip=2.5", QuantConfig { bits: 8, clip_sigma: Some(2.5), per_row: false }),
+    ] {
+        let wq = fake_quant(&w, &cfg);
+        rows_t.push(vec![name.to_string(), format!("{:.3e}", mse(&w, &wq))]);
+    }
+    // matrices with outliers show why clipping matters
+    let mut wo = w.clone();
+    for idx in Rng::new(9).sample_distinct(rows * cols, 16) {
+        wo.data_mut()[idx] = if idx % 2 == 0 { 1.5 } else { -1.5 };
+    }
+    rows_t.push(vec![
+        "int4 clip=2.5 + outliers".into(),
+        format!("{:.3e}", mse(&wo, &fake_quant(&wo, &QuantConfig::default()))),
+    ]);
+    rows_t.push(vec![
+        "int4 no-clip + outliers".into(),
+        format!(
+            "{:.3e}",
+            mse(&wo, &fake_quant(&wo, &QuantConfig { clip_sigma: None, ..QuantConfig::default() }))
+        ),
+    ]);
+    rows_t.push(vec![
+        "nf4 per-row (ablation)".into(),
+        format!("{:.3e}", mse(&w, &nf4_fake_quant(&w))),
+    ]);
+    b.table(
+        "quantization MSE ablation (1024², gaussian weights σ=0.05)",
+        vec!["config".into(), "MSE".into()],
+        rows_t,
+    );
+    b.finish();
+}

@@ -1,0 +1,110 @@
+//! Paper §VI-A complexity comparison, measured: selection cost of each
+//! heuristic over transformer-shaped weight matrices.
+//!
+//! * SVD (randomized, O(r·d²)) — the paper's fast static path
+//! * SVD (exact Jacobi, O(d³)) — the naive alternative
+//! * SpQR — Hessian Cholesky + inverse diagonal, O(d³), *plus* it needs a
+//!   calibration forward pass that the static methods don't pay
+//! * AWQ — trivial given colnorms, but colnorms require the forward pass
+//! * top-k selection — shared epilogue
+//!
+//! Also runs the calibration-size ablation (DESIGN.md §5) and the
+//! rank-r ablation for the SVD score. `harness = false`.
+
+use svdquant::linalg::{matmul_at_b, Matrix};
+use svdquant::saliency::{awq_score, select_topk, spqr_score, svd_score, SvdScoreMode};
+use svdquant::util::bench::Bench;
+use svdquant::util::rng::Rng;
+
+fn transformer_like(rng: &mut Rng, dout: usize, din: usize) -> Matrix {
+    // low-rank head + noise tail, like trained attention/FFN weights
+    let r = 12.min(dout.min(din));
+    let mut u = Matrix::zeros(dout, r);
+    rng.fill_normal(u.data_mut(), 0.2);
+    let mut v = Matrix::zeros(r, din);
+    rng.fill_normal(v.data_mut(), 0.2);
+    let mut w = u.dot(&v);
+    let mut noise = Matrix::zeros(dout, din);
+    rng.fill_normal(noise.data_mut(), 0.02);
+    w = w.add(&noise);
+    w
+}
+
+fn main() {
+    let mut b = Bench::new("saliency_cost");
+    let mut rng = Rng::new(0xC057);
+
+    for &(dout, din) in &[(256usize, 256usize), (1024, 256), (256, 1024)] {
+        let w = transformer_like(&mut rng, dout, din);
+        let label = format!("{dout}x{din}");
+        // synthetic calibration activations: 6144 tokens (128 seqs × 48)
+        let n_tok = 6144;
+        let mut x = Matrix::zeros(n_tok, din);
+        rng.fill_normal(x.data_mut(), 1.0);
+
+        b.timeit(&format!("svd_rsvd_r8      {label}"), || {
+            svd_score(&w, 8, SvdScoreMode::default())
+        });
+        b.timeit(&format!("svd_exact        {label}"), || {
+            svd_score(&w, 8, SvdScoreMode::Exact)
+        });
+        // SpQR cost split: (a) XᵀX build (calibration-time), (b) inverse
+        let xtx = matmul_at_b(&x, &x);
+        b.timeit(&format!("spqr_xtx_build   {label}"), || matmul_at_b(&x, &x));
+        b.timeit(&format!("spqr_inverse     {label}"), || {
+            spqr_score(&w, &xtx, n_tok, 0.01)
+        });
+        let colnorm: Vec<f32> = (0..din)
+            .map(|j| x.col(j).iter().map(|v| v * v).sum::<f32>().sqrt())
+            .collect();
+        b.timeit(&format!("awq_score        {label}"), || awq_score(&w, &colnorm));
+        let score = svd_score(&w, 8, SvdScoreMode::default());
+        b.timeit(&format!("topk_k4096       {label}"), || select_topk(&score, 4096));
+    }
+
+    // --- rank ablation: does the score stabilize with r? -----------------
+    let w = transformer_like(&mut rng, 256, 1024);
+    let exact_8 = select_topk(&svd_score(&w, 8, SvdScoreMode::Exact), 1024);
+    let mut rows = Vec::new();
+    for r in [1usize, 2, 4, 8, 16, 32] {
+        let t = std::time::Instant::now();
+        let s = svd_score(&w, r, SvdScoreMode::default());
+        let dt = t.elapsed().as_secs_f64();
+        let sel = select_topk(&s, 1024);
+        let agreement = svdquant::saliency::iou(&sel, &exact_8);
+        rows.push(vec![
+            r.to_string(),
+            format!("{:.1} ms", dt * 1e3),
+            format!("{agreement:.3}"),
+        ]);
+    }
+    b.table(
+        "rank ablation (256x1024, k=1024): IoU vs exact r=8 selection",
+        vec!["r".into(), "rsvd time".into(), "IoU vs exact-r8".into()],
+        rows,
+    );
+
+    // --- calibration-size sensitivity (supports the paper's RTE story) ---
+    let mut rows = Vec::new();
+    let full_n = 6144;
+    let mut x = Matrix::zeros(full_n, 256);
+    rng.fill_normal(x.data_mut(), 1.0);
+    let w = transformer_like(&mut rng, 256, 256);
+    let xtx_full = matmul_at_b(&x, &x);
+    let ref_sel = select_topk(&spqr_score(&w, &xtx_full, full_n, 0.01), 1024);
+    for n in [384usize, 1536, 6144] {
+        let xs = x.slice_rows(0, n);
+        let xtx = matmul_at_b(&xs, &xs);
+        let sel = select_topk(&spqr_score(&w, &xtx, n, 0.01), 1024);
+        rows.push(vec![
+            format!("{} tokens (~{} seqs)", n, n / 48),
+            format!("{:.3}", svdquant::saliency::iou(&sel, &ref_sel)),
+        ]);
+    }
+    b.table(
+        "SpQR calibration-size sensitivity: selection IoU vs full-calib selection",
+        vec!["calib size".into(), "IoU vs full".into()],
+        rows,
+    );
+    b.finish();
+}

@@ -1,0 +1,17 @@
+//! Regenerates paper Table I (MRPC accuracy recovery vs protection budget)
+//! and prints paper-vs-measured rows. `harness = false`.
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    // paper Table I rows: (k, AWQ, SpQR, SVD)
+    let paper = [
+        (1usize, 0.8505, 0.8480, 0.8554),
+        (16, 0.8505, 0.8456, 0.8554),
+        (64, 0.8529, 0.8480, 0.8529),
+        (256, 0.8529, 0.8480, 0.8529),
+        (1024, 0.8505, 0.8480, 0.8529),
+        (4096, 0.8529, 0.8480, 0.8529),
+    ];
+    common::table_bench("table1_mrpc", "mrpc", &paper);
+}

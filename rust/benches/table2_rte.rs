@@ -1,0 +1,18 @@
+//! Regenerates paper Table II (RTE accuracy recovery vs protection budget),
+//! the task where the paper's SVD method crosses above the FP32 baseline
+//! at k=4096 (the §VI-B "regularization effect"). `harness = false`.
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    // paper Table II rows: (k, AWQ, SpQR, SVD)
+    let paper = [
+        (1usize, 0.6498, 0.6498, 0.6354),
+        (16, 0.6390, 0.6426, 0.6390),
+        (64, 0.6426, 0.6426, 0.6498),
+        (256, 0.6390, 0.6426, 0.6426),
+        (1024, 0.6498, 0.6426, 0.6498),
+        (4096, 0.6534, 0.6534, 0.6606),
+    ];
+    common::table_bench("table2_rte", "rte", &paper);
+}

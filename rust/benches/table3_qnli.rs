@@ -1,0 +1,15 @@
+//! Regenerates paper Table III (QNLI accuracy recovery). The paper reports
+//! k ∈ {1, 256, 4096}; we run the full grid and compare at those points.
+//! `harness = false`.
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    // paper Table III rows: (k, AWQ, SpQR, SVD)
+    let paper = [
+        (1usize, 0.8803, 0.8805, 0.8788),
+        (256, 0.8775, 0.8803, 0.8836),
+        (4096, 0.8817, 0.8845, 0.8834),
+    ];
+    common::table_bench("table3_qnli", "qnli", &paper);
+}

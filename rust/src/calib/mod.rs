@@ -1,0 +1,173 @@
+//! Calibration pipeline (paper §IV-B: "128 samples from the training set")
+//! — feeds the two data-aware baselines:
+//!
+//! * AWQ needs per-input-channel activation norms `‖X_j‖₂` (eq. 3),
+//! * SpQR needs the empirical second moment `XᵀX` (eq. 4).
+//!
+//! Both are accumulated layer-by-layer from the pure-Rust engine's capture
+//! hook, in streaming batches so memory stays O(din²) per layer regardless
+//! of calibration size. The SVD method pointedly *never* touches this
+//! module — that is the paper's thesis.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::data::Dataset;
+use crate::linalg::{matmul_at_b, Matrix};
+use crate::model::Engine;
+
+/// Per-layer calibration statistics.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    /// Σ x_j² accumulated over all calibration tokens (→ ‖X_j‖₂ = sqrt)
+    pub col_sumsq: Vec<f64>,
+    /// XᵀX accumulator [din, din]
+    pub xtx: Matrix,
+    /// number of token rows observed
+    pub rows: usize,
+}
+
+impl LayerStats {
+    fn new(din: usize) -> Self {
+        Self { col_sumsq: vec![0.0; din], xtx: Matrix::zeros(din, din), rows: 0 }
+    }
+
+    fn absorb(&mut self, x: &Matrix) {
+        assert_eq!(x.cols(), self.col_sumsq.len());
+        for i in 0..x.rows() {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                self.col_sumsq[j] += (v as f64) * (v as f64);
+            }
+        }
+        let xtx_batch = matmul_at_b(x, x);
+        self.xtx = self.xtx.add(&xtx_batch);
+        self.rows += x.rows();
+    }
+
+    /// AWQ column norms ‖X_j‖₂.
+    pub fn col_norms(&self) -> Vec<f32> {
+        self.col_sumsq.iter().map(|&s| s.sqrt() as f32).collect()
+    }
+}
+
+/// Calibration statistics for every quantizable layer.
+#[derive(Debug, Default)]
+pub struct CalibStats {
+    pub layers: BTreeMap<String, LayerStats>,
+    /// number of calibration *samples* (sequences) consumed
+    pub samples: usize,
+}
+
+impl CalibStats {
+    /// Run `n_samples` sequences of `data` through `engine`, capturing the
+    /// inputs of every quantizable linear. `batch` bounds peak memory.
+    pub fn collect(
+        engine: &Engine,
+        data: &Dataset,
+        n_samples: usize,
+        batch: usize,
+    ) -> Result<CalibStats> {
+        let n = n_samples.min(data.len());
+        let mut stats = CalibStats { layers: BTreeMap::new(), samples: n };
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + batch).min(n);
+            let (ids, mask) = data.batch_slices(lo, hi);
+            let (_, cap) = engine.forward_captured(&ids, &mask)?;
+            for (name, x) in cap {
+                stats
+                    .layers
+                    .entry(name)
+                    .or_insert_with(|| LayerStats::new(x.cols()))
+                    .absorb(&x);
+            }
+            lo = hi;
+        }
+        Ok(stats)
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&LayerStats> {
+        self.layers
+            .get(name)
+            .with_context(|| format!("no calibration stats for layer {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::testing::synthetic_params;
+    use crate::model::ModelConfig;
+
+    fn tiny_setup() -> (Engine, Dataset) {
+        let cfg = ModelConfig {
+            vocab_size: 64,
+            max_len: 8,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            n_classes: 2,
+            export_batch: 4,
+        };
+        let engine = Engine::new(cfg, synthetic_params(&cfg, 7)).unwrap();
+        let n = 12;
+        let ids: Vec<i32> = (0..n * 8).map(|i| (i % 60) as i32 + 1).collect();
+        let mask = vec![1i32; n * 8];
+        let labels = vec![0i32; n];
+        let data = Dataset::from_raw("toy", ids, mask, labels, 8).unwrap();
+        (engine, data)
+    }
+
+    #[test]
+    fn collect_covers_all_layers() {
+        let (engine, data) = tiny_setup();
+        let stats = CalibStats::collect(&engine, &data, 8, 4).unwrap();
+        assert_eq!(stats.samples, 8);
+        for name in engine.cfg().quantizable_names() {
+            let ls = stats.layer(&name).unwrap();
+            assert!(ls.rows > 0, "{name}");
+            assert_eq!(ls.xtx.rows(), engine.params().get(&name).unwrap().cols());
+        }
+        assert!(stats.layer("nope").is_err());
+    }
+
+    #[test]
+    fn batched_equals_single_shot() {
+        let (engine, data) = tiny_setup();
+        let a = CalibStats::collect(&engine, &data, 8, 2).unwrap();
+        let b = CalibStats::collect(&engine, &data, 8, 8).unwrap();
+        for name in engine.cfg().quantizable_names() {
+            let (la, lb) = (a.layer(&name).unwrap(), b.layer(&name).unwrap());
+            assert_eq!(la.rows, lb.rows);
+            assert!(la.xtx.approx_eq(&lb.xtx, 1e-3), "{name}");
+            let (na, nb) = (la.col_norms(), lb.col_norms());
+            for (x, y) in na.iter().zip(&nb) {
+                assert!((x - y).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn xtx_is_symmetric_psd_diag() {
+        let (engine, data) = tiny_setup();
+        let stats = CalibStats::collect(&engine, &data, 6, 3).unwrap();
+        for ls in stats.layers.values() {
+            let d = ls.xtx.rows();
+            for i in 0..d {
+                assert!(ls.xtx[(i, i)] >= 0.0);
+                for j in 0..d {
+                    assert!((ls.xtx[(i, j)] - ls.xtx[(j, i)]).abs() < 1e-3);
+                }
+            }
+            // col_sumsq must equal diag(XᵀX)
+            for j in 0..d {
+                assert!(
+                    ((ls.col_sumsq[j] as f32) - ls.xtx[(j, j)]).abs()
+                        < 1e-2 * ls.xtx[(j, j)].abs().max(1.0)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! L3 coordinator: artifact management, the quantization pipeline, the
+//! experiment sweep (tables/figures), and the serving demo.
+//!
+//! * [`Artifacts`] — typed view of the `artifacts/` directory (manifest,
+//!   checkpoints, datasets, compiled executables);
+//! * [`PreserveSpec`] + [`quantize_checkpoint`] — one (method, k) pass of
+//!   the paper's scheme over every quantizable layer;
+//! * [`sweep`] — the full battle: methods × budgets × tasks with score-map
+//!   reuse, result caching and report emission;
+//! * [`server`] — dynamic-batching inference server over the deployed
+//!   packed-int4 model (the data-free deployment story of §I).
+
+pub mod server;
+pub mod sweep;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::calib::CalibStats;
+use crate::data::{load_split, Dataset};
+use crate::json::Json;
+use crate::linalg::Matrix;
+use crate::model::{ModelConfig, Params};
+use crate::quant::{fake_quant, QuantConfig};
+use crate::runtime::{Executable, Runtime};
+use crate::saliency::{
+    awq_score, magnitude_score, random_score, select_topk, spqr_score, svd_score, Method,
+    SalientSet, SvdScoreMode,
+};
+use crate::util::timer;
+
+/// Typed access to an artifacts directory produced by `make artifacts`.
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub manifest: Json,
+    pub model_cfg: ModelConfig,
+}
+
+impl Artifacts {
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let mpath = root.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} — run `make artifacts` first", mpath.display()))?;
+        let manifest = Json::parse(&text)?;
+        let model_cfg = ModelConfig::from_json(
+            manifest.get("model").context("manifest missing `model`")?,
+        )?;
+        Ok(Self { root, manifest, model_cfg })
+    }
+
+    /// Tasks present in the manifest.
+    pub fn tasks(&self) -> Vec<String> {
+        self.manifest
+            .get("tasks")
+            .and_then(|t| t.as_object())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// The paper's protection budgets.
+    pub fn budgets(&self) -> Vec<usize> {
+        self.manifest
+            .get("budgets")
+            .and_then(|b| b.as_array())
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+            .unwrap_or_else(|| vec![1, 16, 64, 256, 1024, 4096])
+    }
+
+    pub fn svd_rank(&self) -> usize {
+        self.manifest.get("svd_rank").and_then(|v| v.as_usize()).unwrap_or(8)
+    }
+
+    pub fn spqr_damp(&self) -> f32 {
+        self.manifest
+            .get("spqr_damp")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.01) as f32
+    }
+
+    pub fn calib_samples(&self) -> usize {
+        self.manifest
+            .get("calib_samples")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(128)
+    }
+
+    /// FP32 checkpoint of one task.
+    pub fn checkpoint(&self, task: &str) -> Result<Params> {
+        let p = self.root.join("ckpt").join(format!("{task}.qtz"));
+        Params::load(&p, &self.model_cfg)
+    }
+
+    pub fn dataset(&self, task: &str, split: &str) -> Result<Dataset> {
+        load_split(&self.root, task, split)
+    }
+
+    pub fn hlo_path(&self, task: &str, pallas: bool) -> PathBuf {
+        let suffix = if pallas { "_pallas" } else { "" };
+        self.root.join("hlo").join(format!("model_{task}{suffix}.hlo.txt"))
+    }
+
+    /// Compile the task's model executable on `rt`.
+    pub fn compile_model(&self, rt: &Runtime, task: &str, pallas: bool) -> Result<Executable> {
+        rt.load_hlo(self.hlo_path(task, pallas))
+    }
+
+    /// Paper reference numbers for EXPERIMENTS.md (fp32 ceiling, q4 floor).
+    pub fn paper_refs(&self, task: &str) -> (f64, f64) {
+        let get = |k: &str| {
+            self.manifest
+                .at(&["tasks", task, k])
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        (get("paper_fp32"), get("paper_q4_floor"))
+    }
+}
+
+/// One quantization configuration of the paper's scheme.
+#[derive(Debug, Clone, Copy)]
+pub struct PreserveSpec {
+    pub method: Method,
+    /// protection budget per linear layer (paper §IV-B)
+    pub k_per_layer: usize,
+    pub qcfg: QuantConfig,
+    /// rank of the principal reconstruction (paper: 8)
+    pub svd_rank: usize,
+    pub svd_mode: SvdScoreMode,
+    /// SpQR Hessian damping (paper: 0.01)
+    pub spqr_damp: f32,
+    /// seed for the random baseline
+    pub seed: u64,
+}
+
+impl Default for PreserveSpec {
+    fn default() -> Self {
+        Self {
+            method: Method::Svd,
+            k_per_layer: 256,
+            qcfg: QuantConfig::default(),
+            svd_rank: 8,
+            svd_mode: SvdScoreMode::default(),
+            spqr_damp: 0.01,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// Score one layer under `spec` (the expensive, k-independent part).
+pub fn score_layer(
+    name: &str,
+    w: &Matrix,
+    spec: &PreserveSpec,
+    calib: Option<&CalibStats>,
+) -> Result<Matrix> {
+    let score = match spec.method {
+        Method::Random => {
+            // per-layer decorrelated stream, deterministic in (seed, name)
+            let tag = name.bytes().fold(spec.seed, |acc, b| {
+                acc.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
+            });
+            random_score(w.rows(), w.cols(), tag)
+        }
+        Method::Magnitude => magnitude_score(w),
+        Method::Awq => {
+            let stats = calib
+                .with_context(|| format!("AWQ needs calibration stats (layer {name})"))?
+                .layer(name)?;
+            awq_score(w, &stats.col_norms())
+        }
+        Method::Spqr => {
+            let stats = calib
+                .with_context(|| format!("SpQR needs calibration stats (layer {name})"))?
+                .layer(name)?;
+            spqr_score(w, &stats.xtx, stats.rows.max(1), spec.spqr_damp)
+        }
+        Method::Svd => svd_score(w, spec.svd_rank, spec.svd_mode),
+    };
+    Ok(score)
+}
+
+/// Apply the paper's scheme to every quantizable layer of `ckpt`:
+/// score → top-k → `W ≈ S + Q` (simulated). Returns the substituted
+/// parameter set plus the per-layer selections (for overlap analysis).
+pub fn quantize_checkpoint(
+    cfg: &ModelConfig,
+    ckpt: &Params,
+    spec: &PreserveSpec,
+    calib: Option<&CalibStats>,
+) -> Result<(Params, BTreeMap<String, SalientSet>)> {
+    if spec.method.needs_calibration() && calib.is_none() {
+        bail!("{} requires calibration data", spec.method);
+    }
+    let mut subs = BTreeMap::new();
+    let mut sels = BTreeMap::new();
+    for name in cfg.quantizable_names() {
+        let w = ckpt.get(&name)?;
+        let score = timer::scope("quantize.score", || score_layer(&name, w, spec, calib))?;
+        let sel = timer::scope("quantize.topk", || select_topk(&score, spec.k_per_layer));
+        let wq = timer::scope("quantize.apply", || preserve(w, &sel, &spec.qcfg));
+        subs.insert(name.clone(), wq);
+        sels.insert(name, sel);
+    }
+    Ok((ckpt.with_weights(&subs)?, sels))
+}
+
+/// `W ≈ S + Q` on one matrix: fake-quantize everything, then restore the
+/// selected entries to their exact FP32 values (paper eq. 1).
+pub fn preserve(w: &Matrix, sel: &SalientSet, qcfg: &QuantConfig) -> Matrix {
+    let mut wq = fake_quant(w, qcfg);
+    for &flat in &sel.indices {
+        wq.data_mut()[flat as usize] = w.data()[flat as usize];
+    }
+    wq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::testing::synthetic_params;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 64,
+            max_len: 8,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            n_classes: 2,
+            export_batch: 4,
+        }
+    }
+
+    #[test]
+    fn preserve_restores_salient_exactly() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 5);
+        let w = p.get("layer0.wq").unwrap();
+        let score = magnitude_score(w);
+        let sel = select_topk(&score, 10);
+        let wq = preserve(w, &sel, &QuantConfig::default());
+        for &flat in &sel.indices {
+            assert_eq!(wq.data()[flat as usize], w.data()[flat as usize]);
+        }
+        // some non-salient entry must differ (quantization noise)
+        assert!(!wq.approx_eq(w, 1e-6));
+    }
+
+    #[test]
+    fn quantize_checkpoint_covers_all_layers() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 6);
+        let spec = PreserveSpec { method: Method::Svd, k_per_layer: 4, ..Default::default() };
+        let (qp, sels) = quantize_checkpoint(&cfg, &p, &spec, None).unwrap();
+        assert_eq!(sels.len(), cfg.quantizable_names().len());
+        for name in cfg.quantizable_names() {
+            assert_eq!(sels[&name].k(), 4);
+            assert!(!qp.get(&name).unwrap().approx_eq(p.get(&name).unwrap(), 1e-7));
+        }
+        // non-quantizable params untouched
+        assert!(qp
+            .get("tok_emb")
+            .unwrap()
+            .approx_eq(p.get("tok_emb").unwrap(), 0.0));
+    }
+
+    #[test]
+    fn data_aware_methods_require_calib() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 7);
+        for m in [Method::Awq, Method::Spqr] {
+            let spec = PreserveSpec { method: m, ..Default::default() };
+            assert!(quantize_checkpoint(&cfg, &p, &spec, None).is_err());
+        }
+    }
+
+    #[test]
+    fn random_is_deterministic_per_layer_but_differs_across_layers() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 8);
+        let spec = PreserveSpec { method: Method::Random, k_per_layer: 8, ..Default::default() };
+        let (_, s1) = quantize_checkpoint(&cfg, &p, &spec, None).unwrap();
+        let (_, s2) = quantize_checkpoint(&cfg, &p, &spec, None).unwrap();
+        assert_eq!(s1["layer0.wq"].indices, s2["layer0.wq"].indices);
+        assert_ne!(s1["layer0.wq"].indices, s1["layer0.wk"].indices);
+    }
+
+    #[test]
+    fn k_zero_is_pure_q4() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 9);
+        let spec = PreserveSpec { method: Method::Svd, k_per_layer: 0, ..Default::default() };
+        let (qp, sels) = quantize_checkpoint(&cfg, &p, &spec, None).unwrap();
+        assert!(sels.values().all(|s| s.k() == 0));
+        let w = p.get("layer0.wf1").unwrap();
+        let expect = fake_quant(w, &QuantConfig::default());
+        assert!(qp.get("layer0.wf1").unwrap().approx_eq(&expect, 0.0));
+    }
+}

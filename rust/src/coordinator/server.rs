@@ -1,0 +1,274 @@
+//! Dynamic-batching inference server over the deployed quantized model —
+//! the "data-free deployment" story of the paper's introduction, and the
+//! workload behind `examples/datafree_deploy` + the engine_inference bench.
+//!
+//! Architecture (a miniature of the vLLM router pattern):
+//! * a front thread replays a [`TraceGenerator`] arrival trace into a
+//!   bounded queue (backpressure: enqueue blocks when full);
+//! * the batcher drains up to `max_batch` requests or waits at most
+//!   `max_wait` after the first request of a batch (classic size-or-
+//!   deadline batching);
+//! * the worker runs the fused packed-int4 forward and completes requests
+//!   with per-request latency bookkeeping.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data::{Dataset, Request};
+use crate::model::QuantizedModel;
+
+/// Server tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait: Duration::from_millis(5), queue_cap: 256 }
+    }
+}
+
+/// Latency record for one completed request.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub sample: usize,
+    pub pred: i32,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+    pub batch_size: usize,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub completions: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch: f64,
+    pub accuracy: f64,
+}
+
+struct QueueInner {
+    items: VecDeque<(Request, Instant)>,
+    closed: bool,
+}
+
+/// Bounded MPSC queue with condvar signaling (no tokio offline).
+struct BoundedQueue {
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl BoundedQueue {
+    fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    fn push(&self, r: Request) {
+        let mut g = self.inner.lock().unwrap();
+        while g.items.len() >= self.cap {
+            g = self.not_full.wait(g).unwrap();
+        }
+        g.items.push_back((r, Instant::now()));
+        drop(g);
+        self.not_empty.notify_one();
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Pop a batch: wait for ≥1 item (or close), then collect up to
+    /// `max_batch` items, waiting at most `max_wait` for stragglers.
+    fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Vec<(Request, Instant)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return Vec::new();
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+        let deadline = Instant::now() + max_wait;
+        loop {
+            if g.items.len() >= max_batch || g.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ng, timeout) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = ng;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = g.items.len().min(max_batch);
+        let batch: Vec<_> = g.items.drain(..take).collect();
+        drop(g);
+        self.not_full.notify_all();
+        batch
+    }
+}
+
+/// Replay `trace` against the quantized model; returns per-request stats.
+///
+/// Single worker (the bench machine has one core); the interesting dynamics
+/// — queueing, batch formation, tail latency under bursts — are unaffected.
+pub fn serve_trace(
+    qm: &QuantizedModel,
+    data: &Dataset,
+    trace: &[Request],
+    cfg: &ServerConfig,
+) -> Result<ServeStats> {
+    let queue = BoundedQueue::new(cfg.queue_cap);
+    let start = Instant::now();
+    let mut completions: Vec<Completion> = Vec::with_capacity(trace.len());
+    let mut correct = 0usize;
+
+    std::thread::scope(|scope| -> Result<()> {
+        // front: replay arrivals in (scaled) real time
+        let front = scope.spawn(|| {
+            let t0 = Instant::now();
+            for r in trace {
+                let target = Duration::from_secs_f64(r.arrival_s);
+                if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+                    if sleep > Duration::ZERO {
+                        std::thread::sleep(sleep);
+                    }
+                }
+                queue.push(*r);
+            }
+            queue.close();
+        });
+
+        // worker: batch + run
+        let s = data.seq_len();
+        loop {
+            let batch = queue.pop_batch(cfg.max_batch, cfg.max_wait);
+            if batch.is_empty() {
+                break;
+            }
+            let bsize = batch.len();
+            let mut ids = Vec::with_capacity(bsize * s);
+            let mut mask = Vec::with_capacity(bsize * s);
+            for (r, _) in &batch {
+                let (i, m) = data.batch_slices(r.sample, r.sample + 1);
+                ids.extend(i);
+                mask.extend(m);
+            }
+            let exec_start = Instant::now();
+            let logits = qm.forward_fused(&ids, &mask)?;
+            let _exec_ms = exec_start.elapsed().as_secs_f64() * 1e3;
+            for (bi, (r, enq)) in batch.iter().enumerate() {
+                let row = logits.row(bi);
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as i32)
+                    .unwrap();
+                if pred == data.label(r.sample) {
+                    correct += 1;
+                }
+                completions.push(Completion {
+                    sample: r.sample,
+                    pred,
+                    queue_ms: exec_start.duration_since(*enq).as_secs_f64() * 1e3,
+                    total_ms: enq.elapsed().as_secs_f64() * 1e3,
+                    batch_size: bsize,
+                });
+            }
+        }
+        front.join().expect("front thread");
+        Ok(())
+    })?;
+
+    let wall = start.elapsed().as_secs_f64();
+    let mut lat: Vec<f64> = completions.iter().map(|c| c.total_ms).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if lat.is_empty() {
+            return 0.0;
+        }
+        lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)]
+    };
+    let mean_batch = if completions.is_empty() {
+        0.0
+    } else {
+        completions.iter().map(|c| c.batch_size as f64).sum::<f64>() / completions.len() as f64
+    };
+    Ok(ServeStats {
+        completions: completions.len(),
+        wall_s: wall,
+        throughput_rps: completions.len() as f64 / wall.max(1e-9),
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+        p99_ms: pct(0.99),
+        mean_batch,
+        accuracy: correct as f64 / completions.len().max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_batches_by_size() {
+        let q = BoundedQueue::new(64);
+        for i in 0..10 {
+            q.push(Request { arrival_s: 0.0, sample: i });
+        }
+        let b = q.pop_batch(4, Duration::from_millis(1));
+        assert_eq!(b.len(), 4);
+        let b = q.pop_batch(16, Duration::from_millis(1));
+        assert_eq!(b.len(), 6);
+    }
+
+    #[test]
+    fn queue_close_drains() {
+        let q = BoundedQueue::new(8);
+        q.push(Request { arrival_s: 0.0, sample: 0 });
+        q.close();
+        assert_eq!(q.pop_batch(4, Duration::from_millis(1)).len(), 1);
+        assert!(q.pop_batch(4, Duration::from_millis(1)).is_empty());
+    }
+
+    #[test]
+    fn queue_blocks_until_item() {
+        let q = std::sync::Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.push(Request { arrival_s: 0.0, sample: 7 });
+        });
+        let b = q.pop_batch(2, Duration::from_millis(1));
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].0.sample, 7);
+        h.join().unwrap();
+    }
+}

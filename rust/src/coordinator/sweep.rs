@@ -1,0 +1,327 @@
+//! The experiment sweep — regenerates every accuracy number in the paper's
+//! Tables I–III / Fig. 1 and the Fig. 2 overlap analysis, over the
+//! artifacts' tasks × methods × budgets grid.
+//!
+//! Cost structure the scheduler exploits:
+//! * calibration (AWQ/SpQR input) is per *task* — run once, shared;
+//! * score maps are per (task, method) — computed once, reused across all
+//!   budgets k (only top-k + requantize + eval vary with k);
+//! * the PJRT executable is per task — compiled once, weights are call
+//!   arguments.
+//!
+//! Results are cached in `results/sweep.json` keyed by
+//! (task, method, k, bits, clip); re-runs skip completed cells, so an
+//! interrupted sweep resumes for free.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::calib::CalibStats;
+use crate::eval::{eval_pjrt, EvalResult};
+use crate::json::Json;
+use crate::model::Engine;
+use crate::quant::QuantConfig;
+use crate::runtime::Runtime;
+use crate::saliency::{iou, select_topk, Method, OverlapReport, SalientSet};
+use crate::util::timer::{self, Timer};
+
+use super::{preserve, score_layer, Artifacts, PreserveSpec};
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub tasks: Vec<String>,
+    pub methods: Vec<Method>,
+    pub budgets: Vec<usize>,
+    pub qcfg: QuantConfig,
+    pub svd_rank: usize,
+    pub calib_samples: usize,
+    /// include the FP32 ceiling + unprotected Q4 floor rows
+    pub include_baselines: bool,
+    /// where results/sweep.json lives
+    pub out_dir: PathBuf,
+}
+
+impl SweepConfig {
+    pub fn paper_defaults(art: &Artifacts, out_dir: &Path) -> Self {
+        Self {
+            tasks: art.tasks(),
+            methods: vec![Method::Random, Method::Awq, Method::Spqr, Method::Svd],
+            budgets: art.budgets(),
+            qcfg: QuantConfig::default(),
+            svd_rank: art.svd_rank(),
+            calib_samples: art.calib_samples(),
+            include_baselines: true,
+            out_dir: out_dir.to_path_buf(),
+        }
+    }
+}
+
+/// One sweep cell result.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub task: String,
+    pub method: String,
+    pub k: usize,
+    pub accuracy: f64,
+    pub total: usize,
+    pub wall_s: f64,
+}
+
+/// All results of a sweep, plus the overlap analysis.
+#[derive(Debug, Default)]
+pub struct SweepResults {
+    pub cells: Vec<Cell>,
+    pub overlap: OverlapReport,
+}
+
+impl SweepResults {
+    pub fn accuracy(&self, task: &str, method: &str, k: usize) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| c.task == task && c.method == method && c.k == k)
+            .map(|c| c.accuracy)
+    }
+}
+
+/// Cache key for one cell.
+fn cell_key(task: &str, method: &str, k: usize, q: &QuantConfig) -> String {
+    format!(
+        "{task}/{method}/k{k}/b{}c{}r{}",
+        q.bits,
+        q.clip_sigma.map(|c| c.to_string()).unwrap_or_else(|| "none".into()),
+        q.per_row as u8
+    )
+}
+
+/// Load the sweep cache (key → (accuracy, total, wall_s)).
+fn load_cache(path: &Path) -> BTreeMap<String, (f64, usize, f64)> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return BTreeMap::new();
+    };
+    let Ok(j) = Json::parse(&text) else {
+        return BTreeMap::new();
+    };
+    let mut out = BTreeMap::new();
+    if let Some(obj) = j.as_object() {
+        for (k, v) in obj {
+            let acc = v.get("accuracy").and_then(|x| x.as_f64());
+            let total = v.get("total").and_then(|x| x.as_usize());
+            let wall = v.get("wall_s").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            if let (Some(a), Some(t)) = (acc, total) {
+                out.insert(k.clone(), (a, t, wall));
+            }
+        }
+    }
+    out
+}
+
+fn save_cache(path: &Path, cache: &BTreeMap<String, (f64, usize, f64)>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let obj = Json::Object(
+        cache
+            .iter()
+            .map(|(k, (a, t, w))| {
+                (
+                    k.clone(),
+                    Json::object(vec![
+                        ("accuracy".into(), Json::from(*a)),
+                        ("total".into(), Json::from(*t)),
+                        ("wall_s".into(), Json::from(*w)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    std::fs::write(path, obj.pretty())?;
+    Ok(())
+}
+
+/// Run the full sweep. Progress goes to stdout; results to
+/// `<out_dir>/sweep.json` (resumable cache) and the returned struct.
+pub fn run_sweep(art: &Artifacts, rt: &Runtime, cfg: &SweepConfig) -> Result<SweepResults> {
+    let cache_path = cfg.out_dir.join("sweep.json");
+    let mut cache = load_cache(&cache_path);
+    let mut results = SweepResults::default();
+    let overall = Timer::start();
+
+    for task in &cfg.tasks {
+        println!("=== sweep: task {task} ===");
+        let ckpt = art.checkpoint(task)?;
+        let dev = art.dataset(task, "dev")?;
+        let exe = art.compile_model(rt, task, false)?;
+        let mcfg = &art.model_cfg;
+
+        // --- baselines: FP32 ceiling and unprotected Q4 floor -------------
+        if cfg.include_baselines {
+            for (name, k) in [("fp32", usize::MAX), ("q4_floor", 0)] {
+                let key = cell_key(task, name, 0, &cfg.qcfg);
+                let (acc, total, wall) = if let Some(&hit) = cache.get(&key) {
+                    hit
+                } else {
+                    let t = Timer::start();
+                    let r: EvalResult = if name == "fp32" {
+                        eval_pjrt(&exe, mcfg, &ckpt, &dev)?
+                    } else {
+                        let spec = PreserveSpec {
+                            method: Method::Random,
+                            k_per_layer: 0,
+                            qcfg: cfg.qcfg,
+                            ..Default::default()
+                        };
+                        let (qp, _) = super::quantize_checkpoint(mcfg, &ckpt, &spec, None)?;
+                        eval_pjrt(&exe, mcfg, &qp, &dev)?
+                    };
+                    let cell = (r.accuracy(), r.total, t.elapsed_s());
+                    cache.insert(key, cell);
+                    save_cache(&cache_path, &cache)?;
+                    cell
+                };
+                println!("  {name:<10} acc {acc:.4}");
+                results.cells.push(Cell {
+                    task: task.clone(),
+                    method: name.into(),
+                    k,
+                    accuracy: acc,
+                    total,
+                    wall_s: wall,
+                });
+                let _ = k;
+            }
+        }
+
+        // --- calibration: once per task, shared by AWQ + SpQR --------------
+        let needs_calib = cfg.methods.iter().any(|m| m.needs_calibration());
+        let calib: Option<CalibStats> = if needs_calib {
+            let calib_data = art.dataset(task, "calib")?;
+            let engine = Engine::new(*mcfg, ckpt.clone())?;
+            Some(timer::scope("sweep.calibration", || {
+                CalibStats::collect(&engine, &calib_data, cfg.calib_samples, 16)
+            })?)
+        } else {
+            None
+        };
+
+        // --- score maps per method (k-independent), then all budgets ------
+        let mut selections: BTreeMap<(String, usize), BTreeMap<String, SalientSet>> =
+            BTreeMap::new();
+        for &method in &cfg.methods {
+            let spec = PreserveSpec {
+                method,
+                k_per_layer: 0,
+                qcfg: cfg.qcfg,
+                svd_rank: cfg.svd_rank,
+                spqr_damp: art.spqr_damp(),
+                ..Default::default()
+            };
+            // compute every layer's score map once
+            let mut scores = BTreeMap::new();
+            let score_t = Timer::start();
+            for name in mcfg.quantizable_names() {
+                let w = ckpt.get(&name)?;
+                scores.insert(name.clone(), score_layer(&name, w, &spec, calib.as_ref())?);
+            }
+            println!("  [{method}] scored {} layers in {:.2}s", scores.len(), score_t.elapsed_s());
+
+            for &k in &cfg.budgets {
+                let key = cell_key(task, method.name(), k, &cfg.qcfg);
+                // selections are needed for overlap even on cache hits
+                let mut sels = BTreeMap::new();
+                let mut subs = BTreeMap::new();
+                for (name, score) in &scores {
+                    let sel = select_topk(score, k);
+                    let w = ckpt.get(name)?;
+                    subs.insert(name.clone(), preserve(w, &sel, &cfg.qcfg));
+                    sels.insert(name.clone(), sel);
+                }
+                selections.insert((method.name().to_string(), k), sels);
+
+                let (acc, total, wall) = if let Some(&hit) = cache.get(&key) {
+                    hit
+                } else {
+                    let t = Timer::start();
+                    let qp = ckpt.with_weights(&subs)?;
+                    let r = eval_pjrt(&exe, mcfg, &qp, &dev)?;
+                    let cell = (r.accuracy(), r.total, t.elapsed_s());
+                    cache.insert(key, cell);
+                    save_cache(&cache_path, &cache)?;
+                    cell
+                };
+                println!("  [{method}] k={k:<5} acc {acc:.4}");
+                results.cells.push(Cell {
+                    task: task.clone(),
+                    method: method.name().into(),
+                    k,
+                    accuracy: acc,
+                    total,
+                    wall_s: wall,
+                });
+            }
+        }
+
+        // --- Fig. 2 overlap: SVD vs each data-aware baseline ---------------
+        for &k in &cfg.budgets {
+            if let Some(svd_sels) = selections.get(&("svd".to_string(), k)) {
+                for base in ["awq", "spqr"] {
+                    if let Some(base_sels) = selections.get(&(base.to_string(), k)) {
+                        for (name, s) in svd_sels {
+                            results.overlap.record(base, k, iou(s, &base_sels[name]));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    println!("sweep complete in {:.1}s", overall.elapsed_s());
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_key_distinguishes_configs() {
+        let a = cell_key("mrpc", "svd", 16, &QuantConfig::default());
+        let b = cell_key("mrpc", "svd", 64, &QuantConfig::default());
+        let c = cell_key(
+            "mrpc",
+            "svd",
+            16,
+            &QuantConfig { bits: 8, ..Default::default() },
+        );
+        let d = cell_key(
+            "mrpc",
+            "svd",
+            16,
+            &QuantConfig { clip_sigma: None, ..Default::default() },
+        );
+        assert!(a != b && a != c && a != d && c != d);
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let dir = std::env::temp_dir().join("svdquant_sweep_cache");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sweep.json");
+        let mut cache = BTreeMap::new();
+        cache.insert("mrpc/svd/k16/b4c2.5r0".to_string(), (0.8554, 408, 1.25));
+        save_cache(&p, &cache).unwrap();
+        let re = load_cache(&p);
+        assert_eq!(re.len(), 1);
+        let v = re["mrpc/svd/k16/b4c2.5r0"];
+        assert!((v.0 - 0.8554).abs() < 1e-12);
+        assert_eq!(v.1, 408);
+    }
+
+    #[test]
+    fn missing_cache_is_empty() {
+        let re = load_cache(Path::new("/nonexistent/sweep.json"));
+        assert!(re.is_empty());
+    }
+}

@@ -1,0 +1,265 @@
+//! Dataset loading + batching. Datasets are produced once by the python
+//! compile path (`python/compile/data.py` → artifacts/data/*.qtz) and only
+//! *read* here — the rust side never regenerates them, so python and rust
+//! always evaluate the identical dev split.
+//!
+//! Also home to [`TraceGenerator`]: synthetic request-arrival traces for
+//! the serving demo / engine_inference bench (Poisson arrivals, bursty
+//! variant), standing in for the production traces the paper's deployment
+//! story implies (DESIGN.md §2).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensorfile::TensorFile;
+use crate::util::rng::Rng;
+
+/// A classification dataset: token ids, masks, labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// [n * seq_len] row-major
+    ids: Vec<i32>,
+    mask: Vec<i32>,
+    labels: Vec<i32>,
+    seq_len: usize,
+}
+
+impl Dataset {
+    pub fn from_raw(
+        name: &str,
+        ids: Vec<i32>,
+        mask: Vec<i32>,
+        labels: Vec<i32>,
+        seq_len: usize,
+    ) -> Result<Self> {
+        if ids.len() != mask.len() || ids.len() != labels.len() * seq_len {
+            bail!(
+                "inconsistent dataset: ids {} mask {} labels {} seq {}",
+                ids.len(),
+                mask.len(),
+                labels.len(),
+                seq_len
+            );
+        }
+        Ok(Self { name: name.to_string(), ids, mask, labels, seq_len })
+    }
+
+    /// Load `artifacts/data/<task>_<split>.qtz`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let tf = TensorFile::open(path)?;
+        let ids_t = tf.get("input_ids")?;
+        let mask_t = tf.get("attention_mask")?;
+        let labels_t = tf.get("labels")?;
+        let (n, s) = match ids_t.shape.as_slice() {
+            [n, s] => (*n, *s),
+            other => bail!("input_ids must be [n, s], got {other:?}"),
+        };
+        if mask_t.shape != vec![n, s] || labels_t.shape != vec![n] {
+            bail!("shape mismatch in {}", path.display());
+        }
+        let name = tf
+            .meta
+            .get("task")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        Self::from_raw(
+            &name,
+            ids_t.as_i32()?,
+            mask_t.as_i32()?,
+            labels_t.as_i32()?,
+            s,
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn label(&self, i: usize) -> i32 {
+        self.labels[i]
+    }
+
+    pub fn labels(&self) -> &[i32] {
+        &self.labels
+    }
+
+    /// Contiguous sample range as flat (ids, mask) slices, cloned.
+    pub fn batch_slices(&self, lo: usize, hi: usize) -> (Vec<i32>, Vec<i32>) {
+        assert!(lo <= hi && hi <= self.len());
+        let s = self.seq_len;
+        (
+            self.ids[lo * s..hi * s].to_vec(),
+            self.mask[lo * s..hi * s].to_vec(),
+        )
+    }
+
+    /// Like [`Self::batch_slices`] but zero-padded to exactly `batch`
+    /// sequences (what the shape-static PJRT executable needs).
+    pub fn batch_padded(&self, lo: usize, hi: usize, batch: usize) -> (Vec<i32>, Vec<i32>) {
+        assert!(hi - lo <= batch);
+        let s = self.seq_len;
+        let (mut ids, mut mask) = self.batch_slices(lo, hi);
+        ids.resize(batch * s, 0);
+        mask.resize(batch * s, 0);
+        (ids, mask)
+    }
+
+    /// Fraction of positive labels (diagnostics).
+    pub fn label_balance(&self) -> f64 {
+        if self.labels.is_empty() {
+            return 0.0;
+        }
+        self.labels.iter().filter(|&&l| l == 1).count() as f64 / self.labels.len() as f64
+    }
+}
+
+/// Artifacts-relative dataset location.
+pub fn dataset_path(artifacts: &Path, task: &str, split: &str) -> std::path::PathBuf {
+    artifacts.join("data").join(format!("{task}_{split}.qtz"))
+}
+
+/// Open one split of one task from an artifacts directory.
+pub fn load_split(artifacts: &Path, task: &str, split: &str) -> Result<Dataset> {
+    let p = dataset_path(artifacts, task, split);
+    Dataset::load(&p).with_context(|| format!("loading {}", p.display()))
+}
+
+// --------------------------------------------------------------- workloads
+
+/// One serving request in a synthetic trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    /// arrival time in seconds from trace start
+    pub arrival_s: f64,
+    /// dataset sample index to run
+    pub sample: usize,
+}
+
+/// Synthetic arrival-trace generator for the serving demo.
+#[derive(Debug, Clone)]
+pub struct TraceGenerator {
+    pub rate_per_s: f64,
+    /// burstiness: probability a request brings a burst of `burst_size`
+    pub burst_prob: f64,
+    pub burst_size: usize,
+}
+
+impl TraceGenerator {
+    pub fn poisson(rate_per_s: f64) -> Self {
+        Self { rate_per_s, burst_prob: 0.0, burst_size: 0 }
+    }
+
+    pub fn bursty(rate_per_s: f64, burst_prob: f64, burst_size: usize) -> Self {
+        Self { rate_per_s, burst_prob, burst_size }
+    }
+
+    /// Generate `n` requests drawing sample indices from `[0, n_samples)`.
+    pub fn generate(&self, n: usize, n_samples: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        while out.len() < n {
+            // exponential inter-arrival
+            let u: f64 = rng.f64().max(1e-12);
+            t += -u.ln() / self.rate_per_s;
+            let burst = if rng.chance(self.burst_prob) { self.burst_size } else { 1 };
+            for _ in 0..burst.max(1) {
+                if out.len() >= n {
+                    break;
+                }
+                out.push(Request { arrival_s: t, sample: rng.range(0, n_samples) });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensorfile::Tensor;
+
+    fn toy_file(path: &Path) {
+        let mut tf = TensorFile::new();
+        let n = 5;
+        let s = 4;
+        let ids: Vec<i32> = (0..(n * s) as i32).collect();
+        let mask = vec![1i32; n * s];
+        let labels = vec![0, 1, 1, 0, 1];
+        tf.insert("input_ids", Tensor::from_i32(vec![n, s], &ids));
+        tf.insert("attention_mask", Tensor::from_i32(vec![n, s], &mask));
+        tf.insert("labels", Tensor::from_i32(vec![n], &labels));
+        tf.meta = crate::json::Json::object(vec![("task".into(), "toy".into())]);
+        tf.save(path).unwrap();
+    }
+
+    #[test]
+    fn load_and_batch() {
+        let dir = std::env::temp_dir().join("svdquant_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy_dev.qtz");
+        toy_file(&p);
+        let ds = Dataset::load(&p).unwrap();
+        assert_eq!(ds.len(), 5);
+        assert_eq!(ds.seq_len(), 4);
+        assert_eq!(ds.name, "toy");
+        assert!((ds.label_balance() - 0.6).abs() < 1e-9);
+        let (ids, mask) = ds.batch_slices(1, 3);
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids[0], 4);
+        assert!(mask.iter().all(|&m| m == 1));
+        let (pids, pmask) = ds.batch_padded(3, 5, 4);
+        assert_eq!(pids.len(), 16);
+        assert_eq!(&pids[8..], &[0; 8]);
+        assert_eq!(&pmask[8..], &[0; 8]);
+    }
+
+    #[test]
+    fn rejects_inconsistent() {
+        assert!(Dataset::from_raw("x", vec![0; 8], vec![0; 8], vec![0; 3], 4).is_err());
+        assert!(Dataset::from_raw("x", vec![0; 8], vec![0; 7], vec![0; 2], 4).is_err());
+    }
+
+    #[test]
+    fn poisson_trace_monotone_and_rate() {
+        let g = TraceGenerator::poisson(100.0);
+        let reqs = g.generate(500, 10, 1);
+        assert_eq!(reqs.len(), 500);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        // 500 requests at 100/s ≈ 5s span (loose check)
+        let span = reqs.last().unwrap().arrival_s;
+        assert!(span > 2.0 && span < 10.0, "span {span}");
+        assert!(reqs.iter().all(|r| r.sample < 10));
+    }
+
+    #[test]
+    fn bursty_trace_has_coincident_arrivals() {
+        let g = TraceGenerator::bursty(50.0, 0.3, 4);
+        let reqs = g.generate(200, 5, 2);
+        let coincident = reqs
+            .windows(2)
+            .filter(|w| w[0].arrival_s == w[1].arrival_s)
+            .count();
+        assert!(coincident > 10, "bursts expected, got {coincident}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let g = TraceGenerator::poisson(10.0);
+        assert_eq!(g.generate(50, 8, 7), g.generate(50, 8, 7));
+    }
+}

@@ -1,0 +1,160 @@
+//! Accuracy evaluation harness — computes the numbers that fill the
+//! paper's Tables I–III. Two backends with identical semantics:
+//!
+//! * [`eval_pjrt`] — the production path: the AOT-compiled XLA executable
+//!   with (possibly quantized) weights passed as arguments. Used by the
+//!   sweep; fast because XLA CPU vectorizes the matmuls.
+//! * [`eval_engine`] — the pure-Rust engine; used for cross-checks and for
+//!   the deployed packed-int4 model.
+//!
+//! Both pad the last batch to the executable's static batch size and count
+//! only real samples.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::model::{Engine, ModelConfig, Params, QuantizedModel};
+use crate::runtime::{literal_i32, logits_to_matrix, param_literals, Executable};
+
+/// Evaluation outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+fn count_correct(logits: &Matrix, labels: &[i32], upto: usize, acc: &mut EvalResult) {
+    for i in 0..upto {
+        let row = logits.row(i);
+        // first-max argmax (ties → lowest class index, matching jnp.argmax)
+        let mut pred = 0i32;
+        let mut best = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v > best {
+                best = v;
+                pred = j as i32;
+            }
+        }
+        if pred == labels[i] {
+            acc.correct += 1;
+        }
+        acc.total += 1;
+    }
+}
+
+/// Evaluate through the PJRT executable (weights = `params`).
+pub fn eval_pjrt(
+    exe: &Executable,
+    cfg: &ModelConfig,
+    params: &Params,
+    data: &Dataset,
+) -> Result<EvalResult> {
+    let b = cfg.export_batch;
+    let s = cfg.max_len;
+    let weight_lits = param_literals(cfg, params)?;
+    let mut result = EvalResult { correct: 0, total: 0 };
+    let mut lo = 0;
+    while lo < data.len() {
+        let hi = (lo + b).min(data.len());
+        let (ids, mask) = data.batch_padded(lo, hi, b);
+        let ids_lit = literal_i32(&ids, b, s)?;
+        let mask_lit = literal_i32(&mask, b, s)?;
+        // weights are borrowed so the ~15 MB parameter set is materialized
+        // once per eval, not once per batch
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 + weight_lits.len());
+        args.push(&ids_lit);
+        args.push(&mask_lit);
+        args.extend(weight_lits.iter());
+        let out = exe.run(&args)?;
+        let logits = logits_to_matrix(&out[0], b, cfg.n_classes)?;
+        count_correct(&logits, &data.labels()[lo..hi], hi - lo, &mut result);
+        lo = hi;
+    }
+    Ok(result)
+}
+
+/// Evaluate through the pure-Rust engine.
+pub fn eval_engine(engine: &Engine, data: &Dataset, batch: usize) -> Result<EvalResult> {
+    let mut result = EvalResult { correct: 0, total: 0 };
+    let mut lo = 0;
+    while lo < data.len() {
+        let hi = (lo + batch).min(data.len());
+        let (ids, mask) = data.batch_slices(lo, hi);
+        let logits = engine.forward(&ids, &mask)?;
+        count_correct(&logits, &data.labels()[lo..hi], hi - lo, &mut result);
+        lo = hi;
+    }
+    Ok(result)
+}
+
+/// Evaluate the deployed packed-int4 model (fused path).
+pub fn eval_quantized(qm: &QuantizedModel, data: &Dataset, batch: usize) -> Result<EvalResult> {
+    let mut result = EvalResult { correct: 0, total: 0 };
+    let mut lo = 0;
+    while lo < data.len() {
+        let hi = (lo + batch).min(data.len());
+        let (ids, mask) = data.batch_slices(lo, hi);
+        let logits = qm.forward_fused(&ids, &mask)?;
+        count_correct(&logits, &data.labels()[lo..hi], hi - lo, &mut result);
+        lo = hi;
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::testing::synthetic_params;
+
+    #[test]
+    fn accuracy_math() {
+        let r = EvalResult { correct: 3, total: 4 };
+        assert!((r.accuracy() - 0.75).abs() < 1e-12);
+        assert_eq!(EvalResult { correct: 0, total: 0 }.accuracy(), 0.0);
+    }
+
+    #[test]
+    fn count_correct_argmax() {
+        let logits = Matrix::from_vec(3, 2, vec![0.1, 0.9, 0.8, 0.2, 0.5, 0.5]);
+        let mut acc = EvalResult { correct: 0, total: 0 };
+        // ties: first index wins (argmax convention) → pred 0 for row 2
+        count_correct(&logits, &[1, 0, 0], 3, &mut acc);
+        assert_eq!(acc.correct, 3);
+        assert_eq!(acc.total, 3);
+    }
+
+    #[test]
+    fn engine_eval_runs_and_batches_consistently() {
+        let cfg = ModelConfig {
+            vocab_size: 64,
+            max_len: 8,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            n_classes: 2,
+            export_batch: 4,
+        };
+        let engine = Engine::new(cfg, synthetic_params(&cfg, 17)).unwrap();
+        let n = 11;
+        let ids: Vec<i32> = (0..n * 8).map(|i| (i % 60) as i32 + 1).collect();
+        let mask = vec![1i32; n * 8];
+        let labels: Vec<i32> = (0..n as i32).map(|i| i % 2).collect();
+        let data = Dataset::from_raw("toy", ids, mask, labels, 8).unwrap();
+        let a = eval_engine(&engine, &data, 3).unwrap();
+        let b = eval_engine(&engine, &data, 11).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.total, 11);
+    }
+}

@@ -1,0 +1,62 @@
+//! # svdquant — SVD-based weight preservation for mixed-precision PTQ
+//!
+//! Reproduction of *"Intrinsic Structure as a Proxy for Saliency: SVD-Based
+//! Weight Preservation for Mixed-Precision Quantization in Large Language
+//! Models"* (IIIT Pune, CS.LG 2025).
+//!
+//! The paper decomposes every linear weight `W ≈ S + Q`: a sparse FP32
+//! salient component `S` (the top-k entries of the rank-r principal
+//! reconstruction `|U_r Σ_r V_rᵀ|` — **no calibration data needed**) plus a
+//! symmetric 4-bit quantized residual `Q`. This crate implements that
+//! scheme end to end, together with the data-aware baselines it is
+//! evaluated against (AWQ activation-magnitude scoring and SpQR damped-
+//! Hessian scoring), a pure-Rust transformer inference engine, and a PJRT
+//! runtime that executes the AOT-compiled JAX model produced by
+//! `python/compile/aot.py`.
+//!
+//! ## Layer map (see DESIGN.md)
+//!
+//! * **L3 (this crate)** — selection, quantization, calibration, sweep
+//!   orchestration, evaluation, reporting, serving.
+//! * **L2** — the JAX model, AOT-lowered once to `artifacts/hlo/*.hlo.txt`;
+//!   executed from [`runtime`]. Python never runs on the request path.
+//! * **L1** — Pallas kernels (quant-dequant, SVD score map, mixed-precision
+//!   matmul, fused attention) lowered inside the L2 HLO; their numerics are
+//!   pinned by `artifacts/parity/vectors.qtz`, which the test-suite replays
+//!   against the Rust implementations here.
+//!
+//! Offline-environment note: tokio/clap/serde/criterion/proptest are not
+//! available in this build sandbox, so [`util`] and [`json`] carry small
+//! in-repo replacements (thread pool, CLI parser, JSON, bench harness,
+//! property-testing generators). See DESIGN.md §7.
+
+pub mod calib;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod json;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod saliency;
+pub mod sparse;
+pub mod tensorfile;
+pub mod util;
+
+/// Convenience re-exports for the common pipeline.
+pub mod prelude {
+    pub use crate::calib::CalibStats;
+    pub use crate::coordinator::{Artifacts, PreserveSpec};
+    pub use crate::linalg::Matrix;
+    pub use crate::model::{Engine, ModelConfig, Params};
+    pub use crate::quant::{QuantConfig, QuantizedMatrix};
+    pub use crate::saliency::{Method, SalientSet};
+    pub use crate::tensorfile::TensorFile;
+}
+
+/// Crate-wide error type.
+pub type Error = anyhow::Error;
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

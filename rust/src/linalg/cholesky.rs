@@ -1,0 +1,183 @@
+//! Cholesky factorization + SPD solves — the `O(d³)` kernel inside SpQR's
+//! saliency (paper eq. 4 needs `[H⁻¹]_jj` for the damped empirical Hessian
+//! `H = (2/N)XᵀX + λ·mean(diag)·I`).
+//!
+//! [`inverse_diagonal`] computes only the diagonal of `H⁻¹` — we never form
+//! the full inverse: column j of the inverse is solved as `L Lᵀ z = e_j` and
+//! only `z_j` is kept. (Still O(d³) total, which is exactly the cost the
+//! paper's §VI-A complexity comparison charges SpQR; the saliency_cost
+//! bench measures it.)
+
+use anyhow::{bail, Result};
+
+use super::Matrix;
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`. `A` must be SPD
+/// (symmetric positive-definite); fails otherwise.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    let (n, n2) = a.shape();
+    if n != n2 {
+        bail!("cholesky needs a square matrix, got {n}x{n2}");
+    }
+    // f64 working copy (row-major lower triangle)
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)] as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive-definite at pivot {i} (sum {sum:.3e})");
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    let mut out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            out[(i, j)] = l[i * n + j] as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// Solve `A x = b` given the Cholesky factor `L` of `A` (forward + back
+/// substitution, f64 accumulation).
+pub fn solve_cholesky(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l[(i, k)] as f64 * y[k];
+        }
+        y[i] = sum / l[(i, i)] as f64;
+    }
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l[(k, i)] as f64 * x[k];
+        }
+        x[i] = sum / l[(i, i)] as f64;
+    }
+    x.iter().map(|&v| v as f32).collect()
+}
+
+/// Diagonal of `A⁻¹` from the Cholesky factor of `A`.
+///
+/// For each j: solve `L w = e_j` (forward), then `[A⁻¹]_jj = Σ_k w_k²`
+/// — because `A⁻¹ = L⁻ᵀ L⁻¹`, so `[A⁻¹]_jj = ‖L⁻¹ e_j‖²`. This halves the
+/// work vs a full solve per column.
+pub fn inverse_diagonal(l: &Matrix) -> Vec<f32> {
+    let n = l.rows();
+    let mut diag = vec![0.0f32; n];
+    let mut w = vec![0.0f64; n];
+    for j in 0..n {
+        for v in w.iter_mut() {
+            *v = 0.0;
+        }
+        // forward solve L w = e_j; w is zero above j
+        w[j] = 1.0 / l[(j, j)] as f64;
+        for i in (j + 1)..n {
+            let mut sum = 0.0;
+            for k in j..i {
+                sum -= l[(i, k)] as f64 * w[k];
+            }
+            w[i] = sum / l[(i, i)] as f64;
+        }
+        diag[j] = w[j..].iter().map(|&v| v * v).sum::<f64>() as f32;
+    }
+    diag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_at_b};
+    use crate::util::rng::Rng;
+
+    /// Random SPD matrix: XᵀX + n·I.
+    fn spd(rng: &mut Rng, n: usize) -> Matrix {
+        let mut x = Matrix::zeros(2 * n, n);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut a = matmul_at_b(&x, &x);
+        for i in 0..n {
+            a[(i, i)] += n as f32 * 0.1;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::new(61);
+        for &n in &[1, 2, 5, 17, 40] {
+            let a = spd(&mut rng, n);
+            let l = cholesky(&a).unwrap();
+            let llt = matmul(&l, &l.transpose());
+            let tol = 1e-3 * a.abs_max();
+            assert!(llt.approx_eq(&a, tol), "n={n} diff {}", llt.max_abs_diff(&a));
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Rng::new(62);
+        let n = 12;
+        let a = spd(&mut rng, n);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f32> = (0..n).map(|i| (i as f32) - 3.0).collect();
+        let x = solve_cholesky(&l, &b);
+        // check A x = b
+        let ax: Vec<f32> = (0..n)
+            .map(|i| (0..n).map(|j| a[(i, j)] * x[j]).sum())
+            .collect();
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-3, "row {i}: {} vs {}", ax[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn inverse_diagonal_matches_full_solves() {
+        let mut rng = Rng::new(63);
+        let n = 20;
+        let a = spd(&mut rng, n);
+        let l = cholesky(&a).unwrap();
+        let diag = inverse_diagonal(&l);
+        for j in 0..n {
+            let mut e = vec![0.0f32; n];
+            e[j] = 1.0;
+            let col = solve_cholesky(&l, &e);
+            assert!(
+                (diag[j] - col[j]).abs() <= 1e-5 * col[j].abs().max(1e-3),
+                "j={j}: {} vs {}",
+                diag[j],
+                col[j]
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let mut a = Matrix::identity(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_err());
+        let rect = Matrix::zeros(2, 3);
+        assert!(cholesky(&rect).is_err());
+    }
+
+    #[test]
+    fn identity_inverse_diag_is_ones() {
+        let l = cholesky(&Matrix::identity(5)).unwrap();
+        let d = inverse_diagonal(&l);
+        for v in d {
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+}

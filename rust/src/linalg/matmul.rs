@@ -1,0 +1,195 @@
+//! Cache-blocked matrix multiply — the hot loop under both the native
+//! engine (model/engine.rs) and the factorizations here.
+//!
+//! Strategy (single-core x86-64, no intrinsics needed to reach near-scalar
+//! roofline):
+//! * loop order i-k-j with the k-loop innermost *unrolled by 4 over j*
+//!   lets LLVM auto-vectorize the j-sweep (contiguous rows of B and C);
+//! * L2-blocking over k (KB) and j (JB) keeps the working set of B resident;
+//! * `matmul_a_bt` (A·Bᵀ) is the layout the transformer actually uses —
+//!   weights are stored [dout, din] row-major, so rows of B are the
+//!   contraction axis and both operands stream contiguously; it gets the
+//!   dot-product kernel with 4-way k-unroll instead.
+//!
+//! Perf log lives in EXPERIMENTS.md §Perf (L3).
+
+use super::Matrix;
+
+const KB: usize = 256; // k-panel
+const JB: usize = 512; // j-panel
+
+/// C = A @ B.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    let bd = b.data();
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for jb in (0..n).step_by(JB) {
+            let jend = (jb + JB).min(n);
+            for i in 0..m {
+                let arow = a.row(i);
+                let crow = &mut c.row_mut(i)[jb..jend];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n + jb..kk * n + jend];
+                    // contiguous saxpy over the j panel — auto-vectorizes
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A @ Bᵀ — the transformer layout (B is [n, k] row-major).
+pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
+    let (m, k) = a.shape();
+    let n = b.rows();
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            crow[j] = dot(arow, b.row(j), k);
+        }
+    }
+    c
+}
+
+/// C = Aᵀ @ B (A is [k, m], B is [k, n]) — used for XᵀX accumulation.
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b shape mismatch");
+    let (k, m) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    for kk in 0..k {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for i in 0..m {
+            let aki = arow[i];
+            if aki == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aki * bv;
+            }
+        }
+    }
+    c
+}
+
+/// 4-way unrolled dot product (f32 accumulate in 4 lanes then reduce).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32], len: usize) -> f32 {
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let chunks = len / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..len {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for kk in 0..k {
+                    s += a[(i, kk)] as f64 * b[(kk, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    fn rand_m(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(m.data_mut(), 1.0);
+        m
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        let mut rng = Rng::new(21);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 128, 48), (300, 7, 130)] {
+            let a = rand_m(&mut rng, m, k);
+            let b = rand_m(&mut rng, k, n);
+            let got = matmul(&a, &b);
+            let want = naive(&a, &b);
+            let tol = 1e-3 * (k as f32).sqrt();
+            assert!(got.approx_eq(&want, tol), "({m},{k},{n}) diff {}", got.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn a_bt_matches_transpose_form() {
+        let mut rng = Rng::new(22);
+        for &(m, k, n) in &[(5, 8, 3), (31, 257, 19), (2, 1024, 6)] {
+            let a = rand_m(&mut rng, m, k);
+            let b = rand_m(&mut rng, n, k); // [n, k]
+            let got = matmul_a_bt(&a, &b);
+            let want = matmul(&a, &b.transpose());
+            assert!(got.approx_eq(&want, 1e-3), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn at_b_matches_transpose_form() {
+        let mut rng = Rng::new(23);
+        for &(k, m, n) in &[(4, 3, 5), (100, 17, 29)] {
+            let a = rand_m(&mut rng, k, m);
+            let b = rand_m(&mut rng, k, n);
+            let got = matmul_at_b(&a, &b);
+            let want = matmul(&a.transpose(), &b);
+            assert!(got.approx_eq(&want, 1e-3));
+        }
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for len in 0..9 {
+            let a: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let b: Vec<f32> = (0..len).map(|i| (i * 2) as f32).collect();
+            let want: f32 = (0..len).map(|i| (i * i * 2) as f32).sum();
+            assert_eq!(dot(&a, &b, len), want, "len {len}");
+        }
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 3);
+        assert_eq!(matmul(&a, &b).shape(), (0, 3));
+        let a = Matrix::zeros(2, 0);
+        let b = Matrix::zeros(0, 3);
+        let c = matmul(&a, &b);
+        assert_eq!(c.shape(), (2, 3));
+        assert!(c.data().iter().all(|&v| v == 0.0));
+    }
+}

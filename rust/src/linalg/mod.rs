@@ -1,0 +1,319 @@
+//! Dense linear algebra substrate (no BLAS/LAPACK offline — everything from
+//! scratch, DESIGN.md §7).
+//!
+//! * [`Matrix`] — row-major f32 matrix with the usual ops,
+//! * [`matmul`] — cache-blocked multiply (the engine hot path),
+//! * [`qr`] — Householder QR (used by the randomized range finder),
+//! * [`svd`] — one-sided Jacobi SVD (exact; small/medium matrices),
+//! * [`rsvd`] — randomized truncated SVD (the paper's §VI-A `O(r·d²)` path),
+//! * [`cholesky`] — SPD factorization + inverse diagonal (SpQR's `[H⁻¹]_jj`).
+//!
+//! Accuracy policy: factorizations accumulate in f64 internally and return
+//! f32 — weights are f32 and the scores derived from these factors go
+//! through a top-k selection, which only needs relative order to be stable.
+
+pub mod cholesky;
+pub mod matmul;
+pub mod qr;
+pub mod rsvd;
+pub mod svd;
+
+pub use cholesky::{cholesky, inverse_diagonal, solve_cholesky};
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
+pub use qr::qr_thin;
+pub use rsvd::rsvd;
+pub use svd::{svd_jacobi, Svd};
+
+use std::ops::{Index, IndexMut};
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix({}x{}", self.rows, self.cols)?;
+        if self.rows * self.cols <= 16 {
+            write!(f, ", {:?}", self.data)?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a tensorfile tensor (must be rank-2 or rank-1).
+    pub fn from_tensor(t: &crate::tensorfile::Tensor) -> Result<Self> {
+        let data = t.as_f32()?;
+        match t.shape.as_slice() {
+            [r, c] => Ok(Self::from_vec(*r, *c, data)),
+            [n] => Ok(Self::from_vec(1, *n, data)),
+            s => bail!("expected rank-1/2 tensor, got shape {s:?}"),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // simple blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix::from_vec(
+            end - start,
+            self.cols,
+            self.data[start * self.cols..end * self.cols].to_vec(),
+        )
+    }
+
+    pub fn slice_cols(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.cols);
+        let mut out = Matrix::zeros(self.rows, end - start);
+        for i in 0..self.rows {
+            out.row_mut(i)
+                .copy_from_slice(&self.row(i)[start..end]);
+        }
+        out
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&v| v as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// Population standard deviation (matches `jnp.std`).
+    pub fn std(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let mean = self.mean();
+        let var = self
+            .data
+            .iter()
+            .map(|&v| {
+                let d = v as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64;
+        var.sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()))
+    }
+
+    pub fn approx_eq(&self, other: &Matrix, tol: f32) -> bool {
+        self.shape() == other.shape()
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= tol)
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |acc, (a, b)| acc.max((a - b).abs()))
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        let mut out = self.clone();
+        for v in out.data.iter_mut() {
+            *v *= s;
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        out
+    }
+
+    /// `self @ other` (delegates to the blocked kernel).
+    pub fn dot(&self, other: &Matrix) -> Matrix {
+        matmul(self, other)
+    }
+
+    pub fn to_tensor(&self) -> crate::tensorfile::Tensor {
+        crate::tensorfile::Tensor::from_f32(vec![self.rows, self.cols], &self.data)
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f32;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn basic_ops() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m[(1, 2)], 6.0);
+        assert_eq!(m.col(1), vec![2.0, 5.0]);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t[(2, 1)], 6.0);
+        assert!(t.transpose().approx_eq(&m, 0.0));
+    }
+
+    #[test]
+    fn slices() {
+        let m = Matrix::from_vec(3, 3, (1..=9).map(|v| v as f32).collect());
+        let r = m.slice_rows(1, 3);
+        assert_eq!(r.shape(), (2, 3));
+        assert_eq!(r[(0, 0)], 4.0);
+        let c = m.slice_cols(1, 2);
+        assert_eq!(c.shape(), (3, 1));
+        assert_eq!(c[(2, 0)], 8.0);
+    }
+
+    #[test]
+    fn stats_match_definitions() {
+        let m = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((m.mean() - 2.5).abs() < 1e-12);
+        // population std of [1,2,3,4] = sqrt(1.25)
+        assert!((m.std() - 1.25f64.sqrt()).abs() < 1e-12);
+        assert_eq!(m.abs_max(), 4.0);
+        assert!((m.frobenius() - (30f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_dot() {
+        let mut rng = Rng::new(11);
+        let mut m = Matrix::zeros(5, 7);
+        rng.fill_normal(m.data_mut(), 1.0);
+        let i5 = Matrix::identity(5);
+        assert!(i5.dot(&m).approx_eq(&m, 1e-6));
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = Matrix::from_vec(1, 3, vec![1., 2., 3.]);
+        let b = Matrix::from_vec(1, 3, vec![0.5, 0.5, 0.5]);
+        assert_eq!(a.add(&b).data(), &[1.5, 2.5, 3.5]);
+        assert_eq!(a.sub(&b).data(), &[0.5, 1.5, 2.5]);
+        assert_eq!(a.scale(2.0).data(), &[2., 4., 6.]);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let m = Matrix::from_vec(2, 2, vec![1., -2., 3., -4.]);
+        let t = m.to_tensor();
+        let back = Matrix::from_tensor(&t).unwrap();
+        assert!(back.approx_eq(&m, 0.0));
+    }
+}

@@ -1,0 +1,156 @@
+//! Thin Householder QR — the orthonormalization step inside the randomized
+//! range finder (rsvd.rs). For an `m×n` matrix with `m ≥ n` returns
+//! `Q (m×n)` with orthonormal columns and `R (n×n)` upper-triangular such
+//! that `A = Q R`.
+//!
+//! Accumulation is f64: the range finder feeds nearly-rank-deficient
+//! matrices through here (that is the point of power iterations), and f32
+//! Gram–Schmidt loses orthogonality visibly at din=1024.
+
+use super::Matrix;
+
+/// Thin QR via Householder reflections. Requires `rows >= cols`.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin expects a tall matrix, got {m}x{n}");
+    // work in f64, column-major for cheap column ops
+    let mut w: Vec<f64> = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            w[j * m + i] = a[(i, j)] as f64;
+        }
+    }
+    // Householder vectors stored in-place below the diagonal; betas aside
+    let mut betas = vec![0.0f64; n];
+    let mut rdiag = vec![0.0f64; n];
+    for j in 0..n {
+        // build v for column j from rows j..m
+        let col = &mut w[j * m..(j + 1) * m];
+        let norm = col[j..].iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm == 0.0 {
+            betas[j] = 0.0;
+            rdiag[j] = 0.0;
+            continue;
+        }
+        let alpha = if col[j] >= 0.0 { -norm } else { norm };
+        let v0 = col[j] - alpha;
+        rdiag[j] = alpha;
+        // v = [v0, col[j+1..]]; beta = 2 / (vᵀv)
+        let vtv = v0 * v0 + col[j + 1..].iter().map(|v| v * v).sum::<f64>();
+        betas[j] = if vtv > 0.0 { 2.0 / vtv } else { 0.0 };
+        col[j] = v0;
+        // apply reflector to the remaining columns
+        for k in (j + 1)..n {
+            let (left, right) = w.split_at_mut(k * m);
+            let vj = &left[j * m..(j + 1) * m];
+            let colk = &mut right[..m];
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += vj[i] * colk[i];
+            }
+            let s = betas[j] * dot;
+            for i in j..m {
+                colk[i] -= s * vj[i];
+            }
+        }
+    }
+    // extract R (upper triangle, diag from rdiag)
+    let mut r = Matrix::zeros(n, n);
+    for j in 0..n {
+        r[(j, j)] = rdiag[j] as f32;
+        for i in 0..j {
+            r[(i, j)] = w[j * m + i] as f32;
+        }
+    }
+    // accumulate Q = H_0 H_1 ... H_{n-1} applied to the thin identity
+    let mut q = vec![0.0f64; m * n]; // column-major
+    for j in 0..n {
+        q[j * m + j] = 1.0;
+    }
+    for j in (0..n).rev() {
+        if betas[j] == 0.0 {
+            continue;
+        }
+        let vj: Vec<f64> = w[j * m..(j + 1) * m].to_vec();
+        for k in 0..n {
+            let colk = &mut q[k * m..(k + 1) * m];
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += vj[i] * colk[i];
+            }
+            let s = betas[j] * dot;
+            for i in j..m {
+                colk[i] -= s * vj[i];
+            }
+        }
+    }
+    let mut qm = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            qm[(i, j)] = q[j * m + i] as f32;
+        }
+    }
+    (qm, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::rng::Rng;
+
+    fn rand_m(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(m.data_mut(), 1.0);
+        m
+    }
+
+    #[test]
+    fn reconstructs_a() {
+        let mut rng = Rng::new(31);
+        for &(m, n) in &[(4, 4), (10, 3), (64, 16), (129, 40)] {
+            let a = rand_m(&mut rng, m, n);
+            let (q, r) = qr_thin(&a);
+            let qr = matmul(&q, &r);
+            assert!(qr.approx_eq(&a, 1e-4), "({m},{n}) diff {}", qr.max_abs_diff(&a));
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(32);
+        let a = rand_m(&mut rng, 80, 24);
+        let (q, _) = qr_thin(&a);
+        let qtq = matmul(&q.transpose(), &q);
+        let eye = Matrix::identity(24);
+        assert!(qtq.approx_eq(&eye, 1e-5), "diff {}", qtq.max_abs_diff(&eye));
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(33);
+        let a = rand_m(&mut rng, 20, 8);
+        let (_, r) = qr_thin(&a);
+        for i in 0..8 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_ok() {
+        // two identical columns — QR must not blow up
+        let mut rng = Rng::new(34);
+        let base = rand_m(&mut rng, 30, 1);
+        let mut a = Matrix::zeros(30, 3);
+        for i in 0..30 {
+            a[(i, 0)] = base[(i, 0)];
+            a[(i, 1)] = base[(i, 0)];
+            a[(i, 2)] = 2.0 * base[(i, 0)];
+        }
+        let (q, r) = qr_thin(&a);
+        let qr = matmul(&q, &r);
+        assert!(qr.approx_eq(&a, 1e-4));
+    }
+}

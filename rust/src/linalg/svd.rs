@@ -1,0 +1,225 @@
+//! One-sided Jacobi SVD (exact). `A = U Σ Vᵀ` with singular values sorted
+//! descending. This is the reference factorization: rsvd.rs is validated
+//! against it, and the paper's "exact SVD is O(d³)" complexity row in the
+//! saliency_cost bench measures it.
+//!
+//! Algorithm: orthogonalize column pairs of a working copy W (initially A)
+//! by Jacobi rotations until all pairs are numerically orthogonal; then
+//! σ_j = ‖w_j‖, u_j = w_j/σ_j, and V accumulates the rotations. For tall
+//! matrices we factor Aᵀ instead and swap U/V on return, keeping the pair
+//! loop over the smaller dimension.
+
+use super::Matrix;
+
+/// Result of an SVD: `a ≈ u * diag(s) * vt`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// [m, r] — left singular vectors (columns)
+    pub u: Matrix,
+    /// [r] — singular values, descending
+    pub s: Vec<f32>,
+    /// [r, n] — right singular vectors (rows)
+    pub vt: Matrix,
+}
+
+impl Svd {
+    /// Reconstruction using the top `rank` triplets: `U_r Σ_r V_rᵀ`.
+    pub fn reconstruct(&self, rank: usize) -> Matrix {
+        let r = rank.min(self.s.len());
+        let m = self.u.rows();
+        let n = self.vt.cols();
+        let mut out = Matrix::zeros(m, n);
+        for t in 0..r {
+            let sv = self.s[t];
+            for i in 0..m {
+                let uis = self.u[(i, t)] * sv;
+                if uis == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                let vrow = self.vt.row(t);
+                for (o, v) in orow.iter_mut().zip(vrow) {
+                    *o += uis * v;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Exact SVD via one-sided Jacobi. Returns min(m,n) triplets.
+pub fn svd_jacobi(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        // factor the transpose and swap factors
+        let t = svd_jacobi(&a.transpose());
+        return Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() };
+    }
+    // column-major f64 working copy of A (m >= n)
+    let mut w: Vec<f64> = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            w[j * m + i] = a[(i, j)] as f64;
+        }
+    }
+    // V accumulator (n x n), column-major
+    let mut v = vec![0.0f64; n * n];
+    for j in 0..n {
+        v[j * n + j] = 1.0;
+    }
+    let eps = 1e-12;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // gram entries for the (p, q) column pair
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                {
+                    let wp = &w[p * m..(p + 1) * m];
+                    let wq = &w[q * m..(q + 1) * m];
+                    for i in 0..m {
+                        app += wp[i] * wp[i];
+                        aqq += wq[i] * wq[i];
+                        apq += wp[i] * wq[i];
+                    }
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq * apq;
+                // Jacobi rotation zeroing the (p,q) Gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // rotate columns p, q of W and of V
+                rotate_pair(&mut w, m, p, q, c, s);
+                rotate_pair(&mut v, n, p, q, c, s);
+            }
+        }
+        if off.sqrt() <= 1e-24 {
+            break;
+        }
+    }
+    // singular values = column norms; sort descending
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let col = &w[j * m..(j + 1) * m];
+            (col.iter().map(|x| x * x).sum::<f64>().sqrt(), j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut u = Matrix::zeros(m, n);
+    let mut vt = Matrix::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (rank, &(sigma, j)) in sv.iter().enumerate() {
+        s.push(sigma as f32);
+        let col = &w[j * m..(j + 1) * m];
+        if sigma > 0.0 {
+            for i in 0..m {
+                u[(i, rank)] = (col[i] / sigma) as f32;
+            }
+        }
+        for i in 0..n {
+            vt[(rank, i)] = v[j * n + i] as f32;
+        }
+    }
+    Svd { u, s, vt }
+}
+
+#[inline]
+fn rotate_pair(data: &mut [f64], rows: usize, p: usize, q: usize, c: f64, s: f64) {
+    let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+    let (left, right) = data.split_at_mut(hi * rows);
+    let colp = &mut left[lo * rows..(lo + 1) * rows];
+    let colq = &mut right[..rows];
+    for i in 0..rows {
+        let (wp, wq) = (colp[i], colq[i]);
+        colp[i] = c * wp - s * wq;
+        colq[i] = s * wp + c * wq;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::rng::Rng;
+
+    fn rand_m(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(m.data_mut(), 1.0);
+        m
+    }
+
+    fn check_svd(a: &Matrix, tol: f32) {
+        let svd = svd_jacobi(a);
+        let r = svd.s.len();
+        assert_eq!(r, a.rows().min(a.cols()));
+        // descending
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5, "not sorted: {:?}", svd.s);
+        }
+        // reconstruction
+        let rec = svd.reconstruct(r);
+        assert!(rec.approx_eq(a, tol), "recon diff {}", rec.max_abs_diff(a));
+        // orthonormality of U and V
+        let utu = matmul(&svd.u.transpose(), &svd.u);
+        assert!(utu.approx_eq(&Matrix::identity(r), 1e-4));
+        let vvt = matmul(&svd.vt, &svd.vt.transpose());
+        assert!(vvt.approx_eq(&Matrix::identity(r), 1e-4));
+    }
+
+    #[test]
+    fn square_and_rect() {
+        let mut rng = Rng::new(41);
+        for &(m, n) in &[(1, 1), (5, 5), (8, 3), (3, 8), (40, 17), (17, 40)] {
+            let a = rand_m(&mut rng, m, n);
+            check_svd(&a, 1e-4);
+        }
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let mut a = Matrix::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = -5.0;
+        a[(2, 2)] = 1.0;
+        let svd = svd_jacobi(&a);
+        assert!((svd.s[0] - 5.0).abs() < 1e-5);
+        assert!((svd.s[1] - 3.0).abs() < 1e-5);
+        assert!((svd.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn low_rank_matrix() {
+        // rank-2: outer product sum
+        let mut rng = Rng::new(42);
+        let u = rand_m(&mut rng, 20, 2);
+        let v = rand_m(&mut rng, 2, 15);
+        let a = matmul(&u, &v);
+        let svd = svd_jacobi(&a);
+        assert!(svd.s[2] < 1e-4 * svd.s[0], "rank should be 2: {:?}", &svd.s[..4]);
+        let rec2 = svd.reconstruct(2);
+        assert!(rec2.approx_eq(&a, 1e-3));
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Matrix::zeros(4, 6);
+        let svd = svd_jacobi(&a);
+        assert!(svd.s.iter().all(|&s| s == 0.0));
+        assert!(svd.reconstruct(4).approx_eq(&a, 0.0));
+    }
+
+    #[test]
+    fn singular_values_match_frobenius() {
+        let mut rng = Rng::new(43);
+        let a = rand_m(&mut rng, 12, 30);
+        let svd = svd_jacobi(&a);
+        let fro2: f64 = a.frobenius().powi(2);
+        let ssum: f64 = svd.s.iter().map(|&s| (s as f64) * (s as f64)).sum();
+        assert!((fro2 - ssum).abs() / fro2 < 1e-6);
+    }
+}

@@ -1,0 +1,575 @@
+//! `svdquant` — CLI for the SVD-based weight-preservation reproduction.
+//!
+//! Subcommands:
+//!   sweep      full battle: methods × budgets × tasks → tables + figures
+//!   quantize   one (task, method, k) cell; prints accuracy vs fp32/floor
+//!   overlap    Fig. 2 IoU analysis
+//!   report     re-render tables/figures from the cached sweep results
+//!   serve      dynamic-batching demo over the deployed packed-int4 model
+//!   selfcheck  engine ↔ PJRT ↔ parity-vector consistency checks
+//!   info       artifacts/manifest summary
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use svdquant::calib::CalibStats;
+use svdquant::coordinator::server::{serve_trace, ServerConfig};
+use svdquant::coordinator::sweep::{run_sweep, SweepConfig};
+use svdquant::coordinator::{quantize_checkpoint, Artifacts, PreserveSpec};
+use svdquant::data::TraceGenerator;
+use svdquant::eval::{eval_engine, eval_pjrt, eval_quantized};
+use svdquant::model::{Engine, QuantizedModel};
+use svdquant::quant::QuantConfig;
+use svdquant::report;
+use svdquant::runtime::Runtime;
+use svdquant::saliency::Method;
+use svdquant::tensorfile::TensorFile;
+use svdquant::util::cli::Parser;
+use svdquant::util::timer;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    let run = || -> Result<()> {
+        match cmd {
+            "sweep" => cmd_sweep(&rest),
+            "ablate" => cmd_ablate(&rest),
+            "quantize" => cmd_quantize(&rest),
+            "overlap" => cmd_overlap(&rest),
+            "report" => cmd_report(&rest),
+            "serve" => cmd_serve(&rest),
+            "selfcheck" => cmd_selfcheck(&rest),
+            "info" => cmd_info(&rest),
+            "help" | "-h" | "--help" => {
+                print_help();
+                Ok(())
+            }
+            other => bail!("unknown command {other:?} (try `svdquant help`)"),
+        }
+    };
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "svdquant — SVD-based weight preservation for mixed-precision PTQ\n\n\
+         usage: svdquant <command> [flags]\n\n\
+         commands:\n\
+         \x20 sweep      reproduce Tables I-III + Figs 1-2 (resumable)\n\
+         \x20 ablate     design-choice ablations: rank r, bits, clip\n\
+         \x20 quantize   quantize one (task, method, k) and evaluate\n\
+         \x20 overlap    Fig.2 IoU of SVD vs AWQ/SpQR selections\n\
+         \x20 report     re-render report from cached sweep results\n\
+         \x20 serve      batching inference demo on packed int4 weights\n\
+         \x20 selfcheck  numerics: rust engine vs PJRT vs parity vectors\n\
+         \x20 info       artifacts summary\n\n\
+         run `svdquant <command> --help` for flags"
+    );
+}
+
+fn artifacts_flag(p: Parser) -> Parser {
+    p.flag("artifacts", Some("artifacts"), "artifacts directory (make artifacts)")
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let p = artifacts_flag(Parser::new("info", "artifacts summary"));
+    let a = p.parse(rest)?;
+    let art = Artifacts::open(a.str("artifacts")?)?;
+    println!("artifacts: {}", art.root.display());
+    println!("model: {:?}", art.model_cfg);
+    println!("params: {}", art.model_cfg.param_count());
+    println!("budgets: {:?}", art.budgets());
+    for task in art.tasks() {
+        let stats = art.manifest.at(&["tasks", &task, "stats"]);
+        let dev = stats
+            .and_then(|s| s.get("dev_acc"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN);
+        let (pf, pq) = art.paper_refs(&task);
+        println!("  task {task}: trained dev_acc {dev:.4} (paper fp32 {pf:.4}, q4 floor {pq:.4})");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(rest: &[String]) -> Result<()> {
+    let p = artifacts_flag(Parser::new("sweep", "full reproduction sweep"))
+        .flag("out", Some("results"), "output directory")
+        .flag("tasks", None, "comma-separated tasks (default: all)")
+        .flag("methods", None, "comma-separated methods (default: random,awq,spqr,svd)")
+        .flag("budgets", None, "comma-separated k values (default: manifest)")
+        .flag("bits", Some("4"), "residual bit width")
+        .flag("clip", Some("2.5"), "clip threshold in sigmas; 'none' disables")
+        .switch("per-row", "per-row scales instead of per-tensor")
+        .switch("timers", "print the timer registry at the end");
+    let a = p.parse(rest)?;
+    let art = Artifacts::open(a.str("artifacts")?)?;
+    let rt = Runtime::cpu()?;
+    let out = PathBuf::from(a.str("out")?);
+    let mut cfg = SweepConfig::paper_defaults(&art, &out);
+    if !a.list("tasks").is_empty() {
+        cfg.tasks = a.list("tasks");
+    }
+    if !a.list("methods").is_empty() {
+        cfg.methods = a
+            .list("methods")
+            .iter()
+            .map(|m| Method::parse(m))
+            .collect::<Result<_>>()?;
+    }
+    if !a.list("budgets").is_empty() {
+        cfg.budgets = a
+            .list("budgets")
+            .iter()
+            .map(|k| k.parse().context("bad budget"))
+            .collect::<Result<_>>()?;
+    }
+    cfg.qcfg = quant_cfg_from_args(&a)?;
+    let res = run_sweep(&art, &rt, &cfg)?;
+    report::write_report(&art, &res, &cfg.budgets, &out)?;
+    if a.bool("timers") {
+        println!("\n{}", timer::render());
+    }
+    Ok(())
+}
+
+fn cmd_ablate(rest: &[String]) -> Result<()> {
+    let p = artifacts_flag(Parser::new(
+        "ablate",
+        "design-choice ablations over one task (DESIGN.md §5): SVD rank r, \
+         residual bit width, clip threshold, per-row scales, exact-vs-\
+         randomized SVD — each evaluated end to end through PJRT",
+    ))
+    .flag("task", Some("mrpc"), "task name")
+    .flag("k", Some("256"), "protection budget for the ablations");
+    let a = p.parse(rest)?;
+    let art = Artifacts::open(a.str("artifacts")?)?;
+    let task = a.str("task")?;
+    let k = a.usize("k")?;
+    let ckpt = art.checkpoint(task)?;
+    let dev = art.dataset(task, "dev")?;
+    let rt = Runtime::cpu()?;
+    let exe = art.compile_model(&rt, task, false)?;
+    let mcfg = &art.model_cfg;
+
+    let eval_spec = |spec: &PreserveSpec| -> Result<f64> {
+        let (qp, _) = quantize_checkpoint(mcfg, &ckpt, spec, None)?;
+        Ok(eval_pjrt(&exe, mcfg, &qp, &dev)?.accuracy())
+    };
+    let fp32 = eval_pjrt(&exe, mcfg, &ckpt, &dev)?.accuracy();
+    println!("{task} fp32 ceiling {fp32:.4}, ablations at k={k}\n");
+
+    println!("-- SVD rank r (paper fixes r=8) --");
+    for rank in [1usize, 2, 4, 8, 16, 32] {
+        let spec = PreserveSpec {
+            method: Method::Svd,
+            k_per_layer: k,
+            svd_rank: rank,
+            ..Default::default()
+        };
+        println!("  r={rank:<3} acc {:.4}", eval_spec(&spec)?);
+    }
+
+    println!("-- exact vs randomized factorization --");
+    for (name, mode) in [
+        ("randomized(p=8,q=2)", svdquant::saliency::SvdScoreMode::default()),
+        ("exact jacobi", svdquant::saliency::SvdScoreMode::Exact),
+    ] {
+        let spec = PreserveSpec {
+            method: Method::Svd,
+            k_per_layer: k,
+            svd_mode: mode,
+            ..Default::default()
+        };
+        let t = timer::Timer::start();
+        let acc = eval_spec(&spec)?;
+        println!("  {name:<22} acc {acc:.4} ({:.1}s incl. eval)", t.elapsed_s());
+    }
+
+    println!("-- residual bit width --");
+    for bits in [3u32, 4, 8] {
+        let spec = PreserveSpec {
+            method: Method::Svd,
+            k_per_layer: k,
+            qcfg: QuantConfig { bits, ..Default::default() },
+            ..Default::default()
+        };
+        println!("  b={bits:<3} acc {:.4}", eval_spec(&spec)?);
+    }
+
+    println!("-- clip threshold (paper: 2.5 sigma) --");
+    for (name, clip) in [("none", None), ("2.5σ", Some(2.5f32)), ("3.5σ", Some(3.5))] {
+        let spec = PreserveSpec {
+            method: Method::Svd,
+            k_per_layer: k,
+            qcfg: QuantConfig { clip_sigma: clip, ..Default::default() },
+            ..Default::default()
+        };
+        println!("  clip={name:<6} acc {:.4}", eval_spec(&spec)?);
+    }
+
+    println!("-- scale granularity --");
+    for (name, per_row) in [("per-tensor (paper)", false), ("per-row", true)] {
+        let spec = PreserveSpec {
+            method: Method::Svd,
+            k_per_layer: k,
+            qcfg: QuantConfig { per_row, ..Default::default() },
+            ..Default::default()
+        };
+        println!("  {name:<20} acc {:.4}", eval_spec(&spec)?);
+    }
+    Ok(())
+}
+
+fn quant_cfg_from_args(a: &svdquant::util::cli::Args) -> Result<QuantConfig> {
+    let clip = match a.str("clip")? {
+        "none" => None,
+        s => Some(s.parse::<f32>().context("bad --clip")?),
+    };
+    Ok(QuantConfig {
+        bits: a.usize("bits")? as u32,
+        clip_sigma: clip,
+        per_row: a.bool("per-row"),
+    })
+}
+
+fn load_calib_if_needed(
+    art: &Artifacts,
+    task: &str,
+    method: Method,
+    n: usize,
+) -> Result<Option<CalibStats>> {
+    if !method.needs_calibration() {
+        return Ok(None);
+    }
+    let ckpt = art.checkpoint(task)?;
+    let engine = Engine::new(art.model_cfg, ckpt)?;
+    let data = art.dataset(task, "calib")?;
+    Ok(Some(CalibStats::collect(&engine, &data, n, 16)?))
+}
+
+fn cmd_quantize(rest: &[String]) -> Result<()> {
+    let p = artifacts_flag(Parser::new("quantize", "one quantization cell"))
+        .flag("task", Some("mrpc"), "task name")
+        .flag("method", Some("svd"), "random|magnitude|awq|spqr|svd")
+        .flag("k", Some("256"), "protection budget per layer")
+        .flag("bits", Some("4"), "residual bit width")
+        .flag("clip", Some("2.5"), "clip sigmas or 'none'")
+        .flag("rank", Some("8"), "SVD rank r")
+        .switch("per-row", "per-row scales")
+        .switch("engine", "evaluate on the rust engine instead of PJRT")
+        .flag("save", None, "write the quantized checkpoint to this .qtz path");
+    let a = p.parse(rest)?;
+    let art = Artifacts::open(a.str("artifacts")?)?;
+    let task = a.str("task")?;
+    let method = Method::parse(a.str("method")?)?;
+    let spec = PreserveSpec {
+        method,
+        k_per_layer: a.usize("k")?,
+        qcfg: quant_cfg_from_args(&a)?,
+        svd_rank: a.usize("rank")?,
+        spqr_damp: art.spqr_damp(),
+        ..Default::default()
+    };
+    let ckpt = art.checkpoint(task)?;
+    let calib = load_calib_if_needed(&art, task, method, art.calib_samples())?;
+    let t = timer::Timer::start();
+    let (qp, sels) = quantize_checkpoint(&art.model_cfg, &ckpt, &spec, calib.as_ref())?;
+    println!(
+        "quantized {} layers (k={} each) with {} in {:.2}s",
+        sels.len(),
+        spec.k_per_layer,
+        method,
+        t.elapsed_s()
+    );
+    let dev = art.dataset(task, "dev")?;
+    let (acc, fp32) = if a.bool("engine") {
+        let qe = Engine::new(art.model_cfg, qp.clone())?;
+        let fe = Engine::new(art.model_cfg, ckpt.clone())?;
+        (
+            eval_engine(&qe, &dev, 16)?.accuracy(),
+            eval_engine(&fe, &dev, 16)?.accuracy(),
+        )
+    } else {
+        let rt = Runtime::cpu()?;
+        let exe = art.compile_model(&rt, task, false)?;
+        (
+            eval_pjrt(&exe, &art.model_cfg, &qp, &dev)?.accuracy(),
+            eval_pjrt(&exe, &art.model_cfg, &ckpt, &dev)?.accuracy(),
+        )
+    };
+    println!(
+        "{task}/{method}/k={}: accuracy {acc:.4} (fp32 {fp32:.4}, gap {:+.4})",
+        spec.k_per_layer,
+        acc - fp32
+    );
+    if let Some(path) = a.get("save") {
+        let mut tf = TensorFile::new();
+        for name in qp.names() {
+            tf.insert(name, qp.get(name)?.to_tensor());
+        }
+        tf.save(path)?;
+        println!("saved quantized checkpoint -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_overlap(rest: &[String]) -> Result<()> {
+    let p = artifacts_flag(Parser::new("overlap", "Fig.2 IoU analysis"))
+        .flag("task", Some("mrpc"), "task name")
+        .flag("budgets", None, "comma-separated k values (default: manifest)");
+    let a = p.parse(rest)?;
+    let art = Artifacts::open(a.str("artifacts")?)?;
+    let task = a.str("task")?;
+    let budgets: Vec<usize> = if a.list("budgets").is_empty() {
+        art.budgets()
+    } else {
+        a.list("budgets")
+            .iter()
+            .map(|s| s.parse().context("bad budget"))
+            .collect::<Result<_>>()?
+    };
+    let ckpt = art.checkpoint(task)?;
+    let calib = load_calib_if_needed(&art, task, Method::Spqr, art.calib_samples())?;
+    let mut results = svdquant::coordinator::sweep::SweepResults::default();
+    use svdquant::saliency::{iou, select_topk};
+    // score maps once per method
+    let mut scores: BTreeMap<&str, BTreeMap<String, svdquant::linalg::Matrix>> = BTreeMap::new();
+    for (mname, method) in [("svd", Method::Svd), ("awq", Method::Awq), ("spqr", Method::Spqr)] {
+        let spec = PreserveSpec { method, spqr_damp: art.spqr_damp(), ..Default::default() };
+        let mut per_layer = BTreeMap::new();
+        for name in art.model_cfg.quantizable_names() {
+            per_layer.insert(
+                name.clone(),
+                svdquant::coordinator::score_layer(&name, ckpt.get(&name)?, &spec, calib.as_ref())?,
+            );
+        }
+        scores.insert(mname, per_layer);
+    }
+    for &k in &budgets {
+        for base in ["awq", "spqr"] {
+            for name in art.model_cfg.quantizable_names() {
+                let s_svd = select_topk(&scores["svd"][&name], k);
+                let s_base = select_topk(&scores[base][&name], k);
+                results.overlap.record(base, k, iou(&s_svd, &s_base));
+            }
+        }
+    }
+    println!("{}", report::fig2_chart(&results));
+    Ok(())
+}
+
+fn cmd_report(rest: &[String]) -> Result<()> {
+    let p = artifacts_flag(Parser::new("report", "render report from cache"))
+        .flag("out", Some("results"), "results directory (with sweep.json)");
+    let a = p.parse(rest)?;
+    let art = Artifacts::open(a.str("artifacts")?)?;
+    let out = PathBuf::from(a.str("out")?);
+    // rebuild SweepResults from the cache file
+    let cache_path = out.join("sweep.json");
+    let text = std::fs::read_to_string(&cache_path)
+        .with_context(|| format!("no cached sweep at {}", cache_path.display()))?;
+    let j = svdquant::json::Json::parse(&text)?;
+    let mut res = svdquant::coordinator::sweep::SweepResults::default();
+    if let Some(obj) = j.as_object() {
+        for (key, v) in obj {
+            // key layout: task/method/kN/<quantcfg>
+            let parts: Vec<&str> = key.split('/').collect();
+            if parts.len() < 3 {
+                continue;
+            }
+            let k = if parts[1] == "fp32" {
+                usize::MAX
+            } else {
+                parts[2].trim_start_matches('k').parse().unwrap_or(0)
+            };
+            res.cells.push(svdquant::coordinator::sweep::Cell {
+                task: parts[0].into(),
+                method: parts[1].into(),
+                k,
+                accuracy: v.get("accuracy").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                total: v.get("total").and_then(|x| x.as_usize()).unwrap_or(0),
+                wall_s: 0.0,
+            });
+        }
+    }
+    report::write_report(&art, &res, &art.budgets(), &out)?;
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let p = artifacts_flag(Parser::new("serve", "batching inference demo"))
+        .flag("task", Some("mrpc"), "task name")
+        .flag("method", Some("svd"), "selection heuristic")
+        .flag("k", Some("256"), "protection budget")
+        .flag("requests", Some("200"), "trace length")
+        .flag("rate", Some("50"), "arrival rate (req/s)")
+        .flag("max-batch", Some("16"), "batcher size cap")
+        .flag("max-wait-ms", Some("5"), "batcher deadline")
+        .switch("bursty", "bursty arrivals instead of poisson");
+    let a = p.parse(rest)?;
+    let art = Artifacts::open(a.str("artifacts")?)?;
+    let task = a.str("task")?;
+    let method = Method::parse(a.str("method")?)?;
+    let spec = PreserveSpec {
+        method,
+        k_per_layer: a.usize("k")?,
+        spqr_damp: art.spqr_damp(),
+        ..Default::default()
+    };
+    let ckpt = art.checkpoint(task)?;
+    let calib = load_calib_if_needed(&art, task, method, art.calib_samples())?;
+    let (_, sels) = quantize_checkpoint(&art.model_cfg, &ckpt, &spec, calib.as_ref())?;
+    let qm = QuantizedModel::build(art.model_cfg, ckpt, &spec.qcfg, &sels)?;
+    let (qbytes, dbytes) = qm.quantized_bytes();
+    println!(
+        "deployed model: quantized weights {} vs dense {} ({:.2}x smaller)",
+        svdquant::util::human_bytes(qbytes),
+        svdquant::util::human_bytes(dbytes),
+        dbytes as f64 / qbytes as f64
+    );
+    let dev = art.dataset(task, "dev")?;
+    let rate = a.f64("rate")?;
+    let gen = if a.bool("bursty") {
+        TraceGenerator::bursty(rate, 0.2, 8)
+    } else {
+        TraceGenerator::poisson(rate)
+    };
+    let trace = gen.generate(a.usize("requests")?, dev.len(), 0xFEED);
+    let scfg = ServerConfig {
+        max_batch: a.usize("max-batch")?,
+        max_wait: std::time::Duration::from_millis(a.u64("max-wait-ms")?),
+        ..Default::default()
+    };
+    let stats = serve_trace(&qm, &dev, &trace, &scfg)?;
+    println!(
+        "served {} requests in {:.2}s: {:.1} req/s, p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms, \
+         mean batch {:.1}, accuracy {:.4}",
+        stats.completions,
+        stats.wall_s,
+        stats.throughput_rps,
+        stats.p50_ms,
+        stats.p95_ms,
+        stats.p99_ms,
+        stats.mean_batch,
+        stats.accuracy
+    );
+    Ok(())
+}
+
+fn cmd_selfcheck(rest: &[String]) -> Result<()> {
+    let p = artifacts_flag(Parser::new("selfcheck", "numerics cross-checks"))
+        .flag("task", Some("mrpc"), "task to check");
+    let a = p.parse(rest)?;
+    let art = Artifacts::open(a.str("artifacts")?)?;
+    let task = a.str("task")?;
+
+    println!("[1/3] parity vectors (rust quantizer/scorers vs python oracles)");
+    selfcheck_parity(&art.root)?;
+
+    println!("[2/3] rust engine vs PJRT executable on the dev set");
+    let ckpt = art.checkpoint(task)?;
+    let dev = art.dataset(task, "dev")?;
+    let engine = Engine::new(art.model_cfg, ckpt.clone())?;
+    let rt = Runtime::cpu()?;
+    let exe = art.compile_model(&rt, task, false)?;
+    let er = eval_engine(&engine, &dev, 16)?;
+    let pr = eval_pjrt(&exe, &art.model_cfg, &ckpt, &dev)?;
+    println!(
+        "  engine acc {:.4} vs pjrt acc {:.4} over {} samples",
+        er.accuracy(),
+        pr.accuracy(),
+        pr.total
+    );
+    anyhow::ensure!(
+        (er.accuracy() - pr.accuracy()).abs() < 0.01,
+        "engine and PJRT disagree"
+    );
+
+    println!("[3/3] quantized fused path vs simulated path (svd, k=64)");
+    let spec = PreserveSpec { method: Method::Svd, k_per_layer: 64, ..Default::default() };
+    let (qp, sels) = quantize_checkpoint(&art.model_cfg, &ckpt, &spec, None)?;
+    let qe = Engine::new(art.model_cfg, qp)?;
+    let sim = eval_engine(&qe, &dev, 16)?;
+    let qm = QuantizedModel::build(art.model_cfg, ckpt, &spec.qcfg, &sels)?;
+    let fused = eval_quantized(&qm, &dev, 16)?;
+    println!(
+        "  simulated acc {:.4} vs fused-packed acc {:.4}",
+        sim.accuracy(),
+        fused.accuracy()
+    );
+    anyhow::ensure!(
+        (sim.accuracy() - fused.accuracy()).abs() < 0.01,
+        "simulated and deployed paths disagree"
+    );
+    println!("selfcheck OK");
+    Ok(())
+}
+
+/// Replay artifacts/parity/vectors.qtz against the rust implementations.
+fn selfcheck_parity(root: &Path) -> Result<()> {
+    use svdquant::linalg::Matrix;
+    use svdquant::quant::fake_quant;
+    use svdquant::saliency::{awq_score, select_topk, spqr_score, svd_score, SvdScoreMode};
+
+    let tf = TensorFile::open(root.join("parity").join("vectors.qtz"))?;
+    let w = Matrix::from_tensor(tf.get("w")?)?;
+    let bits = tf.meta.get("bits").and_then(|v| v.as_usize()).unwrap_or(4) as u32;
+    let clip_sigma = tf.meta.get("clip_sigma").and_then(|v| v.as_f64()).unwrap_or(2.5) as f32;
+    let rank = tf.meta.get("svd_rank").and_then(|v| v.as_usize()).unwrap_or(8);
+    let damp = tf.meta.get("spqr_damp").and_then(|v| v.as_f64()).unwrap_or(0.01) as f32;
+    let n_rows = tf.meta.get("n_calib_rows").and_then(|v| v.as_usize()).unwrap_or(64);
+
+    let qcfg = QuantConfig { bits, clip_sigma: Some(clip_sigma), per_row: false };
+    let deq = Matrix::from_tensor(tf.get("deq")?)?;
+    let ours = fake_quant(&w, &qcfg);
+    let d = ours.max_abs_diff(&deq);
+    println!("  fake_quant max|Δ| = {d:.2e}");
+    anyhow::ensure!(d < 1e-5, "fake_quant parity failed");
+
+    let svd_ref = Matrix::from_tensor(tf.get("svd_score")?)?;
+    let svd_ours = svd_score(&w, rank, SvdScoreMode::Exact);
+    let rel = svd_ours.sub(&svd_ref).frobenius() / svd_ref.frobenius();
+    println!("  svd_score rel‖Δ‖F = {rel:.2e}");
+    anyhow::ensure!(rel < 1e-3, "svd_score parity failed");
+
+    let colnorm = tf.get("colnorm")?.as_f32()?;
+    let awq_ref = Matrix::from_tensor(tf.get("awq_score")?)?;
+    let awq_ours = awq_score(&w, &colnorm);
+    let d = awq_ours.max_abs_diff(&awq_ref);
+    println!("  awq_score max|Δ| = {d:.2e}");
+    anyhow::ensure!(d < 1e-3, "awq_score parity failed");
+
+    let xtx = Matrix::from_tensor(tf.get("xtx")?)?;
+    let spqr_ref = Matrix::from_tensor(tf.get("spqr_score")?)?;
+    let spqr_ours = spqr_score(&w, &xtx, n_rows, damp);
+    let rel = spqr_ours.sub(&spqr_ref).frobenius() / spqr_ref.frobenius();
+    println!("  spqr_score rel‖Δ‖F = {rel:.2e}");
+    anyhow::ensure!(rel < 1e-2, "spqr_score parity failed");
+
+    let k = tf.meta.get("k").and_then(|v| v.as_usize()).unwrap_or(64);
+    let mask_ref = tf.get("topk_mask")?.as_u8()?.to_vec();
+    let sel = select_topk(&svd_ours, k);
+    let mask_ours = sel.to_mask();
+    let agree = mask_ref
+        .iter()
+        .zip(mask_ours.data())
+        .filter(|(&a, &b)| (a > 0) == (b > 0.5))
+        .count();
+    println!("  topk mask agreement = {agree}/{}", mask_ref.len());
+    anyhow::ensure!(
+        agree as f64 / mask_ref.len() as f64 > 0.999,
+        "topk parity failed"
+    );
+    Ok(())
+}

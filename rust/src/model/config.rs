@@ -1,0 +1,146 @@
+//! Model hyperparameters — read from artifacts/manifest.json so the rust
+//! engine always matches whatever `python/compile/config.py` trained.
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+
+/// DistilBERT-style encoder configuration (mirror of python ModelConfig).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub max_len: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub n_classes: usize,
+    /// batch size baked into the exported HLO executable
+    pub export_batch: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            vocab_size: 2048,
+            max_len: 48,
+            hidden: 256,
+            layers: 4,
+            heads: 4,
+            ffn: 1024,
+            n_classes: 2,
+            export_batch: 64,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Parse from the `model` object of artifacts/manifest.json.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("manifest model.{k} missing"))
+        };
+        Ok(Self {
+            vocab_size: get("vocab_size")?,
+            max_len: get("max_len")?,
+            hidden: get("hidden")?,
+            layers: get("layers")?,
+            heads: get("heads")?,
+            ffn: get("ffn")?,
+            n_classes: get("n_classes")?,
+            export_batch: get("export_batch")?,
+        })
+    }
+
+    /// Canonical parameter order (mirror of python `param_names`); this is
+    /// also the HLO argument order after (input_ids, attention_mask).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec![
+            "tok_emb".to_string(),
+            "pos_emb".to_string(),
+            "emb_ln_g".to_string(),
+            "emb_ln_b".to_string(),
+        ];
+        for i in 0..self.layers {
+            let p = format!("layer{i}.");
+            for s in [
+                "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo", "ln1_g", "ln1_b",
+                "wf1", "bf1", "wf2", "bf2", "ln2_g", "ln2_b",
+            ] {
+                names.push(format!("{p}{s}"));
+            }
+        }
+        names.push("pre_classifier.w".to_string());
+        names.push("pre_classifier.b".to_string());
+        names.push("classifier.w".to_string());
+        names.push("classifier.b".to_string());
+        names
+    }
+
+    /// The matrices subject to the paper's per-layer protection budget.
+    pub fn quantizable_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for i in 0..self.layers {
+            for s in ["wq", "wk", "wv", "wo", "wf1", "wf2"] {
+                names.push(format!("layer{i}.{s}"));
+            }
+        }
+        names.push("pre_classifier.w".to_string());
+        names.push("classifier.w".to_string());
+        names
+    }
+
+    /// Total parameter count (diagnostics / README).
+    pub fn param_count(&self) -> usize {
+        let h = self.hidden;
+        let f = self.ffn;
+        let emb = self.vocab_size * h + self.max_len * h + 2 * h;
+        let per_layer = 4 * (h * h + h) + (f * h + f) + (h * f + h) + 4 * h;
+        let head = (h * h + h) + (self.n_classes * h + self.n_classes);
+        emb + self.layers * per_layer + head
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_names_count() {
+        let cfg = ModelConfig::default();
+        // 4 emb + 16/layer + 4 head
+        assert_eq!(cfg.param_names().len(), 4 + 16 * cfg.layers + 4);
+        assert_eq!(cfg.quantizable_names().len(), 6 * cfg.layers + 2);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"vocab_size":2048,"max_len":48,"hidden":256,"layers":4,
+                "heads":4,"ffn":1024,"n_classes":2,"export_batch":64}"#,
+        )
+        .unwrap();
+        assert_eq!(ModelConfig::from_json(&j).unwrap(), ModelConfig::default());
+        let bad = Json::parse(r#"{"hidden":256}"#).unwrap();
+        assert!(ModelConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        let cfg = ModelConfig::default();
+        assert_eq!(cfg.head_dim() * cfg.heads, cfg.hidden);
+    }
+
+    #[test]
+    fn param_count_plausible() {
+        // ~3.3M for the default config (hand check: emb 537k + layers 2.6M + head 66k)
+        let n = ModelConfig::default().param_count();
+        assert!(n > 3_000_000 && n < 4_000_000, "{n}");
+    }
+}

@@ -1,0 +1,370 @@
+//! The forward pass (mirror of python `model.forward`, jnp path) plus
+//! activation capture for calibration.
+//!
+//! Numerical conventions kept bit-compatible-in-spirit with the JAX model
+//! (parity test: logits within 1e-3 of the PJRT executable on a real
+//! batch): post-LN with eps 1e-12, exact (erf) GELU, −1e9 additive mask,
+//! f32 end to end.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{matmul_a_bt, Matrix};
+
+use super::{ModelConfig, Params};
+
+/// Captured inputs of every quantizable linear, for AWQ/SpQR calibration.
+/// Keys are weight names ("layer0.wq", ..., "classifier.w"); the value is
+/// the stacked `[tokens, din]` input that fed that weight (pad rows
+/// dropped).
+pub type Capture = std::collections::BTreeMap<String, Matrix>;
+
+/// Pure-Rust inference engine.
+pub struct Engine {
+    cfg: ModelConfig,
+    params: Params,
+}
+
+impl Engine {
+    pub fn new(cfg: ModelConfig, params: Params) -> Result<Self> {
+        params.validate(&cfg)?;
+        Ok(Self { cfg, params })
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    pub fn params_mut(&mut self) -> &mut Params {
+        &mut self.params
+    }
+
+    /// Logits `[batch, n_classes]` for a batch of token ids + masks
+    /// (each `[batch * max_len]`, row-major).
+    pub fn forward(&self, ids: &[i32], mask: &[i32]) -> Result<Matrix> {
+        self.forward_inner(ids, mask, None)
+    }
+
+    /// Forward while capturing the input of every quantizable linear.
+    pub fn forward_captured(&self, ids: &[i32], mask: &[i32]) -> Result<(Matrix, Capture)> {
+        let mut cap = Capture::new();
+        let logits = self.forward_inner(ids, mask, Some(&mut cap))?;
+        Ok((logits, cap))
+    }
+
+    fn forward_inner(
+        &self,
+        ids: &[i32],
+        mask: &[i32],
+        mut cap: Option<&mut Capture>,
+    ) -> Result<Matrix> {
+        let s = self.cfg.max_len;
+        let h = self.cfg.hidden;
+        if ids.len() % s != 0 || ids.len() != mask.len() {
+            bail!("ids/mask must be b*{s} long, got {} / {}", ids.len(), mask.len());
+        }
+        let b = ids.len() / s;
+        let p = &self.params;
+
+        // embeddings + LN → hidden [b*s, h]
+        let tok = p.get("tok_emb")?;
+        let pos = p.get("pos_emb")?;
+        let mut hid = Matrix::zeros(b * s, h);
+        for bi in 0..b {
+            for si in 0..s {
+                let id = ids[bi * s + si];
+                if id < 0 || id as usize >= self.cfg.vocab_size {
+                    bail!("token id {id} out of range");
+                }
+                let row = hid.row_mut(bi * s + si);
+                let trow = tok.row(id as usize);
+                let prow = pos.row(si);
+                for j in 0..h {
+                    row[j] = trow[j] + prow[j];
+                }
+            }
+        }
+        layer_norm(&mut hid, p.vec("emb_ln_g")?, p.vec("emb_ln_b")?);
+
+        for li in 0..self.cfg.layers {
+            let pre = format!("layer{li}.");
+            // ---- attention
+            if let Some(c) = cap.as_deref_mut() {
+                let x = masked_rows(&hid, mask);
+                c.insert(format!("{pre}wq"), x.clone());
+                c.insert(format!("{pre}wk"), x.clone());
+                c.insert(format!("{pre}wv"), x);
+            }
+            let q = linear(&hid, p.get(&format!("{pre}wq"))?, p.vec(&format!("{pre}bq"))?);
+            let k = linear(&hid, p.get(&format!("{pre}wk"))?, p.vec(&format!("{pre}bk"))?);
+            let v = linear(&hid, p.get(&format!("{pre}wv"))?, p.vec(&format!("{pre}bv"))?);
+            let ctx = self.attention(&q, &k, &v, mask, b)?;
+            if let Some(c) = cap.as_deref_mut() {
+                c.insert(format!("{pre}wo"), masked_rows(&ctx, mask));
+            }
+            let attn = linear(&ctx, p.get(&format!("{pre}wo"))?, p.vec(&format!("{pre}bo"))?);
+            for (hv, av) in hid.data_mut().iter_mut().zip(attn.data()) {
+                *hv += av;
+            }
+            layer_norm(&mut hid, p.vec(&format!("{pre}ln1_g"))?, p.vec(&format!("{pre}ln1_b"))?);
+
+            // ---- FFN
+            if let Some(c) = cap.as_deref_mut() {
+                c.insert(format!("{pre}wf1"), masked_rows(&hid, mask));
+            }
+            let mut f = linear(&hid, p.get(&format!("{pre}wf1"))?, p.vec(&format!("{pre}bf1"))?);
+            for v in f.data_mut() {
+                *v = gelu(*v);
+            }
+            if let Some(c) = cap.as_deref_mut() {
+                c.insert(format!("{pre}wf2"), masked_rows(&f, mask));
+            }
+            let f2 = linear(&f, p.get(&format!("{pre}wf2"))?, p.vec(&format!("{pre}bf2"))?);
+            for (hv, fv) in hid.data_mut().iter_mut().zip(f2.data()) {
+                *hv += fv;
+            }
+            layer_norm(&mut hid, p.vec(&format!("{pre}ln2_g"))?, p.vec(&format!("{pre}ln2_b"))?);
+        }
+
+        // ---- classification head on CLS (position 0)
+        let mut cls = Matrix::zeros(b, h);
+        for bi in 0..b {
+            cls.row_mut(bi).copy_from_slice(hid.row(bi * s));
+        }
+        if let Some(c) = cap.as_deref_mut() {
+            c.insert("pre_classifier.w".to_string(), cls.clone());
+        }
+        let mut z = linear(&cls, p.get("pre_classifier.w")?, p.vec("pre_classifier.b")?);
+        for v in z.data_mut() {
+            *v = v.max(0.0); // ReLU
+        }
+        if let Some(c) = cap.as_deref_mut() {
+            c.insert("classifier.w".to_string(), z.clone());
+        }
+        Ok(linear(&z, p.get("classifier.w")?, p.vec("classifier.b")?))
+    }
+
+    /// Multi-head attention over `[b*s, h]` tensors.
+    fn attention(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: &[i32],
+        b: usize,
+    ) -> Result<Matrix> {
+        let s = self.cfg.max_len;
+        let h = self.cfg.hidden;
+        let nh = self.cfg.heads;
+        let dh = self.cfg.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ctx = Matrix::zeros(b * s, h);
+        let mut logits = vec![0.0f32; s];
+        for bi in 0..b {
+            let mrow = &mask[bi * s..(bi + 1) * s];
+            for hi in 0..nh {
+                let off = hi * dh;
+                for qi in 0..s {
+                    let qrow = &q.row(bi * s + qi)[off..off + dh];
+                    // scores over keys
+                    let mut max = f32::NEG_INFINITY;
+                    for ki in 0..s {
+                        let krow = &k.row(bi * s + ki)[off..off + dh];
+                        let mut dot = 0.0f32;
+                        for d in 0..dh {
+                            dot += qrow[d] * krow[d];
+                        }
+                        let l = if mrow[ki] > 0 { dot * scale } else { -1e9 };
+                        logits[ki] = l;
+                        max = max.max(l);
+                    }
+                    let mut denom = 0.0f32;
+                    for l in logits.iter_mut() {
+                        *l = (*l - max).exp();
+                        denom += *l;
+                    }
+                    let inv = 1.0 / denom;
+                    let orow = &mut ctx.row_mut(bi * s + qi)[off..off + dh];
+                    for ki in 0..s {
+                        let w = logits[ki] * inv;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let vrow = &v.row(bi * s + ki)[off..off + dh];
+                        for d in 0..dh {
+                            orow[d] += w * vrow[d];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(ctx)
+    }
+}
+
+/// y = x @ wᵀ + b (w stored [dout, din] like the python model).
+fn linear(x: &Matrix, w: &Matrix, b: &[f32]) -> Matrix {
+    let mut y = matmul_a_bt(x, w);
+    debug_assert_eq!(b.len(), y.cols());
+    for i in 0..y.rows() {
+        for (yv, bv) in y.row_mut(i).iter_mut().zip(b) {
+            *yv += bv;
+        }
+    }
+    y
+}
+
+/// In-place LayerNorm over the last axis (eps 1e-12, matching jnp).
+fn layer_norm(x: &mut Matrix, g: &[f32], b: &[f32]) {
+    let cols = x.cols();
+    debug_assert_eq!(g.len(), cols);
+    for i in 0..x.rows() {
+        let row = x.row_mut(i);
+        let mean = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + 1e-12).sqrt();
+        for j in 0..cols {
+            row[j] = (row[j] - mean) * inv * g[j] + b[j];
+        }
+    }
+}
+
+/// Exact GELU: x·Φ(x) with Φ from erf (matches jax.nn.gelu approximate=False).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + erf(x * std::f32::consts::FRAC_1_SQRT_2))
+}
+
+/// erf via Abramowitz–Stegun 7.1.26 (|err| ≤ 1.5e-7, plenty for f32).
+#[inline]
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Rows of `x` where the token mask is 1 (calibration never sees pad).
+fn masked_rows(x: &Matrix, mask: &[i32]) -> Matrix {
+    debug_assert_eq!(x.rows(), mask.len());
+    let keep: Vec<usize> = (0..x.rows()).filter(|&i| mask[i] > 0).collect();
+    let mut out = Matrix::zeros(keep.len(), x.cols());
+    for (oi, &i) in keep.iter().enumerate() {
+        out.row_mut(oi).copy_from_slice(x.row(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::testing::synthetic_params;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 64,
+            max_len: 8,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            ffn: 32,
+            n_classes: 2,
+            export_batch: 4,
+        }
+    }
+
+    fn make_engine(seed: u64) -> Engine {
+        let cfg = tiny_cfg();
+        Engine::new(cfg, synthetic_params(&cfg, seed)).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let e = make_engine(1);
+        let ids: Vec<i32> = (0..16).map(|i| (i % 60) as i32 + 1).collect();
+        let mask = vec![1i32; 16];
+        let a = e.forward(&ids, &mask).unwrap();
+        assert_eq!(a.shape(), (2, 2));
+        let b = e.forward(&ids, &mask).unwrap();
+        assert!(a.approx_eq(&b, 0.0));
+    }
+
+    #[test]
+    fn padding_is_invisible() {
+        // a fully-padded tail must not change the CLS logits
+        let e = make_engine(2);
+        let mut ids = vec![1i32; 8];
+        let mut mask = vec![1i32; 8];
+        for i in 4..8 {
+            mask[i] = 0;
+        }
+        let a = e.forward(&ids, &mask).unwrap();
+        for i in 4..8 {
+            ids[i] = 33; // garbage under the pad mask
+        }
+        let b = e.forward(&ids, &mask).unwrap();
+        // ids under mask=0 still enter embeddings at their own positions but
+        // attention never reads them from CLS; the only path is their own
+        // row, which the head ignores. Logits must match.
+        assert!(a.approx_eq(&b, 1e-5), "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn capture_covers_all_quantizable() {
+        let e = make_engine(3);
+        let ids = vec![5i32; 16];
+        let mask = vec![1i32; 16];
+        let (_, cap) = e.forward_captured(&ids, &mask).unwrap();
+        for name in e.cfg().quantizable_names() {
+            let x = cap.get(&name).unwrap_or_else(|| panic!("missing {name}"));
+            let expected_din = e.params().get(&name).unwrap().cols();
+            assert_eq!(x.cols(), expected_din, "{name}");
+            assert!(x.rows() > 0);
+        }
+    }
+
+    #[test]
+    fn capture_drops_pad_rows() {
+        let e = make_engine(4);
+        let ids = vec![5i32; 8];
+        let mut mask = vec![1i32; 8];
+        mask[6] = 0;
+        mask[7] = 0;
+        let (_, cap) = e.forward_captured(&ids, &mask).unwrap();
+        assert_eq!(cap.get("layer0.wq").unwrap().rows(), 6);
+        // head captures are per-example, not per-token
+        assert_eq!(cap.get("classifier.w").unwrap().rows(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let e = make_engine(5);
+        assert!(e.forward(&[1, 2, 3], &[1, 1, 1]).is_err()); // not b*s
+        let ids = vec![9999i32; 8];
+        assert!(e.forward(&ids, &vec![1; 8]).is_err()); // id out of range
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.8413447).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.15865525).abs() < 1e-4);
+        assert!((gelu(3.0) - 2.9959502).abs() < 1e-4);
+    }
+
+    #[test]
+    fn erf_reference_points() {
+        for (x, want) in [(0.0, 0.0), (0.5, 0.5204999), (1.0, 0.8427008), (2.0, 0.9953223)] {
+            assert!((erf(x) - want).abs() < 2e-6, "erf({x})");
+            assert!((erf(-x) + want).abs() < 2e-6);
+        }
+    }
+}

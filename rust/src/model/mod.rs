@@ -1,0 +1,18 @@
+//! Pure-Rust transformer engine — the substrate that (a) produces
+//! calibration activations for AWQ/SpQR without any python, (b)
+//! cross-checks the PJRT executable's numerics, and (c) runs the *deployed*
+//! mixed-precision model (packed int4 + CSR salient) for the serving demo.
+//!
+//! Mirrors `python/compile/model.py` exactly: DistilBERT-style post-LN
+//! encoder, GELU FFN, CLS head. Parameter names match the checkpoint .qtz
+//! files and the HLO argument order in artifacts/manifest.json.
+
+pub mod config;
+pub mod engine;
+pub mod params;
+pub mod quantized;
+
+pub use config::ModelConfig;
+pub use engine::Engine;
+pub use params::Params;
+pub use quantized::QuantizedModel;

@@ -1,0 +1,198 @@
+//! Parameter store: named f32 tensors loaded from a checkpoint .qtz file.
+//! Weights can be swapped (that is how quantized variants are built) while
+//! biases/LayerNorms/embeddings stay shared.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Matrix;
+use crate::tensorfile::TensorFile;
+
+use super::ModelConfig;
+
+/// Named parameters of one model instance.
+#[derive(Debug, Clone)]
+pub struct Params {
+    map: BTreeMap<String, Matrix>,
+}
+
+impl Params {
+    pub fn from_map(map: BTreeMap<String, Matrix>) -> Self {
+        Self { map }
+    }
+
+    /// Load from a checkpoint file, validating shapes against `cfg`.
+    pub fn load(path: impl AsRef<Path>, cfg: &ModelConfig) -> Result<Self> {
+        let tf = TensorFile::open(path)?;
+        let mut map = BTreeMap::new();
+        for name in cfg.param_names() {
+            let t = tf
+                .get(&name)
+                .with_context(|| format!("checkpoint missing {name}"))?;
+            map.insert(name, Matrix::from_tensor(t)?);
+        }
+        let p = Self { map };
+        p.validate(cfg)?;
+        Ok(p)
+    }
+
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        let h = cfg.hidden;
+        let checks = [
+            ("tok_emb", (cfg.vocab_size, h)),
+            ("pos_emb", (cfg.max_len, h)),
+            ("classifier.w", (cfg.n_classes, h)),
+            ("pre_classifier.w", (h, h)),
+        ];
+        for (name, shape) in checks {
+            let m = self.get(name)?;
+            if m.shape() != shape {
+                bail!("{name}: shape {:?}, expected {:?}", m.shape(), shape);
+            }
+        }
+        for i in 0..cfg.layers {
+            let wf1 = self.get(&format!("layer{i}.wf1"))?;
+            if wf1.shape() != (cfg.ffn, h) {
+                bail!("layer{i}.wf1 shape {:?}", wf1.shape());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Matrix> {
+        self.map
+            .get(name)
+            .with_context(|| format!("parameter {name:?} not loaded"))
+    }
+
+    /// Bias/LN vectors are stored as 1×n matrices; fetch as a slice.
+    pub fn vec(&self, name: &str) -> Result<&[f32]> {
+        Ok(self.get(name)?.data())
+    }
+
+    /// Replace a weight matrix (same shape enforced).
+    pub fn set(&mut self, name: &str, m: Matrix) -> Result<()> {
+        let old = self.get(name)?;
+        if old.shape() != m.shape() {
+            bail!(
+                "set {name}: shape {:?} != existing {:?}",
+                m.shape(),
+                old.shape()
+            );
+        }
+        self.map.insert(name.to_string(), m);
+        Ok(())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    /// Clone with a set of weight substitutions applied.
+    pub fn with_weights(&self, subs: &BTreeMap<String, Matrix>) -> Result<Self> {
+        let mut out = self.clone();
+        for (name, m) in subs {
+            out.set(name, m.clone())?;
+        }
+        Ok(out)
+    }
+}
+
+/// Test/bench helpers (not behind cfg(test): benches and integration tests
+/// build the library without the test cfg).
+pub mod testing {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// A randomly-initialized, shape-correct parameter set.
+    pub fn synthetic_params(cfg: &ModelConfig, seed: u64) -> Params {
+        let mut rng = Rng::new(seed);
+        let mut map = BTreeMap::new();
+        let h = cfg.hidden;
+        let shape_of = |name: &str| -> (usize, usize) {
+            if name == "tok_emb" {
+                (cfg.vocab_size, h)
+            } else if name == "pos_emb" {
+                (cfg.max_len, h)
+            } else if name.ends_with(".wf1") {
+                (cfg.ffn, h)
+            } else if name.ends_with(".wf2") {
+                (h, cfg.ffn)
+            } else if name.ends_with(".bf1") {
+                (1, cfg.ffn)
+            } else if name == "classifier.w" {
+                (cfg.n_classes, h)
+            } else if name == "classifier.b" {
+                (1, cfg.n_classes)
+            } else if name.ends_with(".w")
+                || name.ends_with("wq")
+                || name.ends_with("wk")
+                || name.ends_with("wv")
+                || name.ends_with("wo")
+            {
+                (h, h)
+            } else {
+                (1, h) // biases + LN vectors
+            }
+        };
+        for name in cfg.param_names() {
+            let (r, c) = shape_of(&name);
+            let mut m = Matrix::zeros(r, c);
+            if name.contains("ln") && name.ends_with("_g") {
+                for v in m.data_mut() {
+                    *v = 1.0;
+                }
+            } else if !name.contains(".b") {
+                rng.fill_normal(m.data_mut(), 0.02);
+            }
+            map.insert(name, m);
+        }
+        Params::from_map(map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::synthetic_params;
+    use super::*;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn synthetic_passes_validation() {
+        let cfg = ModelConfig::default();
+        let p = synthetic_params(&cfg, 1);
+        assert!(p.validate(&cfg).is_ok());
+        assert_eq!(p.names().count(), cfg.param_names().len());
+    }
+
+    #[test]
+    fn set_enforces_shape() {
+        let cfg = ModelConfig::default();
+        let mut p = synthetic_params(&cfg, 2);
+        assert!(p.set("classifier.w", Matrix::zeros(3, 3)).is_err());
+        assert!(p
+            .set("classifier.w", Matrix::zeros(cfg.n_classes, cfg.hidden))
+            .is_ok());
+        assert!(p.set("nope", Matrix::zeros(1, 1)).is_err());
+    }
+
+    #[test]
+    fn with_weights_substitutes() {
+        let cfg = ModelConfig::default();
+        let p = synthetic_params(&cfg, 3);
+        let mut subs = BTreeMap::new();
+        subs.insert(
+            "layer0.wq".to_string(),
+            Matrix::zeros(cfg.hidden, cfg.hidden),
+        );
+        let q = p.with_weights(&subs).unwrap();
+        assert!(q.get("layer0.wq").unwrap().data().iter().all(|&v| v == 0.0));
+        // untouched weights identical
+        assert!(q
+            .get("layer1.wq")
+            .unwrap()
+            .approx_eq(p.get("layer1.wq").unwrap(), 0.0));
+    }
+}

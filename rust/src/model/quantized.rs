@@ -1,0 +1,309 @@
+//! Deployed mixed-precision model: every quantizable linear holds a
+//! [`QuantizedMatrix`] (packed int4 residual + CSR salient overlay) instead
+//! of dense f32. This is what the serving demo (`examples/datafree_deploy`)
+//! runs and what the engine_inference bench measures — the actual memory
+//! saving, not the simulated-quantization accuracy path.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::linalg::Matrix;
+use crate::quant::{QuantConfig, QuantizedMatrix};
+use crate::saliency::SalientSet;
+
+use super::{Engine, ModelConfig, Params};
+
+/// A model whose quantizable weights live in packed int4 + sparse FP32.
+pub struct QuantizedModel {
+    /// engine holding the *shared* FP32 parameters (embeddings, biases,
+    /// LayerNorms) — its quantizable weights are ignored on this path
+    engine: Engine,
+    qweights: BTreeMap<String, QuantizedMatrix>,
+}
+
+impl QuantizedModel {
+    /// Quantize `params` under `cfg`/`qcfg` with the given per-layer
+    /// salient selections.
+    pub fn build(
+        cfg: ModelConfig,
+        params: Params,
+        qcfg: &QuantConfig,
+        selections: &BTreeMap<String, SalientSet>,
+    ) -> Result<Self> {
+        let mut qweights = BTreeMap::new();
+        for name in cfg.quantizable_names() {
+            let w = params.get(&name)?;
+            let sel = selections
+                .get(&name)
+                .with_context(|| format!("no salient selection for {name}"))?;
+            qweights.insert(name.clone(), QuantizedMatrix::from_dense(w, qcfg, &sel.to_coo(w)));
+        }
+        Ok(Self { engine: Engine::new(cfg, params)?, qweights })
+    }
+
+    /// Total bytes of the quantized weights (vs dense f32).
+    pub fn quantized_bytes(&self) -> (usize, usize) {
+        let q: usize = self.qweights.values().map(|m| m.nbytes()).sum();
+        let d: usize = self
+            .qweights
+            .values()
+            .map(|m| m.shape().0 * m.shape().1 * 4)
+            .sum();
+        (q, d)
+    }
+
+    /// Run the forward pass with dequantize-on-read weights.
+    ///
+    /// Implementation: substitute each quantizable weight by its dense
+    /// reconstruction *lazily per call batch* would re-pay dequantization
+    /// every batch; instead we reconstruct once here and keep a dense-dequant
+    /// engine for repeated serving — but expose [`Self::forward_fused`] for
+    /// the true low-memory path that never materializes dense weights.
+    pub fn to_dense_engine(&self) -> Result<Engine> {
+        let mut params = self.engine.params().clone();
+        for (name, qm) in &self.qweights {
+            params.set(name, qm.dequantize_dense())?;
+        }
+        Engine::new(*self.engine.cfg(), params)
+    }
+
+    /// Fused mixed-precision forward: linears run directly over packed
+    /// codes + CSR overlay (`QuantizedMatrix::matmul_xt`), dense f32 weight
+    /// matrices are never materialized. ~8× smaller working set.
+    pub fn forward_fused(&self, ids: &[i32], mask: &[i32]) -> Result<Matrix> {
+        // The engine's forward is structured around `Params::get`; rather
+        // than duplicate the whole pass, we express the fused path as an
+        // engine over a Params view whose quantizable entries are produced
+        // by the packed matmul. The clean seam is the linear() call, so we
+        // run a bespoke forward here that mirrors engine.rs but swaps the
+        // quantizable linears for qmatrix::matmul_xt.
+        fused::forward(&self.engine, &self.qweights, ids, mask)
+    }
+}
+
+/// The fused forward implementation (kept in a private module to make the
+/// mirror-of-engine.rs structure obvious and separately testable).
+mod fused {
+    use super::*;
+    use crate::model::engine::gelu;
+
+    pub fn forward(
+        engine: &Engine,
+        qw: &BTreeMap<String, QuantizedMatrix>,
+        ids: &[i32],
+        mask: &[i32],
+    ) -> Result<Matrix> {
+        let cfg = *engine.cfg();
+        let p = engine.params();
+        let s = cfg.max_len;
+        let h = cfg.hidden;
+        anyhow::ensure!(ids.len() % s == 0 && ids.len() == mask.len(), "bad batch");
+        let b = ids.len() / s;
+
+        let tok = p.get("tok_emb")?;
+        let pos = p.get("pos_emb")?;
+        let mut hid = Matrix::zeros(b * s, h);
+        for bi in 0..b {
+            for si in 0..s {
+                let id = ids[bi * s + si] as usize;
+                anyhow::ensure!(id < cfg.vocab_size, "token id out of range");
+                let row = hid.row_mut(bi * s + si);
+                for j in 0..h {
+                    row[j] = tok.row(id)[j] + pos.row(si)[j];
+                }
+            }
+        }
+        ln(&mut hid, p.vec("emb_ln_g")?, p.vec("emb_ln_b")?);
+
+        for li in 0..cfg.layers {
+            let pre = format!("layer{li}.");
+            let q = qlinear(&hid, qw, p, &format!("{pre}wq"), &format!("{pre}bq"))?;
+            let k = qlinear(&hid, qw, p, &format!("{pre}wk"), &format!("{pre}bk"))?;
+            let v = qlinear(&hid, qw, p, &format!("{pre}wv"), &format!("{pre}bv"))?;
+            let ctx = attention(&cfg, &q, &k, &v, mask, b);
+            let attn = qlinear(&ctx, qw, p, &format!("{pre}wo"), &format!("{pre}bo"))?;
+            for (hv, av) in hid.data_mut().iter_mut().zip(attn.data()) {
+                *hv += av;
+            }
+            ln(&mut hid, p.vec(&format!("{pre}ln1_g"))?, p.vec(&format!("{pre}ln1_b"))?);
+            let mut f = qlinear(&hid, qw, p, &format!("{pre}wf1"), &format!("{pre}bf1"))?;
+            for v in f.data_mut() {
+                *v = gelu(*v);
+            }
+            let f2 = qlinear(&f, qw, p, &format!("{pre}wf2"), &format!("{pre}bf2"))?;
+            for (hv, fv) in hid.data_mut().iter_mut().zip(f2.data()) {
+                *hv += fv;
+            }
+            ln(&mut hid, p.vec(&format!("{pre}ln2_g"))?, p.vec(&format!("{pre}ln2_b"))?);
+        }
+
+        let mut cls = Matrix::zeros(b, h);
+        for bi in 0..b {
+            cls.row_mut(bi).copy_from_slice(hid.row(bi * s));
+        }
+        let mut z = qlinear(&cls, qw, p, "pre_classifier.w", "pre_classifier.b")?;
+        for v in z.data_mut() {
+            *v = v.max(0.0);
+        }
+        qlinear(&z, qw, p, "classifier.w", "classifier.b")
+    }
+
+    fn qlinear(
+        x: &Matrix,
+        qw: &BTreeMap<String, QuantizedMatrix>,
+        p: &Params,
+        wname: &str,
+        bname: &str,
+    ) -> Result<Matrix> {
+        let qm = qw.get(wname).with_context(|| format!("missing qweight {wname}"))?;
+        let mut y = qm.matmul_xt(x);
+        let bias = p.vec(bname)?;
+        for i in 0..y.rows() {
+            for (yv, bv) in y.row_mut(i).iter_mut().zip(bias) {
+                *yv += bv;
+            }
+        }
+        Ok(y)
+    }
+
+    fn ln(x: &mut Matrix, g: &[f32], b: &[f32]) {
+        let cols = x.cols();
+        for i in 0..x.rows() {
+            let row = x.row_mut(i);
+            let mean = row.iter().sum::<f32>() / cols as f32;
+            let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+            let inv = 1.0 / (var + 1e-12).sqrt();
+            for j in 0..cols {
+                row[j] = (row[j] - mean) * inv * g[j] + b[j];
+            }
+        }
+    }
+
+    fn attention(
+        cfg: &ModelConfig,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: &[i32],
+        b: usize,
+    ) -> Matrix {
+        let s = cfg.max_len;
+        let h = cfg.hidden;
+        let nh = cfg.heads;
+        let dh = cfg.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ctx = Matrix::zeros(b * s, h);
+        let mut logits = vec![0.0f32; s];
+        for bi in 0..b {
+            let mrow = &mask[bi * s..(bi + 1) * s];
+            for hi in 0..nh {
+                let off = hi * dh;
+                for qi in 0..s {
+                    let qrow = &q.row(bi * s + qi)[off..off + dh];
+                    let mut max = f32::NEG_INFINITY;
+                    for ki in 0..s {
+                        let krow = &k.row(bi * s + ki)[off..off + dh];
+                        let mut dot = 0.0f32;
+                        for d in 0..dh {
+                            dot += qrow[d] * krow[d];
+                        }
+                        let l = if mrow[ki] > 0 { dot * scale } else { -1e9 };
+                        logits[ki] = l;
+                        max = max.max(l);
+                    }
+                    let mut denom = 0.0f32;
+                    for l in logits.iter_mut() {
+                        *l = (*l - max).exp();
+                        denom += *l;
+                    }
+                    let inv = 1.0 / denom;
+                    let orow = &mut ctx.row_mut(bi * s + qi)[off..off + dh];
+                    for ki in 0..s {
+                        let w = logits[ki] * inv;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let vrow = &v.row(bi * s + ki)[off..off + dh];
+                        for d in 0..dh {
+                            orow[d] += w * vrow[d];
+                        }
+                    }
+                }
+            }
+        }
+        ctx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::testing::synthetic_params;
+    use crate::saliency::{select_topk, svd_score, SvdScoreMode};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 64,
+            max_len: 8,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            n_classes: 2,
+            export_batch: 4,
+        }
+    }
+
+    fn build_qmodel(k: usize) -> (QuantizedModel, Engine) {
+        let cfg = tiny_cfg();
+        let params = synthetic_params(&cfg, 42);
+        let mut sels = BTreeMap::new();
+        for name in cfg.quantizable_names() {
+            let w = params.get(&name).unwrap();
+            let score = svd_score(w, 4, SvdScoreMode::Exact);
+            sels.insert(name, select_topk(&score, k));
+        }
+        let qm = QuantizedModel::build(cfg, params.clone(), &QuantConfig::default(), &sels)
+            .unwrap();
+        let fp32 = Engine::new(cfg, params).unwrap();
+        (qm, fp32)
+    }
+
+    #[test]
+    fn fused_matches_dense_dequant_engine() {
+        let (qm, _) = build_qmodel(8);
+        let ids: Vec<i32> = (0..16).map(|i| (i % 60) as i32 + 1).collect();
+        let mask = vec![1i32; 16];
+        let fused = qm.forward_fused(&ids, &mask).unwrap();
+        let dense = qm.to_dense_engine().unwrap().forward(&ids, &mask).unwrap();
+        assert!(
+            fused.approx_eq(&dense, 2e-3),
+            "fused vs dense diff {}",
+            fused.max_abs_diff(&dense)
+        );
+    }
+
+    #[test]
+    fn full_budget_recovers_fp32() {
+        // k = every entry → salient overlay covers everything → exact fp32
+        let cfg = tiny_cfg();
+        let k = cfg.hidden * cfg.ffn; // larger than every matrix
+        let (qm, fp32) = build_qmodel(k);
+        let ids: Vec<i32> = (0..16).map(|i| (i % 50) as i32 + 2).collect();
+        let mask = vec![1i32; 16];
+        let a = qm.forward_fused(&ids, &mask).unwrap();
+        let b = fp32.forward(&ids, &mask).unwrap();
+        assert!(a.approx_eq(&b, 1e-4), "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn memory_shrinks() {
+        // tiny matrices carry relatively large CSR/scale overhead; the 8x
+        // asymptote is covered by quant::qmatrix tests on 256x1024 — here we
+        // only require a clear win
+        let (qm, _) = build_qmodel(4);
+        let (q, d) = qm.quantized_bytes();
+        assert!(q * 3 < d, "q={q} d={d}");
+    }
+}

@@ -1,0 +1,65 @@
+//! Quantization substrate (paper §III-B).
+//!
+//! * [`symmetric`] — symmetric linear b-bit quantization with σ-clipping
+//!   (eq. 8–9), per-tensor and per-row scale variants + error metrics;
+//! * [`nf4`] — NormalFloat-4 codebook quantization (the paper cites NF4 as
+//!   the motivation for clipping; we carry it as an ablation);
+//! * [`packing`] — 2-nibble int4 bit-packing for real storage;
+//! * [`qmatrix`] — [`QuantizedMatrix`]: the deployable `W ≈ S + Q` pair
+//!   (packed codes + sparse salient set) with fused dequant-matvec.
+
+pub mod nf4;
+pub mod packing;
+pub mod qmatrix;
+pub mod symmetric;
+
+pub use packing::{pack_nibbles, unpack_nibbles};
+pub use qmatrix::QuantizedMatrix;
+pub use symmetric::{
+    dequantize, fake_quant, quant_params, quantize_codes, QuantParams,
+};
+
+/// Quantization configuration (paper defaults in `Default`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantConfig {
+    /// bit width of the residual (paper: 4)
+    pub bits: u32,
+    /// clip threshold in units of std(W) (paper: 2.5); `None` = no clipping
+    pub clip_sigma: Option<f32>,
+    /// per-row (group) scales instead of per-tensor (ablation; paper uses
+    /// per-tensor)
+    pub per_row: bool,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        Self { bits: 4, clip_sigma: Some(2.5), per_row: false }
+    }
+}
+
+impl QuantConfig {
+    /// Largest representable code magnitude: 2^{b-1} - 1.
+    pub fn qmax(&self) -> f32 {
+        (1u32 << (self.bits - 1)) as f32 - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_per_bits() {
+        assert_eq!(QuantConfig { bits: 4, ..Default::default() }.qmax(), 7.0);
+        assert_eq!(QuantConfig { bits: 8, ..Default::default() }.qmax(), 127.0);
+        assert_eq!(QuantConfig { bits: 3, ..Default::default() }.qmax(), 3.0);
+    }
+
+    #[test]
+    fn default_matches_paper() {
+        let c = QuantConfig::default();
+        assert_eq!(c.bits, 4);
+        assert_eq!(c.clip_sigma, Some(2.5));
+        assert!(!c.per_row);
+    }
+}

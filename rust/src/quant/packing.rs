@@ -1,0 +1,98 @@
+//! Int4 bit-packing: two signed nibbles per byte (low nibble = even index).
+//!
+//! The simulated-quantization accuracy experiments never need packing, but
+//! the deployable [`super::QuantizedMatrix`] stores real packed codes —
+//! this is where the 4-bit memory saving (paper §I: "reducing the memory
+//! footprint") actually materializes, and the quant_throughput bench
+//! measures pack/unpack bandwidth.
+//!
+//! Encoding: code ∈ [-8, 7] (two's complement nibble). The symmetric
+//! quantizer only emits [-7, 7], so -8 is never produced but decodes fine.
+
+/// Pack signed int4 codes (values must fit in [-8, 7]) into bytes.
+pub fn pack_nibbles(codes: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity((codes.len() + 1) / 2);
+    for pair in codes.chunks(2) {
+        let lo = (pair[0] as u8) & 0x0F;
+        let hi = if pair.len() == 2 { (pair[1] as u8) & 0x0F } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Unpack `n` signed int4 codes from packed bytes.
+pub fn unpack_nibbles(packed: &[u8], n: usize) -> Vec<i8> {
+    assert!(packed.len() * 2 >= n, "not enough packed bytes");
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let byte = packed[i / 2];
+        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        out.push(sign_extend4(nib));
+    }
+    out
+}
+
+/// Sign-extend a 4-bit two's-complement value.
+#[inline]
+pub fn sign_extend4(nib: u8) -> i8 {
+    ((nib << 4) as i8) >> 4
+}
+
+/// Unpack a single code at `idx` without materializing the whole row.
+#[inline]
+pub fn unpack_at(packed: &[u8], idx: usize) -> i8 {
+    let byte = packed[idx / 2];
+    let nib = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+    sign_extend4(nib)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_values() {
+        let codes: Vec<i8> = (-8..=7).collect();
+        let packed = pack_nibbles(&codes);
+        assert_eq!(packed.len(), 8);
+        assert_eq!(unpack_nibbles(&packed, codes.len()), codes);
+    }
+
+    #[test]
+    fn odd_length() {
+        let codes: Vec<i8> = vec![-7, 3, 5];
+        let packed = pack_nibbles(&codes);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(unpack_nibbles(&packed, 3), codes);
+    }
+
+    #[test]
+    fn random_roundtrip() {
+        let mut rng = Rng::new(81);
+        for _ in 0..20 {
+            let n = rng.range(0, 500);
+            let codes: Vec<i8> = (0..n).map(|_| rng.range(0, 15) as i8 - 7).collect();
+            let packed = pack_nibbles(&codes);
+            assert_eq!(packed.len(), (n + 1) / 2);
+            assert_eq!(unpack_nibbles(&packed, n), codes);
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(unpack_at(&packed, i), c);
+            }
+        }
+    }
+
+    #[test]
+    fn sign_extension() {
+        assert_eq!(sign_extend4(0x0F), -1);
+        assert_eq!(sign_extend4(0x08), -8);
+        assert_eq!(sign_extend4(0x07), 7);
+        assert_eq!(sign_extend4(0x00), 0);
+    }
+
+    #[test]
+    fn memory_halving() {
+        let codes = vec![1i8; 1000];
+        assert_eq!(pack_nibbles(&codes).len(), 500);
+    }
+}

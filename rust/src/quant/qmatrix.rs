@@ -1,0 +1,242 @@
+//! [`QuantizedMatrix`] — the deployable form of `W ≈ S + Q` (paper eq. 1):
+//! packed int4 residual codes + per-row scales + a CSR salient overlay.
+//!
+//! Two consumers:
+//! * the **simulated** path (`dequantize_dense`) reproduces exactly what
+//!   the paper's accuracy tables measure (and what the PJRT executable is
+//!   fed as weight arguments);
+//! * the **deployed** path (`matvec`) is the real mixed-precision kernel —
+//!   unpack-dequant-dot fused per row, salient CSR entries *overriding*
+//!   (not adding to) the residual contribution at their coordinates, which
+//!   mirrors the L1 Pallas `salient_matmul` mask-add semantics.
+
+use once_cell::sync::Lazy;
+
+use crate::linalg::Matrix;
+use crate::sparse::{Coo, Csr};
+
+use super::packing::{pack_nibbles, sign_extend4};
+use super::symmetric::{quant_params, quantize_codes, QuantParams};
+use super::QuantConfig;
+
+/// Byte → (low-nibble, high-nibble) decoded as f32 — one 2 KiB table turns
+/// the per-element shift/sign-extend/convert sequence of the matvec inner
+/// loop into a single indexed load (EXPERIMENTS.md §Perf L3: +~30% matvec
+/// throughput over the scalar decode).
+static NIBBLE_LUT: Lazy<[[f32; 2]; 256]> = Lazy::new(|| {
+    let mut t = [[0.0f32; 2]; 256];
+    for (b, item) in t.iter_mut().enumerate() {
+        item[0] = sign_extend4(b as u8 & 0x0F) as f32;
+        item[1] = sign_extend4((b as u8) >> 4) as f32;
+    }
+    t
+});
+
+/// A quantized weight matrix: dense packed residual + sparse FP32 salient.
+#[derive(Debug, Clone)]
+pub struct QuantizedMatrix {
+    rows: usize,
+    cols: usize,
+    /// packed int4 codes, row-major, each row padded to a whole byte
+    packed: Vec<u8>,
+    bytes_per_row: usize,
+    params: QuantParams,
+    /// salient overlay (k entries kept FP32)
+    salient: Csr,
+}
+
+impl QuantizedMatrix {
+    /// Quantize `w` under `cfg`, keeping the entries of `salient`
+    /// (COO of exact FP32 values) at full precision.
+    pub fn from_dense(w: &Matrix, cfg: &QuantConfig, salient: &Coo) -> Self {
+        let (rows, cols) = w.shape();
+        assert_eq!((salient.rows, salient.cols), (rows, cols), "salient shape");
+        let params = quant_params(w, cfg);
+        let codes = quantize_codes(w, &params);
+        let bytes_per_row = (cols + 1) / 2;
+        let mut packed = Vec::with_capacity(rows * bytes_per_row);
+        for i in 0..rows {
+            packed.extend_from_slice(&pack_nibbles(&codes[i * cols..(i + 1) * cols]));
+        }
+        Self { rows, cols, packed, bytes_per_row, params, salient: salient.to_csr() }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn nnz_salient(&self) -> usize {
+        self.salient.nnz()
+    }
+
+    /// Total storage in bytes (packed codes + scales + CSR overlay).
+    pub fn nbytes(&self) -> usize {
+        self.packed.len() + self.params.scales.len() * 4 + self.salient.nbytes()
+    }
+
+    /// Compression ratio vs dense f32.
+    pub fn compression_ratio(&self) -> f64 {
+        (self.rows * self.cols * 4) as f64 / self.nbytes() as f64
+    }
+
+    /// Reconstruct the effective dense weight the paper evaluates:
+    /// salient coordinates exact, everything else dequantized.
+    pub fn dequantize_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let scale = self.params.scale_for_row(i);
+            let prow = &self.packed[i * self.bytes_per_row..(i + 1) * self.bytes_per_row];
+            let orow = out.row_mut(i);
+            for j in 0..self.cols {
+                let byte = prow[j / 2];
+                let nib = if j % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                orow[j] = sign_extend4(nib) as f32 * scale;
+            }
+            for (c, v) in self.salient.row(i) {
+                orow[c] = v;
+            }
+        }
+        out
+    }
+
+    /// Fused mixed-precision matvec: `y = W_eff x`.
+    ///
+    /// Per row: unpack-dequant-dot over the packed residual, then patch the
+    /// salient coordinates by adding `(v - deq) * x[c]` — two reads per
+    /// salient entry instead of a dense branch per element.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let lut = &*NIBBLE_LUT;
+        for i in 0..self.rows {
+            let scale = self.params.scale_for_row(i);
+            let prow = &self.packed[i * self.bytes_per_row..(i + 1) * self.bytes_per_row];
+            // dot over packed pairs: LUT-decoded codes accumulate in two
+            // f32 lanes (per-nibble), scaled once per row
+            let pairs = self.cols / 2;
+            let (mut acc0, mut acc1) = (0.0f32, 0.0f32);
+            for b in 0..pairs {
+                let d = lut[prow[b] as usize];
+                acc0 += d[0] * x[2 * b];
+                acc1 += d[1] * x[2 * b + 1];
+            }
+            let mut acc = acc0 + acc1;
+            if self.cols % 2 == 1 {
+                let byte = prow[self.bytes_per_row - 1];
+                acc += sign_extend4(byte & 0x0F) as f32 * x[self.cols - 1];
+            }
+            let mut out = acc * scale;
+            // salient overrides
+            for (c, v) in self.salient.row(i) {
+                let byte = prow[c / 2];
+                let nib = if c % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                let deq = sign_extend4(nib) as f32 * scale;
+                out += (v - deq) * x[c];
+            }
+            y[i] = out;
+        }
+    }
+
+    /// `Y = X W_effᵀ` for a batch of rows (the engine's linear layer).
+    pub fn matmul_xt(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.cols);
+        let mut out = Matrix::zeros(x.rows(), self.rows);
+        for (i, xrow) in (0..x.rows()).map(|i| (i, x.row(i).to_vec())) {
+            self.matvec(&xrow, out.row_mut(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::symmetric::fake_quant;
+    use crate::util::rng::Rng;
+
+    fn random_w(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut w = Matrix::zeros(r, c);
+        rng.fill_normal(w.data_mut(), 0.05);
+        w
+    }
+
+    fn random_salient(rng: &mut Rng, w: &Matrix, k: usize) -> Coo {
+        let (r, c) = w.shape();
+        let mut coo = Coo::new(r, c);
+        for idx in rng.sample_distinct(r * c, k.min(r * c)) {
+            coo.push(idx / c, idx % c, w[(idx / c, idx % c)]);
+        }
+        coo
+    }
+
+    #[test]
+    fn dequant_matches_fake_quant_when_no_salient() {
+        let mut rng = Rng::new(111);
+        let w = random_w(&mut rng, 33, 47);
+        let cfg = QuantConfig::default();
+        let qm = QuantizedMatrix::from_dense(&w, &cfg, &Coo::new(33, 47));
+        let want = fake_quant(&w, &cfg);
+        assert!(qm.dequantize_dense().approx_eq(&want, 1e-7));
+    }
+
+    #[test]
+    fn salient_entries_are_exact() {
+        let mut rng = Rng::new(112);
+        let w = random_w(&mut rng, 20, 30);
+        let sal = random_salient(&mut rng, &w, 25);
+        let qm = QuantizedMatrix::from_dense(&w, &QuantConfig::default(), &sal);
+        let deq = qm.dequantize_dense();
+        for &(r, c, v) in &sal.entries {
+            assert_eq!(deq[(r as usize, c as usize)], v);
+        }
+        assert_eq!(qm.nnz_salient(), 25);
+    }
+
+    #[test]
+    fn matvec_matches_dense_reconstruction() {
+        let mut rng = Rng::new(113);
+        for &(r, c) in &[(8, 16), (13, 31), (64, 65)] {
+            let w = random_w(&mut rng, r, c);
+            let sal = random_salient(&mut rng, &w, r.min(c));
+            let qm = QuantizedMatrix::from_dense(&w, &QuantConfig::default(), &sal);
+            let dense = qm.dequantize_dense();
+            let x: Vec<f32> = (0..c).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut y = vec![0.0f32; r];
+            qm.matvec(&x, &mut y);
+            for i in 0..r {
+                let want: f32 = (0..c).map(|j| dense[(i, j)] * x[j]).sum();
+                assert!(
+                    (y[i] - want).abs() < 1e-3,
+                    "({r},{c}) row {i}: {} vs {want}",
+                    y[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_xt_matches_matvec_rows() {
+        let mut rng = Rng::new(114);
+        let w = random_w(&mut rng, 10, 12);
+        let qm = QuantizedMatrix::from_dense(&w, &QuantConfig::default(), &Coo::new(10, 12));
+        let mut x = Matrix::zeros(5, 12);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let y = qm.matmul_xt(&x);
+        for i in 0..5 {
+            let mut want = vec![0.0f32; 10];
+            qm.matvec(x.row(i), &mut want);
+            for j in 0..10 {
+                assert_eq!(y[(i, j)], want[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn compression_ratio_near_8x_for_large_k0() {
+        let mut rng = Rng::new(115);
+        let w = random_w(&mut rng, 256, 1024);
+        let qm = QuantizedMatrix::from_dense(&w, &QuantConfig::default(), &Coo::new(256, 1024));
+        let ratio = qm.compression_ratio();
+        assert!(ratio > 7.5 && ratio <= 8.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,245 @@
+//! Symmetric linear quantization with σ-clipping — the exact semantics of
+//! paper eq. 8–9 and of the L1 `fake_quant` Pallas kernel (pinned against
+//! each other by the parity test over artifacts/parity/vectors.qtz).
+//!
+//! ```text
+//! clip  = clip_sigma · std(W)           (population std, like jnp.std)
+//! w_c   = clamp(w, ±clip)
+//! scale = max|w_c| / (2^{b-1} - 1)
+//! q     = clamp(round(w_c / scale), ±(2^{b-1}-1))
+//! ŵ     = q · scale
+//! ```
+//!
+//! Rounding is round-half-away-from-zero (`f32::round`), matching
+//! `jnp.round`'s behaviour on the value grid that survives division by a
+//! positive scale for every representative vector in the parity file.
+
+use crate::linalg::Matrix;
+
+use super::QuantConfig;
+
+/// Scales (+ the clip threshold actually applied) for one matrix.
+#[derive(Debug, Clone)]
+pub struct QuantParams {
+    /// per-tensor scale, or one scale per row when `per_row`
+    pub scales: Vec<f32>,
+    pub clip: f32,
+    pub per_row: bool,
+    pub bits: u32,
+}
+
+impl QuantParams {
+    #[inline]
+    pub fn scale_for_row(&self, row: usize) -> f32 {
+        if self.per_row {
+            self.scales[row]
+        } else {
+            self.scales[0]
+        }
+    }
+}
+
+/// Compute clip + scale(s) for `w` under `cfg` (eq. 9).
+pub fn quant_params(w: &Matrix, cfg: &QuantConfig) -> QuantParams {
+    let clip = match cfg.clip_sigma {
+        Some(cs) => {
+            let c = cs * w.std() as f32;
+            if c > 0.0 {
+                c
+            } else {
+                f32::INFINITY
+            }
+        }
+        None => f32::INFINITY,
+    };
+    let qmax = cfg.qmax();
+    let scale_of = |vals: &[f32]| -> f32 {
+        let m = vals
+            .iter()
+            .fold(0.0f32, |acc, &v| acc.max(v.abs().min(clip)));
+        if m > 0.0 {
+            m / qmax
+        } else {
+            1.0
+        }
+    };
+    let scales = if cfg.per_row {
+        (0..w.rows()).map(|i| scale_of(w.row(i))).collect()
+    } else {
+        vec![scale_of(w.data())]
+    };
+    QuantParams { scales, clip, per_row: cfg.per_row, bits: cfg.bits }
+}
+
+#[inline]
+fn encode(v: f32, clip: f32, scale: f32, qmax: f32) -> i8 {
+    let wc = v.clamp(-clip, clip);
+    (wc / scale).round().clamp(-qmax, qmax) as i8
+}
+
+/// Integer codes for every entry (row-major), in `[-qmax, qmax]`.
+pub fn quantize_codes(w: &Matrix, p: &QuantParams) -> Vec<i8> {
+    let qmax = (1u32 << (p.bits - 1)) as f32 - 1.0;
+    let cols = w.cols();
+    w.data()
+        .iter()
+        .enumerate()
+        .map(|(idx, &v)| encode(v, p.clip, p.scale_for_row(idx / cols), qmax))
+        .collect()
+}
+
+/// Dequantize codes back to f32.
+pub fn dequantize(codes: &[i8], p: &QuantParams, rows: usize, cols: usize) -> Matrix {
+    assert_eq!(codes.len(), rows * cols);
+    let mut out = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        let scale = p.scale_for_row(i);
+        let orow = out.row_mut(i);
+        for (o, &c) in orow.iter_mut().zip(&codes[i * cols..(i + 1) * cols]) {
+            *o = c as f32 * scale;
+        }
+    }
+    out
+}
+
+/// One-shot quantize→dequantize (the "simulated quantization" the paper's
+/// accuracy tables use).
+pub fn fake_quant(w: &Matrix, cfg: &QuantConfig) -> Matrix {
+    let p = quant_params(w, cfg);
+    let codes = quantize_codes(w, &p);
+    dequantize(&codes, &p, w.rows(), w.cols())
+}
+
+/// Mean-squared quantization error (diagnostics + ablation benches).
+pub fn mse(w: &Matrix, wq: &Matrix) -> f64 {
+    assert_eq!(w.shape(), wq.shape());
+    let n = w.len().max(1) as f64;
+    w.data()
+        .iter()
+        .zip(wq.data())
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen_matrix_with_outliers};
+    use crate::util::rng::Rng;
+
+    fn cfg() -> QuantConfig {
+        QuantConfig::default()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(71);
+        let mut w = Matrix::zeros(40, 60);
+        rng.fill_normal(w.data_mut(), 0.05);
+        let p = quant_params(&w, &cfg());
+        let wq = fake_quant(&w, &cfg());
+        let half = p.scales[0] * 0.5 + 1e-7;
+        for (a, b) in w.data().iter().zip(wq.data()) {
+            // inside the clip range, error ≤ scale/2
+            if a.abs() <= p.clip {
+                assert!((a - b).abs() <= half, "{a} -> {b} (scale {})", p.scales[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn codes_within_bits() {
+        let mut rng = Rng::new(72);
+        let mut w = Matrix::zeros(10, 10);
+        rng.fill_normal(w.data_mut(), 1.0);
+        for bits in [3u32, 4, 8] {
+            let c = QuantConfig { bits, ..Default::default() };
+            let p = quant_params(&w, &c);
+            let codes = quantize_codes(&w, &p);
+            let qmax = c.qmax() as i8;
+            assert!(codes.iter().all(|&q| -qmax <= q && q <= qmax));
+        }
+    }
+
+    #[test]
+    fn outliers_clipped() {
+        // one huge outlier must not blow up the scale when clipping is on
+        let mut w = Matrix::zeros(8, 8);
+        let mut rng = Rng::new(73);
+        rng.fill_normal(w.data_mut(), 0.05);
+        w[(0, 0)] = 100.0;
+        let with_clip = quant_params(&w, &cfg());
+        let without = quant_params(&w, &QuantConfig { clip_sigma: None, ..cfg() });
+        // clip = 2.5·std; the 100.0 outlier dominates std (≈12.5 over 64
+        // entries), so the clipped scale is ~31/7 vs the unclipped 100/7
+        assert!(with_clip.scales[0] < without.scales[0] / 2.0);
+        assert!(with_clip.clip < 100.0);
+    }
+
+    #[test]
+    fn zero_matrix_roundtrips() {
+        let w = Matrix::zeros(4, 4);
+        let wq = fake_quant(&w, &cfg());
+        assert!(wq.approx_eq(&w, 0.0));
+        assert_eq!(quant_params(&w, &cfg()).scales[0], 1.0);
+    }
+
+    #[test]
+    fn per_row_beats_per_tensor_on_heteroscedastic_rows() {
+        let mut rng = Rng::new(74);
+        let mut w = Matrix::zeros(16, 64);
+        for i in 0..16 {
+            let std = if i % 2 == 0 { 0.01 } else { 0.5 };
+            for j in 0..64 {
+                w[(i, j)] = rng.normal_f32(0.0, std);
+            }
+        }
+        let pt = fake_quant(&w, &QuantConfig { clip_sigma: None, ..cfg() });
+        let pr = fake_quant(&w, &QuantConfig { clip_sigma: None, per_row: true, ..cfg() });
+        assert!(mse(&w, &pr) < mse(&w, &pt));
+    }
+
+    #[test]
+    fn prop_dequant_is_on_code_grid() {
+        check(
+            "dequantized values lie on the scale grid",
+            |rng| gen_matrix_with_outliers(rng, 24),
+            |w| {
+                let p = quant_params(w, &QuantConfig::default());
+                let codes = quantize_codes(w, &p);
+                let wq = dequantize(&codes, &p, w.rows(), w.cols());
+                for (q, v) in codes.iter().zip(wq.data()) {
+                    let expect = *q as f32 * p.scales[0];
+                    if (expect - v).abs() > 1e-9 {
+                        return Err(format!("code {q} -> {v}, want {expect}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_fake_quant_idempotent() {
+        check(
+            "fake_quant(fake_quant(w)) ≈ fake_quant(w) under same params",
+            |rng| gen_matrix_with_outliers(rng, 16),
+            |w| {
+                let p = quant_params(w, &QuantConfig::default());
+                let codes = quantize_codes(w, &p);
+                let w1 = dequantize(&codes, &p, w.rows(), w.cols());
+                // re-encode the dequantized values with the SAME params
+                let codes2 = quantize_codes(&w1, &p);
+                if codes == codes2 {
+                    Ok(())
+                } else {
+                    Err("re-encoding moved codes".into())
+                }
+            },
+        );
+    }
+}

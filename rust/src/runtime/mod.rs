@@ -1,0 +1,149 @@
+//! PJRT runtime — loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via the
+//! `xla` crate. This is the only bridge between L3 and the L2/L1 compute;
+//! python never runs here.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects
+//! (`proto.id() <= INT_MAX`); `HloModuleProto::from_text_file` re-parses
+//! and reassigns ids (see /opt/xla-example/README.md and DESIGN.md §7).
+//!
+//! The model executable's argument order is
+//! `(input_ids i32[B,S], attention_mask i32[B,S], <params in
+//! manifest.param_names order>)`, returning a 1-tuple of logits
+//! `f32[B, n_classes]` — weights are arguments so any quantized variant
+//! runs through the same compiled module.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::linalg::Matrix;
+use crate::model::{ModelConfig, Params};
+use crate::util::timer;
+
+/// A compiled HLO module bound to the CPU PJRT client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: String,
+}
+
+/// The PJRT client (one per process; cheap to share by reference).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = timer::scope("runtime.client_init", xla::PjRtClient::cpu)
+            .context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = timer::scope("runtime.compile", || self.client.compile(&comp))
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, path: path.display().to_string() })
+    }
+}
+
+impl Executable {
+    /// Execute with raw literals (borrowed or owned); returns the
+    /// decomposed output tuple.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = timer::scope("runtime.execute", || self.exe.execute::<L>(args))
+            .with_context(|| format!("executing {}", self.path))?;
+        let first = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .context("no output buffer")?;
+        let lit = first.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build the `i32[b, s]` literal for ids/masks.
+pub fn literal_i32(data: &[i32], b: usize, s: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == b * s, "literal_i32: {} != {b}*{s}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(&[b as i64, s as i64])?)
+}
+
+/// Build an `f32[...]` literal from a Matrix. Vectors (1×n) become rank-1
+/// to match the JAX parameter shapes.
+pub fn literal_matrix(m: &Matrix, rank1: bool) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(m.data());
+    let shaped = if rank1 {
+        lit.reshape(&[m.len() as i64])?
+    } else {
+        lit.reshape(&[m.rows() as i64, m.cols() as i64])?
+    };
+    Ok(shaped)
+}
+
+/// Literal list for a full parameter set, in canonical order.
+///
+/// Matrix-shaped params stay rank-2; bias/LN vectors (1×n) flatten to
+/// rank-1, mirroring the python-side ShapeDtypeStructs.
+pub fn param_literals(cfg: &ModelConfig, params: &Params) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::new();
+    for name in cfg.param_names() {
+        let m = params.get(&name)?;
+        let rank1 = m.rows() == 1 && !is_rank2_param(&name);
+        out.push(literal_matrix(m, rank1)?);
+    }
+    Ok(out)
+}
+
+fn is_rank2_param(name: &str) -> bool {
+    // true rank-2 params that could legitimately have 1 row
+    name == "classifier.w" || name == "tok_emb" || name == "pos_emb"
+}
+
+/// Decode a logits literal `f32[b, c]` into a Matrix.
+pub fn logits_to_matrix(lit: &xla::Literal, b: usize, c: usize) -> Result<Matrix> {
+    let v: Vec<f32> = lit.to_vec()?;
+    anyhow::ensure!(v.len() == b * c, "logits size {} != {b}x{c}", v.len());
+    Ok(Matrix::from_vec(b, c, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full PJRT round-trips live in rust/tests/ (they need artifacts/);
+    // here we cover the pure literal helpers.
+
+    #[test]
+    fn literal_helpers_shapes() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let lit = literal_matrix(&m, false).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        let flat = literal_matrix(&m, true).unwrap();
+        assert_eq!(flat.element_count(), 6);
+        let ids = literal_i32(&[1, 2, 3, 4], 2, 2).unwrap();
+        assert_eq!(ids.element_count(), 4);
+        assert!(literal_i32(&[1, 2, 3], 2, 2).is_err());
+    }
+
+    #[test]
+    fn logits_decode_checks_size() {
+        let m = Matrix::from_vec(2, 2, vec![0.1, 0.9, 0.8, 0.2]);
+        let lit = literal_matrix(&m, false).unwrap();
+        let back = logits_to_matrix(&lit, 2, 2).unwrap();
+        assert!(back.approx_eq(&m, 0.0));
+        assert!(logits_to_matrix(&lit, 3, 2).is_err());
+    }
+}

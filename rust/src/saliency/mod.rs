@@ -1,0 +1,98 @@
+//! Saliency scoring + selection (paper §III-A) — the core contribution.
+//!
+//! Four heuristics decide which k entries of each weight matrix survive in
+//! FP32:
+//!
+//! | method   | score                                | needs data? |
+//! |----------|--------------------------------------|-------------|
+//! | Random   | uniform                              | no          |
+//! | Magnitude| `\|w_ij\|` (sanity baseline)         | no          |
+//! | AWQ      | `\|w_ij\|·‖X_j‖₂`            (eq. 3) | yes (calib) |
+//! | SpQR     | `w_ij²/[H⁻¹]_jj`             (eq. 4) | yes (calib) |
+//! | **SVD**  | `\|(U_r Σ_r V_rᵀ)_ij\|`    (eq. 5–7) | **no**      |
+//!
+//! [`topk`] turns a score map into a [`SalientSet`]; [`overlap`] computes
+//! the Fig. 2 IoU between index sets.
+
+pub mod overlap;
+pub mod score;
+pub mod topk;
+
+pub use overlap::{iou, OverlapReport};
+pub use score::{awq_score, magnitude_score, random_score, spqr_score, svd_score, SvdScoreMode};
+pub use topk::{select_topk, SalientSet};
+
+use anyhow::{bail, Result};
+
+/// Selection heuristic identifier (CLI / results keys).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Method {
+    Random,
+    Magnitude,
+    Awq,
+    Spqr,
+    Svd,
+}
+
+impl Method {
+    pub const ALL: [Method; 5] =
+        [Method::Random, Method::Magnitude, Method::Awq, Method::Spqr, Method::Svd];
+
+    /// The trio the paper's tables compare.
+    pub const PAPER: [Method; 3] = [Method::Awq, Method::Spqr, Method::Svd];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Random => "random",
+            Method::Magnitude => "magnitude",
+            Method::Awq => "awq",
+            Method::Spqr => "spqr",
+            Method::Svd => "svd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "random" | "rand" => Method::Random,
+            "magnitude" | "mag" => Method::Magnitude,
+            "awq" => Method::Awq,
+            "spqr" | "hessian" => Method::Spqr,
+            "svd" | "ours" => Method::Svd,
+            other => bail!("unknown method {other:?} (random|magnitude|awq|spqr|svd)"),
+        })
+    }
+
+    /// Does this heuristic require calibration activations?
+    pub fn needs_calibration(&self) -> bool {
+        matches!(self, Method::Awq | Method::Spqr)
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(Method::parse("OURS").unwrap(), Method::Svd);
+        assert!(Method::parse("gptq").is_err());
+    }
+
+    #[test]
+    fn calibration_requirements() {
+        assert!(!Method::Svd.needs_calibration());
+        assert!(!Method::Random.needs_calibration());
+        assert!(!Method::Magnitude.needs_calibration());
+        assert!(Method::Awq.needs_calibration());
+        assert!(Method::Spqr.needs_calibration());
+    }
+}

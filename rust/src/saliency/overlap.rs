@@ -1,0 +1,121 @@
+//! Index-set overlap analysis — Fig. 2 of the paper: "is SVD finding the
+//! same weights as the Hessian-based methods?"
+//!
+//! IoU(A, B) = |A ∩ B| / |A ∪ B| over the flat salient indices of one
+//! layer; the figure aggregates over layers at each budget k. The paper
+//! reports ≈60–70% overlap with SpQR at low k and ≈30% with AWQ.
+
+use std::collections::BTreeMap;
+
+use super::topk::SalientSet;
+
+/// IoU of two selections over the same matrix shape.
+pub fn iou(a: &SalientSet, b: &SalientSet) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "shape mismatch");
+    if a.indices.is_empty() && b.indices.is_empty() {
+        return 1.0;
+    }
+    // both index lists are sorted — merge count
+    let (mut i, mut j, mut inter) = (0usize, 0usize, 0usize);
+    while i < a.indices.len() && j < b.indices.len() {
+        match a.indices[i].cmp(&b.indices[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let union = a.indices.len() + b.indices.len() - inter;
+    inter as f64 / union as f64
+}
+
+/// Aggregated overlap across layers: mean IoU per (baseline, budget).
+#[derive(Debug, Default)]
+pub struct OverlapReport {
+    /// (baseline name, k) → (sum IoU, layer count)
+    acc: BTreeMap<(String, usize), (f64, usize)>,
+}
+
+impl OverlapReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, baseline: &str, k: usize, layer_iou: f64) {
+        let e = self.acc.entry((baseline.to_string(), k)).or_insert((0.0, 0));
+        e.0 += layer_iou;
+        e.1 += 1;
+    }
+
+    /// Mean IoU for one (baseline, k).
+    pub fn mean(&self, baseline: &str, k: usize) -> Option<f64> {
+        self.acc
+            .get(&(baseline.to_string(), k))
+            .map(|(s, n)| s / *n as f64)
+    }
+
+    /// All budgets present (ascending).
+    pub fn budgets(&self) -> Vec<usize> {
+        let mut ks: Vec<usize> = self.acc.keys().map(|(_, k)| *k).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+
+    pub fn baselines(&self) -> Vec<String> {
+        let mut bs: Vec<String> = self.acc.keys().map(|(b, _)| b.clone()).collect();
+        bs.sort();
+        bs.dedup();
+        bs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(indices: Vec<u32>) -> SalientSet {
+        SalientSet { rows: 10, cols: 10, indices }
+    }
+
+    #[test]
+    fn identical_sets_iou_1() {
+        let a = set(vec![1, 5, 9]);
+        assert_eq!(iou(&a, &a.clone()), 1.0);
+    }
+
+    #[test]
+    fn disjoint_sets_iou_0() {
+        assert_eq!(iou(&set(vec![1, 2]), &set(vec![3, 4])), 0.0);
+    }
+
+    #[test]
+    fn half_overlap() {
+        // |A∩B|=1, |A∪B|=3 → 1/3
+        let v = iou(&set(vec![1, 2]), &set(vec![2, 3]));
+        assert!((v - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_sets_convention() {
+        assert_eq!(iou(&set(vec![]), &set(vec![])), 1.0);
+        assert_eq!(iou(&set(vec![1]), &set(vec![])), 0.0);
+    }
+
+    #[test]
+    fn report_aggregates_means() {
+        let mut r = OverlapReport::new();
+        r.record("spqr", 16, 0.6);
+        r.record("spqr", 16, 0.8);
+        r.record("awq", 16, 0.3);
+        r.record("spqr", 64, 0.5);
+        assert!((r.mean("spqr", 16).unwrap() - 0.7).abs() < 1e-12);
+        assert_eq!(r.mean("awq", 16), Some(0.3));
+        assert_eq!(r.mean("awq", 999), None);
+        assert_eq!(r.budgets(), vec![16, 64]);
+        assert_eq!(r.baselines(), vec!["awq".to_string(), "spqr".to_string()]);
+    }
+}

@@ -1,0 +1,202 @@
+//! The five score maps (paper §III-A). Every function returns a dense
+//! `[dout, din]` matrix of non-negative scores; higher = more salient.
+//! Numerics are pinned against the python oracles via
+//! `artifacts/parity/vectors.qtz` (rust/tests/parity.rs).
+
+use crate::linalg::{cholesky, inverse_diagonal, rsvd, svd_jacobi, Matrix};
+use crate::util::rng::Rng;
+
+/// Paper default rank for the principal reconstruction (§III-A4, PiSSA).
+pub const DEFAULT_RANK: usize = 8;
+/// Paper default damping for the SpQR Hessian (§III-A3).
+pub const DEFAULT_DAMP: f32 = 0.01;
+
+/// How the SVD factors are computed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SvdScoreMode {
+    /// one-sided Jacobi, O(d³) — the reference
+    Exact,
+    /// randomized range-finder, O(r·d²) — the paper's §VI-A fast path
+    Randomized { oversample: usize, power_iters: usize, seed: u64 },
+}
+
+impl Default for SvdScoreMode {
+    fn default() -> Self {
+        SvdScoreMode::Randomized { oversample: 8, power_iters: 2, seed: 0x51D5 }
+    }
+}
+
+/// §III-A1 baseline: i.i.d. uniform scores (selection = uniform top-k).
+pub fn random_score(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::zeros(rows, cols);
+    for v in m.data_mut() {
+        *v = rng.f32();
+    }
+    m
+}
+
+/// Sanity baseline (not in the paper's tables): |w|.
+pub fn magnitude_score(w: &Matrix) -> Matrix {
+    let mut m = w.clone();
+    for v in m.data_mut() {
+        *v = v.abs();
+    }
+    m
+}
+
+/// §III-A2 AWQ: `score_ij = |w_ij| · ‖X_j‖₂` where `x_colnorm[j] = ‖X_j‖₂`
+/// over the calibration activations feeding input channel j.
+pub fn awq_score(w: &Matrix, x_colnorm: &[f32]) -> Matrix {
+    assert_eq!(x_colnorm.len(), w.cols(), "colnorm length != din");
+    let mut m = w.clone();
+    let cols = w.cols();
+    for (idx, v) in m.data_mut().iter_mut().enumerate() {
+        *v = v.abs() * x_colnorm[idx % cols];
+    }
+    m
+}
+
+/// §III-A3 SpQR/OBS: `score_ij = w_ij² / [H⁻¹]_jj` with the damped
+/// empirical Hessian `H = (2/N)·XᵀX + damp·mean(diag(H))·I`.
+///
+/// `xtx` is the raw `XᵀX` accumulator from calibration (n rows observed).
+/// Cost: one Cholesky + n column solves = O(d³) — the expensive row of the
+/// saliency_cost bench.
+pub fn spqr_score(w: &Matrix, xtx: &Matrix, n_samples: usize, damp: f32) -> Matrix {
+    let d = w.cols();
+    assert_eq!(xtx.shape(), (d, d), "XᵀX must be din×din");
+    assert!(n_samples > 0);
+    // H = (2/N) XᵀX, damped by damp·mean(diag)·I (standard OBS practice;
+    // keeps H SPD when calibration undersamples the space)
+    let mut h = xtx.scale(2.0 / n_samples as f32);
+    let mean_diag = (0..d).map(|i| h[(i, i)] as f64).sum::<f64>() / d as f64;
+    let lambda = (damp as f64 * mean_diag).max(1e-12) as f32;
+    for i in 0..d {
+        h[(i, i)] += lambda;
+    }
+    let l = cholesky(&h).expect("damped Hessian must be SPD");
+    let hinv_diag = inverse_diagonal(&l);
+    let mut m = w.clone();
+    let cols = w.cols();
+    for (idx, v) in m.data_mut().iter_mut().enumerate() {
+        let j = idx % cols;
+        *v = (*v * *v) / hinv_diag[j].max(1e-30);
+    }
+    m
+}
+
+/// §III-A4 (ours): `score = |U_r Σ_r V_rᵀ|` — magnitude of the rank-r
+/// principal reconstruction. Data-free: touches only `w`.
+pub fn svd_score(w: &Matrix, rank: usize, mode: SvdScoreMode) -> Matrix {
+    let svd = match mode {
+        SvdScoreMode::Exact => svd_jacobi(w),
+        SvdScoreMode::Randomized { oversample, power_iters, seed } => {
+            rsvd(w, rank, oversample, power_iters, seed)
+        }
+    };
+    let mut rec = svd.reconstruct(rank);
+    for v in rec.data_mut() {
+        *v = v.abs();
+    }
+    rec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul_at_b;
+
+    fn rand_m(seed: u64, r: usize, c: usize, std: f32) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(m.data_mut(), std);
+        m
+    }
+
+    #[test]
+    fn random_score_deterministic_and_uniform() {
+        let a = random_score(10, 10, 5);
+        let b = random_score(10, 10, 5);
+        assert!(a.approx_eq(&b, 0.0));
+        assert!(a.data().iter().all(|&v| (0.0..1.0).contains(&v)));
+        assert!(!a.approx_eq(&random_score(10, 10, 6), 1e-9));
+    }
+
+    #[test]
+    fn awq_scales_by_activation_norm() {
+        let w = rand_m(1, 4, 3, 1.0);
+        let norms = vec![0.0, 1.0, 10.0];
+        let s = awq_score(&w, &norms);
+        for i in 0..4 {
+            assert_eq!(s[(i, 0)], 0.0);
+            assert!((s[(i, 1)] - w[(i, 1)].abs()).abs() < 1e-6);
+            assert!((s[(i, 2)] - 10.0 * w[(i, 2)].abs()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn spqr_prefers_high_curvature_channels() {
+        // activations with one dominant channel → that channel's H diag is
+        // large → [H⁻¹]_jj small → scores boosted
+        let n = 64;
+        let d = 6;
+        let mut x = rand_m(2, n, d, 1.0);
+        for i in 0..n {
+            x[(i, 3)] *= 20.0;
+        }
+        let xtx = matmul_at_b(&x, &x);
+        let w = Matrix::from_vec(1, d, vec![0.1; d]);
+        let s = spqr_score(&w, &xtx, n, DEFAULT_DAMP);
+        for j in 0..d {
+            if j != 3 {
+                assert!(
+                    s[(0, 3)] > s[(0, j)] * 10.0,
+                    "channel 3 should dominate: {:?}",
+                    s.data()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn svd_exact_vs_randomized_agree() {
+        // transformer-ish spectrum: low-rank structure + noise
+        let core = matmul_at_b(&rand_m(3, 4, 40, 1.0), &rand_m(4, 4, 60, 1.0));
+        let noise = rand_m(5, 40, 60, 0.01);
+        let w = core.add(&noise);
+        let exact = svd_score(&w, 4, SvdScoreMode::Exact);
+        let approx = svd_score(&w, 4, SvdScoreMode::default());
+        let rel = exact.sub(&approx).frobenius() / exact.frobenius();
+        assert!(rel < 1e-2, "rel diff {rel}");
+    }
+
+    #[test]
+    fn svd_score_of_rank1_matrix_is_exact_abs() {
+        // rank-1 w: principal reconstruction at rank>=1 is w itself
+        let u = rand_m(6, 12, 1, 1.0);
+        let v = rand_m(7, 1, 9, 1.0);
+        let w = u.dot(&v);
+        let s = svd_score(&w, 1, SvdScoreMode::Exact);
+        let abs = magnitude_score(&w);
+        assert!(s.approx_eq(&abs, 1e-4));
+    }
+
+    #[test]
+    fn scores_are_nonnegative() {
+        let w = rand_m(8, 10, 12, 0.5);
+        let x = rand_m(9, 32, 12, 1.0);
+        let xtx = matmul_at_b(&x, &x);
+        let colnorm: Vec<f32> = (0..12)
+            .map(|j| x.col(j).iter().map(|v| v * v).sum::<f32>().sqrt())
+            .collect();
+        for s in [
+            magnitude_score(&w),
+            awq_score(&w, &colnorm),
+            spqr_score(&w, &xtx, 32, DEFAULT_DAMP),
+            svd_score(&w, 8, SvdScoreMode::Exact),
+        ] {
+            assert!(s.data().iter().all(|&v| v >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Top-k selection: score map → [`SalientSet`] (the indices protected in
+//! FP32, paper §III "protection budget k per linear layer").
+//!
+//! Selection must be *deterministic under ties* (the parity test replays
+//! python's stable argsort): ties are broken by ascending flat index, which
+//! matches `jnp.argsort(-flat, stable=True)`.
+//!
+//! Complexity: quickselect on a (score, index) buffer — O(n) expected, not
+//! O(n log n); k ≤ 4096 ≪ n ≈ 262k for the paper grid, and this runs once
+//! per (layer, method, k), so it shows up in the saliency_cost bench.
+
+use crate::linalg::Matrix;
+use crate::sparse::Coo;
+
+/// The selected salient coordinates of one weight matrix.
+#[derive(Debug, Clone)]
+pub struct SalientSet {
+    pub rows: usize,
+    pub cols: usize,
+    /// flat indices (row-major), sorted ascending
+    pub indices: Vec<u32>,
+}
+
+impl SalientSet {
+    pub fn k(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Materialize as a COO carrying the exact FP32 values from `w`.
+    pub fn to_coo(&self, w: &Matrix) -> Coo {
+        assert_eq!((self.rows, self.cols), w.shape());
+        let mut coo = Coo::new(self.rows, self.cols);
+        for &flat in &self.indices {
+            let (r, c) = (flat as usize / self.cols, flat as usize % self.cols);
+            coo.push(r, c, w[(r, c)]);
+        }
+        coo
+    }
+
+    /// Dense {0,1} mask (diagnostics, parity tests).
+    pub fn to_mask(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for &flat in &self.indices {
+            m.data_mut()[flat as usize] = 1.0;
+        }
+        m
+    }
+}
+
+/// Select the k highest-scoring entries (ties → lower flat index wins).
+pub fn select_topk(score: &Matrix, k: usize) -> SalientSet {
+    let (rows, cols) = score.shape();
+    let n = rows * cols;
+    let k = k.min(n);
+    if k == 0 {
+        return SalientSet { rows, cols, indices: Vec::new() };
+    }
+    if k == n {
+        return SalientSet { rows, cols, indices: (0..n as u32).collect() };
+    }
+    // (score, index) ordering: higher score first; ties → smaller index first
+    let better = |a: &(f32, u32), b: &(f32, u32)| -> std::cmp::Ordering {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+    };
+    let mut buf: Vec<(f32, u32)> = score
+        .data()
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| (s, i as u32))
+        .collect();
+    buf.select_nth_unstable_by(k - 1, better);
+    buf.truncate(k);
+    let mut indices: Vec<u32> = buf.into_iter().map(|(_, i)| i).collect();
+    indices.sort_unstable();
+    SalientSet { rows, cols, indices }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen_matrix};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn picks_the_largest() {
+        let score = Matrix::from_vec(2, 3, vec![0.1, 5.0, 0.2, 9.0, 0.0, 3.0]);
+        let sel = select_topk(&score, 2);
+        assert_eq!(sel.indices, vec![1, 3]); // 9.0 at flat 3, 5.0 at flat 1
+    }
+
+    #[test]
+    fn tie_break_by_index() {
+        let score = Matrix::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        let sel = select_topk(&score, 2);
+        assert_eq!(sel.indices, vec![0, 1]);
+    }
+
+    #[test]
+    fn k_edge_cases() {
+        let score = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(select_topk(&score, 0).k(), 0);
+        assert_eq!(select_topk(&score, 4).indices, vec![0, 1, 2, 3]);
+        assert_eq!(select_topk(&score, 99).k(), 4);
+    }
+
+    #[test]
+    fn coo_carries_original_values() {
+        let w = Matrix::from_vec(2, 2, vec![10.0, -20.0, 30.0, -40.0]);
+        let score = Matrix::from_vec(2, 2, vec![0.0, 1.0, 2.0, 0.0]);
+        let coo = select_topk(&score, 2).to_coo(&w);
+        let d = coo.to_dense();
+        assert_eq!(d[(0, 1)], -20.0);
+        assert_eq!(d[(1, 0)], 30.0);
+        assert_eq!(d[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn prop_selected_scores_dominate_unselected() {
+        check(
+            "every selected score >= every unselected score",
+            |rng| {
+                let m = gen_matrix(rng, 16, 1.0);
+                let k = rng.range(0, m.len() + 1);
+                (m, k)
+            },
+            |(score, k)| {
+                let sel = select_topk(score, *k);
+                if sel.k() != (*k).min(score.len()) {
+                    return Err(format!("k mismatch: {} vs {}", sel.k(), k));
+                }
+                let mask = sel.to_mask();
+                let min_sel = sel
+                    .indices
+                    .iter()
+                    .map(|&i| score.data()[i as usize])
+                    .fold(f32::INFINITY, f32::min);
+                for (i, &s) in score.data().iter().enumerate() {
+                    if mask.data()[i] == 0.0 && s > min_sel {
+                        return Err(format!("unselected {s} > min selected {min_sel}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matches_full_sort_reference() {
+        let mut rng = Rng::new(77);
+        for _ in 0..20 {
+            let r = rng.range(1, 20);
+            let c = rng.range(1, 20);
+            let mut m = Matrix::zeros(r, c);
+            rng.fill_normal(m.data_mut(), 1.0);
+            let k = rng.range(0, r * c + 1);
+            let sel = select_topk(&m, k);
+            // reference: stable sort desc, take k, sort indices
+            let mut pairs: Vec<(f32, u32)> = m
+                .data()
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| (s, i as u32))
+                .collect();
+            pairs.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+            });
+            let mut want: Vec<u32> = pairs[..k.min(r * c)].iter().map(|p| p.1).collect();
+            want.sort_unstable();
+            assert_eq!(sel.indices, want);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Sparse formats for the salient component `S` (paper eq. 1: "S retains
+//! FP32 precision but has high sparsity — only k non-zero elements").
+//!
+//! * [`Coo`] — construction-friendly triplet list (what top-k selection
+//!   emits),
+//! * [`Csr`] — compressed row storage used on the inference hot path
+//!   (row-major matvec fused with the dequantized residual in
+//!   quant::qmatrix).
+
+use crate::linalg::Matrix;
+
+/// Coordinate-format sparse matrix (row, col, value).
+#[derive(Debug, Clone, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(u32, u32, f32)>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.entries.push((r as u32, c as u32, v));
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Dense materialization (tests/diagnostics).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for &(r, c, v) in &self.entries {
+            m[(r as usize, c as usize)] = v;
+        }
+        m
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        let mut sorted = self.entries.clone();
+        sorted.sort_by_key(|&(r, c, _)| (r, c));
+        sorted.dedup_by_key(|&mut (r, c, _)| (r, c)); // keep first per coord
+        let mut row_ptr = vec![0u32; self.rows + 1];
+        for &(r, _, _) in &sorted {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr,
+            col_idx: sorted.iter().map(|&(_, c, _)| c).collect(),
+            values: sorted.iter().map(|&(_, _, v)| v).collect(),
+        }
+    }
+}
+
+/// Compressed sparse row matrix.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Entries of row `i` as (col, value) pairs.
+    #[inline]
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.row_ptr[i] as usize;
+        let hi = self.row_ptr[i + 1] as usize;
+        self.col_idx[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&c, &v)| (c as usize, v))
+    }
+
+    /// y += S x for one dense vector x (len = cols), y len = rows.
+    pub fn matvec_accumulate(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let mut acc = 0.0f32;
+            for (c, v) in self.row(i) {
+                acc += v * x[c];
+            }
+            y[i] += acc;
+        }
+    }
+
+    /// Dense materialization.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (c, v) in self.row(i) {
+                m[(i, c)] = v;
+            }
+        }
+        m
+    }
+
+    /// Memory footprint in bytes (row_ptr + col_idx + values).
+    pub fn nbytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.values.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> Coo {
+        let mut coo = Coo::new(rows, cols);
+        for _ in 0..nnz {
+            coo.push(rng.range(0, rows), rng.range(0, cols), rng.normal_f32(0.0, 1.0));
+        }
+        coo
+    }
+
+    #[test]
+    fn coo_to_csr_to_dense_consistent() {
+        let mut rng = Rng::new(101);
+        for _ in 0..10 {
+            let rows = rng.range(1, 30);
+            let cols = rng.range(1, 30);
+            let mut coo = Coo::new(rows, cols);
+            // distinct coordinates so COO and CSR dense agree exactly
+            let n = rng.range(0, rows * cols / 2 + 1);
+            for idx in rng.sample_distinct(rows * cols, n) {
+                coo.push(idx / cols, idx % cols, rng.normal_f32(0.0, 1.0));
+            }
+            let d1 = coo.to_dense();
+            let d2 = coo.to_csr().to_dense();
+            assert!(d1.approx_eq(&d2, 0.0));
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Rng::new(102);
+        let coo = random_coo(&mut rng, 20, 15, 40);
+        let csr = coo.to_csr();
+        let x: Vec<f32> = (0..15).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y = vec![0.5f32; 20];
+        let mut y_ref = y.clone();
+        csr.matvec_accumulate(&x, &mut y);
+        let dense = csr.to_dense();
+        for i in 0..20 {
+            let mut acc = y_ref[i];
+            for j in 0..15 {
+                acc += dense[(i, j)] * x[j];
+            }
+            y_ref[i] = acc;
+        }
+        for i in 0..20 {
+            assert!((y[i] - y_ref[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_and_full_rows() {
+        let mut coo = Coo::new(3, 4);
+        coo.push(1, 0, 1.0);
+        coo.push(1, 3, 2.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.row(0).count(), 0);
+        assert_eq!(csr.row(1).count(), 2);
+        assert_eq!(csr.row(2).count(), 0);
+        assert_eq!(csr.nnz(), 2);
+    }
+
+    #[test]
+    fn duplicate_coords_deduped() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 99.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 1);
+        assert_eq!(csr.to_dense()[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn nbytes_accounting() {
+        let mut coo = Coo::new(4, 4);
+        coo.push(0, 0, 1.0);
+        coo.push(3, 3, 1.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nbytes(), 5 * 4 + 2 * 4 + 2 * 4);
+    }
+}

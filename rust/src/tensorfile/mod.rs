@@ -1,0 +1,329 @@
+//! Reader/writer for the `.qtz` tensor container (rust half of
+//! `python/compile/tensorfile.py` — keep the two in lock-step).
+//!
+//! Layout (little-endian):
+//! ```text
+//! bytes 0..4    magic  "QTZ1"
+//! bytes 4..8    u32    header_len
+//! bytes 8..8+h  JSON   {"tensors": {name: {dtype, shape, offset, nbytes}},
+//!                       "meta": {...}}
+//! then          data section; offsets are relative to it, 64-byte aligned
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::util::align_up;
+
+const MAGIC: &[u8; 4] = b"QTZ1";
+const ALIGN: usize = 64;
+
+/// Supported element types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I64,
+    U8,
+    I8,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I64 => 8,
+            DType::U8 | DType::I8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::U8 => "u8",
+            DType::I8 => "i8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "i64" => DType::I64,
+            "u8" => DType::U8,
+            "i8" => DType::I8,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+}
+
+/// One tensor: raw bytes + shape + dtype.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, data: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::F32, shape, bytes }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::I32, shape, bytes }
+    }
+
+    pub fn from_u8(shape: Vec<usize>, data: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { dtype: DType::U8, shape, bytes: data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, wanted F32", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, wanted I32", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        if self.dtype != DType::U8 {
+            bail!("tensor is {:?}, wanted U8", self.dtype);
+        }
+        Ok(&self.bytes)
+    }
+}
+
+/// An open (fully loaded) tensor file.
+#[derive(Debug)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: Json,
+}
+
+impl Default for TensorFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self { tensors: BTreeMap::new(), meta: Json::Object(Default::default()) }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor {name:?} not in file"))
+    }
+
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let blob = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&blob).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(blob: &[u8]) -> Result<Self> {
+        if blob.len() < 8 || &blob[..4] != MAGIC {
+            bail!("bad magic (not a qtz file)");
+        }
+        let hlen = u32::from_le_bytes([blob[4], blob[5], blob[6], blob[7]]) as usize;
+        if blob.len() < 8 + hlen {
+            bail!("truncated header");
+        }
+        let header = Json::parse(std::str::from_utf8(&blob[8..8 + hlen])?)?;
+        let data = &blob[8 + hlen..];
+        let mut tensors = BTreeMap::new();
+        let entries = header
+            .get("tensors")
+            .and_then(|t| t.as_object())
+            .context("header missing tensors")?;
+        for (name, ent) in entries {
+            let dtype = DType::parse(
+                ent.get("dtype").and_then(|d| d.as_str()).context("dtype")?,
+            )?;
+            let shape: Vec<usize> = ent
+                .get("shape")
+                .and_then(|s| s.as_array())
+                .context("shape")?
+                .iter()
+                .map(|v| v.as_usize().context("shape item"))
+                .collect::<Result<_>>()?;
+            let offset = ent.get("offset").and_then(|v| v.as_usize()).context("offset")?;
+            let nbytes = ent.get("nbytes").and_then(|v| v.as_usize()).context("nbytes")?;
+            if offset + nbytes > data.len() {
+                bail!("tensor {name} extends past end of file");
+            }
+            let expected = shape.iter().product::<usize>() * dtype.size();
+            if expected != nbytes {
+                bail!("tensor {name}: shape/nbytes mismatch ({expected} vs {nbytes})");
+            }
+            tensors.insert(
+                name.clone(),
+                Tensor { dtype, shape, bytes: data[offset..offset + nbytes].to_vec() },
+            );
+        }
+        let meta = header.get("meta").cloned().unwrap_or(Json::Null);
+        Ok(Self { tensors, meta })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut entries = BTreeMap::new();
+        let mut offset = 0usize;
+        let mut order = Vec::new();
+        for (name, t) in &self.tensors {
+            entries.insert(
+                name.clone(),
+                Json::object(vec![
+                    ("dtype".into(), Json::from(t.dtype.name())),
+                    (
+                        "shape".into(),
+                        Json::Array(t.shape.iter().map(|&s| Json::from(s)).collect()),
+                    ),
+                    ("offset".into(), Json::from(offset)),
+                    ("nbytes".into(), Json::from(t.bytes.len())),
+                ]),
+            );
+            order.push((offset, name.clone()));
+            offset = align_up(offset + t.bytes.len(), ALIGN);
+        }
+        let header = Json::object(vec![
+            ("tensors".into(), Json::Object(entries)),
+            ("meta".into(), self.meta.clone()),
+        ])
+        .compact();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        let mut written = 0usize;
+        for (off, name) in order {
+            if off > written {
+                f.write_all(&vec![0u8; off - written])?;
+                written = off;
+            }
+            let t = &self.tensors[&name];
+            f.write_all(&t.bytes)?;
+            written += t.bytes.len();
+        }
+        f.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut tf = TensorFile::new();
+        tf.insert("w", Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.5]));
+        tf.insert("ids", Tensor::from_i32(vec![4], &[-1, 0, 7, 2048]));
+        tf.insert("mask", Tensor::from_u8(vec![3], vec![0, 1, 1]));
+        tf.meta = Json::object(vec![("task".into(), Json::from("mrpc"))]);
+        let dir = std::env::temp_dir().join("svdquant_test_tf");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("roundtrip.qtz");
+        tf.save(&path).unwrap();
+        let re = TensorFile::open(&path).unwrap();
+        assert_eq!(re.get("w").unwrap().as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.5]);
+        assert_eq!(re.get("ids").unwrap().as_i32().unwrap(), vec![-1, 0, 7, 2048]);
+        assert_eq!(re.get("mask").unwrap().as_u8().unwrap(), &[0, 1, 1]);
+        assert_eq!(re.meta.get("task").unwrap().as_str(), Some("mrpc"));
+        assert_eq!(re.get("w").unwrap().shape, vec![2, 3]);
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let tf = TensorFile::new();
+        assert!(tf.get("nope").is_err());
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        assert!(TensorFile::from_bytes(b"NOPE....").is_err());
+        assert!(TensorFile::from_bytes(b"QZ").is_err());
+    }
+
+    #[test]
+    fn dtype_size_table() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::I64.size(), 8);
+        assert_eq!(DType::U8.size(), 1);
+        assert!(DType::parse("f16").is_err());
+        assert_eq!(DType::parse("i8").unwrap(), DType::I8);
+    }
+
+    #[test]
+    fn wrong_dtype_access_errors() {
+        let t = Tensor::from_f32(vec![1], &[1.0]);
+        assert!(t.as_i32().is_err());
+        assert!(t.as_u8().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+
+    #[test]
+    fn alignment_respected() {
+        // two tensors; second must start at a 64-byte aligned offset
+        let mut tf = TensorFile::new();
+        tf.insert("a", Tensor::from_u8(vec![3], vec![1, 2, 3]));
+        tf.insert("b", Tensor::from_u8(vec![2], vec![9, 9]));
+        let dir = std::env::temp_dir().join("svdquant_test_tf");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("align.qtz");
+        tf.save(&path).unwrap();
+        let blob = std::fs::read(&path).unwrap();
+        let re = TensorFile::from_bytes(&blob).unwrap();
+        assert_eq!(re.get("b").unwrap().as_u8().unwrap(), &[9, 9]);
+    }
+}

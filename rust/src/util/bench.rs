@@ -1,0 +1,248 @@
+//! Benchmark harness (criterion replacement, DESIGN.md §7).
+//!
+//! Every file in `rust/benches/` is a `harness = false` binary that builds a
+//! [`Bench`] and registers measurements. Two kinds:
+//!
+//! * [`Bench::timeit`] — classic micro/macro timing with warmup, adaptive
+//!   iteration count, and mean/p50/p95 over samples;
+//! * [`Bench::table`] — "paper artifact" rows (accuracy numbers etc.) that
+//!   are printed as aligned tables and dumped to `results/bench/<name>.json`
+//!   so EXPERIMENTS.md can cite them.
+
+use std::time::{Duration, Instant};
+
+use crate::json::Json;
+
+/// One timing measurement.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub iters: u64,
+    /// optional work units per iteration (flops, bytes, rows...)
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+/// Bench context for one bench binary.
+pub struct Bench {
+    name: &'static str,
+    samples: Vec<Sample>,
+    tables: Vec<(String, Vec<String>, Vec<Vec<String>>)>,
+    min_time: Duration,
+    max_iters: u64,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Self {
+        println!("== bench: {name} ==");
+        Self {
+            name,
+            samples: Vec::new(),
+            tables: Vec::new(),
+            min_time: Duration::from_millis(300),
+            max_iters: 1_000_000,
+        }
+    }
+
+    /// Lower the measurement budget (end-to-end benches that take seconds).
+    pub fn quick(mut self) -> Self {
+        self.min_time = Duration::from_millis(50);
+        self.max_iters = 16;
+        self
+    }
+
+    /// Time `f`, auto-scaling iterations until `min_time` elapses.
+    pub fn timeit<R>(&mut self, name: &str, mut f: impl FnMut() -> R) {
+        self.timeit_with(name, None, &mut f)
+    }
+
+    /// Time with a throughput annotation: `work` units consumed per call.
+    pub fn timeit_throughput<R>(
+        &mut self,
+        name: &str,
+        work: f64,
+        unit: &'static str,
+        mut f: impl FnMut() -> R,
+    ) {
+        self.timeit_with(name, Some((work, unit)), &mut f)
+    }
+
+    fn timeit_with<R>(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &'static str)>,
+        f: &mut dyn FnMut() -> R,
+    ) {
+        // warmup
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let first = t0.elapsed();
+        // choose a batch size so one sample is ~10ms (or a single call if slower)
+        let batch = if first.as_secs_f64() > 1e-2 {
+            1
+        } else {
+            ((1e-2 / first.as_secs_f64().max(1e-9)) as u64).clamp(1, 10_000)
+        };
+        let mut times = Vec::new();
+        let mut iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.min_time && iters < self.max_iters {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            times.push(t.elapsed().as_secs_f64() / batch as f64);
+            iters += batch;
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let p50 = times[times.len() / 2];
+        let p95 = times[(times.len() * 95 / 100).min(times.len() - 1)];
+        let s = Sample {
+            name: name.to_string(),
+            mean_s: mean,
+            p50_s: p50,
+            p95_s: p95,
+            iters,
+            throughput,
+        };
+        let tp = throughput
+            .map(|(w, u)| format!("  {:>10.3} {u}/s", w / mean))
+            .unwrap_or_default();
+        println!(
+            "  {:<42} mean {:>11} p50 {:>11} p95 {:>11} ({} iters){tp}",
+            s.name,
+            fmt_s(mean),
+            fmt_s(p50),
+            fmt_s(p95),
+            iters
+        );
+        self.samples.push(s);
+    }
+
+    /// Register a paper-artifact table (headers + string rows).
+    pub fn table(&mut self, title: &str, headers: Vec<String>, rows: Vec<Vec<String>>) {
+        println!("\n  -- {title} --");
+        let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+        for row in &rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("  {}", line(&headers));
+        for row in &rows {
+            println!("  {}", line(row));
+        }
+        self.tables.push((title.to_string(), headers, rows));
+    }
+
+    /// Write everything to `results/bench/<name>.json`.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("results/bench");
+        let _ = std::fs::create_dir_all(dir);
+        let samples: Vec<Json> = self
+            .samples
+            .iter()
+            .map(|s| {
+                let mut obj = vec![
+                    ("name".to_string(), Json::from(s.name.as_str())),
+                    ("mean_s".to_string(), Json::from(s.mean_s)),
+                    ("p50_s".to_string(), Json::from(s.p50_s)),
+                    ("p95_s".to_string(), Json::from(s.p95_s)),
+                    ("iters".to_string(), Json::from(s.iters as f64)),
+                ];
+                if let Some((w, u)) = s.throughput {
+                    obj.push(("throughput_per_s".to_string(), Json::from(w / s.mean_s)));
+                    obj.push(("throughput_unit".to_string(), Json::from(u)));
+                }
+                Json::object(obj)
+            })
+            .collect();
+        let tables: Vec<Json> = self
+            .tables
+            .iter()
+            .map(|(t, h, rows)| {
+                Json::object(vec![
+                    ("title".to_string(), Json::from(t.as_str())),
+                    (
+                        "headers".to_string(),
+                        Json::Array(h.iter().map(|x| Json::from(x.as_str())).collect()),
+                    ),
+                    (
+                        "rows".to_string(),
+                        Json::Array(
+                            rows.iter()
+                                .map(|r| {
+                                    Json::Array(
+                                        r.iter().map(|x| Json::from(x.as_str())).collect(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let doc = Json::object(vec![
+            ("bench".to_string(), Json::from(self.name)),
+            ("samples".to_string(), Json::Array(samples)),
+            ("tables".to_string(), Json::Array(tables)),
+        ]);
+        let path = dir.join(format!("{}.json", self.name));
+        if let Err(e) = std::fs::write(&path, doc.pretty()) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        } else {
+            println!("\n  results -> {}", path.display());
+        }
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeit_measures() {
+        let mut b = Bench::new("unit_bench").quick();
+        let mut acc = 0u64;
+        b.timeit("noop-ish", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.samples.len(), 1);
+        assert!(b.samples[0].mean_s > 0.0);
+        assert!(b.samples[0].p95_s >= b.samples[0].p50_s * 0.5);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_s(2.0).ends_with(" s"));
+        assert!(fmt_s(2e-3).ends_with("ms"));
+        assert!(fmt_s(2e-6).ends_with("µs"));
+        assert!(fmt_s(2e-9).ends_with("ns"));
+    }
+}

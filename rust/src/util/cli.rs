@@ -1,0 +1,222 @@
+//! Declarative CLI flag parsing (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
+//! flags, positional args, `-h/--help` synthesis, and typed accessors with
+//! defaults. Subcommand dispatch lives in `main.rs`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// One declared flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub boolean: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    positional: Vec<String>,
+}
+
+/// A declarative command-line parser.
+pub struct Parser {
+    command: &'static str,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Parser {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        Self { command, about, flags: Vec::new() }
+    }
+
+    /// Declare a value flag with an optional default.
+    pub fn flag(
+        mut self,
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.flags.push(FlagSpec { name, help, default, boolean: false });
+        self
+    }
+
+    /// Declare a boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, boolean: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.command, self.about);
+        for f in &self.flags {
+            let d = match (f.boolean, f.default) {
+                (true, _) => " (switch)".to_string(),
+                (_, Some(d)) => format!(" (default: {d})"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse a raw token stream (post-subcommand).
+    pub fn parse(&self, raw: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "-h" || tok == "--help" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .with_context(|| format!("unknown flag --{name}\n{}", self.usage()))?;
+                let value = if spec.boolean {
+                    if inline.is_some() {
+                        bail!("switch --{name} takes no value");
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    it.next()
+                        .with_context(|| format!("--{name} expects a value"))?
+                        .clone()
+                };
+                // explicit values replace defaults; repeats accumulate
+                let entry = args.values.entry(name).or_default();
+                if entry.len() == 1
+                    && spec.default.map(|d| d == entry[0]).unwrap_or(false)
+                {
+                    entry.clear();
+                }
+                entry.push(value);
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<&str> {
+        self.get(name).with_context(|| format!("missing --{name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)?
+            .parse()
+            .with_context(|| format!("--{name} must be an integer"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.str(name)?
+            .parse()
+            .with_context(|| format!("--{name} must be an integer"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)?
+            .parse()
+            .with_context(|| format!("--{name} must be a float"))
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        self.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Comma-separated list accessor (accumulating repeats too).
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.values
+            .get(name)
+            .map(|vs| {
+                vs.iter()
+                    .flat_map(|v| v.split(','))
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.trim().to_string())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    fn parser() -> Parser {
+        Parser::new("test", "test parser")
+            .flag("task", Some("mrpc"), "task name")
+            .flag("k", None, "budget")
+            .switch("verbose", "talk more")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parser().parse(&toks("")).unwrap();
+        assert_eq!(a.str("task").unwrap(), "mrpc");
+        let a = parser().parse(&toks("--task rte")).unwrap();
+        assert_eq!(a.str("task").unwrap(), "rte");
+        let a = parser().parse(&toks("--task=qnli")).unwrap();
+        assert_eq!(a.str("task").unwrap(), "qnli");
+    }
+
+    #[test]
+    fn switches_and_types() {
+        let a = parser().parse(&toks("--verbose --k 64")).unwrap();
+        assert!(a.bool("verbose"));
+        assert_eq!(a.usize("k").unwrap(), 64);
+        let a = parser().parse(&toks("")).unwrap();
+        assert!(!a.bool("verbose"));
+        assert!(a.usize("k").is_err());
+    }
+
+    #[test]
+    fn lists_accumulate() {
+        let a = parser().parse(&toks("--task a,b --task c")).unwrap();
+        assert_eq!(a.list("task"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(parser().parse(&toks("--nope 1")).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parser().parse(&toks("pos1 --k 2 pos2")).unwrap();
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+}

@@ -1,0 +1,66 @@
+//! Small infrastructure substrates.
+//!
+//! The offline build sandbox carries only the `xla` crate and a handful of
+//! leaf dependencies — no tokio, clap, rand, criterion or proptest — so the
+//! pieces a production crate would normally pull from crates.io live here:
+//!
+//! * [`rng`] — SplitMix64 / Xoshiro256++ PRNGs and distributions,
+//! * [`cli`] — a declarative flag parser for the `svdquant` binary,
+//! * [`pool`] — a scoped work-stealing-ish thread pool,
+//! * [`timer`] — wall-clock scopes and counters,
+//! * [`bench`] — the harness behind `cargo bench` (criterion replacement),
+//! * [`plot`] — ASCII line/bar charts for figure reproduction,
+//! * [`proptest`] — property-testing generators with case shrinking.
+
+pub mod bench;
+pub mod cli;
+pub mod plot;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+pub use pool::ThreadPool;
+pub use rng::Rng;
+pub use timer::Timer;
+
+/// Round `n` up to a multiple of `align`.
+pub fn align_up(n: usize, align: usize) -> usize {
+    (n + align - 1) / align * align
+}
+
+/// Human-readable byte count.
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_works() {
+        assert_eq!(align_up(0, 64), 0);
+        assert_eq!(align_up(1, 64), 64);
+        assert_eq!(align_up(64, 64), 64);
+        assert_eq!(align_up(65, 64), 128);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

@@ -1,0 +1,171 @@
+//! ASCII charts for the paper's figures (no plotting stack offline).
+//!
+//! * [`line_chart`] — Fig. 1 style: accuracy-vs-budget curves, multiple
+//!   series, log-x aware (budgets are powers of 4-ish).
+//! * [`bar_chart`] — Fig. 2 style: grouped IoU bars per budget.
+//!
+//! Output is plain text that goes to stdout, results/figures/*.txt and,
+//! inlined, into EXPERIMENTS.md.
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render multiple series on one canvas. `log_x` plots x on log2 scale.
+pub fn line_chart(
+    title: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    log_x: bool,
+) -> String {
+    assert!(width >= 16 && height >= 4);
+    let xf = |x: f64| if log_x { (x.max(1.0)).log2() } else { x };
+    let mut xmin = f64::INFINITY;
+    let mut xmax = f64::NEG_INFINITY;
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for s in series {
+        for &(x, y) in &s.points {
+            xmin = xmin.min(xf(x));
+            xmax = xmax.max(xf(x));
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmin.is_finite() {
+        return format!("{title}\n  (no data)\n");
+    }
+    // pad the y range a touch so curves don't sit on the frame
+    let ypad = ((ymax - ymin) * 0.08).max(1e-6);
+    ymin -= ypad;
+    ymax += ypad;
+    let xspan = (xmax - xmin).max(1e-9);
+    let yspan = (ymax - ymin).max(1e-9);
+
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['S', 'A', 'Q', 'R', 'o', 'x', '+', '*'];
+    for (si, s) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        // piecewise-linear interpolation across columns for continuity
+        let mut pts: Vec<(f64, f64)> = s.points.iter().map(|&(x, y)| (xf(x), y)).collect();
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in pts.windows(2) {
+            let (x0, y0) = w[0];
+            let (x1, y1) = w[1];
+            let c0 = ((x0 - xmin) / xspan * (width - 1) as f64).round() as usize;
+            let c1 = ((x1 - xmin) / xspan * (width - 1) as f64).round() as usize;
+            for c in c0..=c1.min(width - 1) {
+                let t = if c1 == c0 { 0.0 } else { (c - c0) as f64 / (c1 - c0) as f64 };
+                let y = y0 + (y1 - y0) * t;
+                let r = ((ymax - y) / yspan * (height - 1) as f64).round() as usize;
+                grid[r.min(height - 1)][c] = mark;
+            }
+        }
+        // endpoints always visible
+        for &(x, y) in &pts {
+            let c = ((x - xmin) / xspan * (width - 1) as f64).round() as usize;
+            let r = ((ymax - y) / yspan * (height - 1) as f64).round() as usize;
+            grid[r.min(height - 1)][c.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - yspan * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:>8.4} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>8} +{}\n", "", "-".repeat(width)));
+    let xlabel = if log_x { "log2(k)" } else { "k" };
+    out.push_str(&format!(
+        "{:>10}{:<10.1}{:>width$.1}  ({xlabel})\n",
+        "",
+        if log_x { 2f64.powf(xmin) } else { xmin },
+        if log_x { 2f64.powf(xmax) } else { xmax },
+        width = width - 10
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], s.name));
+    }
+    out
+}
+
+/// Grouped bar chart: `groups` labels on x, one bar per series member.
+pub fn bar_chart(
+    title: &str,
+    groups: &[String],
+    series: &[(String, Vec<f64>)],
+    max_width: usize,
+) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let vmax = series
+        .iter()
+        .flat_map(|(_, v)| v.iter().copied())
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    for (gi, g) in groups.iter().enumerate() {
+        out.push_str(&format!("{g}\n"));
+        for (name, vals) in series {
+            let v = vals.get(gi).copied().unwrap_or(0.0);
+            let w = ((v / vmax) * max_width as f64).round() as usize;
+            out.push_str(&format!(
+                "  {:<10} {:<width$} {v:.3}\n",
+                name,
+                "#".repeat(w),
+                width = max_width
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders_marks() {
+        let s = vec![
+            Series {
+                name: "svd".into(),
+                points: vec![(1.0, 0.85), (16.0, 0.86), (4096.0, 0.87)],
+            },
+            Series {
+                name: "awq".into(),
+                points: vec![(1.0, 0.84), (16.0, 0.85), (4096.0, 0.86)],
+            },
+        ];
+        let chart = line_chart("test", &s, 40, 10, true);
+        assert!(chart.contains('S'));
+        assert!(chart.contains('A'));
+        assert!(chart.contains("svd"));
+        assert!(chart.contains("log2(k)"));
+    }
+
+    #[test]
+    fn line_chart_empty() {
+        assert!(line_chart("t", &[], 40, 10, false).contains("no data"));
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let chart = bar_chart(
+            "iou",
+            &["k=16".into(), "k=64".into()],
+            &[("awq".into(), vec![0.3, 0.2]), ("spqr".into(), vec![0.6, 0.65])],
+            30,
+        );
+        assert!(chart.contains("k=16"));
+        // the max bar should reach full width
+        assert!(chart.contains(&"#".repeat(30)));
+    }
+}

@@ -1,0 +1,208 @@
+//! A scoped thread pool (tokio/rayon are unavailable offline).
+//!
+//! The coordinator fans experiment jobs and per-layer quantization work out
+//! over this pool. Design: one global injector queue guarded by a mutex +
+//! condvar (contention is negligible — jobs here are milliseconds to
+//! seconds, not nanoseconds), `scope()` for borrowing parallel sections,
+//! and panic propagation back to the submitter.
+//!
+//! On the single-core benchmark machine the pool still matters: it
+//! overlaps PJRT execution (which releases the GIL-free C++ thread) with
+//! rust-side quantization of the next job.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    panicked: AtomicBool,
+    in_flight: AtomicUsize,
+    idle: Condvar,
+}
+
+/// Fixed-size thread pool with scoped parallel sections.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// `threads = 0` means "number of logical CPUs".
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            idle: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("svdquant-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget submission.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every submitted job has finished. Propagates panics.
+    pub fn wait_idle(&self) {
+        let guard = self.shared.queue.lock().unwrap();
+        let _unused = self
+            .shared
+            .idle
+            .wait_while(guard, |_| self.shared.in_flight.load(Ordering::SeqCst) > 0)
+            .unwrap();
+        if self.shared.panicked.swap(false, Ordering::SeqCst) {
+            panic!("a pool job panicked");
+        }
+    }
+
+    /// Run `f` on every item of `items` in parallel, preserving order of
+    /// results. The closure borrows from the caller's stack (scoped).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        let slots: Vec<Mutex<Option<T>>> =
+            items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let workers = self.threads().min(n.max(1));
+            for _ in 0..workers {
+                let next = &next;
+                let f = &f;
+                let slots = &slots;
+                let results = &results;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= slots.len() {
+                        break;
+                    }
+                    let item = slots[i].lock().unwrap().take().unwrap();
+                    *results[i].lock().unwrap() = Some(f(item));
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("slot filled"))
+            .collect()
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.available.wait(q).unwrap();
+            }
+        };
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            sh.panicked.store(true, Ordering::SeqCst);
+        }
+        if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _q = sh.queue.lock().unwrap();
+            sh.idle.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn submit_and_wait() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let inputs: Vec<usize> = (0..257).collect();
+        let out = pool.map(inputs, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_borrows_environment() {
+        let pool = ThreadPool::new(2);
+        let base = vec![10usize, 20, 30];
+        let out = pool.map(vec![0usize, 1, 2], |i| base[i] + 1);
+        assert_eq!(out, vec![11, 21, 31]);
+    }
+
+    #[test]
+    #[should_panic(expected = "a pool job panicked")]
+    fn panic_propagates() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("boom"));
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn zero_means_ncpu() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.threads() >= 1);
+    }
+}

@@ -1,0 +1,187 @@
+//! Minimal property-testing framework (proptest is unavailable offline;
+//! DESIGN.md §7).
+//!
+//! [`check`] runs a property over N generated cases; on failure it re-runs
+//! the property on shrunken variants (halving sizes / zeroing elements) and
+//! reports the smallest failing case's seed + description so the failure is
+//! reproducible with `PROPTEST_SEED=<seed>`.
+//!
+//! Generators are plain functions `Fn(&mut Rng) -> T` plus a
+//! [`Shrink`] hook; the common tensor/matrix generators live here so
+//! saliency/quant/linalg tests share them.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// How many cases per property (override with env PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE)
+}
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. Panics with the seed and the
+/// smallest failing input's debug string on failure.
+pub fn check<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: Shrink + std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let cases = default_cases();
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink: keep taking the first shrunken variant that
+            // still fails, up to a depth limit
+            let mut best = input;
+            let mut best_msg = msg;
+            'outer: for _ in 0..64 {
+                for cand in best.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed {seed}, case {case}):\n  {best_msg}\n  \
+                 minimal input: {best:?}\n  reproduce: PROPTEST_SEED={seed}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- generators
+
+/// Random matrix dims in `[1, max_dim]`, values N(0, scale).
+pub fn gen_matrix(rng: &mut Rng, max_dim: usize, scale: f32) -> Matrix {
+    let rows = rng.range(1, max_dim + 1);
+    let cols = rng.range(1, max_dim + 1);
+    let mut m = Matrix::zeros(rows, cols);
+    rng.fill_normal(m.data_mut(), scale);
+    m
+}
+
+/// A matrix with planted outliers (exercises clipping paths).
+pub fn gen_matrix_with_outliers(rng: &mut Rng, max_dim: usize) -> Matrix {
+    let mut m = gen_matrix(rng, max_dim, 0.05);
+    let n_out = rng.range(0, 4);
+    let (r, c) = m.shape();
+    for _ in 0..n_out {
+        let i = rng.range(0, r);
+        let j = rng.range(0, c);
+        let sign = if rng.chance(0.5) { 1.0 } else { -1.0 };
+        m[(i, j)] = sign * rng.uniform(0.5, 2.0) as f32;
+    }
+    m
+}
+
+impl Shrink for Matrix {
+    fn shrink(&self) -> Vec<Self> {
+        let (r, c) = self.shape();
+        let mut out = Vec::new();
+        if r > 1 {
+            out.push(self.slice_rows(0, r / 2));
+        }
+        if c > 1 {
+            out.push(self.slice_cols(0, c / 2));
+        }
+        // zero the second half of the entries (often isolates an element)
+        if r * c > 1 {
+            let mut z = self.clone();
+            let data = z.data_mut();
+            let half = data.len() / 2;
+            for v in &mut data[half..] {
+                *v = 0.0;
+            }
+            out.push(z);
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![self / 2, self - 1]
+        }
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "matrix transpose involution",
+            |rng| gen_matrix(rng, 12, 1.0),
+            |m| {
+                let t2 = m.transpose().transpose();
+                if t2.approx_eq(m, 0.0) {
+                    Ok(())
+                } else {
+                    Err("transpose twice != identity".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check(
+            "always fails",
+            |rng| gen_matrix(rng, 8, 1.0),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrink_produces_smaller() {
+        let mut rng = Rng::new(9);
+        let m = gen_matrix(&mut rng, 16, 1.0);
+        for s in m.shrink() {
+            let (r0, c0) = m.shape();
+            let (r1, c1) = s.shape();
+            assert!(r1 * c1 <= r0 * c0);
+        }
+    }
+}

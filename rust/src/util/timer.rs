@@ -1,0 +1,110 @@
+//! Wall-clock timing scopes + a tiny metrics registry used by the
+//! coordinator to prove it is not the bottleneck (DESIGN.md §8 L3 target:
+//! coordination overhead < 5% of sweep wall time).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use once_cell::sync::Lazy;
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[derive(Default, Clone, Debug)]
+struct Stat {
+    total: Duration,
+    count: u64,
+}
+
+static REGISTRY: Lazy<Mutex<BTreeMap<String, Stat>>> =
+    Lazy::new(|| Mutex::new(BTreeMap::new()));
+
+/// Accumulate `dur` under `name` in the global registry.
+pub fn record(name: &str, dur: Duration) {
+    let mut reg = REGISTRY.lock().unwrap();
+    let stat = reg.entry(name.to_string()).or_default();
+    stat.total += dur;
+    stat.count += 1;
+}
+
+/// Time a closure and record it.
+pub fn scope<R>(name: &str, f: impl FnOnce() -> R) -> R {
+    let t = Timer::start();
+    let r = f();
+    record(name, t.elapsed());
+    r
+}
+
+/// Snapshot of `(name, total_seconds, count)` sorted by name.
+pub fn snapshot() -> Vec<(String, f64, u64)> {
+    REGISTRY
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.total.as_secs_f64(), v.count))
+        .collect()
+}
+
+/// Clear the registry (tests / between sweep phases).
+pub fn reset() {
+    REGISTRY.lock().unwrap().clear();
+}
+
+/// Render the registry as an aligned table.
+pub fn render() -> String {
+    let snap = snapshot();
+    let mut out = String::from("timer                              total(s)      count\n");
+    for (name, total, count) in snap {
+        out.push_str(&format!("{name:<34} {total:>9.3} {count:>10}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_renders() {
+        reset();
+        scope("unit.test.sleep", || std::thread::sleep(Duration::from_millis(2)));
+        scope("unit.test.sleep", || std::thread::sleep(Duration::from_millis(2)));
+        let snap = snapshot();
+        let row = snap.iter().find(|(n, _, _)| n == "unit.test.sleep").unwrap();
+        assert_eq!(row.2, 2);
+        assert!(row.1 >= 0.004);
+        assert!(render().contains("unit.test.sleep"));
+        reset();
+        assert!(snapshot().is_empty());
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(t.elapsed_ms() >= 1.0);
+        assert!(t.elapsed_s() > 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Cross-module integration over the real artifacts: PJRT executable vs
+//! rust engine numerics, the quantization pipeline end-to-end, the packed
+//! deployment path, and the Pallas-kernel-in-HLO composition proof.
+//!
+//! All tests skip when artifacts/ is absent; `make test` runs them after
+//! `make artifacts`.
+
+use svdquant::coordinator::{quantize_checkpoint, Artifacts, PreserveSpec};
+use svdquant::eval::{eval_engine, eval_pjrt, eval_quantized};
+use svdquant::model::{Engine, QuantizedModel};
+use svdquant::runtime::{literal_i32, logits_to_matrix, param_literals, Runtime};
+use svdquant::saliency::Method;
+
+fn artifacts() -> Option<Artifacts> {
+    Artifacts::open("artifacts").ok()
+}
+
+macro_rules! need {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => {
+                eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn engine_matches_pjrt_logits() {
+    let art = need!(artifacts());
+    let task = &art.tasks()[0];
+    let ckpt = art.checkpoint(task).unwrap();
+    let dev = art.dataset(task, "dev").unwrap();
+    let cfg = art.model_cfg;
+    let engine = Engine::new(cfg, ckpt.clone()).unwrap();
+
+    let rt = Runtime::cpu().unwrap();
+    let exe = art.compile_model(&rt, task, false).unwrap();
+    let b = cfg.export_batch;
+    let (ids, mask) = dev.batch_padded(0, b.min(dev.len()), b);
+    let weight_lits = param_literals(&cfg, &ckpt).unwrap();
+    let ids_lit = literal_i32(&ids, b, cfg.max_len).unwrap();
+    let mask_lit = literal_i32(&mask, b, cfg.max_len).unwrap();
+    let mut args: Vec<&xla::Literal> = vec![&ids_lit, &mask_lit];
+    args.extend(weight_lits.iter());
+    let out = exe.run(&args).unwrap();
+    let pjrt_logits = logits_to_matrix(&out[0], b, cfg.n_classes).unwrap();
+
+    let engine_logits = engine.forward(&ids, &mask).unwrap();
+    let d = engine_logits.max_abs_diff(&pjrt_logits);
+    assert!(d < 5e-3, "engine vs PJRT logits max|Δ| = {d}");
+}
+
+#[test]
+fn pallas_variant_matches_plain_hlo() {
+    // The L1-in-L2 composition proof at the rust level: the HLO exported
+    // from the Pallas-kernel model must produce the same logits as the
+    // plain-jnp HLO when fed identical weights.
+    let art = need!(artifacts());
+    let task = &art.tasks()[0];
+    if !art.hlo_path(task, true).exists() {
+        eprintln!("skipping: no pallas HLO variant");
+        return;
+    }
+    let ckpt = art.checkpoint(task).unwrap();
+    let dev = art.dataset(task, "dev").unwrap();
+    let cfg = art.model_cfg;
+    let rt = Runtime::cpu().unwrap();
+    let plain = art.compile_model(&rt, task, false).unwrap();
+    let pallas = art.compile_model(&rt, task, true).unwrap();
+
+    // pallas artifact is exported at batch 8
+    let bp = 8usize;
+    let (ids_p, mask_p) = dev.batch_padded(0, bp.min(dev.len()), bp);
+    let weight_lits = param_literals(&cfg, &ckpt).unwrap();
+
+    let ids_lit = literal_i32(&ids_p, bp, cfg.max_len).unwrap();
+    let mask_lit = literal_i32(&mask_p, bp, cfg.max_len).unwrap();
+    let mut args: Vec<&xla::Literal> = vec![&ids_lit, &mask_lit];
+    args.extend(weight_lits.iter());
+    let out_pallas = pallas.run(&args).unwrap();
+    let pallas_logits = logits_to_matrix(&out_pallas[0], bp, cfg.n_classes).unwrap();
+
+    let b = cfg.export_batch;
+    let (ids, mask) = dev.batch_padded(0, bp.min(dev.len()), b);
+    let ids_lit = literal_i32(&ids, b, cfg.max_len).unwrap();
+    let mask_lit = literal_i32(&mask, b, cfg.max_len).unwrap();
+    let mut args: Vec<&xla::Literal> = vec![&ids_lit, &mask_lit];
+    args.extend(weight_lits.iter());
+    let out_plain = plain.run(&args).unwrap();
+    let plain_logits = logits_to_matrix(&out_plain[0], b, cfg.n_classes).unwrap();
+
+    let mut maxd = 0.0f32;
+    for i in 0..bp.min(dev.len()) {
+        for j in 0..cfg.n_classes {
+            maxd = maxd.max((pallas_logits[(i, j)] - plain_logits[(i, j)]).abs());
+        }
+    }
+    assert!(maxd < 5e-3, "pallas vs plain HLO logits max|Δ| = {maxd}");
+}
+
+#[test]
+fn quantization_pipeline_end_to_end() {
+    let art = need!(artifacts());
+    let task = &art.tasks()[0];
+    let ckpt = art.checkpoint(task).unwrap();
+    let dev = art.dataset(task, "dev").unwrap();
+    let cfg = art.model_cfg;
+    let fp32_engine = Engine::new(cfg, ckpt.clone()).unwrap();
+    let fp32 = eval_engine(&fp32_engine, &dev, 16).unwrap().accuracy();
+
+    // k=0 floor must hurt; generous k must approach fp32
+    let floor_spec = PreserveSpec { method: Method::Svd, k_per_layer: 0, ..Default::default() };
+    let (floor_p, _) = quantize_checkpoint(&cfg, &ckpt, &floor_spec, None).unwrap();
+    let floor = eval_engine(&Engine::new(cfg, floor_p).unwrap(), &dev, 16)
+        .unwrap()
+        .accuracy();
+
+    let spec = PreserveSpec { method: Method::Svd, k_per_layer: 4096, ..Default::default() };
+    let (qp, sels) = quantize_checkpoint(&cfg, &ckpt, &spec, None).unwrap();
+    let acc = eval_engine(&Engine::new(cfg, qp).unwrap(), &dev, 16)
+        .unwrap()
+        .accuracy();
+
+    assert!(fp32 > 0.55, "fp32 model should beat chance, got {fp32}");
+    assert!(acc >= floor - 0.02, "protection should not hurt: {acc} vs floor {floor}");
+    assert!(
+        fp32 - acc < 0.15,
+        "k=4096 should be close to fp32 ({acc} vs {fp32})"
+    );
+
+    // deployed packed model agrees with the simulated path
+    let qm = QuantizedModel::build(cfg, ckpt, &spec.qcfg, &sels).unwrap();
+    let fused = eval_quantized(&qm, &dev, 16).unwrap().accuracy();
+    assert!(
+        (fused - acc).abs() < 0.02,
+        "fused {fused} vs simulated {acc}"
+    );
+}
+
+#[test]
+fn calibrated_methods_run_through_pjrt() {
+    let art = need!(artifacts());
+    let task = &art.tasks()[0];
+    let ckpt = art.checkpoint(task).unwrap();
+    let cfg = art.model_cfg;
+    let calib_data = art.dataset(task, "calib").unwrap();
+    let engine = Engine::new(cfg, ckpt.clone()).unwrap();
+    let calib =
+        svdquant::calib::CalibStats::collect(&engine, &calib_data, 32, 16).unwrap();
+
+    let rt = Runtime::cpu().unwrap();
+    let exe = art.compile_model(&rt, task, false).unwrap();
+    let dev = art.dataset(task, "dev").unwrap();
+    // evaluate only a slice to keep the test fast
+    let (ids, mask) = dev.batch_slices(0, 64.min(dev.len()));
+    let labels = dev.labels()[..64.min(dev.len())].to_vec();
+    let small =
+        svdquant::data::Dataset::from_raw("slice", ids, mask, labels, cfg.max_len).unwrap();
+
+    for method in [Method::Awq, Method::Spqr] {
+        let spec = PreserveSpec { method, k_per_layer: 64, ..Default::default() };
+        let (qp, _) = quantize_checkpoint(&cfg, &ckpt, &spec, Some(&calib)).unwrap();
+        let r = eval_pjrt(&exe, &cfg, &qp, &small).unwrap();
+        assert!(r.accuracy() > 0.3, "{method} produced degenerate accuracy");
+    }
+}
+
+#[test]
+fn sweep_cache_resumes() {
+    use svdquant::coordinator::sweep::{run_sweep, SweepConfig};
+    let art = need!(artifacts());
+    let rt = Runtime::cpu().unwrap();
+    let dir = std::env::temp_dir().join("svdquant_it_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = SweepConfig::paper_defaults(&art, &dir);
+    cfg.tasks = vec![art.tasks()[0].clone()];
+    cfg.methods = vec![Method::Svd];
+    cfg.budgets = vec![16];
+    let t0 = std::time::Instant::now();
+    let r1 = run_sweep(&art, &rt, &cfg).unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let r2 = run_sweep(&art, &rt, &cfg).unwrap();
+    let warm = t1.elapsed();
+    let a1 = r1.accuracy(&cfg.tasks[0], "svd", 16).unwrap();
+    let a2 = r2.accuracy(&cfg.tasks[0], "svd", 16).unwrap();
+    assert_eq!(a1, a2, "cache must reproduce the same number");
+    assert!(warm < cold, "cached run should be faster ({warm:?} vs {cold:?})");
+}
