@@ -12,7 +12,6 @@ use svdquant::coordinator::Artifacts;
 use svdquant::model::Engine;
 use svdquant::report;
 use svdquant::runtime::Runtime;
-use svdquant::saliency::Method;
 
 fn main() -> anyhow::Result<()> {
     let task = std::env::args().nth(1).unwrap_or_else(|| "rte".to_string());
@@ -36,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     let out = std::path::PathBuf::from("results");
     let mut cfg = SweepConfig::paper_defaults(&art, &out);
     cfg.tasks = vec![task.clone()];
-    cfg.methods = vec![Method::Random, Method::Awq, Method::Spqr, Method::Svd];
+    cfg.methods = ["random", "awq", "spqr", "svd"].iter().map(|m| m.to_string()).collect();
     let res = run_sweep(&art, &rt, &cfg)?;
 
     println!("\n{}", report::accuracy_table(&res, &task, &cfg.budgets));

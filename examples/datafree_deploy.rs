@@ -14,10 +14,10 @@
 use std::time::Duration;
 
 use svdquant::coordinator::server::{serve_trace, ServerConfig};
-use svdquant::coordinator::{quantize_checkpoint, Artifacts, PreserveSpec};
+use svdquant::coordinator::{Artifacts, QuantizePipeline};
 use svdquant::data::TraceGenerator;
 use svdquant::model::QuantizedModel;
-use svdquant::saliency::Method;
+use svdquant::quant::QuantConfig;
 use svdquant::util::human_bytes;
 
 fn main() -> anyhow::Result<()> {
@@ -27,10 +27,18 @@ fn main() -> anyhow::Result<()> {
     let dev = art.dataset(task, "dev")?;
 
     // --- data-free quantization: only the weights are touched ------------
-    let spec = PreserveSpec { method: Method::Svd, k_per_layer: 1024, ..Default::default() };
+    // default scorer = SVD, no .calib(..) anywhere: the pipeline enforces
+    // at build time that the scorer really needs no data
+    let qcfg = QuantConfig::default();
     let t = std::time::Instant::now();
-    let (_, sels) = quantize_checkpoint(&art.model_cfg, &ckpt, &spec, None)?;
-    let qm = QuantizedModel::build(art.model_cfg, ckpt, &spec.qcfg, &sels)?;
+    let sels = {
+        let mut pipe = QuantizePipeline::for_checkpoint(&art.model_cfg, &ckpt)
+            .budget(1024)
+            .quant(qcfg)
+            .build()?;
+        pipe.select(1024)?
+    };
+    let qm = QuantizedModel::build(art.model_cfg, ckpt, &qcfg, &sels)?;
     let quant_s = t.elapsed().as_secs_f64();
     let (q, d) = qm.quantized_bytes();
     println!("quantized in {quant_s:.2}s with ZERO calibration samples");

@@ -3,16 +3,19 @@
 //! Reproduces the paper's overlap analysis per layer (not just the
 //! aggregate): IoU of the SVD-selected index set vs AWQ and SpQR at each
 //! budget, plus the exact-vs-randomized SVD agreement ablation
-//! (DESIGN.md §5).
+//! (DESIGN.md §5). Heuristics are `Scorer` trait objects from the registry
+//! — swap any name below for e.g. `"hybrid"` to analyze a new heuristic.
 //!
 //! ```sh
 //! cargo run --release --offline --example overlap_analysis [task]
 //! ```
 
 use svdquant::calib::CalibStats;
-use svdquant::coordinator::{score_layer, Artifacts, PreserveSpec};
+use svdquant::coordinator::Artifacts;
 use svdquant::model::Engine;
-use svdquant::saliency::{iou, select_topk, Method, SvdScoreMode};
+use svdquant::saliency::{
+    iou, resolve_scorer, select_topk, ScoreCtx, Scorer, SvdScoreMode, SvdScorer,
+};
 
 fn main() -> anyhow::Result<()> {
     let task = std::env::args().nth(1).unwrap_or_else(|| "mrpc".to_string());
@@ -22,12 +25,13 @@ fn main() -> anyhow::Result<()> {
     let engine = Engine::new(art.model_cfg, ckpt)?;
     let calib = CalibStats::collect(&engine, &calib_data, art.calib_samples(), 16)?;
     let ckpt = engine.params();
+    let ctx = ScoreCtx::with_calib(&calib);
 
-    let spec_of = |m: Method| PreserveSpec {
-        method: m,
-        spqr_damp: art.spqr_damp(),
-        ..Default::default()
-    };
+    let sparams = art.scorer_params();
+    let svd = resolve_scorer("svd", &sparams)?;
+    let svd_exact = SvdScorer::new(art.svd_rank(), SvdScoreMode::Exact);
+    let awq = resolve_scorer("awq", &sparams)?;
+    let spqr = resolve_scorer("spqr", &sparams)?;
 
     let budgets = [16usize, 256, 4096];
     println!("per-layer IoU of SVD selections vs baselines ({task})\n");
@@ -35,22 +39,15 @@ fn main() -> anyhow::Result<()> {
     let names = art.model_cfg.quantizable_names();
     for name in &names {
         let w = ckpt.get(name)?;
-        let svd = score_layer(name, w, &spec_of(Method::Svd), None)?;
-        let svd_exact = {
-            let spec = PreserveSpec {
-                method: Method::Svd,
-                svd_mode: SvdScoreMode::Exact,
-                ..Default::default()
-            };
-            score_layer(name, w, &spec, None)?
-        };
-        let awq = score_layer(name, w, &spec_of(Method::Awq), Some(&calib))?;
-        let spqr = score_layer(name, w, &spec_of(Method::Spqr), Some(&calib))?;
+        let s_svd = svd.score(name, w, &ctx)?;
+        let s_exact = svd_exact.score(name, w, &ctx)?;
+        let s_awq = awq.score(name, w, &ctx)?;
+        let s_spqr = spqr.score(name, w, &ctx)?;
         for &k in &budgets {
-            let s_svd = select_topk(&svd, k);
-            let i_awq = iou(&s_svd, &select_topk(&awq, k));
-            let i_spqr = iou(&s_svd, &select_topk(&spqr, k));
-            let i_exact = iou(&s_svd, &select_topk(&svd_exact, k));
+            let sel = select_topk(&s_svd, k);
+            let i_awq = iou(&sel, &select_topk(&s_awq, k));
+            let i_spqr = iou(&sel, &select_topk(&s_spqr, k));
+            let i_exact = iou(&sel, &select_topk(&s_exact, k));
             println!(
                 "{:<22} {:>6}  {:>8.3} {:>8.3} {:>10.3}",
                 name, k, i_awq, i_spqr, i_exact

@@ -3,17 +3,17 @@
 //! Loads a trained checkpoint, quantizes it with the data-free SVD
 //! heuristic at k=256, and measures accuracy recovery against the FP32
 //! ceiling and the unprotected Q4 floor — all through the AOT-compiled
-//! XLA executable (python never runs).
+//! XLA executable (python never runs). The two budgets share one
+//! `QuantizePipeline`, so the expensive score maps are computed once.
 //!
 //! Run after `make artifacts`:
 //! ```sh
 //! cargo run --release --offline --example quickstart
 //! ```
 
-use svdquant::coordinator::{quantize_checkpoint, Artifacts, PreserveSpec};
+use svdquant::coordinator::{Artifacts, QuantizePipeline};
 use svdquant::eval::eval_pjrt;
 use svdquant::runtime::Runtime;
-use svdquant::saliency::Method;
 
 fn main() -> anyhow::Result<()> {
     let art = Artifacts::open("artifacts")?;
@@ -28,15 +28,16 @@ fn main() -> anyhow::Result<()> {
     // FP32 ceiling
     let fp32 = eval_pjrt(&exe, &art.model_cfg, &ckpt, &dev)?.accuracy();
 
+    // one pipeline, default scorer = the paper's SVD (zero calibration data)
+    let mut pipe = QuantizePipeline::for_checkpoint(&art.model_cfg, &ckpt).build()?;
+
     // unprotected 4-bit floor (k = 0)
-    let floor_spec = PreserveSpec { method: Method::Svd, k_per_layer: 0, ..Default::default() };
-    let (floor_params, _) = quantize_checkpoint(&art.model_cfg, &ckpt, &floor_spec, None)?;
+    let (floor_params, _) = pipe.run_with_budget(0)?;
     let floor = eval_pjrt(&exe, &art.model_cfg, &floor_params, &dev)?.accuracy();
 
     // the paper's method: preserve the top-256 principal-structure weights
-    // per layer in FP32 — zero calibration data needed
-    let spec = PreserveSpec { method: Method::Svd, k_per_layer: 256, ..Default::default() };
-    let (qparams, sels) = quantize_checkpoint(&art.model_cfg, &ckpt, &spec, None)?;
+    // per layer in FP32 — score maps are reused from the k=0 pass above
+    let (qparams, sels) = pipe.run_with_budget(256)?;
     let svd = eval_pjrt(&exe, &art.model_cfg, &qparams, &dev)?.accuracy();
 
     let protected: usize = sels.values().map(|s| s.k()).sum();

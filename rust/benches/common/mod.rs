@@ -23,7 +23,6 @@ pub fn table_bench(bench_name: &'static str, task: &str, paper_rows: &[(usize, f
     use svdquant::coordinator::sweep::{run_sweep, SweepConfig};
     use svdquant::report;
     use svdquant::runtime::Runtime;
-    use svdquant::saliency::Method;
     use svdquant::util::bench::Bench;
 
     let Some(art) = artifacts_or_skip(bench_name) else { return };
@@ -32,7 +31,8 @@ pub fn table_bench(bench_name: &'static str, task: &str, paper_rows: &[(usize, f
     let out = std::path::PathBuf::from("results");
     let mut cfg = SweepConfig::paper_defaults(&art, &out);
     cfg.tasks = vec![task.to_string()];
-    cfg.methods = vec![Method::Random, Method::Awq, Method::Spqr, Method::Svd];
+    cfg.methods =
+        ["random", "awq", "spqr", "svd"].iter().map(|m| m.to_string()).collect();
     let res = run_sweep(&art, &rt, &cfg).expect("sweep");
 
     // rendered table (ours)

@@ -9,12 +9,12 @@ mod common;
 use std::time::Duration;
 
 use svdquant::coordinator::server::{serve_trace, ServerConfig};
-use svdquant::coordinator::{quantize_checkpoint, PreserveSpec};
+use svdquant::coordinator::QuantizePipeline;
 use svdquant::data::TraceGenerator;
 use svdquant::eval::eval_pjrt;
 use svdquant::model::{Engine, QuantizedModel};
+use svdquant::quant::QuantConfig;
 use svdquant::runtime::Runtime;
-use svdquant::saliency::Method;
 use svdquant::util::bench::Bench;
 
 fn main() {
@@ -25,10 +25,18 @@ fn main() {
     let dev = art.dataset(task, "dev").expect("dev");
     let cfg = art.model_cfg;
 
-    let spec = PreserveSpec { method: Method::Svd, k_per_layer: 256, ..Default::default() };
-    let (qp, sels) = quantize_checkpoint(&cfg, &ckpt, &spec, None).expect("quantize");
+    let qcfg = QuantConfig::default();
+    let (qp, sels) = {
+        // data-free SVD selection at k=256 through the staged pipeline
+        let mut pipe = QuantizePipeline::for_checkpoint(&cfg, &ckpt)
+            .budget(256)
+            .quant(qcfg)
+            .build()
+            .expect("pipeline");
+        pipe.run().expect("quantize")
+    };
     let engine = Engine::new(cfg, ckpt.clone()).expect("engine");
-    let qm = QuantizedModel::build(cfg, ckpt.clone(), &spec.qcfg, &sels).expect("qm");
+    let qm = QuantizedModel::build(cfg, ckpt.clone(), &qcfg, &sels).expect("qm");
     let (qb, db) = qm.quantized_bytes();
     println!(
         "  weights: dense {} -> packed {} ({:.2}x)",

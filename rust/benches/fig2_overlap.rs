@@ -2,16 +2,20 @@
 //! AWQ and SpQR selections, per protection budget, aggregated over all
 //! quantizable layers of every task. The paper's qualitative claim — high
 //! overlap with SpQR (~60-70% at low k), lower with AWQ (~30%) — is what
-//! the shape check rows record. `harness = false`.
+//! the shape check rows record.
+//!
+//! Runs through one `QuantizePipeline` per task: each scorer's maps are
+//! computed once (layer-parallel) and every budget reuses them from the
+//! pipeline cache. `harness = false`.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use svdquant::calib::CalibStats;
-use svdquant::coordinator::{score_layer, PreserveSpec};
+use svdquant::coordinator::QuantizePipeline;
 use svdquant::model::Engine;
 use svdquant::report;
-use svdquant::saliency::{iou, select_topk, Method};
+use svdquant::saliency::{record_selection_overlaps, resolve_scorer, SelectionGrid};
 use svdquant::util::bench::Bench;
 
 fn main() {
@@ -19,6 +23,7 @@ fn main() {
     let mut b = Bench::new("fig2_overlap").quick();
     let mut results = svdquant::coordinator::sweep::SweepResults::default();
     let budgets = art.budgets();
+    let sparams = art.scorer_params();
 
     for task in art.tasks() {
         let ckpt = art.checkpoint(&task).expect("ckpt");
@@ -27,39 +32,18 @@ fn main() {
         let calib =
             CalibStats::collect(&engine, &calib_data, art.calib_samples(), 16).expect("calib");
         let ckpt = engine.params();
-        for name in art.model_cfg.quantizable_names() {
-            let w = ckpt.get(&name).unwrap();
-            let svd = score_layer(
-                &name,
-                w,
-                &PreserveSpec { method: Method::Svd, ..Default::default() },
-                None,
-            )
-            .unwrap();
-            let awq = score_layer(
-                &name,
-                w,
-                &PreserveSpec { method: Method::Awq, ..Default::default() },
-                Some(&calib),
-            )
-            .unwrap();
-            let spqr = score_layer(
-                &name,
-                w,
-                &PreserveSpec {
-                    method: Method::Spqr,
-                    spqr_damp: art.spqr_damp(),
-                    ..Default::default()
-                },
-                Some(&calib),
-            )
-            .unwrap();
+        let mut pipe = QuantizePipeline::for_checkpoint(&art.model_cfg, ckpt)
+            .calib(Some(&calib))
+            .build()
+            .expect("pipeline");
+        let mut sels = SelectionGrid::new();
+        for m in ["svd", "awq", "spqr"] {
+            pipe.set_scorer(resolve_scorer(m, &sparams).expect("scorer")).expect("set scorer");
             for &k in &budgets {
-                let s = select_topk(&svd, k);
-                results.overlap.record("awq", k, iou(&s, &select_topk(&awq, k)));
-                results.overlap.record("spqr", k, iou(&s, &select_topk(&spqr, k)));
+                sels.insert((m.to_string(), k), pipe.select(k).expect("select"));
             }
         }
+        record_selection_overlaps(&mut results.overlap, &sels, &budgets, "svd", &["awq", "spqr"]);
     }
 
     let chart = report::fig2_chart(&results);

@@ -1,5 +1,6 @@
 //! Paper §VI-A complexity comparison, measured: selection cost of each
-//! heuristic over transformer-shaped weight matrices.
+//! heuristic over transformer-shaped weight matrices, driven through the
+//! [`Scorer`] trait (the same code path the pipeline uses).
 //!
 //! * SVD (randomized, O(r·d²)) — the paper's fast static path
 //! * SVD (exact Jacobi, O(d³)) — the naive alternative
@@ -8,11 +9,18 @@
 //! * AWQ — trivial given colnorms, but colnorms require the forward pass
 //! * top-k selection — shared epilogue
 //!
-//! Also runs the calibration-size ablation (DESIGN.md §5) and the
-//! rank-r ablation for the SVD score. `harness = false`.
+//! Also measures the `QuantizePipeline`'s layer-parallel scoring (1 thread
+//! vs available parallelism, plus the warm-cache hit), the rank-r ablation
+//! and the calibration-size ablation (DESIGN.md §5). `harness = false`.
 
+use svdquant::calib::{CalibStats, LayerStats};
+use svdquant::coordinator::QuantizePipeline;
 use svdquant::linalg::{matmul_at_b, Matrix};
-use svdquant::saliency::{awq_score, select_topk, spqr_score, svd_score, SvdScoreMode};
+use svdquant::model::params::testing::synthetic_params;
+use svdquant::model::ModelConfig;
+use svdquant::saliency::{
+    select_topk, AwqScorer, ScoreCtx, Scorer, SpqrScorer, SvdScoreMode, SvdScorer,
+};
 use svdquant::util::bench::Bench;
 use svdquant::util::rng::Rng;
 
@@ -30,6 +38,21 @@ fn transformer_like(rng: &mut Rng, dout: usize, din: usize) -> Matrix {
     w
 }
 
+/// Synthetic calibration stats over activations `x`, registered for one
+/// pseudo-layer named `"bench"` (feeds the data-aware scorers).
+fn bench_calib(x: &Matrix) -> CalibStats {
+    let col_sumsq: Vec<f64> = (0..x.cols())
+        .map(|j| x.col(j).iter().map(|&v| (v as f64) * (v as f64)).sum())
+        .collect();
+    let mut calib = CalibStats::default();
+    calib.layers.insert(
+        "bench".to_string(),
+        LayerStats { col_sumsq, xtx: matmul_at_b(x, x), rows: x.rows() },
+    );
+    calib.samples = x.rows() / 48;
+    calib
+}
+
 fn main() {
     let mut b = Bench::new("saliency_cost");
     let mut rng = Rng::new(0xC057);
@@ -41,34 +64,73 @@ fn main() {
         let n_tok = 6144;
         let mut x = Matrix::zeros(n_tok, din);
         rng.fill_normal(x.data_mut(), 1.0);
+        let calib = bench_calib(&x);
+        let ctx = ScoreCtx::with_calib(&calib);
+
+        let svd_fast = SvdScorer::new(8, SvdScoreMode::default());
+        let svd_exact = SvdScorer::new(8, SvdScoreMode::Exact);
+        let spqr = SpqrScorer::new(0.01);
+        let awq = AwqScorer;
 
         b.timeit(&format!("svd_rsvd_r8      {label}"), || {
-            svd_score(&w, 8, SvdScoreMode::default())
+            svd_fast.score("bench", &w, &ctx).unwrap()
         });
         b.timeit(&format!("svd_exact        {label}"), || {
-            svd_score(&w, 8, SvdScoreMode::Exact)
+            svd_exact.score("bench", &w, &ctx).unwrap()
         });
         // SpQR cost split: (a) XᵀX build (calibration-time), (b) inverse
-        let xtx = matmul_at_b(&x, &x);
         b.timeit(&format!("spqr_xtx_build   {label}"), || matmul_at_b(&x, &x));
         b.timeit(&format!("spqr_inverse     {label}"), || {
-            spqr_score(&w, &xtx, n_tok, 0.01)
+            spqr.score("bench", &w, &ctx).unwrap()
         });
-        let colnorm: Vec<f32> = (0..din)
-            .map(|j| x.col(j).iter().map(|v| v * v).sum::<f32>().sqrt())
-            .collect();
-        b.timeit(&format!("awq_score        {label}"), || awq_score(&w, &colnorm));
-        let score = svd_score(&w, 8, SvdScoreMode::default());
+        b.timeit(&format!("awq_score        {label}"), || {
+            awq.score("bench", &w, &ctx).unwrap()
+        });
+        let score = svd_fast.score("bench", &w, &ctx).unwrap();
         b.timeit(&format!("topk_k4096       {label}"), || select_topk(&score, 4096));
+    }
+
+    // --- pipeline scoring throughput: 1 thread vs available parallelism --
+    let mcfg = ModelConfig::default();
+    let ckpt = synthetic_params(&mcfg, 0x5CA1E);
+    let n_layers = mcfg.quantizable_names().len();
+    for threads in [1usize, 0] {
+        let mut pipe = QuantizePipeline::for_checkpoint(&mcfg, &ckpt)
+            .scorer(Box::new(SvdScorer::new(8, SvdScoreMode::default())))
+            .threads(threads)
+            .build()
+            .expect("pipeline");
+        let name =
+            format!("pipeline svd scoring {n_layers} layers, {} thread(s)", pipe.threads());
+        b.timeit_throughput(&name, n_layers as f64, "layer", || {
+            // fresh maps each iteration so the measurement is pure scoring
+            pipe.clear_score_cache();
+            pipe.ensure_scores().expect("score")
+        });
+    }
+    {
+        let mut pipe = QuantizePipeline::for_checkpoint(&mcfg, &ckpt)
+            .scorer(Box::new(SvdScorer::new(8, SvdScoreMode::default())))
+            .build()
+            .expect("pipeline");
+        pipe.ensure_scores().expect("score");
+        b.timeit(&format!("pipeline warm-cache hit ({n_layers} layers)"), || {
+            pipe.ensure_scores().expect("score")
+        });
     }
 
     // --- rank ablation: does the score stabilize with r? -----------------
     let w = transformer_like(&mut rng, 256, 1024);
-    let exact_8 = select_topk(&svd_score(&w, 8, SvdScoreMode::Exact), 1024);
+    let ctx = ScoreCtx::data_free();
+    let exact_8 = select_topk(
+        &SvdScorer::new(8, SvdScoreMode::Exact).score("ablate", &w, &ctx).unwrap(),
+        1024,
+    );
     let mut rows = Vec::new();
     for r in [1usize, 2, 4, 8, 16, 32] {
+        let scorer = SvdScorer::new(r, SvdScoreMode::default());
         let t = std::time::Instant::now();
-        let s = svd_score(&w, r, SvdScoreMode::default());
+        let s = scorer.score("ablate", &w, &ctx).unwrap();
         let dt = t.elapsed().as_secs_f64();
         let sel = select_topk(&s, 1024);
         let agreement = svdquant::saliency::iou(&sel, &exact_8);
@@ -90,12 +152,18 @@ fn main() {
     let mut x = Matrix::zeros(full_n, 256);
     rng.fill_normal(x.data_mut(), 1.0);
     let w = transformer_like(&mut rng, 256, 256);
-    let xtx_full = matmul_at_b(&x, &x);
-    let ref_sel = select_topk(&spqr_score(&w, &xtx_full, full_n, 0.01), 1024);
+    let spqr = SpqrScorer::new(0.01);
+    let full_calib = bench_calib(&x);
+    let ref_sel = select_topk(
+        &spqr.score("bench", &w, &ScoreCtx::with_calib(&full_calib)).unwrap(),
+        1024,
+    );
     for n in [384usize, 1536, 6144] {
-        let xs = x.slice_rows(0, n);
-        let xtx = matmul_at_b(&xs, &xs);
-        let sel = select_topk(&spqr_score(&w, &xtx, n, 0.01), 1024);
+        let calib = bench_calib(&x.slice_rows(0, n));
+        let sel = select_topk(
+            &spqr.score("bench", &w, &ScoreCtx::with_calib(&calib)).unwrap(),
+            1024,
+        );
         rows.push(vec![
             format!("{} tokens (~{} seqs)", n, n / 48),
             format!("{:.3}", svdquant::saliency::iou(&sel, &ref_sel)),

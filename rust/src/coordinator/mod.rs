@@ -1,22 +1,29 @@
-//! L3 coordinator: artifact management, the quantization pipeline, the
-//! experiment sweep (tables/figures), and the serving demo.
+//! L3 coordinator: artifact management, the staged quantization pipeline,
+//! the experiment sweep (tables/figures), and the serving demo.
 //!
 //! * [`Artifacts`] — typed view of the `artifacts/` directory (manifest,
 //!   checkpoints, datasets, compiled executables);
-//! * [`PreserveSpec`] + [`quantize_checkpoint`] — one (method, k) pass of
-//!   the paper's scheme over every quantizable layer;
-//! * [`sweep`] — the full battle: methods × budgets × tasks with score-map
-//!   reuse, result caching and report emission;
+//! * [`QuantizePipeline`] — the quantization engine: builder-configured
+//!   (scorer, budget, quant config, calibration, threads), with score-map
+//!   memoization keyed by `(layer, scorer.cache_key())` and layer-parallel
+//!   scoring on the in-repo thread pool;
+//! * [`PreserveSpec`] + [`quantize_checkpoint`] — the legacy one-shot API,
+//!   now thin wrappers over the pipeline;
+//! * [`sweep`] — the full battle: methods × budgets × tasks, score reuse by
+//!   pipeline construction, result caching and report emission;
 //! * [`server`] — dynamic-batching inference server over the deployed
 //!   packed-int4 model (the data-free deployment story of §I).
 
+pub mod pipeline;
 pub mod server;
 pub mod sweep;
+
+pub use pipeline::{PipelineBuilder, QuantizePipeline};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::calib::CalibStats;
 use crate::data::{load_split, Dataset};
@@ -26,10 +33,9 @@ use crate::model::{ModelConfig, Params};
 use crate::quant::{fake_quant, QuantConfig};
 use crate::runtime::{Executable, Runtime};
 use crate::saliency::{
-    awq_score, magnitude_score, random_score, select_topk, spqr_score, svd_score, Method,
-    SalientSet, SvdScoreMode,
+    AwqScorer, MagnitudeScorer, Method, RandomScorer, SalientSet, ScoreCtx, Scorer, ScorerParams,
+    SpqrScorer, SvdScoreMode, SvdScorer,
 };
-use crate::util::timer;
 
 /// Typed access to an artifacts directory produced by `make artifacts`.
 pub struct Artifacts {
@@ -87,6 +93,15 @@ impl Artifacts {
             .unwrap_or(128)
     }
 
+    /// Scorer hyperparameters as pinned by this artifacts manifest.
+    pub fn scorer_params(&self) -> ScorerParams {
+        ScorerParams {
+            svd_rank: self.svd_rank(),
+            spqr_damp: self.spqr_damp(),
+            ..Default::default()
+        }
+    }
+
     /// FP32 checkpoint of one task.
     pub fn checkpoint(&self, task: &str) -> Result<Params> {
         let p = self.root.join("ckpt").join(format!("{task}.qtz"));
@@ -108,18 +123,22 @@ impl Artifacts {
     }
 
     /// Paper reference numbers for EXPERIMENTS.md (fp32 ceiling, q4 floor).
-    pub fn paper_refs(&self, task: &str) -> (f64, f64) {
-        let get = |k: &str| {
+    /// Errors when the manifest lacks them — callers decide whether that is
+    /// fatal; nothing is fabricated.
+    pub fn paper_refs(&self, task: &str) -> Result<(f64, f64)> {
+        let get = |k: &str| -> Result<f64> {
             self.manifest
                 .at(&["tasks", task, k])
                 .and_then(|v| v.as_f64())
-                .unwrap_or(0.0)
+                .with_context(|| format!("manifest missing tasks.{task}.{k}"))
         };
-        (get("paper_fp32"), get("paper_q4_floor"))
+        Ok((get("paper_fp32")?, get("paper_q4_floor")?))
     }
 }
 
-/// One quantization configuration of the paper's scheme.
+/// One quantization configuration of the paper's scheme (legacy shape,
+/// kept for ablations and tests; [`PreserveSpec::scorer`] lifts it into
+/// the open [`Scorer`] world).
 #[derive(Debug, Clone, Copy)]
 pub struct PreserveSpec {
     pub method: Method,
@@ -149,62 +168,58 @@ impl Default for PreserveSpec {
     }
 }
 
+impl PreserveSpec {
+    /// The spec's knobs in registry form.
+    pub fn scorer_params(&self) -> ScorerParams {
+        ScorerParams {
+            svd_rank: self.svd_rank,
+            svd_mode: self.svd_mode,
+            spqr_damp: self.spqr_damp,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+
+    /// Materialize the spec's method as a [`Scorer`].
+    pub fn scorer(&self) -> Box<dyn Scorer> {
+        match self.method {
+            Method::Random => Box::new(RandomScorer::new(self.seed)),
+            Method::Magnitude => Box::new(MagnitudeScorer),
+            Method::Awq => Box::new(AwqScorer),
+            Method::Spqr => Box::new(SpqrScorer::new(self.spqr_damp)),
+            Method::Svd => Box::new(SvdScorer::new(self.svd_rank, self.svd_mode)),
+        }
+    }
+}
+
 /// Score one layer under `spec` (the expensive, k-independent part).
+/// Thin wrapper over [`Scorer::score`]; new code should hold a scorer.
 pub fn score_layer(
     name: &str,
     w: &Matrix,
     spec: &PreserveSpec,
     calib: Option<&CalibStats>,
 ) -> Result<Matrix> {
-    let score = match spec.method {
-        Method::Random => {
-            // per-layer decorrelated stream, deterministic in (seed, name)
-            let tag = name.bytes().fold(spec.seed, |acc, b| {
-                acc.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
-            });
-            random_score(w.rows(), w.cols(), tag)
-        }
-        Method::Magnitude => magnitude_score(w),
-        Method::Awq => {
-            let stats = calib
-                .with_context(|| format!("AWQ needs calibration stats (layer {name})"))?
-                .layer(name)?;
-            awq_score(w, &stats.col_norms())
-        }
-        Method::Spqr => {
-            let stats = calib
-                .with_context(|| format!("SpQR needs calibration stats (layer {name})"))?
-                .layer(name)?;
-            spqr_score(w, &stats.xtx, stats.rows.max(1), spec.spqr_damp)
-        }
-        Method::Svd => svd_score(w, spec.svd_rank, spec.svd_mode),
-    };
-    Ok(score)
+    spec.scorer().score(name, w, &ScoreCtx { calib })
 }
 
 /// Apply the paper's scheme to every quantizable layer of `ckpt`:
-/// score → top-k → `W ≈ S + Q` (simulated). Returns the substituted
-/// parameter set plus the per-layer selections (for overlap analysis).
+/// score → top-k → `W ≈ S + Q` (simulated). Thin wrapper that builds a
+/// one-shot [`QuantizePipeline`]; callers sweeping budgets or methods
+/// should hold a pipeline instead to get score-map reuse.
 pub fn quantize_checkpoint(
     cfg: &ModelConfig,
     ckpt: &Params,
     spec: &PreserveSpec,
     calib: Option<&CalibStats>,
 ) -> Result<(Params, BTreeMap<String, SalientSet>)> {
-    if spec.method.needs_calibration() && calib.is_none() {
-        bail!("{} requires calibration data", spec.method);
-    }
-    let mut subs = BTreeMap::new();
-    let mut sels = BTreeMap::new();
-    for name in cfg.quantizable_names() {
-        let w = ckpt.get(&name)?;
-        let score = timer::scope("quantize.score", || score_layer(&name, w, spec, calib))?;
-        let sel = timer::scope("quantize.topk", || select_topk(&score, spec.k_per_layer));
-        let wq = timer::scope("quantize.apply", || preserve(w, &sel, &spec.qcfg));
-        subs.insert(name.clone(), wq);
-        sels.insert(name, sel);
-    }
-    Ok((ckpt.with_weights(&subs)?, sels))
+    let mut pipe = QuantizePipeline::for_checkpoint(cfg, ckpt)
+        .scorer(spec.scorer())
+        .budget(spec.k_per_layer)
+        .quant(spec.qcfg)
+        .calib(calib)
+        .build()?;
+    pipe.run()
 }
 
 /// `W ≈ S + Q` on one matrix: fake-quantize everything, then restore the
@@ -221,6 +236,7 @@ pub fn preserve(w: &Matrix, sel: &SalientSet, qcfg: &QuantConfig) -> Matrix {
 mod tests {
     use super::*;
     use crate::model::params::testing::synthetic_params;
+    use crate::saliency::{magnitude_score, select_topk};
 
     fn tiny_cfg() -> ModelConfig {
         ModelConfig {
@@ -269,6 +285,25 @@ mod tests {
     }
 
     #[test]
+    fn wrapper_matches_explicit_pipeline() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 12);
+        let spec = PreserveSpec { method: Method::Svd, k_per_layer: 16, ..Default::default() };
+        let (qa, sa) = quantize_checkpoint(&cfg, &p, &spec, None).unwrap();
+        let mut pipe = QuantizePipeline::for_checkpoint(&cfg, &p)
+            .scorer(spec.scorer())
+            .budget(spec.k_per_layer)
+            .quant(spec.qcfg)
+            .build()
+            .unwrap();
+        let (qb, sb) = pipe.run().unwrap();
+        for name in cfg.quantizable_names() {
+            assert_eq!(sa[&name].indices, sb[&name].indices, "{name}");
+            assert!(qa.get(&name).unwrap().approx_eq(qb.get(&name).unwrap(), 0.0));
+        }
+    }
+
+    #[test]
     fn data_aware_methods_require_calib() {
         let cfg = tiny_cfg();
         let p = synthetic_params(&cfg, 7);
@@ -299,5 +334,23 @@ mod tests {
         let w = p.get("layer0.wf1").unwrap();
         let expect = fake_quant(w, &QuantConfig::default());
         assert!(qp.get("layer0.wf1").unwrap().approx_eq(&expect, 0.0));
+    }
+
+    #[test]
+    fn paper_refs_error_instead_of_fabricating() {
+        let manifest = Json::parse(
+            r#"{"model":{"vocab_size":64,"max_len":8,"hidden":16,"layers":1,
+                "heads":2,"ffn":32,"n_classes":2,"export_batch":4},
+                "tasks":{"mrpc":{"paper_fp32":0.86,"paper_q4_floor":0.68},
+                         "rte":{}}}"#,
+        )
+        .unwrap();
+        let model_cfg = ModelConfig::from_json(manifest.get("model").unwrap()).unwrap();
+        let art = Artifacts { root: PathBuf::from("/nonexistent"), manifest, model_cfg };
+        let (f, q) = art.paper_refs("mrpc").unwrap();
+        assert!((f - 0.86).abs() < 1e-12 && (q - 0.68).abs() < 1e-12);
+        let err = art.paper_refs("rte").unwrap_err().to_string();
+        assert!(err.contains("paper_fp32"), "{err}");
+        assert!(art.paper_refs("qnli").is_err());
     }
 }

@@ -1,0 +1,424 @@
+//! The staged quantization pipeline: one object that owns scoring,
+//! score-map memoization, selection and requantization for a checkpoint.
+//!
+//! ```text
+//! QuantizePipeline::for_checkpoint(cfg, ckpt)   // builder
+//!     .scorer(resolve_scorer("svd", &params)?)  // any registry scorer
+//!     .budget(256)
+//!     .quant(QuantConfig::default())
+//!     .calib(None)                              // data-aware scorers only
+//!     .threads(0)                               // 0 = available parallelism
+//!     .build()?                                 // validates calib needs
+//!     .run()?                                   // -> (Params, selections)
+//! ```
+//!
+//! Two properties are guaranteed *by construction* (they used to be sweep-
+//! script discipline):
+//!
+//! * **score-map memoization** — maps are cached keyed by
+//!   `(layer, scorer.cache_key())`, so sweeping budgets k, or switching
+//!   scorers back and forth with [`QuantizePipeline::set_scorer`], never
+//!   recomputes a map (scoring is the k-independent, expensive stage);
+//! * **layer parallelism** — fresh maps are computed in parallel on the
+//!   in-repo [`ThreadPool`]; results are deterministic regardless of thread
+//!   count because each layer's score depends only on `(layer, w, ctx)`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::calib::CalibStats;
+use crate::linalg::Matrix;
+use crate::model::{ModelConfig, Params};
+use crate::quant::QuantConfig;
+use crate::saliency::{select_topk, SalientSet, ScoreCtx, Scorer, SvdScorer};
+use crate::util::{timer, ThreadPool};
+
+use super::preserve;
+
+/// Staged builder for [`QuantizePipeline`]; every stage has a paper-default.
+/// `build()` resolves the thread count but spawns no resident workers —
+/// scoring batches run on scoped [`ThreadPool`] workers per call.
+pub struct PipelineBuilder<'a> {
+    cfg: &'a ModelConfig,
+    ckpt: &'a Params,
+    scorer: Option<Box<dyn Scorer>>,
+    budget: usize,
+    qcfg: QuantConfig,
+    calib: Option<&'a CalibStats>,
+    threads: usize,
+}
+
+impl<'a> PipelineBuilder<'a> {
+    /// Selection heuristic (default: the paper's SVD scorer).
+    pub fn scorer(mut self, scorer: Box<dyn Scorer>) -> Self {
+        self.scorer = Some(scorer);
+        self
+    }
+
+    /// Protection budget k per linear layer (default: 256, paper §IV-B).
+    pub fn budget(mut self, k: usize) -> Self {
+        self.budget = k;
+        self
+    }
+
+    /// Residual quantization config (default: int4, 2.5σ clip, per-tensor).
+    pub fn quant(mut self, qcfg: QuantConfig) -> Self {
+        self.qcfg = qcfg;
+        self
+    }
+
+    /// Calibration statistics for data-aware scorers.
+    pub fn calib(mut self, calib: Option<&'a CalibStats>) -> Self {
+        self.calib = calib;
+        self
+    }
+
+    /// Scoring thread count; `0` = available parallelism (default).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Validate the configuration and materialize the pipeline (resolves
+    /// the scoring thread count; the score cache starts empty).
+    pub fn build(self) -> Result<QuantizePipeline<'a>> {
+        let scorer = self.scorer.unwrap_or_else(|| Box::new(SvdScorer::default()));
+        if scorer.needs_calibration() && self.calib.is_none() {
+            bail!("scorer {} requires calibration data", scorer.name());
+        }
+        Ok(QuantizePipeline {
+            cfg: self.cfg,
+            ckpt: self.ckpt,
+            calib: self.calib,
+            scorer,
+            qcfg: self.qcfg,
+            budget: self.budget,
+            threads: ThreadPool::effective_threads(self.threads),
+            cache: BTreeMap::new(),
+        })
+    }
+}
+
+/// The staged quantization pipeline (see module docs). Owns the score-map
+/// cache and the resolved scoring-thread count (scoped workers spawn per
+/// scoring batch — no resident threads); borrows config, checkpoint and
+/// calibration stats from the caller.
+pub struct QuantizePipeline<'a> {
+    cfg: &'a ModelConfig,
+    ckpt: &'a Params,
+    calib: Option<&'a CalibStats>,
+    scorer: Box<dyn Scorer>,
+    qcfg: QuantConfig,
+    budget: usize,
+    /// resolved scoring-thread count (scoped workers, spawned per batch —
+    /// holding resident pool workers here would leave them idle)
+    threads: usize,
+    /// (layer name, scorer cache key) → score map
+    cache: BTreeMap<(String, String), Matrix>,
+}
+
+impl<'a> QuantizePipeline<'a> {
+    /// Start building a pipeline over `ckpt`'s quantizable layers.
+    pub fn for_checkpoint(cfg: &'a ModelConfig, ckpt: &'a Params) -> PipelineBuilder<'a> {
+        PipelineBuilder {
+            cfg,
+            ckpt,
+            scorer: None,
+            budget: 256,
+            qcfg: QuantConfig::default(),
+            calib: None,
+            threads: 0,
+        }
+    }
+
+    /// The active scorer.
+    pub fn scorer(&self) -> &dyn Scorer {
+        self.scorer.as_ref()
+    }
+
+    /// Swap the selection heuristic. The score cache is *kept* — maps are
+    /// keyed by `cache_key()`, so switching back costs nothing.
+    pub fn set_scorer(&mut self, scorer: Box<dyn Scorer>) -> Result<()> {
+        if scorer.needs_calibration() && self.calib.is_none() {
+            bail!("scorer {} requires calibration data", scorer.name());
+        }
+        self.scorer = scorer;
+        Ok(())
+    }
+
+    /// Scoring threads actually in use.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Default protection budget (`run()` uses it).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Number of memoized score maps (all scorers).
+    pub fn cached_maps(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Drop every memoized score map (benchmarks; normally never needed).
+    pub fn clear_score_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Make sure every quantizable layer has a memoized score map for the
+    /// active scorer; missing maps are computed in parallel on the pool.
+    /// Returns how many maps were freshly computed (0 = full cache hit).
+    pub fn ensure_scores(&mut self) -> Result<usize> {
+        let key = self.scorer.cache_key();
+        let missing: Vec<String> = self
+            .cfg
+            .quantizable_names()
+            .into_iter()
+            .filter(|n| !self.cache.contains_key(&(n.clone(), key.clone())))
+            .collect();
+        if missing.is_empty() {
+            return Ok(0);
+        }
+        let fresh = missing.len();
+        let ckpt = self.ckpt;
+        let ctx = ScoreCtx { calib: self.calib };
+        let scorer = self.scorer.as_ref();
+        let threads = self.threads;
+        let scored: Vec<Result<(String, Matrix)>> = timer::scope("pipeline.score", || {
+            ThreadPool::scoped_map(threads, missing, |name| {
+                let w = ckpt.get(&name)?;
+                let s = scorer.score(&name, w, &ctx)?;
+                Ok((name, s))
+            })
+        });
+        for r in scored {
+            let (name, s) = r?;
+            self.cache.insert((name, key.clone()), s);
+        }
+        Ok(fresh)
+    }
+
+    /// Memoized score map of a single layer under the active scorer.
+    pub fn score(&mut self, layer: &str) -> Result<&Matrix> {
+        let key = (layer.to_string(), self.scorer.cache_key());
+        if !self.cache.contains_key(&key) {
+            let ckpt = self.ckpt;
+            let ctx = ScoreCtx { calib: self.calib };
+            let w = ckpt.get(layer)?;
+            let scorer = self.scorer.as_ref();
+            let s = timer::scope("pipeline.score", || scorer.score(layer, w, &ctx))?;
+            self.cache.insert(key.clone(), s);
+        }
+        Ok(self.cache.get(&key).expect("map just ensured"))
+    }
+
+    /// Top-k selection for every quantizable layer at budget `k` (scores
+    /// come from the cache; only the cheap top-k epilogue runs per call).
+    pub fn select(&mut self, k: usize) -> Result<BTreeMap<String, SalientSet>> {
+        self.ensure_scores()?;
+        let key = self.scorer.cache_key();
+        let mut sels = BTreeMap::new();
+        for name in self.cfg.quantizable_names() {
+            let score = self
+                .cache
+                .get(&(name.clone(), key.clone()))
+                .expect("ensure_scores populated every quantizable layer");
+            let sel = timer::scope("pipeline.topk", || select_topk(score, k));
+            sels.insert(name, sel);
+        }
+        Ok(sels)
+    }
+
+    /// Apply `W ≈ S + Q` for the given selections (no scoring involved).
+    pub fn quantize_with(&self, sels: &BTreeMap<String, SalientSet>) -> Result<Params> {
+        let mut subs = BTreeMap::new();
+        for (name, sel) in sels {
+            let w = self.ckpt.get(name)?;
+            let wq = timer::scope("pipeline.apply", || preserve(w, sel, &self.qcfg));
+            subs.insert(name.clone(), wq);
+        }
+        self.ckpt.with_weights(&subs)
+    }
+
+    /// Full pass at budget `k`: score (cached) → top-k → requantize.
+    pub fn run_with_budget(
+        &mut self,
+        k: usize,
+    ) -> Result<(Params, BTreeMap<String, SalientSet>)> {
+        let sels = self.select(k)?;
+        let qp = self.quantize_with(&sels)?;
+        Ok((qp, sels))
+    }
+
+    /// Full pass at the builder-configured budget.
+    pub fn run(&mut self) -> Result<(Params, BTreeMap<String, SalientSet>)> {
+        let k = self.budget;
+        self.run_with_budget(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::testing::synthetic_params;
+    use crate::saliency::{resolve_scorer, MagnitudeScorer, ScorerParams};
+    use crate::util::proptest::check;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 64,
+            max_len: 8,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            n_classes: 2,
+            export_batch: 4,
+        }
+    }
+
+    #[test]
+    fn run_covers_all_layers_and_memoizes() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 3);
+        let mut pipe = QuantizePipeline::for_checkpoint(&cfg, &p)
+            .budget(4)
+            .build()
+            .unwrap();
+        let (qp, sels) = pipe.run().unwrap();
+        assert_eq!(sels.len(), cfg.quantizable_names().len());
+        assert_eq!(pipe.cached_maps(), cfg.quantizable_names().len());
+        for name in cfg.quantizable_names() {
+            assert_eq!(sels[&name].k(), 4);
+            assert!(!qp.get(&name).unwrap().approx_eq(p.get(&name).unwrap(), 1e-7));
+        }
+        // second budget reuses every map
+        assert_eq!(pipe.ensure_scores().unwrap(), 0);
+        let (_, sels8) = pipe.run_with_budget(8).unwrap();
+        for name in cfg.quantizable_names() {
+            // deterministic top-k nests: k=4 selection ⊂ k=8 selection
+            assert!(sels[&name]
+                .indices
+                .iter()
+                .all(|i| sels8[&name].indices.contains(i)));
+        }
+    }
+
+    #[test]
+    fn prop_cached_and_fresh_score_maps_identical() {
+        let cfg = tiny_cfg();
+        check(
+            "pipeline cache returns bit-identical score maps",
+            |rng| rng.range(0, 1_000_000),
+            |seed| {
+                let p = synthetic_params(&cfg, *seed as u64);
+                let mut warm = QuantizePipeline::for_checkpoint(&cfg, &p).build().unwrap();
+                warm.ensure_scores().map_err(|e| e.to_string())?;
+                let first: Vec<Matrix> = cfg
+                    .quantizable_names()
+                    .iter()
+                    .map(|n| warm.score(n).unwrap().clone())
+                    .collect();
+                // cache hit path
+                if warm.ensure_scores().map_err(|e| e.to_string())? != 0 {
+                    return Err("second ensure_scores recomputed maps".into());
+                }
+                // fresh pipeline, same inputs
+                let mut cold = QuantizePipeline::for_checkpoint(&cfg, &p).build().unwrap();
+                for (i, n) in cfg.quantizable_names().iter().enumerate() {
+                    let cached = warm.score(n).map_err(|e| e.to_string())?;
+                    if !cached.approx_eq(&first[i], 0.0) {
+                        return Err(format!("cached map for {n} drifted"));
+                    }
+                    let fresh = cold.score(n).map_err(|e| e.to_string())?;
+                    if !fresh.approx_eq(&first[i], 0.0) {
+                        return Err(format!("fresh map for {n} differs from cached"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn parallel_scoring_is_deterministic() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 11);
+        let mut serial = QuantizePipeline::for_checkpoint(&cfg, &p)
+            .threads(1)
+            .build()
+            .unwrap();
+        let mut parallel = QuantizePipeline::for_checkpoint(&cfg, &p)
+            .threads(4)
+            .build()
+            .unwrap();
+        assert_eq!(serial.threads(), 1);
+        assert_eq!(parallel.threads(), 4);
+        serial.ensure_scores().unwrap();
+        parallel.ensure_scores().unwrap();
+        for name in cfg.quantizable_names() {
+            let a = serial.score(&name).unwrap().clone();
+            let b = parallel.score(&name).unwrap();
+            assert!(a.approx_eq(b, 0.0), "thread count changed scores for {name}");
+        }
+    }
+
+    #[test]
+    fn scorer_swap_keeps_cache_per_key() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 5);
+        let params = ScorerParams::default();
+        let mut pipe = QuantizePipeline::for_checkpoint(&cfg, &p)
+            .scorer(resolve_scorer("svd", &params).unwrap())
+            .build()
+            .unwrap();
+        let n = cfg.quantizable_names().len();
+        assert_eq!(pipe.ensure_scores().unwrap(), n);
+        pipe.set_scorer(Box::new(MagnitudeScorer)).unwrap();
+        assert_eq!(pipe.ensure_scores().unwrap(), n);
+        assert_eq!(pipe.cached_maps(), 2 * n);
+        // switching back is free
+        pipe.set_scorer(resolve_scorer("svd", &params).unwrap()).unwrap();
+        assert_eq!(pipe.ensure_scores().unwrap(), 0);
+        pipe.clear_score_cache();
+        assert_eq!(pipe.cached_maps(), 0);
+        assert_eq!(pipe.ensure_scores().unwrap(), n);
+    }
+
+    #[test]
+    fn data_aware_scorer_requires_calib_at_build_and_swap() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 7);
+        let params = ScorerParams::default();
+        assert!(QuantizePipeline::for_checkpoint(&cfg, &p)
+            .scorer(resolve_scorer("awq", &params).unwrap())
+            .build()
+            .is_err());
+        let mut pipe = QuantizePipeline::for_checkpoint(&cfg, &p).build().unwrap();
+        assert!(pipe.set_scorer(resolve_scorer("spqr", &params).unwrap()).is_err());
+    }
+
+    #[test]
+    fn hybrid_scorer_runs_through_pipeline() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 9);
+        let params = ScorerParams::default();
+        let mut pipe = QuantizePipeline::for_checkpoint(&cfg, &p)
+            .scorer(resolve_scorer("hybrid", &params).unwrap())
+            .budget(6)
+            .build()
+            .unwrap();
+        let (qp, sels) = pipe.run().unwrap();
+        assert_eq!(sels.len(), cfg.quantizable_names().len());
+        assert!(sels.values().all(|s| s.k() == 6));
+        // preserved entries restored exactly
+        for name in cfg.quantizable_names() {
+            let (w, wq) = (p.get(&name).unwrap(), qp.get(&name).unwrap());
+            for &flat in &sels[&name].indices {
+                assert_eq!(wq.data()[flat as usize], w.data()[flat as usize]);
+            }
+        }
+    }
+}

@@ -1,11 +1,13 @@
 //! The experiment sweep — regenerates every accuracy number in the paper's
 //! Tables I–III / Fig. 1 and the Fig. 2 overlap analysis, over the
-//! artifacts' tasks × methods × budgets grid.
+//! artifacts' tasks × scorers × budgets grid.
 //!
 //! Cost structure the scheduler exploits:
 //! * calibration (AWQ/SpQR input) is per *task* — run once, shared;
-//! * score maps are per (task, method) — computed once, reused across all
-//!   budgets k (only top-k + requantize + eval vary with k);
+//! * score maps are per (task, scorer) — the [`QuantizePipeline`] memoizes
+//!   them by `(layer, scorer.cache_key())`, so every budget k reuses them
+//!   *by construction* (only top-k + requantize + eval vary with k), and
+//!   fresh maps are scored layer-parallel on the pipeline's thread pool;
 //! * the PJRT executable is per task — compiled once, weights are call
 //!   arguments.
 //!
@@ -24,16 +26,19 @@ use crate::json::Json;
 use crate::model::Engine;
 use crate::quant::QuantConfig;
 use crate::runtime::Runtime;
-use crate::saliency::{iou, select_topk, Method, OverlapReport, SalientSet};
+use crate::saliency::{
+    record_selection_overlaps, resolve_scorer, Method, OverlapReport, ScorerParams, SelectionGrid,
+};
 use crate::util::timer::{self, Timer};
 
-use super::{preserve, score_layer, Artifacts, PreserveSpec};
+use super::{Artifacts, PreserveSpec, QuantizePipeline};
 
 /// Sweep configuration.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
     pub tasks: Vec<String>,
-    pub methods: Vec<Method>,
+    /// registry scorer names (`"svd"`, `"awq"`, ..., `"hybrid"`, ...)
+    pub methods: Vec<String>,
     pub budgets: Vec<usize>,
     pub qcfg: QuantConfig,
     pub svd_rank: usize,
@@ -42,19 +47,25 @@ pub struct SweepConfig {
     pub include_baselines: bool,
     /// where results/sweep.json lives
     pub out_dir: PathBuf,
+    /// scoring threads per task pipeline; 0 = available parallelism
+    pub threads: usize,
 }
 
 impl SweepConfig {
     pub fn paper_defaults(art: &Artifacts, out_dir: &Path) -> Self {
         Self {
             tasks: art.tasks(),
-            methods: vec![Method::Random, Method::Awq, Method::Spqr, Method::Svd],
+            methods: [Method::Random, Method::Awq, Method::Spqr, Method::Svd]
+                .iter()
+                .map(|m| m.name().to_string())
+                .collect(),
             budgets: art.budgets(),
             qcfg: QuantConfig::default(),
             svd_rank: art.svd_rank(),
             calib_samples: art.calib_samples(),
             include_baselines: true,
             out_dir: out_dir.to_path_buf(),
+            threads: 0,
         }
     }
 }
@@ -149,6 +160,20 @@ pub fn run_sweep(art: &Artifacts, rt: &Runtime, cfg: &SweepConfig) -> Result<Swe
     let mut results = SweepResults::default();
     let overall = Timer::start();
 
+    let sparams = ScorerParams {
+        svd_rank: cfg.svd_rank,
+        spqr_damp: art.spqr_damp(),
+        ..Default::default()
+    };
+    // resolve up front: validates unknown names before any work happens
+    let needs_calib = cfg
+        .methods
+        .iter()
+        .map(|m| resolve_scorer(m, &sparams).map(|s| s.needs_calibration()))
+        .collect::<Result<Vec<bool>>>()?
+        .into_iter()
+        .any(|b| b);
+
     for task in &cfg.tasks {
         println!("=== sweep: task {task} ===");
         let ckpt = art.checkpoint(task)?;
@@ -190,12 +215,10 @@ pub fn run_sweep(art: &Artifacts, rt: &Runtime, cfg: &SweepConfig) -> Result<Swe
                     total,
                     wall_s: wall,
                 });
-                let _ = k;
             }
         }
 
         // --- calibration: once per task, shared by AWQ + SpQR --------------
-        let needs_calib = cfg.methods.iter().any(|m| m.needs_calibration());
         let calib: Option<CalibStats> = if needs_calib {
             let calib_data = art.dataset(task, "calib")?;
             let engine = Engine::new(*mcfg, ckpt.clone())?;
@@ -206,75 +229,66 @@ pub fn run_sweep(art: &Artifacts, rt: &Runtime, cfg: &SweepConfig) -> Result<Swe
             None
         };
 
-        // --- score maps per method (k-independent), then all budgets ------
-        let mut selections: BTreeMap<(String, usize), BTreeMap<String, SalientSet>> =
-            BTreeMap::new();
-        for &method in &cfg.methods {
-            let spec = PreserveSpec {
-                method,
-                k_per_layer: 0,
-                qcfg: cfg.qcfg,
-                svd_rank: cfg.svd_rank,
-                spqr_damp: art.spqr_damp(),
-                ..Default::default()
-            };
-            // compute every layer's score map once
-            let mut scores = BTreeMap::new();
+        // --- one pipeline per task: score maps memoized across methods ----
+        let mut pipe = QuantizePipeline::for_checkpoint(mcfg, &ckpt)
+            .quant(cfg.qcfg)
+            .calib(calib.as_ref())
+            .threads(cfg.threads)
+            .build()?;
+        let mut selections = SelectionGrid::new();
+        for mname in &cfg.methods {
+            let scorer = resolve_scorer(mname, &sparams)?;
+            let method_key = scorer.name().to_string();
+            pipe.set_scorer(scorer)?;
             let score_t = Timer::start();
-            for name in mcfg.quantizable_names() {
-                let w = ckpt.get(&name)?;
-                scores.insert(name.clone(), score_layer(&name, w, &spec, calib.as_ref())?);
-            }
-            println!("  [{method}] scored {} layers in {:.2}s", scores.len(), score_t.elapsed_s());
+            let fresh = pipe.ensure_scores()?;
+            println!(
+                "  [{method_key}] scored {fresh} layers in {:.2}s ({} threads)",
+                score_t.elapsed_s(),
+                pipe.threads()
+            );
 
             for &k in &cfg.budgets {
-                let key = cell_key(task, method.name(), k, &cfg.qcfg);
-                // selections are needed for overlap even on cache hits
-                let mut sels = BTreeMap::new();
-                let mut subs = BTreeMap::new();
-                for (name, score) in &scores {
-                    let sel = select_topk(score, k);
-                    let w = ckpt.get(name)?;
-                    subs.insert(name.clone(), preserve(w, &sel, &cfg.qcfg));
-                    sels.insert(name.clone(), sel);
-                }
-                selections.insert((method.name().to_string(), k), sels);
-
+                let key = cell_key(task, &method_key, k, &cfg.qcfg);
+                // selections are needed for overlap even on cache hits;
+                // score maps come from the pipeline cache either way
+                let sels = pipe.select(k)?;
                 let (acc, total, wall) = if let Some(&hit) = cache.get(&key) {
                     hit
                 } else {
                     let t = Timer::start();
-                    let qp = ckpt.with_weights(&subs)?;
+                    let qp = pipe.quantize_with(&sels)?;
                     let r = eval_pjrt(&exe, mcfg, &qp, &dev)?;
                     let cell = (r.accuracy(), r.total, t.elapsed_s());
                     cache.insert(key, cell);
                     save_cache(&cache_path, &cache)?;
                     cell
                 };
-                println!("  [{method}] k={k:<5} acc {acc:.4}");
+                println!("  [{method_key}] k={k:<5} acc {acc:.4}");
                 results.cells.push(Cell {
                     task: task.clone(),
-                    method: method.name().into(),
+                    method: method_key.clone(),
                     k,
                     accuracy: acc,
                     total,
                     wall_s: wall,
                 });
+                selections.insert((method_key.clone(), k), sels);
             }
+            // nothing later revisits this scorer's maps (overlap reads the
+            // retained selections) — drop them so peak memory stays one
+            // checkpoint-sized map set regardless of how many methods run
+            pipe.clear_score_cache();
         }
 
         // --- Fig. 2 overlap: SVD vs each data-aware baseline ---------------
-        for &k in &cfg.budgets {
-            if let Some(svd_sels) = selections.get(&("svd".to_string(), k)) {
-                for base in ["awq", "spqr"] {
-                    if let Some(base_sels) = selections.get(&(base.to_string(), k)) {
-                        for (name, s) in svd_sels {
-                            results.overlap.record(base, k, iou(s, &base_sels[name]));
-                        }
-                    }
-                }
-            }
-        }
+        record_selection_overlaps(
+            &mut results.overlap,
+            &selections,
+            &cfg.budgets,
+            "svd",
+            &["awq", "spqr"],
+        );
     }
 
     println!("sweep complete in {:.1}s", overall.elapsed_s());
@@ -305,6 +319,20 @@ mod tests {
     }
 
     #[test]
+    fn cell_keys_stable_for_paper_methods_and_open_for_new_ones() {
+        // the five original methods must keep their historical key shape
+        for m in Method::ALL {
+            let key = cell_key("mrpc", m.name(), 16, &QuantConfig::default());
+            assert_eq!(key, format!("mrpc/{}/k16/b4c2.5r0", m.name()));
+        }
+        // registry-only scorers slot into the same scheme
+        assert_eq!(
+            cell_key("rte", "hybrid", 64, &QuantConfig::default()),
+            "rte/hybrid/k64/b4c2.5r0"
+        );
+    }
+
+    #[test]
     fn cache_roundtrip() {
         let dir = std::env::temp_dir().join("svdquant_sweep_cache");
         std::fs::create_dir_all(&dir).unwrap();
@@ -323,5 +351,15 @@ mod tests {
     fn missing_cache_is_empty() {
         let re = load_cache(Path::new("/nonexistent/sweep.json"));
         assert!(re.is_empty());
+    }
+
+    #[test]
+    fn paper_default_methods_unchanged() {
+        // guard: results keys for the original methods must not drift
+        let methods: Vec<String> = [Method::Random, Method::Awq, Method::Spqr, Method::Svd]
+            .iter()
+            .map(|m| m.name().to_string())
+            .collect();
+        assert_eq!(methods, vec!["random", "awq", "spqr", "svd"]);
     }
 }

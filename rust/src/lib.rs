@@ -14,10 +14,34 @@
 //! runtime that executes the AOT-compiled JAX model produced by
 //! `python/compile/aot.py`.
 //!
+//! ## The quantization API (see DESIGN.md §4)
+//!
+//! Saliency heuristics are open, not enumerated: anything implementing
+//! [`saliency::Scorer`] (score map + `needs_calibration` + `cache_key`)
+//! plugs into the whole stack. The built-ins — `random`, `magnitude`,
+//! `awq`, `spqr`, `svd`, and the composite `hybrid` — are resolved by name
+//! through [`saliency::resolve_scorer`]. Checkpoint-level work goes through
+//! the staged [`coordinator::QuantizePipeline`]:
+//!
+//! ```text
+//! QuantizePipeline::for_checkpoint(cfg, ckpt)
+//!     .scorer(resolve_scorer("svd", &params)?)
+//!     .budget(256).quant(qcfg).threads(0)
+//!     .build()?.run()?
+//! ```
+//!
+//! The pipeline memoizes score maps by `(layer, scorer.cache_key())` —
+//! budget sweeps and scorer comparisons reuse the expensive stage by
+//! construction — and scores fresh layers in parallel on the in-repo
+//! [`util::ThreadPool`]. The legacy `Method`/`PreserveSpec` surface
+//! survives as thin wrappers for results-key stability and ablations.
+//!
 //! ## Layer map (see DESIGN.md)
 //!
-//! * **L3 (this crate)** — selection, quantization, calibration, sweep
-//!   orchestration, evaluation, reporting, serving.
+//! * **L3 (this crate)** — selection ([`saliency`]: scorers + top-k),
+//!   quantization ([`quant`]), calibration ([`calib`]), the pipeline and
+//!   sweep orchestration ([`coordinator`]), evaluation ([`eval`]),
+//!   reporting ([`report`]), serving ([`coordinator::server`]).
 //! * **L2** — the JAX model, AOT-lowered once to `artifacts/hlo/*.hlo.txt`;
 //!   executed from [`runtime`]. Python never runs on the request path.
 //! * **L1** — Pallas kernels (quant-dequant, SVD score map, mixed-precision
@@ -28,7 +52,8 @@
 //! Offline-environment note: tokio/clap/serde/criterion/proptest are not
 //! available in this build sandbox, so [`util`] and [`json`] carry small
 //! in-repo replacements (thread pool, CLI parser, JSON, bench harness,
-//! property-testing generators). See DESIGN.md §7.
+//! property-testing generators), and `rust/vendor/` carries the `anyhow`
+//! shim and the `xla` stub the manifest points at. See DESIGN.md §7.
 
 pub mod calib;
 pub mod coordinator;
@@ -48,11 +73,13 @@ pub mod util;
 /// Convenience re-exports for the common pipeline.
 pub mod prelude {
     pub use crate::calib::CalibStats;
-    pub use crate::coordinator::{Artifacts, PreserveSpec};
+    pub use crate::coordinator::{Artifacts, PreserveSpec, QuantizePipeline};
     pub use crate::linalg::Matrix;
     pub use crate::model::{Engine, ModelConfig, Params};
     pub use crate::quant::{QuantConfig, QuantizedMatrix};
-    pub use crate::saliency::{Method, SalientSet};
+    pub use crate::saliency::{
+        resolve_scorer, Method, SalientSet, ScoreCtx, Scorer, ScorerParams,
+    };
     pub use crate::tensorfile::TensorFile;
 }
 

@@ -1,30 +1,36 @@
 //! `svdquant` — CLI for the SVD-based weight-preservation reproduction.
 //!
 //! Subcommands:
-//!   sweep      full battle: methods × budgets × tasks → tables + figures
-//!   quantize   one (task, method, k) cell; prints accuracy vs fp32/floor
+//!   sweep      full battle: scorers × budgets × tasks → tables + figures
+//!   quantize   one (task, scorer, k) cell; prints accuracy vs fp32/floor
 //!   overlap    Fig. 2 IoU analysis
 //!   report     re-render tables/figures from the cached sweep results
 //!   serve      dynamic-batching demo over the deployed packed-int4 model
 //!   selfcheck  engine ↔ PJRT ↔ parity-vector consistency checks
 //!   info       artifacts/manifest summary
+//!
+//! Selection heuristics are resolved through the scorer registry
+//! (`svdquant::saliency::resolve_scorer`), so `--method` accepts any
+//! registered name — the paper's five plus composites like `hybrid`.
 
-use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use svdquant::calib::CalibStats;
 use svdquant::coordinator::server::{serve_trace, ServerConfig};
-use svdquant::coordinator::sweep::{run_sweep, SweepConfig};
-use svdquant::coordinator::{quantize_checkpoint, Artifacts, PreserveSpec};
+use svdquant::coordinator::sweep::{run_sweep, SweepConfig, SweepResults};
+use svdquant::coordinator::{quantize_checkpoint, Artifacts, PreserveSpec, QuantizePipeline};
 use svdquant::data::TraceGenerator;
 use svdquant::eval::{eval_engine, eval_pjrt, eval_quantized};
 use svdquant::model::{Engine, QuantizedModel};
 use svdquant::quant::QuantConfig;
 use svdquant::report;
 use svdquant::runtime::Runtime;
-use svdquant::saliency::Method;
+use svdquant::saliency::{
+    available_scorers, record_selection_overlaps, resolve_scorer, Method, ScorerParams,
+    SelectionGrid,
+};
 use svdquant::tensorfile::TensorFile;
 use svdquant::util::cli::Parser;
 use svdquant::util::timer;
@@ -68,18 +74,24 @@ fn print_help() {
          commands:\n\
          \x20 sweep      reproduce Tables I-III + Figs 1-2 (resumable)\n\
          \x20 ablate     design-choice ablations: rank r, bits, clip\n\
-         \x20 quantize   quantize one (task, method, k) and evaluate\n\
+         \x20 quantize   quantize one (task, scorer, k) and evaluate\n\
          \x20 overlap    Fig.2 IoU of SVD vs AWQ/SpQR selections\n\
          \x20 report     re-render report from cached sweep results\n\
          \x20 serve      batching inference demo on packed int4 weights\n\
          \x20 selfcheck  numerics: rust engine vs PJRT vs parity vectors\n\
          \x20 info       artifacts summary\n\n\
-         run `svdquant <command> --help` for flags"
+         scorers: {}\n\
+         run `svdquant <command> --help` for flags",
+        available_scorers().join("|")
     );
 }
 
 fn artifacts_flag(p: Parser) -> Parser {
     p.flag("artifacts", Some("artifacts"), "artifacts directory (make artifacts)")
+}
+
+fn threads_flag(p: Parser) -> Parser {
+    p.flag("threads", Some("0"), "scoring threads (0 = available parallelism)")
 }
 
 fn cmd_info(rest: &[String]) -> Result<()> {
@@ -90,23 +102,32 @@ fn cmd_info(rest: &[String]) -> Result<()> {
     println!("model: {:?}", art.model_cfg);
     println!("params: {}", art.model_cfg.param_count());
     println!("budgets: {:?}", art.budgets());
+    println!("scorers: {}", available_scorers().join(", "));
     for task in art.tasks() {
         let stats = art.manifest.at(&["tasks", &task, "stats"]);
         let dev = stats
             .and_then(|s| s.get("dev_acc"))
             .and_then(|v| v.as_f64())
             .unwrap_or(f64::NAN);
-        let (pf, pq) = art.paper_refs(&task);
-        println!("  task {task}: trained dev_acc {dev:.4} (paper fp32 {pf:.4}, q4 floor {pq:.4})");
+        match art.paper_refs(&task) {
+            Ok((pf, pq)) => println!(
+                "  task {task}: trained dev_acc {dev:.4} (paper fp32 {pf:.4}, q4 floor {pq:.4})"
+            ),
+            Err(e) => println!("  task {task}: trained dev_acc {dev:.4} (no paper refs: {e})"),
+        }
     }
     Ok(())
 }
 
 fn cmd_sweep(rest: &[String]) -> Result<()> {
-    let p = artifacts_flag(Parser::new("sweep", "full reproduction sweep"))
+    let p = threads_flag(artifacts_flag(Parser::new("sweep", "full reproduction sweep")))
         .flag("out", Some("results"), "output directory")
         .flag("tasks", None, "comma-separated tasks (default: all)")
-        .flag("methods", None, "comma-separated methods (default: random,awq,spqr,svd)")
+        .flag(
+            "methods",
+            None,
+            "comma-separated scorers (default: random,awq,spqr,svd; any registry name works)",
+        )
         .flag("budgets", None, "comma-separated k values (default: manifest)")
         .flag("bits", Some("4"), "residual bit width")
         .flag("clip", Some("2.5"), "clip threshold in sigmas; 'none' disables")
@@ -121,11 +142,11 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         cfg.tasks = a.list("tasks");
     }
     if !a.list("methods").is_empty() {
-        cfg.methods = a
-            .list("methods")
-            .iter()
-            .map(|m| Method::parse(m))
-            .collect::<Result<_>>()?;
+        // validate against the registry before any heavy work
+        for m in a.list("methods") {
+            resolve_scorer(&m, &art.scorer_params())?;
+        }
+        cfg.methods = a.list("methods");
     }
     if !a.list("budgets").is_empty() {
         cfg.budgets = a
@@ -135,6 +156,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
             .collect::<Result<_>>()?;
     }
     cfg.qcfg = quant_cfg_from_args(&a)?;
+    cfg.threads = a.usize("threads")?;
     let res = run_sweep(&art, &rt, &cfg)?;
     report::write_report(&art, &res, &cfg.budgets, &out)?;
     if a.bool("timers") {
@@ -246,10 +268,10 @@ fn quant_cfg_from_args(a: &svdquant::util::cli::Args) -> Result<QuantConfig> {
 fn load_calib_if_needed(
     art: &Artifacts,
     task: &str,
-    method: Method,
+    needed: bool,
     n: usize,
 ) -> Result<Option<CalibStats>> {
-    if !method.needs_calibration() {
+    if !needed {
         return Ok(None);
     }
     let ckpt = art.checkpoint(task)?;
@@ -259,9 +281,9 @@ fn load_calib_if_needed(
 }
 
 fn cmd_quantize(rest: &[String]) -> Result<()> {
-    let p = artifacts_flag(Parser::new("quantize", "one quantization cell"))
+    let p = threads_flag(artifacts_flag(Parser::new("quantize", "one quantization cell")))
         .flag("task", Some("mrpc"), "task name")
-        .flag("method", Some("svd"), "random|magnitude|awq|spqr|svd")
+        .flag("method", Some("svd"), "scorer name (see `svdquant info` for the registry)")
         .flag("k", Some("256"), "protection budget per layer")
         .flag("bits", Some("4"), "residual bit width")
         .flag("clip", Some("2.5"), "clip sigmas or 'none'")
@@ -272,24 +294,31 @@ fn cmd_quantize(rest: &[String]) -> Result<()> {
     let a = p.parse(rest)?;
     let art = Artifacts::open(a.str("artifacts")?)?;
     let task = a.str("task")?;
-    let method = Method::parse(a.str("method")?)?;
-    let spec = PreserveSpec {
-        method,
-        k_per_layer: a.usize("k")?,
-        qcfg: quant_cfg_from_args(&a)?,
+    let sparams = ScorerParams {
         svd_rank: a.usize("rank")?,
         spqr_damp: art.spqr_damp(),
         ..Default::default()
     };
+    let scorer = resolve_scorer(a.str("method")?, &sparams)?;
+    let method = scorer.name().to_string();
     let ckpt = art.checkpoint(task)?;
-    let calib = load_calib_if_needed(&art, task, method, art.calib_samples())?;
+    let calib =
+        load_calib_if_needed(&art, task, scorer.needs_calibration(), art.calib_samples())?;
     let t = timer::Timer::start();
-    let (qp, sels) = quantize_checkpoint(&art.model_cfg, &ckpt, &spec, calib.as_ref())?;
+    let mut pipe = QuantizePipeline::for_checkpoint(&art.model_cfg, &ckpt)
+        .scorer(scorer)
+        .budget(a.usize("k")?)
+        .quant(quant_cfg_from_args(&a)?)
+        .calib(calib.as_ref())
+        .threads(a.usize("threads")?)
+        .build()?;
+    let (qp, sels) = pipe.run()?;
     println!(
-        "quantized {} layers (k={} each) with {} in {:.2}s",
+        "quantized {} layers (k={} each) with {} on {} threads in {:.2}s",
         sels.len(),
-        spec.k_per_layer,
+        pipe.budget(),
         method,
+        pipe.threads(),
         t.elapsed_s()
     );
     let dev = art.dataset(task, "dev")?;
@@ -310,7 +339,7 @@ fn cmd_quantize(rest: &[String]) -> Result<()> {
     };
     println!(
         "{task}/{method}/k={}: accuracy {acc:.4} (fp32 {fp32:.4}, gap {:+.4})",
-        spec.k_per_layer,
+        pipe.budget(),
         acc - fp32
     );
     if let Some(path) = a.get("save") {
@@ -325,7 +354,7 @@ fn cmd_quantize(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_overlap(rest: &[String]) -> Result<()> {
-    let p = artifacts_flag(Parser::new("overlap", "Fig.2 IoU analysis"))
+    let p = threads_flag(artifacts_flag(Parser::new("overlap", "Fig.2 IoU analysis")))
         .flag("task", Some("mrpc"), "task name")
         .flag("budgets", None, "comma-separated k values (default: manifest)");
     let a = p.parse(rest)?;
@@ -340,31 +369,23 @@ fn cmd_overlap(rest: &[String]) -> Result<()> {
             .collect::<Result<_>>()?
     };
     let ckpt = art.checkpoint(task)?;
-    let calib = load_calib_if_needed(&art, task, Method::Spqr, art.calib_samples())?;
-    let mut results = svdquant::coordinator::sweep::SweepResults::default();
-    use svdquant::saliency::{iou, select_topk};
-    // score maps once per method
-    let mut scores: BTreeMap<&str, BTreeMap<String, svdquant::linalg::Matrix>> = BTreeMap::new();
-    for (mname, method) in [("svd", Method::Svd), ("awq", Method::Awq), ("spqr", Method::Spqr)] {
-        let spec = PreserveSpec { method, spqr_damp: art.spqr_damp(), ..Default::default() };
-        let mut per_layer = BTreeMap::new();
-        for name in art.model_cfg.quantizable_names() {
-            per_layer.insert(
-                name.clone(),
-                svdquant::coordinator::score_layer(&name, ckpt.get(&name)?, &spec, calib.as_ref())?,
-            );
-        }
-        scores.insert(mname, per_layer);
-    }
-    for &k in &budgets {
-        for base in ["awq", "spqr"] {
-            for name in art.model_cfg.quantizable_names() {
-                let s_svd = select_topk(&scores["svd"][&name], k);
-                let s_base = select_topk(&scores[base][&name], k);
-                results.overlap.record(base, k, iou(&s_svd, &s_base));
-            }
+    // AWQ + SpQR both read the same stats; collect once
+    let calib = load_calib_if_needed(&art, task, true, art.calib_samples())?;
+    let sparams = art.scorer_params();
+    // one pipeline: score maps computed once per scorer, top-k per budget
+    let mut pipe = QuantizePipeline::for_checkpoint(&art.model_cfg, &ckpt)
+        .calib(calib.as_ref())
+        .threads(a.usize("threads")?)
+        .build()?;
+    let mut selections = SelectionGrid::new();
+    for mname in ["svd", "awq", "spqr"] {
+        pipe.set_scorer(resolve_scorer(mname, &sparams)?)?;
+        for &k in &budgets {
+            selections.insert((mname.to_string(), k), pipe.select(k)?);
         }
     }
+    let mut results = SweepResults::default();
+    record_selection_overlaps(&mut results.overlap, &selections, &budgets, "svd", &["awq", "spqr"]);
     println!("{}", report::fig2_chart(&results));
     Ok(())
 }
@@ -380,7 +401,7 @@ fn cmd_report(rest: &[String]) -> Result<()> {
     let text = std::fs::read_to_string(&cache_path)
         .with_context(|| format!("no cached sweep at {}", cache_path.display()))?;
     let j = svdquant::json::Json::parse(&text)?;
-    let mut res = svdquant::coordinator::sweep::SweepResults::default();
+    let mut res = SweepResults::default();
     if let Some(obj) = j.as_object() {
         for (key, v) in obj {
             // key layout: task/method/kN/<quantcfg>
@@ -408,9 +429,9 @@ fn cmd_report(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(rest: &[String]) -> Result<()> {
-    let p = artifacts_flag(Parser::new("serve", "batching inference demo"))
+    let p = threads_flag(artifacts_flag(Parser::new("serve", "batching inference demo")))
         .flag("task", Some("mrpc"), "task name")
-        .flag("method", Some("svd"), "selection heuristic")
+        .flag("method", Some("svd"), "selection scorer")
         .flag("k", Some("256"), "protection budget")
         .flag("requests", Some("200"), "trace length")
         .flag("rate", Some("50"), "arrival rate (req/s)")
@@ -420,17 +441,22 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let a = p.parse(rest)?;
     let art = Artifacts::open(a.str("artifacts")?)?;
     let task = a.str("task")?;
-    let method = Method::parse(a.str("method")?)?;
-    let spec = PreserveSpec {
-        method,
-        k_per_layer: a.usize("k")?,
-        spqr_damp: art.spqr_damp(),
-        ..Default::default()
-    };
+    let scorer = resolve_scorer(a.str("method")?, &art.scorer_params())?;
     let ckpt = art.checkpoint(task)?;
-    let calib = load_calib_if_needed(&art, task, method, art.calib_samples())?;
-    let (_, sels) = quantize_checkpoint(&art.model_cfg, &ckpt, &spec, calib.as_ref())?;
-    let qm = QuantizedModel::build(art.model_cfg, ckpt, &spec.qcfg, &sels)?;
+    let calib =
+        load_calib_if_needed(&art, task, scorer.needs_calibration(), art.calib_samples())?;
+    let qcfg = QuantConfig::default();
+    let sels = {
+        let mut pipe = QuantizePipeline::for_checkpoint(&art.model_cfg, &ckpt)
+            .scorer(scorer)
+            .budget(a.usize("k")?)
+            .quant(qcfg)
+            .calib(calib.as_ref())
+            .threads(a.usize("threads")?)
+            .build()?;
+        pipe.select(pipe.budget())?
+    };
+    let qm = QuantizedModel::build(art.model_cfg, ckpt, &qcfg, &sels)?;
     let (qbytes, dbytes) = qm.quantized_bytes();
     println!(
         "deployed model: quantized weights {} vs dense {} ({:.2}x smaller)",

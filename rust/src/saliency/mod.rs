@@ -1,30 +1,47 @@
 //! Saliency scoring + selection (paper §III-A) — the core contribution.
 //!
-//! Four heuristics decide which k entries of each weight matrix survive in
-//! FP32:
+//! Heuristics deciding which k entries of each weight matrix survive in
+//! FP32 are [`Scorer`] trait objects resolved through a string-keyed
+//! registry ([`resolve_scorer`]):
 //!
-//! | method   | score                                | needs data? |
+//! | scorer   | score                                | needs data? |
 //! |----------|--------------------------------------|-------------|
-//! | Random   | uniform                              | no          |
-//! | Magnitude| `\|w_ij\|` (sanity baseline)         | no          |
-//! | AWQ      | `\|w_ij\|·‖X_j‖₂`            (eq. 3) | yes (calib) |
-//! | SpQR     | `w_ij²/[H⁻¹]_jj`             (eq. 4) | yes (calib) |
-//! | **SVD**  | `\|(U_r Σ_r V_rᵀ)_ij\|`    (eq. 5–7) | **no**      |
+//! | random   | uniform                              | no          |
+//! | magnitude| `\|w_ij\|` (sanity baseline)         | no          |
+//! | awq      | `\|w_ij\|·‖X_j‖₂`            (eq. 3) | yes (calib) |
+//! | spqr     | `w_ij²/[H⁻¹]_jj`             (eq. 4) | yes (calib) |
+//! | **svd**  | `\|(U_r Σ_r V_rᵀ)_ij\|`    (eq. 5–7) | **no**      |
+//! | hybrid   | svd/max ⊕ magnitude/max (composite)  | no          |
 //!
-//! [`topk`] turns a score map into a [`SalientSet`]; [`overlap`] computes
-//! the Fig. 2 IoU between index sets.
+//! [`score`] holds the raw score-map kernels, [`scorer`] the trait +
+//! registry; [`topk`] turns a score map into a [`SalientSet`]; [`overlap`]
+//! computes the Fig. 2 IoU between index sets. The
+//! [`QuantizePipeline`](crate::coordinator::QuantizePipeline) drives
+//! scorers over whole checkpoints with memoization and layer parallelism.
+//!
+//! [`Method`] survives only as a parse/display shim for the paper's five
+//! original method names — results keys and old CLI strings keep working —
+//! new code should hold `Box<dyn Scorer>` resolved via [`resolve_scorer`].
 
 pub mod overlap;
 pub mod score;
+pub mod scorer;
 pub mod topk;
 
-pub use overlap::{iou, OverlapReport};
+pub use overlap::{iou, record_selection_overlaps, OverlapReport, SelectionGrid};
 pub use score::{awq_score, magnitude_score, random_score, spqr_score, svd_score, SvdScoreMode};
+pub use scorer::{
+    available_scorers, resolve as resolve_scorer, AwqScorer, HybridScorer, MagnitudeScorer,
+    RandomScorer, ScoreCtx, Scorer, ScorerParams, SpqrScorer, SvdScorer,
+};
 pub use topk::{select_topk, SalientSet};
 
 use anyhow::{bail, Result};
 
-/// Selection heuristic identifier (CLI / results keys).
+/// Legacy selection-heuristic identifier. Kept as a parse/display shim so
+/// the paper sweep's results keys and historical CLI strings stay stable;
+/// the open equivalent is a [`Scorer`] from [`resolve_scorer`] (which also
+/// accepts names outside this enum, e.g. `"hybrid"`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Method {
     Random,
@@ -94,5 +111,15 @@ mod tests {
         assert!(!Method::Magnitude.needs_calibration());
         assert!(Method::Awq.needs_calibration());
         assert!(Method::Spqr.needs_calibration());
+    }
+
+    #[test]
+    fn registry_covers_every_method() {
+        // the shim and the registry must agree on the original five names
+        let p = ScorerParams::default();
+        for m in Method::ALL {
+            let s = resolve_scorer(m.name(), &p).unwrap();
+            assert_eq!(s.name(), m.name());
+        }
     }
 }

@@ -73,6 +73,39 @@ impl OverlapReport {
     }
 }
 
+/// Per-method-per-budget selections, as produced by sweeping a
+/// `QuantizePipeline` over several scorers: `(scorer name, k)` → per-layer
+/// [`SalientSet`]s.
+pub type SelectionGrid = BTreeMap<(String, usize), BTreeMap<String, SalientSet>>;
+
+/// Record per-layer IoU of `reference`'s selections against each baseline
+/// into `report`, for every budget. Missing (scorer, k) combinations and
+/// layers absent from a baseline are skipped — the shared pairing logic of
+/// the sweep, the `overlap` CLI and the fig2 bench.
+pub fn record_selection_overlaps(
+    report: &mut OverlapReport,
+    selections: &SelectionGrid,
+    budgets: &[usize],
+    reference: &str,
+    baselines: &[&str],
+) {
+    for &k in budgets {
+        let Some(ref_sels) = selections.get(&(reference.to_string(), k)) else {
+            continue;
+        };
+        for &base in baselines {
+            let Some(base_sels) = selections.get(&(base.to_string(), k)) else {
+                continue;
+            };
+            for (layer, s) in ref_sels {
+                if let Some(b) = base_sels.get(layer) {
+                    report.record(base, k, iou(s, b));
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +136,24 @@ mod tests {
     fn empty_sets_convention() {
         assert_eq!(iou(&set(vec![]), &set(vec![])), 1.0);
         assert_eq!(iou(&set(vec![1]), &set(vec![])), 0.0);
+    }
+
+    #[test]
+    fn selection_grid_overlaps_skip_missing_combos() {
+        let mut grid: SelectionGrid = BTreeMap::new();
+        let layer = |v: Vec<u32>| {
+            let mut m = BTreeMap::new();
+            m.insert("layer0.wq".to_string(), set(v));
+            m
+        };
+        grid.insert(("svd".to_string(), 16), layer(vec![1, 2]));
+        grid.insert(("awq".to_string(), 16), layer(vec![2, 3]));
+        // spqr missing at k=16; everything missing at k=64
+        let mut r = OverlapReport::new();
+        record_selection_overlaps(&mut r, &grid, &[16, 64], "svd", &["awq", "spqr"]);
+        assert!((r.mean("awq", 16).unwrap() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.mean("spqr", 16), None);
+        assert_eq!(r.budgets(), vec![16]);
     }
 
     #[test]

@@ -1,0 +1,488 @@
+//! The open scorer API: saliency heuristics as interchangeable [`Scorer`]
+//! trait objects plus a string-keyed registry (paper §III-A generalized).
+//!
+//! The paper's thesis is that "which weights matter" is a pluggable scoring
+//! function over a weight matrix; this module makes that literal. Each
+//! heuristic is a [`Scorer`] with three obligations:
+//!
+//! 1. [`Scorer::score`] — a dense non-negative score map for one layer,
+//! 2. [`Scorer::needs_calibration`] — whether it reads activation
+//!    statistics from the [`ScoreCtx`],
+//! 3. [`Scorer::cache_key`] — a stable identity string covering every
+//!    hyperparameter that changes the output; the
+//!    [`QuantizePipeline`](crate::coordinator::QuantizePipeline) memoizes
+//!    score maps by `(layer, cache_key)`, so equal keys ⇒ interchangeable
+//!    maps *by contract*.
+//!
+//! [`resolve`] maps CLI/config strings (plus the historical aliases of
+//! [`Method::parse`](super::Method::parse)) to boxed scorers. The composite
+//! [`HybridScorer`] is the proof the API is open: it blends any two scorers
+//! without either knowing — see DESIGN.md §4 for the 3-step extension
+//! recipe.
+
+use anyhow::{bail, Context, Result};
+
+use crate::calib::{CalibStats, LayerStats};
+use crate::linalg::Matrix;
+
+use super::score::{
+    awq_score, magnitude_score, random_score, spqr_score, svd_score, SvdScoreMode, DEFAULT_DAMP,
+    DEFAULT_RANK,
+};
+
+/// Everything a scorer may consume besides the weight matrix itself.
+/// Data-free scorers ignore it entirely — that is the paper's point.
+#[derive(Clone, Copy, Default)]
+pub struct ScoreCtx<'a> {
+    /// Calibration statistics for data-aware scorers (AWQ/SpQR).
+    pub calib: Option<&'a CalibStats>,
+}
+
+impl<'a> ScoreCtx<'a> {
+    /// Context with no calibration data (the data-free deployment story).
+    pub fn data_free() -> ScoreCtx<'static> {
+        ScoreCtx { calib: None }
+    }
+
+    pub fn with_calib(calib: &'a CalibStats) -> ScoreCtx<'a> {
+        ScoreCtx { calib: Some(calib) }
+    }
+
+    /// Calibration stats for one layer, or a scorer-attributed error.
+    pub fn layer_stats(&self, scorer: &str, layer: &str) -> Result<&'a LayerStats> {
+        self.calib
+            .with_context(|| format!("{scorer} needs calibration stats (layer {layer})"))?
+            .layer(layer)
+    }
+}
+
+/// A saliency heuristic: maps one weight matrix to a dense, non-negative
+/// score map (higher = more salient). Implementations must be `Send + Sync`
+/// — the pipeline scores layers in parallel on the `util` thread pool.
+pub trait Scorer: Send + Sync {
+    /// Registry/results key (`"svd"`, `"awq"`, ...); used verbatim in sweep
+    /// result keys, so it must stay stable across releases.
+    fn name(&self) -> &str;
+
+    /// Score one layer. `layer` is the canonical parameter name (scorers
+    /// may use it for per-layer seed derivation or stats lookup).
+    fn score(&self, layer: &str, w: &Matrix, ctx: &ScoreCtx) -> Result<Matrix>;
+
+    /// Does [`Scorer::score`] read calibration statistics from the ctx?
+    fn needs_calibration(&self) -> bool {
+        false
+    }
+
+    /// Stable identity of the score *function*, hyperparameters included.
+    /// Two scorers with equal keys must produce identical maps for the
+    /// same `(layer, w)` — the pipeline's memoization relies on it.
+    fn cache_key(&self) -> String;
+}
+
+/// §III-A1 baseline: uniform scores, decorrelated per layer and
+/// deterministic in `(seed, layer name)`.
+#[derive(Debug, Clone, Copy)]
+pub struct RandomScorer {
+    pub seed: u64,
+}
+
+impl RandomScorer {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+}
+
+impl Scorer for RandomScorer {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn score(&self, layer: &str, w: &Matrix, _ctx: &ScoreCtx) -> Result<Matrix> {
+        // FNV-style fold of the layer name into the seed: per-layer
+        // decorrelated streams that reproduce run to run
+        let tag = layer
+            .bytes()
+            .fold(self.seed, |acc, b| acc.wrapping_mul(0x100000001B3).wrapping_add(b as u64));
+        Ok(random_score(w.rows(), w.cols(), tag))
+    }
+
+    fn cache_key(&self) -> String {
+        format!("random(seed={})", self.seed)
+    }
+}
+
+/// Sanity baseline: `|w_ij|`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MagnitudeScorer;
+
+impl Scorer for MagnitudeScorer {
+    fn name(&self) -> &str {
+        "magnitude"
+    }
+
+    fn score(&self, _layer: &str, w: &Matrix, _ctx: &ScoreCtx) -> Result<Matrix> {
+        Ok(magnitude_score(w))
+    }
+
+    fn cache_key(&self) -> String {
+        "magnitude".to_string()
+    }
+}
+
+/// §III-A2 AWQ: `|w_ij| · ‖X_j‖₂` (data-aware).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AwqScorer;
+
+impl Scorer for AwqScorer {
+    fn name(&self) -> &str {
+        "awq"
+    }
+
+    fn score(&self, layer: &str, w: &Matrix, ctx: &ScoreCtx) -> Result<Matrix> {
+        let stats = ctx.layer_stats("AWQ", layer)?;
+        Ok(awq_score(w, &stats.col_norms()))
+    }
+
+    fn needs_calibration(&self) -> bool {
+        true
+    }
+
+    fn cache_key(&self) -> String {
+        "awq".to_string()
+    }
+}
+
+/// §III-A3 SpQR/OBS: `w_ij² / [H⁻¹]_jj` with a damped empirical Hessian
+/// (data-aware).
+#[derive(Debug, Clone, Copy)]
+pub struct SpqrScorer {
+    pub damp: f32,
+}
+
+impl SpqrScorer {
+    pub fn new(damp: f32) -> Self {
+        Self { damp }
+    }
+}
+
+impl Default for SpqrScorer {
+    fn default() -> Self {
+        Self { damp: DEFAULT_DAMP }
+    }
+}
+
+impl Scorer for SpqrScorer {
+    fn name(&self) -> &str {
+        "spqr"
+    }
+
+    fn score(&self, layer: &str, w: &Matrix, ctx: &ScoreCtx) -> Result<Matrix> {
+        let stats = ctx.layer_stats("SpQR", layer)?;
+        Ok(spqr_score(w, &stats.xtx, stats.rows.max(1), self.damp))
+    }
+
+    fn needs_calibration(&self) -> bool {
+        true
+    }
+
+    fn cache_key(&self) -> String {
+        format!("spqr(damp={})", self.damp)
+    }
+}
+
+/// §III-A4 (the paper's method): `|U_r Σ_r V_rᵀ|` — magnitude of the rank-r
+/// principal reconstruction. Data-free.
+#[derive(Debug, Clone, Copy)]
+pub struct SvdScorer {
+    pub rank: usize,
+    pub mode: SvdScoreMode,
+}
+
+impl SvdScorer {
+    pub fn new(rank: usize, mode: SvdScoreMode) -> Self {
+        Self { rank, mode }
+    }
+}
+
+impl Default for SvdScorer {
+    fn default() -> Self {
+        Self { rank: DEFAULT_RANK, mode: SvdScoreMode::default() }
+    }
+}
+
+impl Scorer for SvdScorer {
+    fn name(&self) -> &str {
+        "svd"
+    }
+
+    fn score(&self, _layer: &str, w: &Matrix, _ctx: &ScoreCtx) -> Result<Matrix> {
+        Ok(svd_score(w, self.rank, self.mode))
+    }
+
+    fn cache_key(&self) -> String {
+        let mode = match self.mode {
+            SvdScoreMode::Exact => "exact".to_string(),
+            SvdScoreMode::Randomized { oversample, power_iters, seed } => {
+                format!("rsvd(p={oversample},q={power_iters},seed={seed})")
+            }
+        };
+        format!("svd(r={},{mode})", self.rank)
+    }
+}
+
+/// Composite scorer: `alpha · A/max(A) + (1-alpha) · B/max(B)`.
+///
+/// Each component map is normalized by its max before blending so the two
+/// scales are commensurable; the blend therefore preserves each component's
+/// *ranking* signal rather than its raw magnitude. The default registry
+/// instance blends SVD principal structure with plain weight magnitude —
+/// still 100% data-free — and exists primarily as the worked example that
+/// the scorer API composes (DESIGN.md §4).
+pub struct HybridScorer {
+    a: Box<dyn Scorer>,
+    b: Box<dyn Scorer>,
+    alpha: f32,
+    name: String,
+}
+
+impl HybridScorer {
+    /// Blend two scorers; `alpha` is the weight of `a`, clamped to [0, 1].
+    pub fn new(a: Box<dyn Scorer>, b: Box<dyn Scorer>, alpha: f32) -> Self {
+        let alpha = alpha.clamp(0.0, 1.0);
+        let name = format!("hybrid[{}+{}]", a.name(), b.name());
+        Self { a, b, alpha, name }
+    }
+
+    /// The registry's `"hybrid"`: SVD structure blended with magnitude.
+    pub fn svd_magnitude(rank: usize, mode: SvdScoreMode, alpha: f32) -> Self {
+        let mut h = Self::new(
+            Box::new(SvdScorer::new(rank, mode)),
+            Box::new(MagnitudeScorer),
+            alpha,
+        );
+        // canonical registry name (results keys must be predictable)
+        h.name = "hybrid".to_string();
+        h
+    }
+}
+
+impl Scorer for HybridScorer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn score(&self, layer: &str, w: &Matrix, ctx: &ScoreCtx) -> Result<Matrix> {
+        let sa = self.a.score(layer, w, ctx)?;
+        let sb = self.b.score(layer, w, ctx)?;
+        if sa.shape() != sb.shape() {
+            bail!(
+                "hybrid components disagree on shape: {:?} vs {:?} (layer {layer})",
+                sa.shape(),
+                sb.shape()
+            );
+        }
+        let (ma, mb) = (sa.abs_max(), sb.abs_max());
+        let (wa, wb) = (
+            if ma > 0.0 { self.alpha / ma } else { 0.0 },
+            if mb > 0.0 { (1.0 - self.alpha) / mb } else { 0.0 },
+        );
+        let mut out = sa;
+        for (o, &b) in out.data_mut().iter_mut().zip(sb.data()) {
+            *o = *o * wa + b * wb;
+        }
+        Ok(out)
+    }
+
+    fn needs_calibration(&self) -> bool {
+        self.a.needs_calibration() || self.b.needs_calibration()
+    }
+
+    fn cache_key(&self) -> String {
+        format!("hybrid({},{},alpha={})", self.a.cache_key(), self.b.cache_key(), self.alpha)
+    }
+}
+
+// ---------------------------------------------------------------- registry
+
+/// Tunables the built-in scorer factories consume. CLI flags and the
+/// artifacts manifest both funnel into this (the old `PreserveSpec` knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct ScorerParams {
+    /// rank of the principal reconstruction (paper: 8)
+    pub svd_rank: usize,
+    pub svd_mode: SvdScoreMode,
+    /// SpQR Hessian damping (paper: 0.01)
+    pub spqr_damp: f32,
+    /// seed for the random baseline
+    pub seed: u64,
+    /// weight of the structure component in the hybrid blend
+    pub hybrid_alpha: f32,
+}
+
+impl Default for ScorerParams {
+    fn default() -> Self {
+        Self {
+            svd_rank: DEFAULT_RANK,
+            svd_mode: SvdScoreMode::default(),
+            spqr_damp: DEFAULT_DAMP,
+            seed: 0xBEEF,
+            hybrid_alpha: 0.5,
+        }
+    }
+}
+
+type Factory = fn(&ScorerParams) -> Box<dyn Scorer>;
+
+fn make_random(p: &ScorerParams) -> Box<dyn Scorer> {
+    Box::new(RandomScorer::new(p.seed))
+}
+
+fn make_magnitude(_p: &ScorerParams) -> Box<dyn Scorer> {
+    Box::new(MagnitudeScorer)
+}
+
+fn make_awq(_p: &ScorerParams) -> Box<dyn Scorer> {
+    Box::new(AwqScorer)
+}
+
+fn make_spqr(p: &ScorerParams) -> Box<dyn Scorer> {
+    Box::new(SpqrScorer::new(p.spqr_damp))
+}
+
+fn make_svd(p: &ScorerParams) -> Box<dyn Scorer> {
+    Box::new(SvdScorer::new(p.svd_rank, p.svd_mode))
+}
+
+fn make_hybrid(p: &ScorerParams) -> Box<dyn Scorer> {
+    Box::new(HybridScorer::svd_magnitude(p.svd_rank, p.svd_mode, p.hybrid_alpha))
+}
+
+/// The registry: canonical name, accepted aliases, factory. The first five
+/// rows carry the paper's method space (result keys unchanged); everything
+/// after is open for extension.
+static REGISTRY: &[(&str, &[&str], Factory)] = &[
+    ("random", &["rand"], make_random),
+    ("magnitude", &["mag"], make_magnitude),
+    ("awq", &[], make_awq),
+    ("spqr", &["hessian"], make_spqr),
+    ("svd", &["ours"], make_svd),
+    ("hybrid", &["svd+mag"], make_hybrid),
+];
+
+/// Canonical scorer names, registry order.
+pub fn available_scorers() -> Vec<&'static str> {
+    REGISTRY.iter().map(|(name, _, _)| *name).collect()
+}
+
+/// Resolve a CLI/config string (canonical name or alias, case-insensitive)
+/// to a scorer built from `params`.
+pub fn resolve(name: &str, params: &ScorerParams) -> Result<Box<dyn Scorer>> {
+    let key = name.to_ascii_lowercase();
+    for (canon, aliases, factory) in REGISTRY {
+        if *canon == key || aliases.contains(&key.as_str()) {
+            return Ok(factory(params));
+        }
+    }
+    bail!(
+        "unknown scorer {name:?} (available: {})",
+        available_scorers().join("|")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Method;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_m(seed: u64, r: usize, c: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(m.data_mut(), 0.5);
+        m
+    }
+
+    #[test]
+    fn registry_resolves_all_method_names_and_aliases() {
+        let p = ScorerParams::default();
+        for m in Method::ALL {
+            let s = resolve(m.name(), &p).unwrap();
+            assert_eq!(s.name(), m.name());
+            assert_eq!(s.needs_calibration(), m.needs_calibration());
+        }
+        assert_eq!(resolve("OURS", &p).unwrap().name(), "svd");
+        assert_eq!(resolve("hessian", &p).unwrap().name(), "spqr");
+        assert_eq!(resolve("hybrid", &p).unwrap().name(), "hybrid");
+        assert_eq!(resolve("svd+mag", &p).unwrap().name(), "hybrid");
+        assert!(resolve("gptq", &p).is_err());
+    }
+
+    #[test]
+    fn trait_scorers_match_free_functions() {
+        let w = rand_m(3, 10, 14);
+        let ctx = ScoreCtx::data_free();
+        let mag = MagnitudeScorer.score("l", &w, &ctx).unwrap();
+        assert!(mag.approx_eq(&magnitude_score(&w), 0.0));
+        let svd = SvdScorer::new(4, SvdScoreMode::Exact).score("l", &w, &ctx).unwrap();
+        assert!(svd.approx_eq(&svd_score(&w, 4, SvdScoreMode::Exact), 0.0));
+    }
+
+    #[test]
+    fn random_scorer_layer_decorrelation() {
+        let w = rand_m(4, 8, 8);
+        let ctx = ScoreCtx::data_free();
+        let s = RandomScorer::new(7);
+        let a1 = s.score("layer0.wq", &w, &ctx).unwrap();
+        let a2 = s.score("layer0.wq", &w, &ctx).unwrap();
+        let b = s.score("layer0.wk", &w, &ctx).unwrap();
+        assert!(a1.approx_eq(&a2, 0.0), "deterministic per layer");
+        assert!(!a1.approx_eq(&b, 1e-9), "decorrelated across layers");
+    }
+
+    #[test]
+    fn data_aware_scorers_error_without_calib() {
+        let w = rand_m(5, 6, 6);
+        let ctx = ScoreCtx::data_free();
+        assert!(AwqScorer.score("l", &w, &ctx).is_err());
+        assert!(SpqrScorer::default().score("l", &w, &ctx).is_err());
+    }
+
+    #[test]
+    fn hybrid_blends_and_stays_nonnegative() {
+        let w = rand_m(6, 12, 9);
+        let ctx = ScoreCtx::data_free();
+        let h = HybridScorer::svd_magnitude(4, SvdScoreMode::Exact, 0.5);
+        let s = h.score("l", &w, &ctx).unwrap();
+        assert_eq!(s.shape(), w.shape());
+        assert!(s.data().iter().all(|&v| v >= 0.0));
+        // alpha=0 degenerates to normalized magnitude ranking
+        let h0 = HybridScorer::svd_magnitude(4, SvdScoreMode::Exact, 0.0);
+        let s0 = h0.score("l", &w, &ctx).unwrap();
+        let mag = magnitude_score(&w);
+        let norm = mag.scale(1.0 / mag.abs_max());
+        assert!(s0.approx_eq(&norm, 1e-6));
+        assert!(!h.needs_calibration(), "svd+mag hybrid must stay data-free");
+    }
+
+    #[test]
+    fn cache_keys_separate_hyperparameters() {
+        let a = SvdScorer::new(8, SvdScoreMode::Exact).cache_key();
+        let b = SvdScorer::new(4, SvdScoreMode::Exact).cache_key();
+        let c = SvdScorer::new(8, SvdScoreMode::default()).cache_key();
+        let d = SpqrScorer::new(0.01).cache_key();
+        let e = SpqrScorer::new(0.05).cache_key();
+        let f = RandomScorer::new(1).cache_key();
+        let g = RandomScorer::new(2).cache_key();
+        let all = [&a, &b, &c, &d, &e, &f, &g];
+        for (i, x) in all.iter().enumerate() {
+            for (j, y) in all.iter().enumerate() {
+                if i != j {
+                    assert_ne!(x, y);
+                }
+            }
+        }
+        let h1 = HybridScorer::svd_magnitude(8, SvdScoreMode::Exact, 0.5).cache_key();
+        let h2 = HybridScorer::svd_magnitude(8, SvdScoreMode::Exact, 0.7).cache_key();
+        assert_ne!(h1, h2);
+    }
+}

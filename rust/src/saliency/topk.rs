@@ -147,6 +147,81 @@ mod tests {
     }
 
     #[test]
+    fn prop_k_clamps_and_indices_in_bounds() {
+        check(
+            "k >= numel clamps; indices in bounds, sorted, unique",
+            |rng| {
+                let m = gen_matrix(rng, 12, 1.0);
+                // deliberately exercise k far beyond numel
+                let k = rng.range(0, 3 * m.len() + 2);
+                (m, k)
+            },
+            |(score, k)| {
+                let n = score.len();
+                let sel = select_topk(score, *k);
+                if sel.k() != (*k).min(n) {
+                    return Err(format!("k not clamped: got {}, want {}", sel.k(), (*k).min(n)));
+                }
+                if (sel.rows, sel.cols) != score.shape() {
+                    return Err("selection shape mismatch".into());
+                }
+                for win in sel.indices.windows(2) {
+                    if win[0] >= win[1] {
+                        return Err(format!("indices not strictly ascending: {win:?}"));
+                    }
+                }
+                if let Some(&last) = sel.indices.last() {
+                    if last as usize >= n {
+                        return Err(format!("index {last} out of bounds (numel {n})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_tie_breaking_deterministic_and_stable() {
+        check(
+            "duplicate-heavy scores: repeat runs identical, ties -> lowest index",
+            |rng| {
+                // quantize scores to a 4-value alphabet so ties are common
+                let mut m = gen_matrix(rng, 14, 1.0);
+                for v in m.data_mut() {
+                    *v = (*v * 2.0).round() / 2.0;
+                }
+                let k = rng.range(0, m.len() + 1);
+                (m, k)
+            },
+            |(score, k)| {
+                let a = select_topk(score, *k);
+                let b = select_topk(score, *k);
+                if a.indices != b.indices {
+                    return Err("same input, different selection".into());
+                }
+                // reference: stable sort by (score desc, index asc)
+                let mut pairs: Vec<(f32, u32)> = score
+                    .data()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &s)| (s, i as u32))
+                    .collect();
+                pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap().then(x.1.cmp(&y.1)));
+                let mut want: Vec<u32> =
+                    pairs[..(*k).min(score.len())].iter().map(|p| p.1).collect();
+                want.sort_unstable();
+                if a.indices != want {
+                    return Err(format!(
+                        "tie-break disagrees with stable-sort reference: {:?} vs {want:?}",
+                        a.indices
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn matches_full_sort_reference() {
         let mut rng = Rng::new(77);
         for _ in 0..20 {

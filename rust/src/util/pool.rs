@@ -35,11 +35,7 @@ pub struct ThreadPool {
 impl ThreadPool {
     /// `threads = 0` means "number of logical CPUs".
     pub fn new(threads: usize) -> Self {
-        let threads = if threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            threads
-        };
+        let threads = Self::effective_threads(threads);
         let shared = Arc::new(Shared {
             queue: Mutex::new(std::collections::VecDeque::new()),
             available: Condvar::new(),
@@ -84,9 +80,32 @@ impl ThreadPool {
         }
     }
 
+    /// Worker count for a requested thread setting (`0` = logical CPUs) —
+    /// the same resolution rule [`ThreadPool::new`] applies.
+    pub fn effective_threads(requested: usize) -> usize {
+        if requested == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            requested
+        }
+    }
+
     /// Run `f` on every item of `items` in parallel, preserving order of
     /// results. The closure borrows from the caller's stack (scoped).
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        Self::scoped_map(self.threads(), items, f)
+    }
+
+    /// [`ThreadPool::map`] without a pool instance: spawns up to `threads`
+    /// scoped workers (`0` = logical CPUs) for the duration of the call.
+    /// Callers that only ever need parallel maps should use this instead of
+    /// holding a `ThreadPool` — the pool's resident workers would sit idle.
+    pub fn scoped_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send,
         R: Send,
@@ -98,7 +117,7 @@ impl ThreadPool {
         let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
         let next = AtomicUsize::new(0);
         std::thread::scope(|scope| {
-            let workers = self.threads().min(n.max(1));
+            let workers = Self::effective_threads(threads).min(n.max(1));
             for _ in 0..workers {
                 let next = &next;
                 let f = &f;
@@ -204,5 +223,16 @@ mod tests {
     fn zero_means_ncpu() {
         let pool = ThreadPool::new(0);
         assert!(pool.threads() >= 1);
+        assert_eq!(pool.threads(), ThreadPool::effective_threads(0));
+    }
+
+    #[test]
+    fn scoped_map_without_pool() {
+        let base = vec![2usize, 3, 5, 7];
+        let out = ThreadPool::scoped_map(3, (0..base.len()).collect(), |i| base[i] * 10);
+        assert_eq!(out, vec![20, 30, 50, 70]);
+        // threads=0 resolves like the pool constructor
+        let out = ThreadPool::scoped_map(0, vec![1usize, 2], |i| i + 1);
+        assert_eq!(out, vec![2, 3]);
     }
 }

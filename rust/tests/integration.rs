@@ -177,7 +177,7 @@ fn sweep_cache_resumes() {
     let _ = std::fs::remove_dir_all(&dir);
     let mut cfg = SweepConfig::paper_defaults(&art, &dir);
     cfg.tasks = vec![art.tasks()[0].clone()];
-    cfg.methods = vec![Method::Svd];
+    cfg.methods = vec!["svd".to_string()];
     cfg.budgets = vec![16];
     let t0 = std::time::Instant::now();
     let r1 = run_sweep(&art, &rt, &cfg).unwrap();

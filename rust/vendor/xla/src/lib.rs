@@ -1,0 +1,227 @@
+//! Stub of the `xla` crate API surface used by `svdquant::runtime`
+//! (DESIGN.md §7).
+//!
+//! The build sandbox has no XLA/PJRT shared libraries, so this crate keeps
+//! the workspace compiling and the pure-Rust paths (scoring, selection,
+//! quantization, the Rust inference engine, the batching server) fully
+//! functional. [`Literal`] is a real host-side tensor container — the
+//! literal-construction helpers in `runtime` and their unit tests work
+//! against it. The PJRT types ([`PjRtClient`], [`PjRtLoadedExecutable`])
+//! fail at *runtime* with a clear message; every artifact-dependent test
+//! and bench already skips before touching them.
+//!
+//! Swapping in a real `xla` crate is a one-line change in the root
+//! `Cargo.toml` — the signatures here mirror xla_extension 0.5.x.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (implements `std::error::Error`, so `?` lifts it into
+/// `anyhow::Error` at the call sites in `svdquant::runtime`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+
+    fn unavailable(what: &str) -> Error {
+        Error::new(format!(
+            "{what} unavailable: this build links the in-repo xla stub \
+             (rust/vendor/xla). Scoring/quantization/engine paths are fully \
+             functional; PJRT execution needs the real xla crate."
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can carry.
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Scalar types storable in a [`Literal`].
+pub trait NativeType: Copy + 'static {
+    #[doc(hidden)]
+    fn store(data: &[Self]) -> Storage;
+    #[doc(hidden)]
+    fn load(storage: &Storage) -> Option<Vec<Self>>;
+    #[doc(hidden)]
+    const NAME: &'static str;
+}
+
+impl NativeType for f32 {
+    fn store(data: &[Self]) -> Storage {
+        Storage::F32(data.to_vec())
+    }
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "f32";
+}
+
+impl NativeType for i32 {
+    fn store(data: &[Self]) -> Storage {
+        Storage::I32(data.to_vec())
+    }
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "i32";
+}
+
+/// Host-side tensor value (fully functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { storage: T::store(data), dims: vec![data.len() as i64] }
+    }
+
+    /// Same data, new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn shape_dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a flat vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.storage)
+            .ok_or_else(|| Error::new(format!("literal does not hold {} data", T::NAME)))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(v) => Ok(v),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails — no compiler available).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("XLA compilation"))
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub: the client cannot
+/// be constructed, so no executable can exist either).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PJRT execution"))
+    }
+}
+
+/// Device buffer handle (unreachable in the stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.element_count(), 6);
+        let shaped = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(shaped.shape_dims(), &[2, 3]);
+        assert_eq!(shaped.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[7]).is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn i32_literals() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4]).reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pjrt_paths_fail_loudly() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
