@@ -2,6 +2,9 @@
 //! root, so this module is include!'d by path).
 
 use svdquant::coordinator::Artifacts;
+use svdquant::data::Dataset;
+use svdquant::json::Json;
+use svdquant::model::{ModelConfig, Params};
 
 /// Open artifacts or skip the bench gracefully (pre-`make artifacts` runs
 /// of `cargo bench` must not fail the build pipeline).
@@ -14,6 +17,85 @@ pub fn artifacts_or_skip(bench: &str) -> Option<Artifacts> {
             println!("   run `make artifacts` first");
             None
         }
+    }
+}
+
+/// Serving-bench setup: the real mrpc checkpoint when artifacts exist,
+/// otherwise a synthetic (shape-realistic) checkpoint + dev set — so the
+/// serving perf trajectory (BENCH_serving.json) is tracked on every
+/// machine, not just ones that ran `make artifacts`.
+#[allow(dead_code)]
+pub fn serving_setup() -> (ModelConfig, Params, Dataset, &'static str) {
+    if let Ok(art) = Artifacts::open("artifacts") {
+        if let (Ok(ckpt), Ok(dev)) = (art.checkpoint("mrpc"), art.dataset("mrpc", "dev")) {
+            return (art.model_cfg, ckpt, dev, "artifacts:mrpc");
+        }
+    }
+    let cfg = ModelConfig {
+        vocab_size: 512,
+        max_len: 32,
+        hidden: 128,
+        layers: 4,
+        heads: 4,
+        ffn: 256,
+        n_classes: 2,
+        export_batch: 8,
+    };
+    let params = svdquant::model::params::testing::synthetic_params(&cfg, 0xC0FFEE);
+    let n = 192usize;
+    let s = cfg.max_len;
+    let mut rng = svdquant::util::rng::Rng::new(0xDA7A);
+    let mut ids = Vec::with_capacity(n * s);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        for _ in 0..s {
+            ids.push(rng.range(1, cfg.vocab_size) as i32);
+        }
+        labels.push(rng.range(0, cfg.n_classes) as i32);
+    }
+    let mask = vec![1i32; n * s];
+    let dev = Dataset::from_raw("synthetic", ids, mask, labels, s).expect("synthetic dataset");
+    (cfg, params, dev, "synthetic")
+}
+
+/// Sustained work-units/s of `f` over a ~`window_ms` wall-clock window
+/// (shared by the JSON-trajectory measurements of the serving benches).
+#[allow(dead_code)]
+pub fn measure_units_per_s<R>(
+    units_per_call: f64,
+    window_ms: u64,
+    mut f: impl FnMut() -> R,
+) -> f64 {
+    let t0 = std::time::Instant::now();
+    let mut iters = 0u32;
+    while t0.elapsed() < std::time::Duration::from_millis(window_ms) {
+        std::hint::black_box(f());
+        iters += 1;
+    }
+    units_per_call * iters as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Merge `section` into `results/BENCH_serving.json` under `key` — the
+/// machine-readable serving-perf trajectory tracked across PRs. Each bench
+/// overwrites only its own section.
+#[allow(dead_code)]
+pub fn write_bench_serving(key: &str, section: Json) {
+    let path = std::path::Path::new("results/BENCH_serving.json");
+    let _ = std::fs::create_dir_all("results");
+    let existing = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    let mut pairs: Vec<(String, Json)> = existing
+        .as_ref()
+        .and_then(|j| j.as_object())
+        .map(|m| m.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+        .unwrap_or_default();
+    pairs.retain(|(k, _)| k != key);
+    pairs.push((key.to_string(), section));
+    let doc = Json::object(pairs);
+    match std::fs::write(path, doc.pretty()) {
+        Ok(()) => println!("\n  serving trajectory -> {}", path.display()),
+        Err(e) => eprintln!("warn: could not write {}: {e}", path.display()),
     }
 }
 

@@ -1,7 +1,11 @@
-//! Deploy-path benches: engine forward latency (fp32 vs packed-int4
-//! fused), PJRT executable latency, and the batching server under Poisson
-//! and bursty traces — the paper's deployment headline (compressed model,
-//! served). `harness = false`.
+//! Deploy-path benches: engine forward latency (fp32 vs packed-int4 fused,
+//! float vs integer kernel), PJRT executable latency (artifacts only), and
+//! the batching server under load at 1-vs-N threads — the paper's
+//! deployment headline (compressed model, served). `harness = false`.
+//!
+//! Always runs: when `make artifacts` hasn't been executed the bench falls
+//! back to a synthetic shape-realistic checkpoint, so the serving perf
+//! trajectory (`results/BENCH_serving.json`) is tracked on every machine.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -11,32 +15,31 @@ use std::time::Duration;
 use svdquant::coordinator::server::{serve_trace, ServerConfig};
 use svdquant::coordinator::QuantizePipeline;
 use svdquant::data::TraceGenerator;
-use svdquant::eval::eval_pjrt;
+use svdquant::json::Json;
 use svdquant::model::{Engine, QuantizedModel};
-use svdquant::quant::QuantConfig;
-use svdquant::runtime::Runtime;
+use svdquant::quant::{GemmKernel, QuantConfig};
 use svdquant::util::bench::Bench;
+use svdquant::util::pool;
 
 fn main() {
-    let Some(art) = common::artifacts_or_skip("engine_inference") else { return };
     let mut b = Bench::new("engine_inference").quick();
-    let task = "mrpc";
-    let ckpt = art.checkpoint(task).expect("ckpt");
-    let dev = art.dataset(task, "dev").expect("dev");
-    let cfg = art.model_cfg;
+    let (cfg, ckpt, dev, source) = common::serving_setup();
+    println!("  model source: {source} (hidden {}, layers {})", cfg.hidden, cfg.layers);
 
     let qcfg = QuantConfig::default();
-    let (qp, sels) = {
-        // data-free SVD selection at k=256 through the staged pipeline
-        let mut pipe = QuantizePipeline::for_checkpoint(&cfg, &ckpt)
-            .budget(256)
-            .quant(qcfg)
-            .build()
-            .expect("pipeline");
-        pipe.run().expect("quantize")
-    };
+    // data-free SVD selection at k=256 through the staged pipeline; kept
+    // alive so the artifacts-only PJRT section below reuses the memoized
+    // score maps instead of re-scoring every layer
+    let mut pipe = QuantizePipeline::for_checkpoint(&cfg, &ckpt)
+        .budget(256)
+        .quant(qcfg)
+        .build()
+        .expect("pipeline");
+    let sels = pipe.select(256).expect("select");
     let engine = Engine::new(cfg, ckpt.clone()).expect("engine");
-    let qm = QuantizedModel::build(cfg, ckpt.clone(), &qcfg, &sels).expect("qm");
+    // one quantized model; kernel comparisons flip set_kernel in place
+    // instead of re-packing every layer
+    let mut qm = QuantizedModel::build(cfg, ckpt.clone(), &qcfg, &sels).expect("qm");
     let (qb, db) = qm.quantized_bytes();
     println!(
         "  weights: dense {} -> packed {} ({:.2}x)",
@@ -45,87 +48,128 @@ fn main() {
         db as f64 / qb as f64
     );
 
+    // ---- forward latency: fp32 vs fused-f32 vs fused-int8 ----------------
+    let mut fwd_section: Vec<(String, f64)> = Vec::new();
     for &batch in &[1usize, 8, 16] {
         let (ids, mask) = dev.batch_slices(0, batch);
         b.timeit_throughput(&format!("engine fp32 fwd b={batch}"), batch as f64, "seq", || {
             engine.forward(&ids, &mask).unwrap()
         });
-        b.timeit_throughput(&format!("engine int4-fused fwd b={batch}"), batch as f64, "seq", || {
-            qm.forward_fused(&ids, &mask).unwrap()
-        });
+        for (kernel, name) in [(GemmKernel::F32, "f32"), (GemmKernel::Int8, "int8")] {
+            qm.set_kernel(kernel);
+            b.timeit_throughput(
+                &format!("fused {name}-kernel fwd b={batch}"),
+                batch as f64,
+                "seq",
+                || qm.forward_fused(&ids, &mask).unwrap(),
+            );
+            // quick seq/s number for the JSON trajectory
+            let seq_per_s = common::measure_units_per_s(batch as f64, 120, || {
+                qm.forward_fused(&ids, &mask).unwrap()
+            });
+            fwd_section.push((format!("fused_{name}_b{batch}_seq_per_s"), seq_per_s));
+        }
     }
 
-    // PJRT path (the sweep engine)
-    let rt = Runtime::cpu().expect("pjrt");
-    let exe = art.compile_model(&rt, task, false).expect("compile");
-    let small = {
-        // eval over one export batch worth of samples
-        let n = cfg.export_batch.min(dev.len());
-        let (ids, mask) = dev.batch_slices(0, n);
-        let labels = dev.labels()[..n].to_vec();
-        svdquant::data::Dataset::from_raw("bench", ids, mask, labels, cfg.max_len).unwrap()
+    // ---- PJRT path (artifacts + real xla crate only) ---------------------
+    if source.starts_with("artifacts") {
+        if let Ok(art) = svdquant::coordinator::Artifacts::open("artifacts") {
+            if let Ok(rt) = svdquant::runtime::Runtime::cpu() {
+                if let Ok(exe) = art.compile_model(&rt, "mrpc", false) {
+                    let n = cfg.export_batch.min(dev.len());
+                    let (ids, mask) = dev.batch_slices(0, n);
+                    let labels = dev.labels()[..n].to_vec();
+                    let small = svdquant::data::Dataset::from_raw(
+                        "bench", ids, mask, labels, cfg.max_len,
+                    )
+                    .unwrap();
+                    // score maps are already memoized from the select above
+                    let (qp, _) = pipe.run().expect("quantize");
+                    b.timeit_throughput(
+                        &format!("pjrt eval {} seqs (weights as args)", small.len()),
+                        small.len() as f64,
+                        "seq",
+                        || svdquant::eval::eval_pjrt(&exe, &cfg, &qp, &small).unwrap(),
+                    );
+                }
+            } else {
+                println!("  (pjrt path skipped: stub xla crate)");
+            }
+        }
+    }
+
+    // ---- serving under load: kernel × threads ----------------------------
+    // offered rate is set above single-thread capacity so achieved rps
+    // reflects kernel + thread scaling, not the arrival process
+    let scfg = ServerConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(4),
+        queue_cap: 512,
     };
-    b.timeit_throughput(
-        &format!("pjrt eval {} seqs (weights as args)", small.len()),
-        small.len() as f64,
-        "seq",
-        || eval_pjrt(&exe, &cfg, &qp, &small).unwrap(),
-    );
-
-    // serving under load
+    let trace = TraceGenerator::poisson(400.0).generate(160, dev.len(), 0xBE9C);
     let mut rows = Vec::new();
-    for (name, gen, rate) in [
-        ("poisson@30", TraceGenerator::poisson(30.0), 30.0),
-        ("poisson@80", TraceGenerator::poisson(80.0), 80.0),
-        ("bursty@30", TraceGenerator::bursty(30.0, 0.25, 8), 30.0),
-    ] {
-        let trace = gen.generate(120, dev.len(), 0xBE9C);
-        let scfg = ServerConfig {
-            max_batch: 16,
-            max_wait: Duration::from_millis(4),
-            queue_cap: 512,
-        };
-        let s = serve_trace(&qm, &dev, &trace, &scfg).expect("serve");
-        rows.push(vec![
-            name.to_string(),
-            format!("{rate:.0}"),
-            format!("{:.1}", s.throughput_rps),
-            format!("{:.1}", s.p50_ms),
-            format!("{:.1}", s.p95_ms),
-            format!("{:.1}", s.mean_batch),
-            format!("{:.4}", s.accuracy),
-        ]);
+    let mut json_rows: Vec<Json> = Vec::new();
+    for &threads in &[1usize, 4] {
+        pool::set_global_parallelism(threads);
+        for (kernel, name) in [(GemmKernel::F32, "f32"), (GemmKernel::Int8, "int8")] {
+            qm.set_kernel(kernel);
+            let s = serve_trace(&qm, &dev, &trace, &scfg).expect("serve");
+            let tokens_s = s.completions as f64 * cfg.max_len as f64 / s.wall_s.max(1e-9);
+            rows.push(vec![
+                name.to_string(),
+                threads.to_string(),
+                format!("{:.1}", s.throughput_rps),
+                format!("{tokens_s:.0}"),
+                format!("{:.1}", s.p50_ms),
+                format!("{:.1}", s.p95_ms),
+                format!("{:.1}", s.mean_batch),
+                format!("{:.4}", s.accuracy),
+            ]);
+            json_rows.push(serve_stats_json(name, threads, &s, tokens_s));
+        }
     }
+    pool::set_global_parallelism(0);
     b.table(
-        "serving (svd k=256 packed int4, single worker)",
-        ["trace", "offered rps", "achieved rps", "p50 ms", "p95 ms", "mean batch", "acc"]
+        "serving (svd k=256 packed int4, poisson@400, kernel x threads)",
+        ["kernel", "threads", "rps", "tokens/s", "p50 ms", "p95 ms", "mean batch", "acc"]
             .iter()
             .map(|s| s.to_string())
             .collect(),
         rows,
     );
 
-    // batching ablation: max_batch sensitivity under the same trace
-    let mut rows = Vec::new();
-    let trace = TraceGenerator::bursty(60.0, 0.25, 8).generate(120, dev.len(), 0xAB);
-    for mb in [1usize, 4, 16] {
-        let scfg = ServerConfig {
-            max_batch: mb,
-            max_wait: Duration::from_millis(4),
-            queue_cap: 512,
-        };
-        let s = serve_trace(&qm, &dev, &trace, &scfg).expect("serve");
-        rows.push(vec![
-            mb.to_string(),
-            format!("{:.1}", s.throughput_rps),
-            format!("{:.1}", s.p95_ms),
-            format!("{:.1}", s.mean_batch),
-        ]);
-    }
-    b.table(
-        "batching ablation (bursty@60)",
-        ["max_batch", "rps", "p95 ms", "mean batch"].iter().map(|s| s.to_string()).collect(),
-        rows,
+    // ---- machine-readable trajectory -------------------------------------
+    let fwd_json: Vec<(String, Json)> = fwd_section
+        .into_iter()
+        .map(|(k, v)| (k, Json::from(v)))
+        .collect();
+    common::write_bench_serving(
+        "engine_inference",
+        Json::object(vec![
+            ("source".to_string(), Json::from(source)),
+            ("forward".to_string(), Json::object(fwd_json)),
+            ("serving".to_string(), Json::Array(json_rows)),
+        ]),
     );
     b.finish();
+}
+
+fn serve_stats_json(
+    kernel: &str,
+    threads: usize,
+    s: &svdquant::coordinator::server::ServeStats,
+    tokens_s: f64,
+) -> Json {
+    Json::object(vec![
+        ("kernel".to_string(), Json::from(kernel)),
+        ("threads".to_string(), Json::from(threads as f64)),
+        ("rps".to_string(), Json::from(s.throughput_rps)),
+        ("tokens_per_s".to_string(), Json::from(tokens_s)),
+        ("p50_ms".to_string(), Json::from(s.p50_ms)),
+        ("p95_ms".to_string(), Json::from(s.p95_ms)),
+        ("p99_ms".to_string(), Json::from(s.p99_ms)),
+        ("mean_batch".to_string(), Json::from(s.mean_batch)),
+        ("accuracy".to_string(), Json::from(s.accuracy)),
+        ("completions".to_string(), Json::from(s.completions as f64)),
+    ])
 }

@@ -2,7 +2,9 @@
 //! other kernel is judged against), Jacobi SVD and randomized SVD scaling,
 //! Cholesky + inverse-diagonal (the SpQR kernel). `harness = false`.
 
-use svdquant::linalg::{cholesky, inverse_diagonal, matmul, matmul_a_bt, qr_thin, rsvd, svd_jacobi, Matrix};
+use svdquant::linalg::{
+    cholesky, inverse_diagonal, matmul, matmul_a_bt, qr_thin, rsvd, svd_jacobi, Matrix,
+};
 use svdquant::util::bench::Bench;
 use svdquant::util::rng::Rng;
 

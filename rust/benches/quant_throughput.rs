@@ -1,16 +1,22 @@
 //! §III-B mechanism benches: quantize/dequantize/pack bandwidth, the fused
-//! mixed-precision matvec, and the clip/bits/NF4 ablations (DESIGN.md §5).
+//! mixed-precision matvec, the integer-domain igemm vs float-path GEMM
+//! (1-vs-N threads), and the clip/bits/NF4 ablations (DESIGN.md §5, §8).
 //! `harness = false`.
 
+#[path = "common/mod.rs"]
+mod common;
+
+use svdquant::json::Json;
 use svdquant::linalg::Matrix;
 use svdquant::quant::nf4::nf4_fake_quant;
 use svdquant::quant::symmetric::mse;
 use svdquant::quant::{
-    dequantize, fake_quant, pack_nibbles, quant_params, quantize_codes, unpack_nibbles,
-    QuantConfig, QuantizedMatrix,
+    dequantize, fake_quant, pack_nibbles, quant_params, quantize_codes, quantize_rows,
+    unpack_nibbles, QuantConfig, QuantizedMatrix,
 };
 use svdquant::sparse::Coo;
 use svdquant::util::bench::Bench;
+use svdquant::util::pool;
 use svdquant::util::rng::Rng;
 
 fn main() {
@@ -82,6 +88,60 @@ fn main() {
         }
         acc
     });
+
+    // --- batch GEMM: float path vs integer-domain igemm -------------------
+    // the serving-hot-path comparison (DESIGN.md §8): per-(row,request)
+    // float decode (the pre-PR2 baseline) vs batch-panel-blocked float
+    // decode vs int4×int8→i32 igemm, at 1-vs-N threads
+    let batch = 16usize;
+    let mut xb = Matrix::zeros(batch, cols);
+    rng.fill_normal(xb.data_mut(), 1.0);
+    let gflops = (2 * rows * cols * batch) as f64;
+    let mut yb = vec![0.0f32; rows];
+    b.timeit_throughput("matmul_xt b=16 per-request matvec (before)", gflops, "flop", || {
+        for r in 0..batch {
+            qm.matvec(xb.row(r), &mut yb);
+        }
+    });
+    let mut igemm_json: Vec<(String, Json)> = Vec::new();
+    // the float batch-panel path is a serial kernel — measure it once
+    b.timeit_throughput("matmul_xt b=16 float batch-panel (serial)", gflops, "flop", || {
+        qm.matmul_xt(&xb)
+    });
+    igemm_json.push((
+        "float_gflop_s".to_string(),
+        Json::from(common::measure_units_per_s(gflops, 150, || qm.matmul_xt(&xb)) / 1e9),
+    ));
+    // the igemm path fans weight-row panels over the pool: 1-vs-N threads
+    for &threads in &[1usize, 0] {
+        pool::set_global_parallelism(threads);
+        let label = if threads == 1 {
+            "1 thread".to_string()
+        } else {
+            format!("{} threads", pool::global_parallelism())
+        };
+        b.timeit_throughput(
+            &format!("matmul_xt b=16 int8 igemm ({label})"),
+            gflops,
+            "flop",
+            || qm.matmul_xt_int(&xb),
+        );
+        let tkey = if threads == 1 { "t1" } else { "tN" };
+        let gflop_s = common::measure_units_per_s(gflops, 150, || qm.matmul_xt_int(&xb)) / 1e9;
+        igemm_json.push((format!("int8_{tkey}_gflop_s"), Json::from(gflop_s)));
+    }
+    pool::set_global_parallelism(0);
+    let elems = (batch * cols) as f64;
+    b.timeit_throughput("quantize_rows b=16 (dynamic int8 activations)", elems, "elem", || {
+        quantize_rows(&xb)
+    });
+    common::write_bench_serving(
+        "quant_throughput",
+        Json::object(vec![(
+            "igemm_1024_b16".to_string(),
+            Json::object(igemm_json),
+        )]),
+    );
 
     // --- ablations: quantization error by config --------------------------
     let mut rows_t = Vec::new();

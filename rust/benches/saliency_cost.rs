@@ -95,6 +95,12 @@ fn main() {
     let ckpt = synthetic_params(&mcfg, 0x5CA1E);
     let n_layers = mcfg.quantizable_names().len();
     for threads in [1usize, 0] {
+        // cap the whole global pool, not just the pipeline's scoring batch:
+        // the scorers' inner kernels (rsvd range-finder matmuls) fan out on
+        // the shared pool, so without this the "1 thread" row would still
+        // run those multi-core (exactly how main.rs's apply_threads wires
+        // --threads)
+        svdquant::util::pool::set_global_parallelism(threads);
         let mut pipe = QuantizePipeline::for_checkpoint(&mcfg, &ckpt)
             .scorer(Box::new(SvdScorer::new(8, SvdScoreMode::default())))
             .threads(threads)
@@ -108,6 +114,7 @@ fn main() {
             pipe.ensure_scores().expect("score")
         });
     }
+    svdquant::util::pool::set_global_parallelism(0);
     {
         let mut pipe = QuantizePipeline::for_checkpoint(&mcfg, &ckpt)
             .scorer(Box::new(SvdScorer::new(8, SvdScoreMode::default())))

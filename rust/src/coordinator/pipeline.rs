@@ -32,13 +32,14 @@ use crate::linalg::Matrix;
 use crate::model::{ModelConfig, Params};
 use crate::quant::QuantConfig;
 use crate::saliency::{select_topk, SalientSet, ScoreCtx, Scorer, SvdScorer};
-use crate::util::{timer, ThreadPool};
+use crate::util::{pool, timer, ThreadPool};
 
 use super::preserve;
 
 /// Staged builder for [`QuantizePipeline`]; every stage has a paper-default.
-/// `build()` resolves the thread count but spawns no resident workers —
-/// scoring batches run on scoped [`ThreadPool`] workers per call.
+/// `build()` resolves the thread count but spawns nothing itself — scoring
+/// batches run on the process-wide [`pool::global`] workers, capped at the
+/// configured concurrency.
 pub struct PipelineBuilder<'a> {
     cfg: &'a ModelConfig,
     ckpt: &'a Params,
@@ -75,6 +76,12 @@ impl<'a> PipelineBuilder<'a> {
     }
 
     /// Scoring thread count; `0` = available parallelism (default).
+    ///
+    /// Caps how many *layers* are scored concurrently. Scorer-internal
+    /// kernels (the rsvd range-finder's `matmul_par`) are governed by the
+    /// process-wide [`pool::set_global_parallelism`] cap instead — callers
+    /// that want a hard ceiling set both, which is exactly what the CLI's
+    /// `--threads` does (`main.rs::apply_threads`).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
@@ -101,9 +108,9 @@ impl<'a> PipelineBuilder<'a> {
 }
 
 /// The staged quantization pipeline (see module docs). Owns the score-map
-/// cache and the resolved scoring-thread count (scoped workers spawn per
-/// scoring batch — no resident threads); borrows config, checkpoint and
-/// calibration stats from the caller.
+/// cache and the resolved scoring-thread count (a concurrency cap on the
+/// shared global pool — no threads of its own); borrows config, checkpoint
+/// and calibration stats from the caller.
 pub struct QuantizePipeline<'a> {
     cfg: &'a ModelConfig,
     ckpt: &'a Params,
@@ -111,8 +118,7 @@ pub struct QuantizePipeline<'a> {
     scorer: Box<dyn Scorer>,
     qcfg: QuantConfig,
     budget: usize,
-    /// resolved scoring-thread count (scoped workers, spawned per batch —
-    /// holding resident pool workers here would leave them idle)
+    /// resolved scoring-concurrency cap on the shared global pool
     threads: usize,
     /// (layer name, scorer cache key) → score map
     cache: BTreeMap<(String, String), Matrix>,
@@ -186,12 +192,22 @@ impl<'a> QuantizePipeline<'a> {
         let ctx = ScoreCtx { calib: self.calib };
         let scorer = self.scorer.as_ref();
         let threads = self.threads;
+        // scoring shares the process-wide pool with the serving kernels
+        // (DESIGN.md §8): `threads` caps this batch's concurrency, and a
+        // scorer that fans out again internally (the rsvd range-finder)
+        // reuses the same workers instead of oversubscribing. threads == 1
+        // stays fully serial without ever spawning the resident pool.
+        let score_one = |name: String| -> Result<(String, Matrix)> {
+            let w = ckpt.get(&name)?;
+            let s = scorer.score(&name, w, &ctx)?;
+            Ok((name, s))
+        };
         let scored: Vec<Result<(String, Matrix)>> = timer::scope("pipeline.score", || {
-            ThreadPool::scoped_map(threads, missing, |name| {
-                let w = ckpt.get(&name)?;
-                let s = scorer.score(&name, w, &ctx)?;
-                Ok((name, s))
-            })
+            if threads <= 1 {
+                missing.into_iter().map(score_one).collect()
+            } else {
+                pool::global().map_capped(threads, missing, score_one)
+            }
         });
         for r in scored {
             let (name, s) = r?;

@@ -8,8 +8,12 @@
 //! * the batcher drains up to `max_batch` requests or waits at most
 //!   `max_wait` after the first request of a batch (classic size-or-
 //!   deadline batching);
-//! * the worker runs the fused packed-int4 forward and completes requests
-//!   with per-request latency bookkeeping.
+//! * the worker runs the fused packed-int4 forward (integer-domain igemm
+//!   by default) and completes requests with per-request latency
+//!   bookkeeping. Each batch fans out over the global
+//!   [`pool`](crate::util::pool) inside the kernels, so the worker and
+//!   pipeline scoring draw on one `--threads`-governed pool (the cap is
+//!   per fan-out; total threads stay bounded by the resident workers).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -188,7 +192,7 @@ pub fn serve_trace(
                 let pred = row
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(j, _)| j as i32)
                     .unwrap();
                 if pred == data.label(r.sample) {
@@ -209,7 +213,7 @@ pub fn serve_trace(
 
     let wall = start.elapsed().as_secs_f64();
     let mut lat: Vec<f64> = completions.iter().map(|c| c.total_ms).collect();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat.sort_by(|a, b| a.total_cmp(b));
     let pct = |p: f64| -> f64 {
         if lat.is_empty() {
             return 0.0;

@@ -1,17 +1,27 @@
 //! Cache-blocked matrix multiply — the hot loop under both the native
 //! engine (model/engine.rs) and the factorizations here.
 //!
-//! Strategy (single-core x86-64, no intrinsics needed to reach near-scalar
-//! roofline):
+//! Strategy:
 //! * loop order i-k-j with the k-loop innermost *unrolled by 4 over j*
 //!   lets LLVM auto-vectorize the j-sweep (contiguous rows of B and C);
 //! * L2-blocking over k (KB) and j (JB) keeps the working set of B resident;
 //! * `matmul_a_bt` (A·Bᵀ) is the layout the transformer actually uses —
 //!   weights are stored [dout, din] row-major, so rows of B are the
 //!   contraction axis and both operands stream contiguously; it gets the
-//!   dot-product kernel with 4-way k-unroll instead.
+//!   dot-product kernel with 4-way k-unroll instead;
+//! * the `_par` variants fan contiguous C-row panels out over the global
+//!   [`crate::util::pool`] — each output row keeps the exact serial
+//!   arithmetic order, so parallel results are bitwise identical to serial
+//!   under any thread count. Problems below [`pool::PAR_THRESHOLD`] flops
+//!   stay serial.
 //!
-//! Perf log lives in EXPERIMENTS.md §Perf (L3).
+//! The inner loops are branch-free on purpose: an `if a == 0.0 continue`
+//! "sparsity" shortcut defeats auto-vectorization on dense inputs and was
+//! measured as a net loss (EXPERIMENTS.md §Perf).
+//!
+//! Perf log lives in EXPERIMENTS.md §Perf.
+
+use crate::util::pool;
 
 use super::Matrix;
 
@@ -21,22 +31,36 @@ const JB: usize = 512; // j-panel
 /// C = A @ B.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    matmul_rows(a, b, 0, a.rows())
+}
+
+/// Pool-parallel [`matmul`]: row panels of C on the global pool. Bitwise
+/// identical to the serial kernel; small problems run serially inline.
+pub fn matmul_par(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
     let (m, k) = a.shape();
     let n = b.cols();
-    let mut c = Matrix::zeros(m, n);
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    par_over_rows(m, n, flops, |lo, hi| matmul_rows(a, b, lo, hi))
+}
+
+/// Rows `lo..hi` of `A @ B` as a packed `[hi-lo, n]` matrix. For a fixed
+/// output row the (kb, jb, kk) visit order is independent of the panel
+/// split — the property the `_par` determinism tests pin down.
+fn matmul_rows(a: &Matrix, b: &Matrix, lo: usize, hi: usize) -> Matrix {
+    let k = a.cols();
+    let n = b.cols();
+    let mut c = Matrix::zeros(hi - lo, n);
     let bd = b.data();
     for kb in (0..k).step_by(KB) {
         let kend = (kb + KB).min(k);
         for jb in (0..n).step_by(JB) {
             let jend = (jb + JB).min(n);
-            for i in 0..m {
+            for i in lo..hi {
                 let arow = a.row(i);
-                let crow = &mut c.row_mut(i)[jb..jend];
+                let crow = &mut c.row_mut(i - lo)[jb..jend];
                 for kk in kb..kend {
                     let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
                     let brow = &bd[kk * n + jb..kk * n + jend];
                     // contiguous saxpy over the j panel — auto-vectorizes
                     for (cv, bv) in crow.iter_mut().zip(brow) {
@@ -52,17 +76,61 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// C = A @ Bᵀ — the transformer layout (B is [n, k] row-major).
 pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
+    matmul_a_bt_rows(a, b, 0, a.rows())
+}
+
+/// Pool-parallel [`matmul_a_bt`] (the engine's linear layer at batch > 1).
+pub fn matmul_a_bt_par(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
     let (m, k) = a.shape();
     let n = b.rows();
-    let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    par_over_rows(m, n, flops, |lo, hi| matmul_a_bt_rows(a, b, lo, hi))
+}
+
+fn matmul_a_bt_rows(a: &Matrix, b: &Matrix, lo: usize, hi: usize) -> Matrix {
+    let k = a.cols();
+    let n = b.rows();
+    let mut c = Matrix::zeros(hi - lo, n);
+    for i in lo..hi {
         let arow = a.row(i);
-        let crow = c.row_mut(i);
+        let crow = c.row_mut(i - lo);
         for j in 0..n {
             crow[j] = dot(arow, b.row(j), k);
         }
     }
     c
+}
+
+/// Shared row-panel fan-out: run `panel(lo, hi)` over contiguous splits of
+/// `0..m` on the global pool and stitch the results back in order.
+fn par_over_rows(
+    m: usize,
+    n: usize,
+    flops: f64,
+    panel: impl Fn(usize, usize) -> Matrix + Sync,
+) -> Matrix {
+    if m == 0 {
+        return Matrix::zeros(0, n);
+    }
+    // size-gate BEFORE touching the pool: querying it would lazily spawn
+    // the resident workers, which sub-threshold processes never need
+    if m < 2 || flops < pool::PAR_THRESHOLD {
+        return panel(0, m);
+    }
+    let cap = pool::global_parallelism();
+    if cap <= 1 {
+        return panel(0, m);
+    }
+    // oversplit 2× for load balance; panels stay contiguous so stitching
+    // is a straight concatenation
+    let panels = pool::row_panels(m, cap * 2);
+    let parts = pool::global().map_capped(cap, panels, |(lo, hi)| panel(lo, hi));
+    let mut data = Vec::with_capacity(m * n);
+    for p in parts {
+        data.extend_from_slice(p.data());
+    }
+    Matrix::from_vec(m, n, data)
 }
 
 /// C = Aᵀ @ B (A is [k, m], B is [k, n]) — used for XᵀX accumulation.
@@ -76,9 +144,6 @@ pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
         let brow = b.row(kk);
         for i in 0..m {
             let aki = arow[i];
-            if aki == 0.0 {
-                continue;
-            }
             let crow = c.row_mut(i);
             for (cv, bv) in crow.iter_mut().zip(brow) {
                 *cv += aki * bv;
@@ -148,6 +213,23 @@ mod tests {
     }
 
     #[test]
+    fn handles_sparse_inputs() {
+        // the zero-skip branch was removed from the inner loops; exact
+        // zeros must still contribute exactly nothing
+        let mut rng = Rng::new(24);
+        let mut a = rand_m(&mut rng, 19, 23);
+        for (i, v) in a.data_mut().iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        let b = rand_m(&mut rng, 23, 11);
+        assert!(matmul(&a, &b).approx_eq(&naive(&a, &b), 1e-4));
+        let at = a.transpose();
+        assert!(matmul_at_b(&at, &b).approx_eq(&naive(&a, &b), 1e-4));
+    }
+
+    #[test]
     fn a_bt_matches_transpose_form() {
         let mut rng = Rng::new(22);
         for &(m, k, n) in &[(5, 8, 3), (31, 257, 19), (2, 1024, 6)] {
@@ -172,6 +254,38 @@ mod tests {
     }
 
     #[test]
+    fn par_variants_bitwise_match_serial() {
+        // shapes straddling PAR_THRESHOLD on both sides; equality is exact
+        // because each output row keeps the serial arithmetic order
+        let mut rng = Rng::new(25);
+        for &(m, k, n) in &[(3, 4, 5), (40, 30, 20), (150, 90, 80), (257, 64, 33)] {
+            let a = rand_m(&mut rng, m, k);
+            let b = rand_m(&mut rng, k, n);
+            assert!(
+                matmul_par(&a, &b).approx_eq(&matmul(&a, &b), 0.0),
+                "matmul_par ({m},{k},{n}) diverged from serial"
+            );
+            let bt = rand_m(&mut rng, n, k);
+            assert!(
+                matmul_a_bt_par(&a, &bt).approx_eq(&matmul_a_bt(&a, &bt), 0.0),
+                "matmul_a_bt_par ({m},{k},{n}) diverged from serial"
+            );
+        }
+    }
+
+    #[test]
+    fn par_respects_parallelism_cap_of_one() {
+        let _guard = crate::util::pool::test_sync::CAP_LOCK.lock().unwrap();
+        let mut rng = Rng::new(26);
+        let a = rand_m(&mut rng, 120, 100);
+        let b = rand_m(&mut rng, 100, 90);
+        crate::util::pool::set_global_parallelism(1);
+        let serial_capped = matmul_par(&a, &b);
+        crate::util::pool::set_global_parallelism(0);
+        assert!(serial_capped.approx_eq(&matmul(&a, &b), 0.0));
+    }
+
+    #[test]
     fn dot_handles_remainders() {
         for len in 0..9 {
             let a: Vec<f32> = (0..len).map(|i| i as f32).collect();
@@ -186,6 +300,7 @@ mod tests {
         let a = Matrix::zeros(0, 5);
         let b = Matrix::zeros(5, 3);
         assert_eq!(matmul(&a, &b).shape(), (0, 3));
+        assert_eq!(matmul_par(&a, &b).shape(), (0, 3));
         let a = Matrix::zeros(2, 0);
         let b = Matrix::zeros(0, 3);
         let c = matmul(&a, &b);

@@ -19,7 +19,7 @@ pub mod rsvd;
 pub mod svd;
 
 pub use cholesky::{cholesky, inverse_diagonal, solve_cholesky};
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_a_bt_par, matmul_par};
 pub use qr::qr_thin;
 pub use rsvd::rsvd;
 pub use svd::{svd_jacobi, Svd};

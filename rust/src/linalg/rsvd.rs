@@ -11,7 +11,7 @@
 //! the exact top-k selection on trained transformer layers — that agreement
 //! is itself a test (saliency/svd.rs) and an ablation bench row.
 
-use super::{matmul, qr_thin, svd_jacobi, Matrix, Svd};
+use super::{matmul_par, qr_thin, svd_jacobi, Matrix, Svd};
 use crate::util::rng::Rng;
 
 /// Truncated randomized SVD: top-`rank` triplets of `a`.
@@ -32,20 +32,22 @@ pub fn rsvd(a: &Matrix, rank: usize, oversample: usize, power_iters: usize, seed
     let mut rng = Rng::new(seed ^ 0x5D5D_5D5D);
     let mut omega = Matrix::zeros(n, l);
     rng.fill_normal(omega.data_mut(), 1.0);
-    // Y = A Ω  (m × l)
-    let mut y = matmul(a, &omega);
+    // Y = A Ω  (m × l) — the range-finder products run row-panel parallel
+    // on the global pool (bitwise identical to serial, so scorer output is
+    // still deterministic under any thread count)
+    let mut y = matmul_par(a, &omega);
     // power iterations with re-orthonormalization for spectral contrast
     let at = a.transpose();
     for _ in 0..power_iters {
         let (q, _) = qr_thin(&y);
-        let z = matmul(&at, &q); // n × l
+        let z = matmul_par(&at, &q); // n × l
         let (qz, _) = qr_thin(&z);
-        y = matmul(a, &qz); // m × l
+        y = matmul_par(a, &qz); // m × l
     }
     let (q, _) = qr_thin(&y); // m × l orthonormal
-    let b = matmul(&q.transpose(), a); // l × n
+    let b = matmul_par(&q.transpose(), a); // l × n
     let svd_b = svd_jacobi(&b);
-    let u = matmul(&q, &svd_b.u); // m × l
+    let u = matmul_par(&q, &svd_b.u); // m × l
     truncate(Svd { u, s: svd_b.s, vt: svd_b.vt }, r)
 }
 

@@ -109,7 +109,9 @@ pub fn svd_jacobi(a: &Matrix) -> Svd {
             (col.iter().map(|x| x * x).sum::<f64>().sqrt(), j)
         })
         .collect();
-    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // total_cmp: a NaN norm (degenerate input) sorts deterministically
+    // instead of panicking the whole pipeline
+    sv.sort_by(|a, b| b.0.total_cmp(&a.0));
     let mut u = Matrix::zeros(m, n);
     let mut vt = Matrix::zeros(n, n);
     let mut s = Vec::with_capacity(n);
@@ -203,6 +205,17 @@ mod tests {
         assert!(svd.s[2] < 1e-4 * svd.s[0], "rank should be 2: {:?}", &svd.s[..4]);
         let rec2 = svd.reconstruct(2);
         assert!(rec2.approx_eq(&a, 1e-3));
+    }
+
+    #[test]
+    fn nan_input_does_not_panic() {
+        // degenerate (NaN-poisoned) inputs must come back as NaN factors,
+        // not a partial_cmp panic mid-pipeline
+        let mut a = Matrix::zeros(3, 4);
+        a[(0, 0)] = f32::NAN;
+        a[(1, 2)] = 1.0;
+        let svd = svd_jacobi(&a);
+        assert_eq!(svd.s.len(), 3);
     }
 
     #[test]

@@ -91,7 +91,17 @@ fn artifacts_flag(p: Parser) -> Parser {
 }
 
 fn threads_flag(p: Parser) -> Parser {
-    p.flag("threads", Some("0"), "scoring threads (0 = available parallelism)")
+    p.flag("threads", Some("0"), "worker threads for scoring AND serving kernels (0 = all cores)")
+}
+
+/// Read `--threads` and point the process-wide pool at it, so pipeline
+/// scoring, the serving worker's igemm panels and the parallel matmuls all
+/// share one `--threads`-governed pool. Returns the raw flag value for the
+/// pipeline builder.
+fn apply_threads(a: &svdquant::util::cli::Args) -> Result<usize> {
+    let threads = a.usize("threads")?;
+    svdquant::util::pool::set_global_parallelism(threads);
+    Ok(threads)
 }
 
 fn cmd_info(rest: &[String]) -> Result<()> {
@@ -156,7 +166,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
             .collect::<Result<_>>()?;
     }
     cfg.qcfg = quant_cfg_from_args(&a)?;
-    cfg.threads = a.usize("threads")?;
+    cfg.threads = apply_threads(&a)?;
     let res = run_sweep(&art, &rt, &cfg)?;
     report::write_report(&art, &res, &cfg.budgets, &out)?;
     if a.bool("timers") {
@@ -310,7 +320,7 @@ fn cmd_quantize(rest: &[String]) -> Result<()> {
         .budget(a.usize("k")?)
         .quant(quant_cfg_from_args(&a)?)
         .calib(calib.as_ref())
-        .threads(a.usize("threads")?)
+        .threads(apply_threads(&a)?)
         .build()?;
     let (qp, sels) = pipe.run()?;
     println!(
@@ -375,7 +385,7 @@ fn cmd_overlap(rest: &[String]) -> Result<()> {
     // one pipeline: score maps computed once per scorer, top-k per budget
     let mut pipe = QuantizePipeline::for_checkpoint(&art.model_cfg, &ckpt)
         .calib(calib.as_ref())
-        .threads(a.usize("threads")?)
+        .threads(apply_threads(&a)?)
         .build()?;
     let mut selections = SelectionGrid::new();
     for mname in ["svd", "awq", "spqr"] {
@@ -452,7 +462,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             .budget(a.usize("k")?)
             .quant(qcfg)
             .calib(calib.as_ref())
-            .threads(a.usize("threads")?)
+            .threads(apply_threads(&a)?)
             .build()?;
         pipe.select(pipe.budget())?
     };

@@ -8,7 +8,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::linalg::{matmul_a_bt, Matrix};
+use crate::linalg::{matmul_a_bt_par, Matrix};
 
 use super::{ModelConfig, Params};
 
@@ -205,9 +205,11 @@ impl Engine {
     }
 }
 
-/// y = x @ wᵀ + b (w stored [dout, din] like the python model).
+/// y = x @ wᵀ + b (w stored [dout, din] like the python model). Runs on
+/// the pool-parallel row-panel kernel — bitwise identical to serial, so
+/// forward determinism is preserved under any thread count.
 fn linear(x: &Matrix, w: &Matrix, b: &[f32]) -> Matrix {
-    let mut y = matmul_a_bt(x, w);
+    let mut y = matmul_a_bt_par(x, w);
     debug_assert_eq!(b.len(), y.cols());
     for i in 0..y.rows() {
         for (yv, bv) in y.row_mut(i).iter_mut().zip(b) {

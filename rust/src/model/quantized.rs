@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 use anyhow::{Context, Result};
 
 use crate::linalg::Matrix;
-use crate::quant::{QuantConfig, QuantizedMatrix};
+use crate::quant::{GemmKernel, QuantConfig, QuantizedMatrix};
 use crate::saliency::SalientSet;
 
 use super::{Engine, ModelConfig, Params};
@@ -20,6 +20,9 @@ pub struct QuantizedModel {
     /// LayerNorms) — its quantizable weights are ignored on this path
     engine: Engine,
     qweights: BTreeMap<String, QuantizedMatrix>,
+    /// which GEMM the fused forward's linears run on (serving default:
+    /// the integer-domain igemm)
+    kernel: GemmKernel,
 }
 
 impl QuantizedModel {
@@ -39,7 +42,28 @@ impl QuantizedModel {
                 .with_context(|| format!("no salient selection for {name}"))?;
             qweights.insert(name.clone(), QuantizedMatrix::from_dense(w, qcfg, &sel.to_coo(w)));
         }
-        Ok(Self { engine: Engine::new(cfg, params)?, qweights })
+        Ok(Self {
+            engine: Engine::new(cfg, params)?,
+            qweights,
+            kernel: GemmKernel::default(),
+        })
+    }
+
+    /// Select the GEMM kernel the fused forward runs on (builder form).
+    pub fn with_kernel(mut self, kernel: GemmKernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Switch the fused-forward kernel in place (kernel comparisons reuse
+    /// one quantized model instead of re-packing every layer).
+    pub fn set_kernel(&mut self, kernel: GemmKernel) {
+        self.kernel = kernel;
+    }
+
+    /// The active fused-forward kernel.
+    pub fn kernel(&self) -> GemmKernel {
+        self.kernel
     }
 
     /// Total bytes of the quantized weights (vs dense f32).
@@ -69,16 +93,19 @@ impl QuantizedModel {
     }
 
     /// Fused mixed-precision forward: linears run directly over packed
-    /// codes + CSR overlay (`QuantizedMatrix::matmul_xt`), dense f32 weight
-    /// matrices are never materialized. ~8× smaller working set.
+    /// codes + CSR overlay, dense f32 weight matrices are never
+    /// materialized. ~8× smaller working set. The contraction kernel is
+    /// selected by [`QuantizedModel::with_kernel`] — [`GemmKernel::Int8`]
+    /// (default) stays in the integer domain, [`GemmKernel::F32`] is the
+    /// float reference.
     pub fn forward_fused(&self, ids: &[i32], mask: &[i32]) -> Result<Matrix> {
         // The engine's forward is structured around `Params::get`; rather
         // than duplicate the whole pass, we express the fused path as an
         // engine over a Params view whose quantizable entries are produced
         // by the packed matmul. The clean seam is the linear() call, so we
         // run a bespoke forward here that mirrors engine.rs but swaps the
-        // quantizable linears for qmatrix::matmul_xt.
-        fused::forward(&self.engine, &self.qweights, ids, mask)
+        // quantizable linears for the packed kernels.
+        fused::forward(&self.engine, &self.qweights, self.kernel, ids, mask)
     }
 }
 
@@ -91,6 +118,7 @@ mod fused {
     pub fn forward(
         engine: &Engine,
         qw: &BTreeMap<String, QuantizedMatrix>,
+        kernel: GemmKernel,
         ids: &[i32],
         mask: &[i32],
     ) -> Result<Matrix> {
@@ -118,20 +146,20 @@ mod fused {
 
         for li in 0..cfg.layers {
             let pre = format!("layer{li}.");
-            let q = qlinear(&hid, qw, p, &format!("{pre}wq"), &format!("{pre}bq"))?;
-            let k = qlinear(&hid, qw, p, &format!("{pre}wk"), &format!("{pre}bk"))?;
-            let v = qlinear(&hid, qw, p, &format!("{pre}wv"), &format!("{pre}bv"))?;
+            let q = qlinear(&hid, qw, p, kernel, &format!("{pre}wq"), &format!("{pre}bq"))?;
+            let k = qlinear(&hid, qw, p, kernel, &format!("{pre}wk"), &format!("{pre}bk"))?;
+            let v = qlinear(&hid, qw, p, kernel, &format!("{pre}wv"), &format!("{pre}bv"))?;
             let ctx = attention(&cfg, &q, &k, &v, mask, b);
-            let attn = qlinear(&ctx, qw, p, &format!("{pre}wo"), &format!("{pre}bo"))?;
+            let attn = qlinear(&ctx, qw, p, kernel, &format!("{pre}wo"), &format!("{pre}bo"))?;
             for (hv, av) in hid.data_mut().iter_mut().zip(attn.data()) {
                 *hv += av;
             }
             ln(&mut hid, p.vec(&format!("{pre}ln1_g"))?, p.vec(&format!("{pre}ln1_b"))?);
-            let mut f = qlinear(&hid, qw, p, &format!("{pre}wf1"), &format!("{pre}bf1"))?;
+            let mut f = qlinear(&hid, qw, p, kernel, &format!("{pre}wf1"), &format!("{pre}bf1"))?;
             for v in f.data_mut() {
                 *v = gelu(*v);
             }
-            let f2 = qlinear(&f, qw, p, &format!("{pre}wf2"), &format!("{pre}bf2"))?;
+            let f2 = qlinear(&f, qw, p, kernel, &format!("{pre}wf2"), &format!("{pre}bf2"))?;
             for (hv, fv) in hid.data_mut().iter_mut().zip(f2.data()) {
                 *hv += fv;
             }
@@ -142,22 +170,26 @@ mod fused {
         for bi in 0..b {
             cls.row_mut(bi).copy_from_slice(hid.row(bi * s));
         }
-        let mut z = qlinear(&cls, qw, p, "pre_classifier.w", "pre_classifier.b")?;
+        let mut z = qlinear(&cls, qw, p, kernel, "pre_classifier.w", "pre_classifier.b")?;
         for v in z.data_mut() {
             *v = v.max(0.0);
         }
-        qlinear(&z, qw, p, "classifier.w", "classifier.b")
+        qlinear(&z, qw, p, kernel, "classifier.w", "classifier.b")
     }
 
     fn qlinear(
         x: &Matrix,
         qw: &BTreeMap<String, QuantizedMatrix>,
         p: &Params,
+        kernel: GemmKernel,
         wname: &str,
         bname: &str,
     ) -> Result<Matrix> {
         let qm = qw.get(wname).with_context(|| format!("missing qweight {wname}"))?;
-        let mut y = qm.matmul_xt(x);
+        let mut y = match kernel {
+            GemmKernel::F32 => qm.matmul_xt(x),
+            GemmKernel::Int8 => qm.matmul_xt_int(x),
+        };
         let bias = p.vec(bname)?;
         for i in 0..y.rows() {
             for (yv, bv) in y.row_mut(i).iter_mut().zip(bias) {
@@ -271,8 +303,11 @@ mod tests {
     }
 
     #[test]
-    fn fused_matches_dense_dequant_engine() {
+    fn fused_f32_matches_dense_dequant_engine() {
+        // the float kernel has identical semantics to the dense
+        // reconstruction — tight tolerance
         let (qm, _) = build_qmodel(8);
+        let qm = qm.with_kernel(GemmKernel::F32);
         let ids: Vec<i32> = (0..16).map(|i| (i % 60) as i32 + 1).collect();
         let mask = vec![1i32; 16];
         let fused = qm.forward_fused(&ids, &mask).unwrap();
@@ -281,6 +316,26 @@ mod tests {
             fused.approx_eq(&dense, 2e-3),
             "fused vs dense diff {}",
             fused.max_abs_diff(&dense)
+        );
+    }
+
+    #[test]
+    fn fused_int8_tracks_f32_kernel() {
+        // int8 dynamic activation quantization adds bounded noise per
+        // linear (igemm's derived-bound property test pins the kernel);
+        // end to end through LayerNorms the logits stay close
+        let (qm, _) = build_qmodel(8);
+        assert_eq!(qm.kernel(), GemmKernel::Int8); // serving default
+        let ids: Vec<i32> = (0..16).map(|i| (i % 60) as i32 + 1).collect();
+        let mask = vec![1i32; 16];
+        let int8 = qm.forward_fused(&ids, &mask).unwrap();
+        let qm = qm.with_kernel(GemmKernel::F32);
+        let f32_logits = qm.forward_fused(&ids, &mask).unwrap();
+        assert_eq!(int8.shape(), f32_logits.shape());
+        assert!(
+            int8.approx_eq(&f32_logits, 0.15),
+            "int8 vs f32 kernel diff {}",
+            int8.max_abs_diff(&f32_logits)
         );
     }
 

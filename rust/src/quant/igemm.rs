@@ -1,0 +1,402 @@
+//! Integer-domain packed GEMM — the serving hot path (DESIGN.md §8).
+//!
+//! The float reference path (`QuantizedMatrix::matmul_xt`) decodes every
+//! nibble to f32 and multiplies in the float domain. Here the contraction
+//! stays in integers end to end:
+//!
+//! ```text
+//! x̂_bj  = round(x_bj / s_x_b)          dynamic per-row int8 activations
+//! acc   = Σ_j ŵ_ij · x̂_bj             i32 accumulate over int4 × int8
+//! y_bi  = acc · (s_w_i · s_x_b)        combined scale applied once
+//!         + Σ_{(i,c)∈S} (v_ic·x_bc − ŵ_ic·x̂_bc·s_w_i·s_x_b)
+//! ```
+//!
+//! The salient CSR overlay is folded in as an *override correction*: the
+//! residual's contribution at each salient coordinate is removed in exact
+//! i32 arithmetic and replaced by the FP32 term computed from the
+//! unquantized activation — the same override (not add) semantics as the
+//! float path. A fully-salient matrix therefore reproduces the FP32 linear
+//! exactly (the integer accumulator cancels to zero), and for non-salient
+//! coordinates the only divergence from the float path is the activation
+//! rounding, bounded per output by `½·s_x_b·s_w_i·Σ_j|ŵ_ij|` (the i32
+//! accumulation itself is exact: |ŵ|≤7, |x̂|≤127 keeps Σ far from i32
+//! overflow for any realistic width). The parity property test below pins
+//! that bound.
+//!
+//! Perf structure (EXPERIMENTS.md §Perf):
+//! * each packed weight row is decoded to int8 **once per batch** (the
+//!   float path used to decode once per (row, request));
+//! * weight rows fan out in contiguous panels over the global
+//!   [`pool`](crate::util::pool) — every output row's arithmetic order is
+//!   independent of the split, so results are identical under any thread
+//!   count.
+
+use std::sync::OnceLock;
+
+use crate::linalg::Matrix;
+use crate::util::pool;
+
+use super::packing::sign_extend4;
+use super::QuantizedMatrix;
+
+/// Byte → two sign-extended int4 codes: the integer sibling of the f32
+/// nibble LUT in `qmatrix.rs` (one indexed load per packed byte).
+static NIBBLE_I8: OnceLock<[[i8; 2]; 256]> = OnceLock::new();
+
+pub(crate) fn nibble_i8_lut() -> &'static [[i8; 2]; 256] {
+    NIBBLE_I8.get_or_init(|| {
+        let mut t = [[0i8; 2]; 256];
+        for (b, item) in t.iter_mut().enumerate() {
+            item[0] = sign_extend4(b as u8 & 0x0F);
+            item[1] = sign_extend4((b as u8) >> 4);
+        }
+        t
+    })
+}
+
+/// An activation batch quantized to int8, one dynamic scale per row
+/// (`s_x = max|x| / 127`; a zero row gets scale 1 and all-zero codes).
+pub struct QuantizedRows {
+    pub rows: usize,
+    pub cols: usize,
+    /// row-major int8 codes
+    pub codes: Vec<i8>,
+    /// per-row dynamic scale
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedRows {
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i8] {
+        &self.codes[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+/// Dynamic per-row symmetric int8 quantization of an activation batch.
+pub fn quantize_rows(x: &Matrix) -> QuantizedRows {
+    let (rows, cols) = x.shape();
+    let mut codes = Vec::with_capacity(rows * cols);
+    let mut scales = Vec::with_capacity(rows);
+    for i in 0..rows {
+        let row = x.row(i);
+        let amax = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        let inv = 1.0 / scale;
+        scales.push(scale);
+        codes.extend(
+            row.iter()
+                .map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8),
+        );
+    }
+    QuantizedRows { rows, cols, codes, scales }
+}
+
+/// 4-lane unrolled i8 × i8 → i32 dot product.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8], len: usize) -> i32 {
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    let chunks = len / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] as i32 * b[i] as i32;
+        s1 += a[i + 1] as i32 * b[i + 1] as i32;
+        s2 += a[i + 2] as i32 * b[i + 2] as i32;
+        s3 += a[i + 3] as i32 * b[i + 3] as i32;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..len {
+        s += a[i] as i32 * b[i] as i32;
+    }
+    s
+}
+
+/// `Y = X W_effᵀ` with the contraction in the integer domain.
+///
+/// `x` must be the activations `qx` was quantized from — the FP32 salient
+/// override terms read the exact values.
+pub fn igemm_xt(qm: &QuantizedMatrix, qx: &QuantizedRows, x: &Matrix) -> Matrix {
+    let (w_rows, cols) = qm.shape();
+    assert_eq!(qx.cols, cols, "igemm shape mismatch");
+    assert_eq!(
+        (x.rows(), x.cols()),
+        (qx.rows, qx.cols),
+        "igemm fp32/int8 batch mismatch"
+    );
+    let batch = qx.rows;
+    let mut out = Matrix::zeros(batch, w_rows);
+    if batch == 0 || w_rows == 0 {
+        return out;
+    }
+    // size-gate BEFORE touching the pool (a query would lazily spawn the
+    // resident workers); sub-threshold and cap-1 calls stay serial and
+    // never spawn them (global_parallelism short-circuits at cap 1)
+    let work = batch as f64 * w_rows as f64 * cols as f64;
+    if work < pool::PAR_THRESHOLD || pool::global_parallelism() <= 1 {
+        let part = igemm_panel(qm, qx, x, 0, w_rows);
+        scatter_panel(&mut out, 0, w_rows, batch, &part);
+        return out;
+    }
+    let cap = pool::global_parallelism();
+    let panels = pool::row_panels(w_rows, cap * 2);
+    let parts: Vec<Vec<f32>> =
+        pool::global().map_capped(cap, panels.clone(), |(lo, hi)| {
+            igemm_panel(qm, qx, x, lo, hi)
+        });
+    // parts[p] is [panel_rows × batch] (weight-row major); scatter into the
+    // [batch × w_rows] output
+    for ((lo, hi), part) in panels.iter().zip(&parts) {
+        scatter_panel(&mut out, *lo, *hi, batch, part);
+    }
+    out
+}
+
+/// Transpose one weight-row panel's `[panel_rows × batch]` result into the
+/// `[batch × w_rows]` output.
+fn scatter_panel(out: &mut Matrix, lo: usize, hi: usize, batch: usize, part: &[f32]) {
+    for (pi, i) in (lo..hi).enumerate() {
+        for b in 0..batch {
+            out[(b, i)] = part[pi * batch + b];
+        }
+    }
+}
+
+/// One weight-row panel: decode each packed row to int8 once, run the i32
+/// contraction against every request row, fold in the salient overrides.
+fn igemm_panel(
+    qm: &QuantizedMatrix,
+    qx: &QuantizedRows,
+    x: &Matrix,
+    lo: usize,
+    hi: usize,
+) -> Vec<f32> {
+    let (_, cols) = qm.shape();
+    let batch = qx.rows;
+    let lut = nibble_i8_lut();
+    let mut part = Vec::with_capacity((hi - lo) * batch);
+    let mut wbuf = vec![0i8; cols];
+    // (col, fp32 value, residual int4 code) triples of the current row
+    let mut overrides: Vec<(usize, f32, i32)> = Vec::new();
+    for i in lo..hi {
+        let prow = qm.packed_row(i);
+        let pairs = cols / 2;
+        for b in 0..pairs {
+            let d = lut[prow[b] as usize];
+            wbuf[2 * b] = d[0];
+            wbuf[2 * b + 1] = d[1];
+        }
+        if cols % 2 == 1 {
+            wbuf[cols - 1] = sign_extend4(prow[pairs] & 0x0F);
+        }
+        let scale_w = qm.quant_params().scale_for_row(i);
+        overrides.clear();
+        overrides.extend(qm.salient().row(i).map(|(c, v)| (c, v, wbuf[c] as i32)));
+        for b in 0..batch {
+            let xq = qx.row(b);
+            let mut acc = dot_i8(&wbuf, xq, cols);
+            // override: remove the residual's integer contribution at the
+            // salient coordinates (exact in i32)...
+            let mut sal = 0.0f32;
+            let xrow = x.row(b);
+            for &(c, v, wq) in &overrides {
+                acc -= wq * xq[c] as i32;
+                sal += v * xrow[c];
+            }
+            // ...apply the combined scale once, then add the FP32 terms
+            part.push(acc as f32 * (scale_w * qx.scales[b]) + sal);
+        }
+    }
+    part
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantConfig;
+    use crate::sparse::Coo;
+    use crate::util::proptest::{check, Shrink};
+    use crate::util::rng::Rng;
+
+    #[derive(Debug, Clone)]
+    struct Case {
+        rows: usize,
+        cols: usize,
+        batch: usize,
+        k: usize,
+        per_row: bool,
+        seed: u64,
+    }
+
+    impl Shrink for Case {
+        fn shrink(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            for (rows, cols, batch, k) in [
+                (self.rows / 2, self.cols, self.batch, self.k),
+                (self.rows, self.cols / 2, self.batch, self.k),
+                (self.rows, self.cols, self.batch / 2, self.k),
+                (self.rows, self.cols, self.batch, self.k / 2),
+            ] {
+                if rows >= 1 && cols >= 1 && batch >= 1 {
+                    out.push(Case { rows, cols, batch, k, ..self.clone() });
+                }
+            }
+            out
+        }
+    }
+
+    fn random_setup(
+        rng: &mut Rng,
+        rows: usize,
+        cols: usize,
+        batch: usize,
+        k: usize,
+        per_row: bool,
+    ) -> (QuantizedMatrix, Matrix) {
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(w.data_mut(), 0.05);
+        let mut sal = Coo::new(rows, cols);
+        for idx in rng.sample_distinct(rows * cols, k.min(rows * cols)) {
+            sal.push(idx / cols, idx % cols, w[(idx / cols, idx % cols)]);
+        }
+        let cfg = QuantConfig { per_row, ..QuantConfig::default() };
+        let qm = QuantizedMatrix::from_dense(&w, &cfg, &sal);
+        let mut x = Matrix::zeros(batch, cols);
+        rng.fill_normal(x.data_mut(), 1.0);
+        (qm, x)
+    }
+
+    #[test]
+    fn quantize_rows_roundtrip_error_bounded() {
+        let mut rng = Rng::new(301);
+        let mut x = Matrix::zeros(7, 33);
+        rng.fill_normal(x.data_mut(), 2.0);
+        let qx = quantize_rows(&x);
+        for i in 0..7 {
+            let s = qx.scales[i];
+            for (j, &v) in x.row(i).iter().enumerate() {
+                let back = qx.row(i)[j] as f32 * s;
+                assert!(
+                    (back - v).abs() <= 0.5 * s + 1e-6,
+                    "row {i} col {j}: {v} -> {back} (scale {s})"
+                );
+            }
+        }
+        // zero row: scale 1, codes 0
+        let z = Matrix::zeros(1, 8);
+        let qz = quantize_rows(&z);
+        assert_eq!(qz.scales[0], 1.0);
+        assert!(qz.row(0).iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn dot_i8_matches_reference() {
+        let mut rng = Rng::new(302);
+        for len in [0usize, 1, 3, 4, 7, 64, 129] {
+            let a: Vec<i8> = (0..len).map(|_| rng.range(0, 256) as u8 as i8).collect();
+            let b: Vec<i8> = (0..len).map(|_| rng.range(0, 256) as u8 as i8).collect();
+            let want: i32 = a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+            assert_eq!(dot_i8(&a, &b, len), want, "len {len}");
+        }
+    }
+
+    /// The satellite parity property: int-domain igemm matches the
+    /// float-domain `matmul_xt` within the derived activation-rounding
+    /// bound, with per-row weight scales and the salient override honored.
+    #[test]
+    fn prop_igemm_matches_float_path_within_bound() {
+        check(
+            "igemm within ½·s_x·s_w·Σ|ŵ| of the float path",
+            |rng| {
+                let rows = rng.range(1, 24);
+                let cols = rng.range(1, 48);
+                Case {
+                    rows,
+                    cols,
+                    batch: rng.range(1, 6),
+                    k: rng.range(0, rows * cols / 2 + 1),
+                    per_row: rng.range(0, 2) == 1,
+                    seed: rng.range(0, 1 << 30) as u64,
+                }
+            },
+            |case| {
+                let &Case { rows, cols, batch, k, per_row, seed } = case;
+                let mut rng = Rng::new(seed ^ 0xD00D);
+                let (qm, x) = random_setup(&mut rng, rows, cols, batch, k, per_row);
+                let qx = quantize_rows(&x);
+                let got = igemm_xt(&qm, &qx, &x);
+                let want = qm.matmul_xt(&x);
+                let lut = nibble_i8_lut();
+                for i in 0..rows {
+                    let s_w = qm.quant_params().scale_for_row(i);
+                    // Σ|ŵ_ij| from the packed codes
+                    let prow = qm.packed_row(i);
+                    let mut wabs = 0.0f64;
+                    for j in 0..cols {
+                        let c = lut[prow[j / 2] as usize][j % 2];
+                        wabs += (c as f64).abs();
+                    }
+                    for b in 0..batch {
+                        let bound =
+                            0.5 * qx.scales[b] as f64 * s_w as f64 * wabs * 1.01 + 1e-3;
+                        let diff = (got[(b, i)] as f64 - want[(b, i)] as f64).abs();
+                        if diff > bound {
+                            return Err(format!(
+                                "({rows}x{cols} b={batch} k={k} per_row={per_row}) \
+                                 out[{b},{i}]: |{} - {}| = {diff:.3e} > bound {bound:.3e}",
+                                got[(b, i)],
+                                want[(b, i)]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fully_salient_matrix_is_exact_fp32() {
+        // every coordinate salient → the integer accumulator cancels and
+        // the FP32 terms are all that remain: exact linear in f32
+        let mut rng = Rng::new(303);
+        let (qm, x) = random_setup(&mut rng, 9, 14, 3, 9 * 14, false);
+        let qx = quantize_rows(&x);
+        let got = igemm_xt(&qm, &qx, &x);
+        let dense = qm.dequantize_dense();
+        for b in 0..3 {
+            for i in 0..9 {
+                let want: f32 = (0..14).map(|j| dense[(i, j)] * x[(b, j)]).sum();
+                assert!(
+                    (got[(b, i)] - want).abs() < 1e-4,
+                    "[{b},{i}]: {} vs {want}",
+                    got[(b, i)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn igemm_deterministic_under_thread_caps() {
+        let _guard = crate::util::pool::test_sync::CAP_LOCK.lock().unwrap();
+        let mut rng = Rng::new(304);
+        // batch·rows·cols = 16·256·256 ≈ 1.05M ≥ PAR_THRESHOLD → panels fan out
+        let (qm, x) = random_setup(&mut rng, 256, 256, 16, 64, true);
+        let qx = quantize_rows(&x);
+        crate::util::pool::set_global_parallelism(1);
+        let serial = igemm_xt(&qm, &qx, &x);
+        crate::util::pool::set_global_parallelism(0);
+        let parallel = igemm_xt(&qm, &qx, &x);
+        assert!(parallel.approx_eq(&serial, 0.0), "thread count changed igemm output");
+    }
+
+    #[test]
+    fn odd_column_count_decodes_tail() {
+        let mut rng = Rng::new(305);
+        let (qm, x) = random_setup(&mut rng, 5, 13, 2, 6, false);
+        let qx = quantize_rows(&x);
+        let got = igemm_xt(&qm, &qx, &x);
+        assert_eq!(got.shape(), (2, 5));
+        // cross-check against the float path loosely (bound test covers rigor)
+        let want = qm.matmul_xt(&x);
+        assert!(got.max_abs_diff(&want) < 0.5);
+    }
+}

@@ -6,18 +6,35 @@
 //!   the motivation for clipping; we carry it as an ablation);
 //! * [`packing`] — 2-nibble int4 bit-packing for real storage;
 //! * [`qmatrix`] — [`QuantizedMatrix`]: the deployable `W ≈ S + Q` pair
-//!   (packed codes + sparse salient set) with fused dequant-matvec.
+//!   (packed codes + sparse salient set) with fused dequant-matvec;
+//! * [`igemm`] — the integer-domain packed GEMM (int4×int8→i32 with the
+//!   salient override folded in) behind [`GemmKernel::Int8`], the serving
+//!   hot path (DESIGN.md §8).
 
+pub mod igemm;
 pub mod nf4;
 pub mod packing;
 pub mod qmatrix;
 pub mod symmetric;
 
+pub use igemm::{quantize_rows, QuantizedRows};
 pub use packing::{pack_nibbles, unpack_nibbles};
 pub use qmatrix::QuantizedMatrix;
 pub use symmetric::{
     dequantize, fake_quant, quant_params, quantize_codes, QuantParams,
 };
+
+/// Which kernel the deployed model's quantizable linears run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GemmKernel {
+    /// Decode-to-f32 reference path ([`QuantizedMatrix::matmul_xt`]).
+    F32,
+    /// Integer-domain path ([`QuantizedMatrix::matmul_xt_int`]): dynamic
+    /// int8 activations, i32 accumulate, combined scale once per output.
+    /// Serving default — within the igemm error bound of `F32`.
+    #[default]
+    Int8,
+}
 
 /// Quantization configuration (paper defaults in `Default`).
 #[derive(Debug, Clone, Copy, PartialEq)]

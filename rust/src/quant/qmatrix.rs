@@ -1,20 +1,27 @@
 //! [`QuantizedMatrix`] — the deployable form of `W ≈ S + Q` (paper eq. 1):
 //! packed int4 residual codes + per-row scales + a CSR salient overlay.
 //!
-//! Two consumers:
+//! Three consumers:
 //! * the **simulated** path (`dequantize_dense`) reproduces exactly what
 //!   the paper's accuracy tables measure (and what the PJRT executable is
 //!   fed as weight arguments);
-//! * the **deployed** path (`matvec`) is the real mixed-precision kernel —
-//!   unpack-dequant-dot fused per row, salient CSR entries *overriding*
-//!   (not adding to) the residual contribution at their coordinates, which
-//!   mirrors the L1 Pallas `salient_matmul` mask-add semantics.
+//! * the **float deployed** path (`matvec` / `matmul_xt`) decodes nibbles
+//!   to f32 and dots in the float domain — `matmul_xt` decodes each packed
+//!   row once per *batch* (batch-panel blocking), salient CSR entries
+//!   *overriding* (not adding to) the residual contribution at their
+//!   coordinates, which mirrors the L1 Pallas `salient_matmul` mask-add
+//!   semantics;
+//! * the **integer deployed** path (`matmul_xt_int`) keeps the contraction
+//!   in int4×int8→i32 end to end (see [`super::igemm`]) — the serving hot
+//!   path.
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
+use crate::linalg::matmul::dot;
 use crate::linalg::Matrix;
 use crate::sparse::{Coo, Csr};
 
+use super::igemm;
 use super::packing::{pack_nibbles, sign_extend4};
 use super::symmetric::{quant_params, quantize_codes, QuantParams};
 use super::QuantConfig;
@@ -23,14 +30,18 @@ use super::QuantConfig;
 /// the per-element shift/sign-extend/convert sequence of the matvec inner
 /// loop into a single indexed load (EXPERIMENTS.md §Perf L3: +~30% matvec
 /// throughput over the scalar decode).
-static NIBBLE_LUT: Lazy<[[f32; 2]; 256]> = Lazy::new(|| {
-    let mut t = [[0.0f32; 2]; 256];
-    for (b, item) in t.iter_mut().enumerate() {
-        item[0] = sign_extend4(b as u8 & 0x0F) as f32;
-        item[1] = sign_extend4((b as u8) >> 4) as f32;
-    }
-    t
-});
+static NIBBLE_LUT: OnceLock<[[f32; 2]; 256]> = OnceLock::new();
+
+fn nibble_lut() -> &'static [[f32; 2]; 256] {
+    NIBBLE_LUT.get_or_init(|| {
+        let mut t = [[0.0f32; 2]; 256];
+        for (b, item) in t.iter_mut().enumerate() {
+            item[0] = sign_extend4(b as u8 & 0x0F) as f32;
+            item[1] = sign_extend4((b as u8) >> 4) as f32;
+        }
+        t
+    })
+}
 
 /// A quantized weight matrix: dense packed residual + sparse FP32 salient.
 #[derive(Debug, Clone)]
@@ -67,6 +78,24 @@ impl QuantizedMatrix {
 
     pub fn nnz_salient(&self) -> usize {
         self.salient.nnz()
+    }
+
+    /// Packed int4 codes of row `i` (igemm decodes them itself).
+    #[inline]
+    pub(crate) fn packed_row(&self, i: usize) -> &[u8] {
+        &self.packed[i * self.bytes_per_row..(i + 1) * self.bytes_per_row]
+    }
+
+    /// Residual quantization parameters (per-row or per-tensor scales).
+    #[inline]
+    pub(crate) fn quant_params(&self) -> &QuantParams {
+        &self.params
+    }
+
+    /// The salient FP32 overlay.
+    #[inline]
+    pub(crate) fn salient(&self) -> &Csr {
+        &self.salient
     }
 
     /// Total storage in bytes (packed codes + scales + CSR overlay).
@@ -107,7 +136,7 @@ impl QuantizedMatrix {
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        let lut = &*NIBBLE_LUT;
+        let lut = nibble_lut();
         for i in 0..self.rows {
             let scale = self.params.scale_for_row(i);
             let prow = &self.packed[i * self.bytes_per_row..(i + 1) * self.bytes_per_row];
@@ -137,14 +166,53 @@ impl QuantizedMatrix {
         }
     }
 
-    /// `Y = X W_effᵀ` for a batch of rows (the engine's linear layer).
+    /// `Y = X W_effᵀ` for a batch of rows — the float reference path.
+    ///
+    /// Batch-panel blocking: each packed weight row is decoded (and
+    /// salient-patched) **once per batch** into a scratch row, then
+    /// streamed against every request row with the unrolled f32 dot — the
+    /// old per-(row, request) nibble decode was the dominant waste of the
+    /// fused forward (EXPERIMENTS.md §Perf). Single-row batches fall back
+    /// to the fused [`QuantizedMatrix::matvec`], which never materializes
+    /// the decoded row.
     pub fn matmul_xt(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols(), self.cols);
-        let mut out = Matrix::zeros(x.rows(), self.rows);
-        for (i, xrow) in (0..x.rows()).map(|i| (i, x.row(i).to_vec())) {
-            self.matvec(&xrow, out.row_mut(i));
+        let batch = x.rows();
+        let mut out = Matrix::zeros(batch, self.rows);
+        if batch == 1 {
+            self.matvec(x.row(0), out.row_mut(0));
+            return out;
+        }
+        let lut = nibble_lut();
+        let mut wrow = vec![0.0f32; self.cols];
+        let pairs = self.cols / 2;
+        for i in 0..self.rows {
+            let scale = self.params.scale_for_row(i);
+            let prow = self.packed_row(i);
+            for b in 0..pairs {
+                let d = lut[prow[b] as usize];
+                wrow[2 * b] = d[0] * scale;
+                wrow[2 * b + 1] = d[1] * scale;
+            }
+            if self.cols % 2 == 1 {
+                wrow[self.cols - 1] = sign_extend4(prow[pairs] & 0x0F) as f32 * scale;
+            }
+            for (c, v) in self.salient.row(i) {
+                wrow[c] = v;
+            }
+            for b in 0..batch {
+                out[(b, i)] = dot(x.row(b), &wrow, self.cols);
+            }
         }
         out
+    }
+
+    /// `Y = X W_effᵀ` on the integer-domain kernel ([`super::igemm`]):
+    /// dynamic per-row int8 activations, i32 accumulation, salient
+    /// override correction — the serving hot path.
+    pub fn matmul_xt_int(&self, x: &Matrix) -> Matrix {
+        let qx = igemm::quantize_rows(x);
+        igemm::igemm_xt(self, &qx, x)
     }
 }
 
@@ -216,19 +284,62 @@ mod tests {
 
     #[test]
     fn matmul_xt_matches_matvec_rows() {
+        // the batch-blocked path dots a decoded+patched row (4-lane f32)
+        // while matvec fuses decode into two lanes + corrections — same
+        // semantics, different summation order, so compare with a small tol
         let mut rng = Rng::new(114);
-        let w = random_w(&mut rng, 10, 12);
-        let qm = QuantizedMatrix::from_dense(&w, &QuantConfig::default(), &Coo::new(10, 12));
-        let mut x = Matrix::zeros(5, 12);
-        rng.fill_normal(x.data_mut(), 1.0);
-        let y = qm.matmul_xt(&x);
-        for i in 0..5 {
-            let mut want = vec![0.0f32; 10];
-            qm.matvec(x.row(i), &mut want);
-            for j in 0..10 {
-                assert_eq!(y[(i, j)], want[j]);
+        for &(r, c, k) in &[(10usize, 12usize, 0usize), (9, 13, 20), (16, 31, 40)] {
+            let w = random_w(&mut rng, r, c);
+            let sal = random_salient(&mut rng, &w, k);
+            let qm = QuantizedMatrix::from_dense(&w, &QuantConfig::default(), &sal);
+            let mut x = Matrix::zeros(5, c);
+            rng.fill_normal(x.data_mut(), 1.0);
+            let y = qm.matmul_xt(&x);
+            for i in 0..5 {
+                let mut want = vec![0.0f32; r];
+                qm.matvec(x.row(i), &mut want);
+                for j in 0..r {
+                    assert!(
+                        (y[(i, j)] - want[j]).abs() < 1e-4,
+                        "({r},{c},k={k}) [{i},{j}]: {} vs {}",
+                        y[(i, j)],
+                        want[j]
+                    );
+                }
             }
         }
+    }
+
+    #[test]
+    fn matmul_xt_single_row_uses_fused_matvec_exactly() {
+        let mut rng = Rng::new(116);
+        let w = random_w(&mut rng, 14, 22);
+        let sal = random_salient(&mut rng, &w, 10);
+        let qm = QuantizedMatrix::from_dense(&w, &QuantConfig::default(), &sal);
+        let mut x = Matrix::zeros(1, 22);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let y = qm.matmul_xt(&x);
+        let mut want = vec![0.0f32; 14];
+        qm.matvec(x.row(0), &mut want);
+        assert_eq!(y.row(0), &want[..]);
+    }
+
+    #[test]
+    fn matmul_xt_int_tracks_float_path() {
+        // rigor lives in igemm's derived-bound property test; this pins
+        // the public entry point end to end incl. per-row scales
+        let mut rng = Rng::new(117);
+        let w = random_w(&mut rng, 24, 40);
+        let sal = random_salient(&mut rng, &w, 30);
+        let cfg = QuantConfig { per_row: true, ..QuantConfig::default() };
+        let qm = QuantizedMatrix::from_dense(&w, &cfg, &sal);
+        let mut x = Matrix::zeros(6, 40);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let yi = qm.matmul_xt_int(&x);
+        let yf = qm.matmul_xt(&x);
+        assert_eq!(yi.shape(), yf.shape());
+        // int8 activations: coarse agreement with the float path
+        assert!(yi.max_abs_diff(&yf) < 0.05, "diff {}", yi.max_abs_diff(&yf));
     }
 
     #[test]

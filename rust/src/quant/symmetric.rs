@@ -78,14 +78,19 @@ fn encode(v: f32, clip: f32, scale: f32, qmax: f32) -> i8 {
 }
 
 /// Integer codes for every entry (row-major), in `[-qmax, qmax]`.
+///
+/// Iterates per row (like [`dequantize`]) so the scale lookup and the
+/// `idx / cols` division are hoisted out of the inner loop — the remaining
+/// body is a branch-light clamp/round/clamp that auto-vectorizes.
 pub fn quantize_codes(w: &Matrix, p: &QuantParams) -> Vec<i8> {
     let qmax = (1u32 << (p.bits - 1)) as f32 - 1.0;
-    let cols = w.cols();
-    w.data()
-        .iter()
-        .enumerate()
-        .map(|(idx, &v)| encode(v, p.clip, p.scale_for_row(idx / cols), qmax))
-        .collect()
+    let (rows, cols) = w.shape();
+    let mut out = Vec::with_capacity(rows * cols);
+    for i in 0..rows {
+        let scale = p.scale_for_row(i);
+        out.extend(w.row(i).iter().map(|&v| encode(v, p.clip, scale, qmax)));
+    }
+    out
 }
 
 /// Dequantize codes back to f32.

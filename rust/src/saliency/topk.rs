@@ -58,11 +58,14 @@ pub fn select_topk(score: &Matrix, k: usize) -> SalientSet {
     if k == n {
         return SalientSet { rows, cols, indices: (0..n as u32).collect() };
     }
-    // (score, index) ordering: higher score first; ties → smaller index first
+    // (score, index) ordering: higher score first; ties → smaller index
+    // first. total_cmp keeps the order total when a scorer emits NaN
+    // (degenerate weights): instead of collapsing to "equal to everything"
+    // (which quickselect would mis-partition on), NaNs take a fixed
+    // sign-dependent rank — positive NaN above +inf, negative NaN below
+    // −inf — so selection stays deterministic and panic-free.
     let better = |a: &(f32, u32), b: &(f32, u32)| -> std::cmp::Ordering {
-        b.0.partial_cmp(&a.0)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.1.cmp(&b.1))
+        b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
     };
     let mut buf: Vec<(f32, u32)> = score
         .data()
@@ -206,7 +209,7 @@ mod tests {
                     .enumerate()
                     .map(|(i, &s)| (s, i as u32))
                     .collect();
-                pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap().then(x.1.cmp(&y.1)));
+                pairs.sort_by(|x, y| y.0.total_cmp(&x.0).then(x.1.cmp(&y.1)));
                 let mut want: Vec<u32> =
                     pairs[..(*k).min(score.len())].iter().map(|p| p.1).collect();
                 want.sort_unstable();
@@ -219,6 +222,19 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn nan_scores_select_deterministically() {
+        // a degenerate scorer output must not panic and must be stable.
+        // (total_cmp ranks by sign: the positive-NaN literal used here
+        // sorts above every finite score; a negative NaN would sort below
+        // −inf — either way the order is total and repeatable)
+        let score = Matrix::from_vec(1, 5, vec![0.5, f32::NAN, 2.0, f32::NAN, 1.0]);
+        let a = select_topk(&score, 3);
+        let b = select_topk(&score, 3);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.indices, vec![1, 2, 3]); // both (positive) NaNs + the 2.0
     }
 
     #[test]
@@ -238,9 +254,7 @@ mod tests {
                 .enumerate()
                 .map(|(i, &s)| (s, i as u32))
                 .collect();
-            pairs.sort_by(|a, b| {
-                b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
-            });
+            pairs.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
             let mut want: Vec<u32> = pairs[..k.min(r * c)].iter().map(|p| p.1).collect();
             want.sort_unstable();
             assert_eq!(sel.indices, want);

@@ -96,7 +96,7 @@ impl Bench {
             times.push(t.elapsed().as_secs_f64() / batch as f64);
             iters += batch;
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(|a, b| a.total_cmp(b));
         let mean = times.iter().sum::<f64>() / times.len() as f64;
         let p50 = times[times.len() / 2];
         let p95 = times[(times.len() * 95 / 100).min(times.len() - 1)];

@@ -52,7 +52,7 @@ pub fn line_chart(
         let mark = marks[si % marks.len()];
         // piecewise-linear interpolation across columns for continuity
         let mut pts: Vec<(f64, f64)> = s.points.iter().map(|&(x, y)| (xf(x), y)).collect();
-        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
         for w in pts.windows(2) {
             let (x0, y0) = w[0];
             let (x1, y1) = w[1];

@@ -3,19 +3,136 @@
 //! The coordinator fans experiment jobs and per-layer quantization work out
 //! over this pool. Design: one global injector queue guarded by a mutex +
 //! condvar (contention is negligible — jobs here are milliseconds to
-//! seconds, not nanoseconds), `scope()` for borrowing parallel sections,
+//! seconds, not nanoseconds), `scope()`-style borrowing parallel sections,
 //! and panic propagation back to the submitter.
 //!
-//! On the single-core benchmark machine the pool still matters: it
-//! overlaps PJRT execution (which releases the GIL-free C++ thread) with
-//! rust-side quantization of the next job.
+//! Two execution tiers share the machinery:
+//!
+//! * **coarse jobs** — [`ThreadPool::submit`]/[`ThreadPool::wait_idle`] for
+//!   fire-and-forget experiment cells;
+//! * **borrowed parallel-for** — [`ThreadPool::for_each`]: the serving hot
+//!   path (igemm panels, `matmul_par` row panels, pipeline scoring) runs
+//!   chunked work on the *resident* workers with the calling thread
+//!   participating. No threads are spawned per call, and reentrant use
+//!   (a pool job fanning out again) degrades to serial on the caller
+//!   instead of deadlocking.
+//!
+//! The process-wide [`global`] pool is the one handle the whole stack
+//! shares — `--threads` reaches every kernel through
+//! [`set_global_parallelism`], so server worker batches and pipeline
+//! scoring never oversubscribe each other.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Minimum work units (flops, byte-ops) below which the parallel kernel
+/// wrappers stay serial — fanning out costs a few µs of queueing plus
+/// cache-warmth, so sub-millisecond problems are faster on one core.
+pub const PAR_THRESHOLD: f64 = 1.0e6;
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+/// Executor cap for the global pool's kernels; 0 = all workers.
+static GLOBAL_CAP: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-wide pool shared by the serving hot path, the parallel
+/// linalg kernels and pipeline scoring. First use spawns
+/// `available_parallelism` resident workers.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(0))
+}
+
+/// Cap how many executors (workers + the calling thread) the global pool's
+/// kernels use; `0` restores "all workers". This is how `--threads`
+/// reaches every kernel without re-plumbing a handle through the stack.
+///
+/// The cap is enforced **per fan-out**, not as a process-wide thread
+/// budget: nested fan-outs (scoring → rsvd → matmul_par) may briefly
+/// exceed it, bounded by the resident worker count — when the workers are
+/// saturated, inner fan-outs degrade to caller-serial, so total compute
+/// threads never exceed `workers + concurrent top-level callers`.
+pub fn set_global_parallelism(threads: usize) {
+    GLOBAL_CAP.store(threads, Ordering::SeqCst);
+}
+
+/// Effective executor count for global-pool kernels (≥ 1).
+///
+/// A cap of 1 short-circuits WITHOUT touching the pool, so fully-serial
+/// runs (`--threads 1`) never spawn the resident workers at all.
+pub fn global_parallelism() -> usize {
+    let cap = GLOBAL_CAP.load(Ordering::SeqCst);
+    if cap == 1 {
+        return 1;
+    }
+    let workers = global().threads();
+    if cap == 0 {
+        workers.max(1)
+    } else {
+        cap.min(workers + 1).max(1)
+    }
+}
+
+/// Split `0..m` into at most `parts` contiguous near-equal ranges.
+pub fn row_panels(m: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, m.max(1));
+    let base = m / parts;
+    let rem = m % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let hi = lo + base + usize::from(p < rem);
+        if hi > lo {
+            out.push((lo, hi));
+        }
+        lo = hi;
+    }
+    out
+}
+
+/// Fat pointer to a caller-owned `Fn(usize)`; helpers must claim it (under
+/// [`ScopedTask::f`]'s lock, registering in `active`) before dereferencing,
+/// and the caller revokes it before returning — so the pointee is alive for
+/// every dereference even though the lifetime is erased.
+struct FnPtr(*const (dyn Fn(usize) + Sync));
+// Safety: the pointer is only dereferenced under the claim protocol above;
+// the pointee itself is Sync.
+unsafe impl Send for FnPtr {}
+
+/// Shared state of one borrowed parallel-for (see [`ThreadPool::for_each`]).
+struct ScopedTask {
+    f: Mutex<Option<FnPtr>>,
+    next: AtomicUsize,
+    n: usize,
+    done: AtomicUsize,
+    /// helpers currently inside the closure (claimed before `f` was revoked)
+    active: AtomicUsize,
+    state: Mutex<()>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl ScopedTask {
+    /// Pull chunk indices until the counter is exhausted. Panics inside the
+    /// closure are caught (the chunk still counts as done, so the caller's
+    /// wait terminates) and re-raised by the caller at the end.
+    fn run_chunks(&self, f: &(dyn Fn(usize) + Sync)) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                self.panicked.store(true, Ordering::SeqCst);
+            }
+            self.done.fetch_add(1, Ordering::SeqCst);
+        }
+        let _g = self.state.lock().unwrap();
+        self.cv.notify_all();
+    }
+}
 
 struct Shared {
     queue: Mutex<std::collections::VecDeque<Job>>,
@@ -90,6 +207,112 @@ impl ThreadPool {
         }
     }
 
+    /// Run `f(0..n)` on the resident workers, the calling thread included,
+    /// blocking until every index has been processed. `cap` bounds the
+    /// number of concurrent executors (`0` = workers + caller). The closure
+    /// may borrow the caller's stack.
+    ///
+    /// Reentrancy: when called from inside a pool job the queued helpers may
+    /// never get a worker, but the caller drains the index counter itself,
+    /// so the call completes (serially) instead of deadlocking. Helpers that
+    /// start after completion find the closure revoked and exit untouched.
+    pub fn for_each<F>(&self, n: usize, cap: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let cap = if cap == 0 { self.threads() + 1 } else { cap };
+        let helpers = cap
+            .saturating_sub(1)
+            .min(n.saturating_sub(1))
+            .min(self.threads());
+        if helpers == 0 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let f_obj: &(dyn Fn(usize) + Sync) = &f;
+        let task = Arc::new(ScopedTask {
+            f: Mutex::new(Some(FnPtr(f_obj as *const _))),
+            next: AtomicUsize::new(0),
+            n,
+            done: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            state: Mutex::new(()),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        for _ in 0..helpers {
+            let t = Arc::clone(&task);
+            self.submit(move || {
+                // claim the closure under the lock; None means the caller
+                // already returned and the borrow is gone
+                let ptr = {
+                    let g = t.f.lock().unwrap();
+                    match g.as_ref() {
+                        Some(p) => {
+                            t.active.fetch_add(1, Ordering::SeqCst);
+                            p.0
+                        }
+                        None => return,
+                    }
+                };
+                // Safety: claimed while `f` was un-revoked; the caller waits
+                // for `active == 0` after revoking, so the pointee outlives
+                // this dereference.
+                t.run_chunks(unsafe { &*ptr });
+                t.active.fetch_sub(1, Ordering::SeqCst);
+                let _g = t.state.lock().unwrap();
+                t.cv.notify_all();
+            });
+        }
+        // the caller works too — this is what makes reentrant use safe
+        task.run_chunks(&f);
+        // wait for every chunk...
+        {
+            let mut g = task.state.lock().unwrap();
+            while task.done.load(Ordering::SeqCst) < n {
+                g = task.cv.wait(g).unwrap();
+            }
+        }
+        // ...then revoke the borrow and wait out helpers still inside it
+        *task.f.lock().unwrap() = None;
+        {
+            let mut g = task.state.lock().unwrap();
+            while task.active.load(Ordering::SeqCst) > 0 {
+                g = task.cv.wait(g).unwrap();
+            }
+        }
+        if task.panicked.swap(false, Ordering::SeqCst) {
+            panic!("a parallel task panicked");
+        }
+    }
+
+    /// Order-preserving parallel map on the resident workers (+ caller),
+    /// with at most `cap` concurrent executors (`0` = workers + caller).
+    pub fn map_capped<T, R, F>(&self, cap: usize, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        let slots: Vec<Mutex<Option<T>>> =
+            items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.for_each(n, cap, |i| {
+            let item = slots[i].lock().unwrap().take().unwrap();
+            *results[i].lock().unwrap() = Some(f(item));
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("slot filled"))
+            .collect()
+    }
+
     /// Run `f` on every item of `items` in parallel, preserving order of
     /// results. The closure borrows from the caller's stack (scoped).
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
@@ -98,7 +321,7 @@ impl ThreadPool {
         R: Send,
         F: Fn(T) -> R + Sync,
     {
-        Self::scoped_map(self.threads(), items, f)
+        self.map_capped(self.threads(), items, f)
     }
 
     /// [`ThreadPool::map`] without a pool instance: spawns up to `threads`
@@ -138,6 +361,13 @@ impl ThreadPool {
             .map(|m| m.into_inner().unwrap().expect("slot filled"))
             .collect()
     }
+}
+
+/// Serializes tests that mutate the global parallelism cap (it is process
+/// state; concurrent test threads would race their assertions otherwise).
+#[cfg(test)]
+pub mod test_sync {
+    pub static CAP_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 }
 
 fn worker_loop(sh: Arc<Shared>) {
@@ -224,6 +454,85 @@ mod tests {
         let pool = ThreadPool::new(0);
         assert!(pool.threads() >= 1);
         assert_eq!(pool.threads(), ThreadPool::effective_threads(0));
+    }
+
+    #[test]
+    fn for_each_covers_every_index() {
+        let pool = ThreadPool::new(3);
+        for cap in [0usize, 1, 2, 8] {
+            let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+            pool.for_each(hits.len(), cap, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "cap {cap}: some index not hit exactly once"
+            );
+        }
+        pool.for_each(0, 4, |_| panic!("no chunks for n=0"));
+    }
+
+    #[test]
+    fn map_capped_preserves_order_and_borrows() {
+        let pool = ThreadPool::new(2);
+        let base = vec![3usize, 1, 4, 1, 5, 9, 2, 6];
+        for cap in [1usize, 2, 5] {
+            let out = pool.map_capped(cap, (0..base.len()).collect(), |i| base[i] * 2);
+            assert_eq!(out, base.iter().map(|v| v * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn for_each_is_reentrant_from_pool_jobs() {
+        // a parallel map whose items fan out again on the SAME pool must
+        // complete (inner calls degrade to caller-serial when workers are
+        // saturated) — this is the pipeline-scoring-calls-matmul_par shape
+        let pool = ThreadPool::new(2);
+        let out = pool.map_capped(0, (0..6usize).collect(), |i| {
+            let inner: Vec<usize> = pool.map_capped(0, (0..5usize).collect(), |j| i * 10 + j);
+            inner.into_iter().sum::<usize>()
+        });
+        for (i, got) in out.iter().enumerate() {
+            assert_eq!(*got, 5 * 10 * i + 10, "outer item {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "a parallel task panicked")]
+    fn for_each_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        pool.for_each(16, 0, |i| {
+            if i == 7 {
+                panic!("chunk boom");
+            }
+        });
+    }
+
+    #[test]
+    fn global_pool_and_parallelism_cap() {
+        let _guard = test_sync::CAP_LOCK.lock().unwrap();
+        assert!(global().threads() >= 1);
+        set_global_parallelism(1);
+        assert_eq!(global_parallelism(), 1);
+        set_global_parallelism(0);
+        assert_eq!(global_parallelism(), global().threads().max(1));
+        let out = global().map_capped(0, vec![1u64, 2, 3], |v| v * v);
+        assert_eq!(out, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn row_panels_partition_exactly() {
+        for (m, parts) in [(10usize, 3usize), (1, 8), (7, 7), (100, 1), (5, 100), (0, 4)] {
+            let panels = row_panels(m, parts);
+            let mut next = 0;
+            for &(lo, hi) in &panels {
+                assert_eq!(lo, next, "gap at {lo} (m={m} parts={parts})");
+                assert!(hi > lo);
+                next = hi;
+            }
+            assert_eq!(next, m, "m={m} parts={parts}");
+            assert!(panels.len() <= parts.max(1));
+        }
     }
 
     #[test]

@@ -3,10 +3,8 @@
 //! coordination overhead < 5% of sweep wall time).
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
-
-use once_cell::sync::Lazy;
 
 /// A simple stopwatch.
 #[derive(Debug)]
@@ -38,12 +36,15 @@ struct Stat {
     count: u64,
 }
 
-static REGISTRY: Lazy<Mutex<BTreeMap<String, Stat>>> =
-    Lazy::new(|| Mutex::new(BTreeMap::new()));
+static REGISTRY: OnceLock<Mutex<BTreeMap<String, Stat>>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<BTreeMap<String, Stat>> {
+    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
 
 /// Accumulate `dur` under `name` in the global registry.
 pub fn record(name: &str, dur: Duration) {
-    let mut reg = REGISTRY.lock().unwrap();
+    let mut reg = registry().lock().unwrap();
     let stat = reg.entry(name.to_string()).or_default();
     stat.total += dur;
     stat.count += 1;
@@ -59,7 +60,7 @@ pub fn scope<R>(name: &str, f: impl FnOnce() -> R) -> R {
 
 /// Snapshot of `(name, total_seconds, count)` sorted by name.
 pub fn snapshot() -> Vec<(String, f64, u64)> {
-    REGISTRY
+    registry()
         .lock()
         .unwrap()
         .iter()
@@ -69,7 +70,7 @@ pub fn snapshot() -> Vec<(String, f64, u64)> {
 
 /// Clear the registry (tests / between sweep phases).
 pub fn reset() {
-    REGISTRY.lock().unwrap().clear();
+    registry().lock().unwrap().clear();
 }
 
 /// Render the registry as an aligned table.
