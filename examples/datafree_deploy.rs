@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         d as f64 / q as f64
     );
 
-    // --- serve a bursty trace --------------------------------------------
+    // --- serve a bursty trace on a 2-worker pool -------------------------
     for (name, gen) in [
         ("poisson 40 req/s", TraceGenerator::poisson(40.0)),
         ("bursty  40 req/s", TraceGenerator::bursty(40.0, 0.25, 8)),
@@ -59,13 +59,16 @@ fn main() -> anyhow::Result<()> {
             max_batch: 16,
             max_wait: Duration::from_millis(4),
             queue_cap: 256,
+            workers: 2,
+            deadline: Some(Duration::from_millis(250)),
+            clock: svdquant::util::clock::Clock::wall(),
         };
         let s = serve_trace(&qm, &dev, &trace, &cfg)?;
         println!(
-            "\n[{name}] {} reqs in {:.2}s -> {:.1} req/s | p50 {:.1} ms, p95 {:.1} ms, \
-             p99 {:.1} ms | mean batch {:.1} | acc {:.4}",
-            s.completions, s.wall_s, s.throughput_rps, s.p50_ms, s.p95_ms, s.p99_ms,
-            s.mean_batch, s.accuracy
+            "\n[{name}] {} reqs ({} shed, {} expired) in {:.2}s -> {:.1} req/s | \
+             p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms | mean batch {:.1} | acc {:.4}",
+            s.completions, s.shed, s.expired, s.wall_s, s.throughput_rps, s.p50_ms,
+            s.p95_ms, s.p99_ms, s.mean_batch, s.accuracy
         );
     }
     println!(

@@ -21,9 +21,11 @@ pub fn artifacts_or_skip(bench: &str) -> Option<Artifacts> {
 }
 
 /// Serving-bench setup: the real mrpc checkpoint when artifacts exist,
-/// otherwise a synthetic (shape-realistic) checkpoint + dev set — so the
+/// otherwise the shared hermetic fixture (`svdquant::fixture`) — so the
 /// serving perf trajectory (BENCH_serving.json) is tracked on every
-/// machine, not just ones that ran `make artifacts`.
+/// machine, not just ones that ran `make artifacts`. The synthetic
+/// fallback lives in the library so `rust/tests/serving.rs` runs the same
+/// shapes under plain `cargo test -q`.
 #[allow(dead_code)]
 pub fn serving_setup() -> (ModelConfig, Params, Dataset, &'static str) {
     if let Ok(art) = Artifacts::open("artifacts") {
@@ -31,30 +33,7 @@ pub fn serving_setup() -> (ModelConfig, Params, Dataset, &'static str) {
             return (art.model_cfg, ckpt, dev, "artifacts:mrpc");
         }
     }
-    let cfg = ModelConfig {
-        vocab_size: 512,
-        max_len: 32,
-        hidden: 128,
-        layers: 4,
-        heads: 4,
-        ffn: 256,
-        n_classes: 2,
-        export_batch: 8,
-    };
-    let params = svdquant::model::params::testing::synthetic_params(&cfg, 0xC0FFEE);
-    let n = 192usize;
-    let s = cfg.max_len;
-    let mut rng = svdquant::util::rng::Rng::new(0xDA7A);
-    let mut ids = Vec::with_capacity(n * s);
-    let mut labels = Vec::with_capacity(n);
-    for _ in 0..n {
-        for _ in 0..s {
-            ids.push(rng.range(1, cfg.vocab_size) as i32);
-        }
-        labels.push(rng.range(0, cfg.n_classes) as i32);
-    }
-    let mask = vec![1i32; n * s];
-    let dev = Dataset::from_raw("synthetic", ids, mask, labels, s).expect("synthetic dataset");
+    let (cfg, params, dev) = svdquant::fixture::serving_fixture();
     (cfg, params, dev, "synthetic")
 }
 

@@ -11,8 +11,12 @@
 //!   now thin wrappers over the pipeline;
 //! * [`sweep`] — the full battle: methods × budgets × tasks, score reuse by
 //!   pipeline construction, result caching and report emission;
-//! * [`server`] — dynamic-batching inference server over the deployed
-//!   packed-int4 model (the data-free deployment story of §I).
+//! * [`server`] — multi-worker, multi-tenant dynamic-batching inference
+//!   server over the deployed packed-int4 models (the data-free deployment
+//!   story of §I): shared bounded queue with shed-don't-block admission,
+//!   per-tenant model registry, worker pool, wall/virtual
+//!   [`Clock`](crate::util::clock::Clock) batching, streaming latency
+//!   histograms.
 
 pub mod pipeline;
 pub mod server;

@@ -1,0 +1,152 @@
+//! Multi-worker, multi-tenant dynamic-batching inference server over the
+//! deployed packed-int4 models — the "data-free deployment" story of the
+//! paper's introduction, and the workload behind `examples/datafree_deploy`
+//! + the engine_inference bench (DESIGN.md §6).
+//!
+//! Architecture (a miniature of the vLLM router pattern):
+//!
+//! * a front thread replays a trace of [`TaggedRequest`]s into one shared
+//!   [`BoundedQueue`] through a [`Clock`] — wall time paces arrivals for
+//!   real serving, virtual time replays a ten-minute trace in
+//!   milliseconds for hermetic tests;
+//! * **admission control**: the queue never blocks producers — pushes are
+//!   `Accepted`, `Shed` (full) or `Closed` (draining), with shed counts
+//!   reported per tenant in [`ServeStats`];
+//! * a **worker pool** of [`ServerConfig::workers`] threads drains the
+//!   queue with size-or-deadline batching; batches are single-tenant (the
+//!   [`Registry`] maps task ids to models), per-request deadlines expire
+//!   stale work before the forward pass is paid for, and each batch fans
+//!   out over the global kernel [`pool`](crate::util::pool) — `--workers`
+//!   scales batch pipelining, `--threads` scales within-batch kernels;
+//! * latency is recorded into fixed-bucket streaming
+//!   [`Histogram`](crate::util::histogram::Histogram)s (no sort-at-end
+//!   pass), split into queue/batching/exec components per request;
+//! * `close()` after the trace ends gives a **graceful drain**: workers
+//!   finish everything admitted, then exit on the first empty batch.
+
+mod queue;
+mod registry;
+mod stats;
+mod worker;
+
+pub use queue::{BoundedQueue, Enqueue, QueueItem};
+pub use registry::{Registry, Tenant};
+pub use stats::{Completion, ServeStats, TenantStats, COMPLETION_LOG_CAP};
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::data::{replay, tag_trace, Dataset, Request, TaggedRequest};
+use crate::model::QuantizedModel;
+use crate::util::clock::Clock;
+
+use stats::Collector;
+use worker::worker_loop;
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// per-batch size cap
+    pub max_batch: usize,
+    /// straggler wait after the first request of a batch (clock time)
+    pub max_wait: Duration,
+    /// queue capacity; pushes beyond it are shed
+    pub queue_cap: usize,
+    /// batch-execution worker threads (≥ 1; independent of `--threads`)
+    pub workers: usize,
+    /// per-request latency budget; requests older than this at batch time
+    /// are expired instead of executed. `None` = no deadline.
+    pub deadline: Option<Duration>,
+    /// time source; `serve` re-bases it per run ([`Clock::restarted`])
+    pub clock: Clock,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 256,
+            workers: 1,
+            deadline: None,
+            clock: Clock::wall(),
+        }
+    }
+}
+
+/// Serve a tagged multi-tenant trace against the registry; returns
+/// aggregate + per-tenant stats. Every admitted request is accounted for
+/// exactly once: `completions + shed + expired == trace.len()`.
+pub fn serve(
+    registry: &Registry<'_>,
+    trace: &[TaggedRequest],
+    cfg: &ServerConfig,
+) -> Result<ServeStats> {
+    anyhow::ensure!(!registry.is_empty(), "registry has no tenants");
+    anyhow::ensure!(cfg.max_batch > 0, "max_batch must be positive");
+    for r in trace {
+        anyhow::ensure!(
+            r.task < registry.len(),
+            "request {} tagged with unknown task {} ({} registered)",
+            r.id,
+            r.task,
+            registry.len()
+        );
+    }
+    let clock = cfg.clock.restarted();
+    let queue = BoundedQueue::new(cfg.queue_cap, clock.clone());
+    let collector = Mutex::new(Collector::new(registry.len()));
+    let n_tenants = registry.len();
+    let workers = cfg.workers.max(1);
+
+    let (shed_per_task, worker_result) = std::thread::scope(|scope| {
+        // front: replay arrivals in clock time, count sheds per tenant,
+        // then close the queue for a graceful drain
+        let front = scope.spawn(|| {
+            let mut shed = vec![0usize; n_tenants];
+            replay(trace, &clock, |r| {
+                if queue.push(r) == Enqueue::Shed {
+                    shed[r.task] += 1;
+                }
+            });
+            queue.close();
+            shed
+        });
+        let handles: Vec<_> = (0..workers)
+            .map(|_| scope.spawn(|| worker_loop(&queue, registry, cfg, &clock, &collector)))
+            .collect();
+        let shed = front.join().expect("front thread panicked");
+        let mut result = Ok(());
+        for h in handles {
+            if let Err(e) = h.join().expect("worker thread panicked") {
+                if result.is_ok() {
+                    result = Err(e);
+                }
+            }
+        }
+        (shed, result)
+    });
+    worker_result?;
+    // the per-task verdict tally and the queue's own admission counter are
+    // two views of the same events; they must agree
+    debug_assert_eq!(queue.shed_count(), shed_per_task.iter().sum::<usize>());
+
+    let wall_s = clock.now_s();
+    let collector = collector.into_inner().unwrap();
+    Ok(collector.into_stats(registry.names(), &shed_per_task, wall_s))
+}
+
+/// Single-tenant compatibility wrapper: replay `trace` against one
+/// deployed model (task id 0).
+pub fn serve_trace(
+    qm: &QuantizedModel,
+    data: &Dataset,
+    trace: &[Request],
+    cfg: &ServerConfig,
+) -> Result<ServeStats> {
+    let registry = Registry::single(&data.name, qm, data);
+    let tagged = tag_trace(trace, 0);
+    serve(&registry, &tagged, cfg)
+}

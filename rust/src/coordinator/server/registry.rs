@@ -1,0 +1,72 @@
+//! Multi-tenant model registry: one deployed [`QuantizedModel`] (plus its
+//! dataset) per task, addressed by a dense task id.
+//!
+//! The registry is the server's routing table — requests arrive tagged
+//! with a task id ([`crate::data::TaggedRequest::task`]) and the worker
+//! pool resolves that id to the tenant's packed model and dataset. One
+//! server instance serves all three GLUE workloads (MRPC/RTE/QNLI) from
+//! one shared queue, with per-tenant batching (batches never mix models)
+//! and per-tenant stats.
+//!
+//! Tenants are borrowed, not owned: models are packed once by the caller
+//! and the registry (like the worker pool) only ever reads them, so a
+//! scoped-thread server needs no cloning or `Arc`-wrapping of multi-MB
+//! weight blobs.
+
+use crate::data::Dataset;
+use crate::model::QuantizedModel;
+
+/// One registered task: a deployed model and the dataset it serves.
+pub struct Tenant<'a> {
+    pub name: String,
+    pub model: &'a QuantizedModel,
+    pub data: &'a Dataset,
+}
+
+/// Dense task-id → tenant table.
+#[derive(Default)]
+pub struct Registry<'a> {
+    tenants: Vec<Tenant<'a>>,
+}
+
+impl<'a> Registry<'a> {
+    pub fn new() -> Self {
+        Self { tenants: Vec::new() }
+    }
+
+    /// Single-tenant registry (the `serve_trace` compatibility path).
+    pub fn single(name: &str, model: &'a QuantizedModel, data: &'a Dataset) -> Self {
+        let mut reg = Self::new();
+        reg.add(name, model, data);
+        reg
+    }
+
+    /// Register a tenant; returns its task id (the id requests must carry).
+    pub fn add(&mut self, name: &str, model: &'a QuantizedModel, data: &'a Dataset) -> usize {
+        self.tenants.push(Tenant { name: name.to_string(), model, data });
+        self.tenants.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    pub fn tenant(&self, task: usize) -> Option<&Tenant<'a>> {
+        self.tenants.get(task)
+    }
+
+    /// Tenant names in task-id order.
+    pub fn names(&self) -> Vec<String> {
+        self.tenants.iter().map(|t| t.name.clone()).collect()
+    }
+
+    /// Per-tenant dataset sizes in task-id order — the shape
+    /// [`crate::data::TraceGenerator::generate_tagged`] consumes.
+    pub fn sample_counts(&self) -> Vec<usize> {
+        self.tenants.iter().map(|t| t.data.len()).collect()
+    }
+}

@@ -1,0 +1,238 @@
+//! Serving statistics: per-request completion records, the streaming
+//! latency histograms behind the percentile numbers, and the aggregate
+//! [`ServeStats`] / [`TenantStats`] the server returns.
+//!
+//! Latency is decomposed per request (the old `queue_ms` conflated queue
+//! wait with batch-formation wait):
+//!
+//! * `queue_ms`  — enqueue → drained from the shared queue,
+//! * `batch_ms`  — drained → kernel start (input assembly),
+//! * `exec_ms`   — kernel start → logits ready,
+//! * `total_ms`  — enqueue → done; equals the sum of the three components
+//!   (pinned by `rust/tests/serving.rs`).
+//!
+//! Percentiles come from fixed-bucket streaming [`Histogram`]s — no
+//! sort-at-end pass, O(1) memory per completion — kept per tenant plus
+//! one global, behind one shared [`Collector`] the worker pool locks once
+//! per batch. ([`Histogram::merge`] is the combinator for sharding the
+//! collector per worker if batch-rate contention ever shows up; today one
+//! lock per ≤`max_batch` records is far off the hot path.) Timestamps are
+//! clock seconds from the serve clock, so the same bookkeeping works
+//! under wall and virtual time.
+
+use crate::util::histogram::Histogram;
+
+/// How many per-request records [`ServeStats::completions_log`] retains —
+/// a diagnostics/test sample, not the stats source (the histograms are).
+pub const COMPLETION_LOG_CAP: usize = 4096;
+
+/// Latency record for one completed request.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    /// trace-unique request id
+    pub id: usize,
+    /// tenant/task id
+    pub task: usize,
+    pub sample: usize,
+    pub pred: i32,
+    /// enqueue → drained from the queue
+    pub queue_ms: f64,
+    /// drained → kernel start (batch assembly)
+    pub batch_ms: f64,
+    /// kernel start → logits ready
+    pub exec_ms: f64,
+    /// enqueue → done (= queue + batch + exec)
+    pub total_ms: f64,
+    pub batch_size: usize,
+}
+
+/// Aggregate statistics for one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub task: String,
+    pub completions: usize,
+    /// dropped at admission (queue full)
+    pub shed: usize,
+    /// admitted but past their deadline at batch time
+    pub expired: usize,
+    pub accuracy: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch: f64,
+}
+
+/// Aggregate serving statistics across all tenants.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub completions: usize,
+    pub shed: usize,
+    pub expired: usize,
+    /// elapsed clock seconds (virtual seconds under a virtual clock)
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch: f64,
+    pub accuracy: f64,
+    pub per_tenant: Vec<TenantStats>,
+    /// first [`COMPLETION_LOG_CAP`] completions, for diagnostics and tests
+    pub completions_log: Vec<Completion>,
+}
+
+/// Mutable accumulation state shared (behind a mutex) by the worker pool.
+pub(super) struct Collector {
+    hist: Histogram,
+    completions: usize,
+    correct: usize,
+    batch_sum: usize,
+    log: Vec<Completion>,
+    per_tenant: Vec<TenantAcc>,
+}
+
+struct TenantAcc {
+    hist: Histogram,
+    completions: usize,
+    correct: usize,
+    expired: usize,
+    batch_sum: usize,
+}
+
+impl TenantAcc {
+    fn new() -> Self {
+        Self {
+            hist: Histogram::latency_ms(),
+            completions: 0,
+            correct: 0,
+            expired: 0,
+            batch_sum: 0,
+        }
+    }
+}
+
+impl Collector {
+    pub fn new(n_tenants: usize) -> Self {
+        Self {
+            hist: Histogram::latency_ms(),
+            completions: 0,
+            correct: 0,
+            batch_sum: 0,
+            log: Vec::new(),
+            per_tenant: (0..n_tenants).map(|_| TenantAcc::new()).collect(),
+        }
+    }
+
+    pub fn record(&mut self, c: Completion, correct: bool) {
+        self.hist.record(c.total_ms);
+        self.completions += 1;
+        self.batch_sum += c.batch_size;
+        if correct {
+            self.correct += 1;
+        }
+        let t = &mut self.per_tenant[c.task];
+        t.hist.record(c.total_ms);
+        t.completions += 1;
+        t.batch_sum += c.batch_size;
+        if correct {
+            t.correct += 1;
+        }
+        if self.log.len() < COMPLETION_LOG_CAP {
+            self.log.push(c);
+        }
+    }
+
+    pub fn record_expired(&mut self, task: usize, n: usize) {
+        self.per_tenant[task].expired += n;
+    }
+
+    /// Finalize into the public stats view. `shed_per_task` comes from the
+    /// admission front; `names` from the registry (task-id order).
+    pub fn into_stats(
+        self,
+        names: Vec<String>,
+        shed_per_task: &[usize],
+        wall_s: f64,
+    ) -> ServeStats {
+        debug_assert_eq!(names.len(), self.per_tenant.len());
+        debug_assert_eq!(shed_per_task.len(), self.per_tenant.len());
+        let per_tenant: Vec<TenantStats> = self
+            .per_tenant
+            .iter()
+            .zip(names)
+            .zip(shed_per_task)
+            .map(|((t, name), &shed)| TenantStats {
+                task: name,
+                completions: t.completions,
+                shed,
+                expired: t.expired,
+                accuracy: t.correct as f64 / t.completions.max(1) as f64,
+                p50_ms: t.hist.quantile(0.50),
+                p95_ms: t.hist.quantile(0.95),
+                p99_ms: t.hist.quantile(0.99),
+                mean_batch: t.batch_sum as f64 / t.completions.max(1) as f64,
+            })
+            .collect();
+        ServeStats {
+            completions: self.completions,
+            shed: shed_per_task.iter().sum(),
+            expired: self.per_tenant.iter().map(|t| t.expired).sum(),
+            wall_s,
+            throughput_rps: self.completions as f64 / wall_s.max(1e-9),
+            p50_ms: self.hist.quantile(0.50),
+            p95_ms: self.hist.quantile(0.95),
+            p99_ms: self.hist.quantile(0.99),
+            mean_batch: self.batch_sum as f64 / self.completions.max(1) as f64,
+            accuracy: self.correct as f64 / self.completions.max(1) as f64,
+            per_tenant,
+            completions_log: self.log,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn comp(id: usize, task: usize, total_ms: f64, batch: usize) -> Completion {
+        Completion {
+            id,
+            task,
+            sample: 0,
+            pred: 0,
+            queue_ms: total_ms / 2.0,
+            batch_ms: 0.0,
+            exec_ms: total_ms / 2.0,
+            total_ms,
+            batch_size: batch,
+        }
+    }
+
+    #[test]
+    fn collector_aggregates_per_tenant_and_globally() {
+        let mut c = Collector::new(2);
+        c.record(comp(0, 0, 2.0, 2), true);
+        c.record(comp(1, 0, 4.0, 2), false);
+        c.record(comp(2, 1, 10.0, 1), true);
+        c.record_expired(1, 3);
+        let s = c.into_stats(vec!["a".into(), "b".into()], &[5, 0], 2.0);
+        assert_eq!(s.completions, 3);
+        assert_eq!(s.shed, 5);
+        assert_eq!(s.expired, 3);
+        assert!((s.throughput_rps - 1.5).abs() < 1e-9);
+        assert!((s.accuracy - 2.0 / 3.0).abs() < 1e-9);
+        assert!((s.mean_batch - 5.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.per_tenant.len(), 2);
+        assert_eq!(s.per_tenant[0].task, "a");
+        assert_eq!(s.per_tenant[0].completions, 2);
+        assert_eq!(s.per_tenant[0].shed, 5);
+        assert_eq!(s.per_tenant[0].expired, 0);
+        assert!((s.per_tenant[0].accuracy - 0.5).abs() < 1e-9);
+        assert_eq!(s.per_tenant[1].completions, 1);
+        assert_eq!(s.per_tenant[1].expired, 3);
+        assert_eq!(s.completions_log.len(), 3);
+        // percentiles come from the histogram: within one bucket width
+        let w = crate::util::histogram::Histogram::latency_ms().width_ms();
+        assert!((s.per_tenant[1].p50_ms - 10.0).abs() <= w);
+    }
+}

@@ -1,0 +1,160 @@
+//! The batch-execution worker: each worker thread loops
+//! pop-batch → expire → assemble → fused forward → record.
+//!
+//! N workers ([`super::ServerConfig::workers`]) drain one shared
+//! [`BoundedQueue`], so batch execution scales independently of the
+//! kernel-level `--threads` pool: workers pipeline *batches* while the
+//! global [`crate::util::pool`] parallelizes *within* a batch's igemm
+//! panels. Batches are single-tenant by construction (the queue groups by
+//! the FIFO head's task), so a worker resolves its tenant once per batch.
+//!
+//! Per-request deadlines are enforced here, after the batch is drained and
+//! before the forward pass is paid for: a request older than
+//! `ServerConfig::deadline` is counted expired and dropped — serving a
+//! reply that the caller has already given up on is pure waste.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::queue::{BoundedQueue, QueueItem};
+use super::registry::Registry;
+use super::stats::{Collector, Completion};
+use super::ServerConfig;
+use crate::util::clock::Clock;
+
+/// Partition a drained batch into live requests and an expired count — a
+/// request is expired when it has already waited longer than `deadline`.
+/// Pure, so the deadline semantics are unit-testable without threads.
+pub(super) fn split_expired<'b>(
+    batch: &'b [QueueItem],
+    now_s: f64,
+    deadline: Option<Duration>,
+) -> (Vec<&'b QueueItem>, usize) {
+    let Some(dl) = deadline else {
+        return (batch.iter().collect(), 0);
+    };
+    let dl_s = dl.as_secs_f64();
+    let mut live = Vec::with_capacity(batch.len());
+    let mut expired = 0usize;
+    for it in batch {
+        if now_s - it.enq_s > dl_s {
+            expired += 1;
+        } else {
+            live.push(it);
+        }
+    }
+    (live, expired)
+}
+
+pub(super) fn worker_loop(
+    queue: &BoundedQueue,
+    registry: &Registry<'_>,
+    cfg: &ServerConfig,
+    clock: &Clock,
+    collector: &Mutex<Collector>,
+) -> Result<()> {
+    loop {
+        let batch = queue.pop_batch(cfg.max_batch, cfg.max_wait);
+        if batch.is_empty() {
+            // closed and drained — graceful exit
+            return Ok(());
+        }
+        let popped_s = clock.now_s();
+        let task = batch[0].req.task;
+        let tenant = registry
+            .tenant(task)
+            .with_context(|| format!("request tagged with unregistered task id {task}"))?;
+
+        // deadline enforcement: drop requests already past their budget
+        let (live, expired) = split_expired(&batch, popped_s, cfg.deadline);
+        if expired > 0 {
+            collector.lock().unwrap().record_expired(task, expired);
+        }
+        if live.is_empty() {
+            continue;
+        }
+
+        // assemble the batch inputs from the tenant's dataset
+        let s = tenant.data.seq_len();
+        let bsize = live.len();
+        let mut ids = Vec::with_capacity(bsize * s);
+        let mut mask = Vec::with_capacity(bsize * s);
+        for it in &live {
+            let (i, m) = tenant.data.batch_slices(it.req.sample, it.req.sample + 1);
+            ids.extend(i);
+            mask.extend(m);
+        }
+
+        let exec_start_s = clock.now_s();
+        let logits = tenant.model.forward_fused(&ids, &mask)?;
+        let done_s = clock.now_s();
+
+        let mut g = collector.lock().unwrap();
+        for (bi, it) in live.iter().enumerate() {
+            let row = logits.row(bi);
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j as i32)
+                .unwrap();
+            let correct = pred == tenant.data.label(it.req.sample);
+            g.record(
+                Completion {
+                    id: it.req.id,
+                    task,
+                    sample: it.req.sample,
+                    pred,
+                    queue_ms: (popped_s - it.enq_s) * 1e3,
+                    batch_ms: (exec_start_s - popped_s) * 1e3,
+                    exec_ms: (done_s - exec_start_s) * 1e3,
+                    total_ms: (done_s - it.enq_s) * 1e3,
+                    batch_size: bsize,
+                },
+                correct,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TaggedRequest;
+
+    fn item(id: usize, enq_s: f64) -> QueueItem {
+        QueueItem {
+            req: TaggedRequest { id, task: 0, arrival_s: enq_s, sample: 0 },
+            enq_s,
+        }
+    }
+
+    #[test]
+    fn no_deadline_keeps_everything() {
+        let batch = [item(0, 0.0), item(1, 5.0)];
+        let (live, expired) = split_expired(&batch, 100.0, None);
+        assert_eq!(live.len(), 2);
+        assert_eq!(expired, 0);
+    }
+
+    #[test]
+    fn deadline_expires_only_overdue_requests() {
+        // at t=1.0 with a 500ms budget: enq 0.2 is 800ms old (expired),
+        // enq 0.6 is 400ms old (live), enq 0.5 is exactly at the budget
+        // (live — the bound is strict)
+        let batch = [item(0, 0.2), item(1, 0.6), item(2, 0.5)];
+        let (live, expired) = split_expired(&batch, 1.0, Some(Duration::from_millis(500)));
+        assert_eq!(expired, 1);
+        assert_eq!(live.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn zero_deadline_expires_anything_with_positive_wait() {
+        let batch = [item(0, 0.0), item(1, 1.0)];
+        let (live, expired) = split_expired(&batch, 1.0, Some(Duration::ZERO));
+        assert_eq!(expired, 1, "the t=0 request waited 1s against a 0 budget");
+        assert_eq!(live[0].req.id, 1, "the just-arrived request is exactly on budget");
+    }
+}

@@ -5,14 +5,18 @@
 //!
 //! Also home to [`TraceGenerator`]: synthetic request-arrival traces for
 //! the serving demo / engine_inference bench (Poisson arrivals, bursty
-//! variant), standing in for the production traces the paper's deployment
-//! story implies (DESIGN.md §2).
+//! variant, multi-tenant tagging), standing in for the production traces
+//! the paper's deployment story implies (DESIGN.md §2). Traces carry
+//! clock-relative arrival seconds; [`replay`] feeds them to the server
+//! through a [`Clock`], so the same trace drives real-time serving (wall
+//! clock) and millisecond-fast hermetic tests (virtual clock).
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::tensorfile::TensorFile;
+use crate::util::clock::Clock;
 use crate::util::rng::Rng;
 
 /// A classification dataset: token ids, masks, labels.
@@ -147,6 +151,44 @@ pub struct Request {
     pub sample: usize,
 }
 
+/// A request tagged for multi-tenant serving: which registered task/model
+/// it targets, plus a stable trace-unique id — the id is what lets the
+/// serving tests assert that no request is ever lost or duplicated across
+/// the worker pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaggedRequest {
+    /// position in the trace (unique within one trace)
+    pub id: usize,
+    /// tenant/task index into the server's model registry
+    pub task: usize,
+    /// arrival time in seconds from trace start
+    pub arrival_s: f64,
+    /// sample index into the tenant's dataset
+    pub sample: usize,
+}
+
+/// Tag a single-tenant trace for the multi-tenant server (ids are trace
+/// positions).
+pub fn tag_trace(trace: &[Request], task: usize) -> Vec<TaggedRequest> {
+    trace
+        .iter()
+        .enumerate()
+        .map(|(id, r)| TaggedRequest { id, task, arrival_s: r.arrival_s, sample: r.sample })
+        .collect()
+}
+
+/// Replay `trace` arrivals into `deliver` in clock time. On a wall clock
+/// this paces pushes to the recorded arrival seconds; on a virtual clock
+/// each `sleep_until` advances the timeline instantly, so a multi-second
+/// trace replays in microseconds while every enqueue still observes the
+/// correct (virtual) arrival timestamp.
+pub fn replay<F: FnMut(TaggedRequest)>(trace: &[TaggedRequest], clock: &Clock, mut deliver: F) {
+    for r in trace {
+        clock.sleep_until(r.arrival_s);
+        deliver(*r);
+    }
+}
+
 /// Synthetic arrival-trace generator for the serving demo.
 #[derive(Debug, Clone)]
 pub struct TraceGenerator {
@@ -167,6 +209,26 @@ impl TraceGenerator {
 
     /// Generate `n` requests drawing sample indices from `[0, n_samples)`.
     pub fn generate(&self, n: usize, n_samples: usize, seed: u64) -> Vec<Request> {
+        self.generate_tagged(n, &[n_samples], seed)
+            .into_iter()
+            .map(|r| Request { arrival_s: r.arrival_s, sample: r.sample })
+            .collect()
+    }
+
+    /// Generate a multi-tenant trace of `n` requests: one shared arrival
+    /// process, each request targeting a uniformly-drawn tenant and a
+    /// sample from that tenant's `samples_per_task` range. Ids are trace
+    /// positions (0..n).
+    pub fn generate_tagged(
+        &self,
+        n: usize,
+        samples_per_task: &[usize],
+        seed: u64,
+    ) -> Vec<TaggedRequest> {
+        assert!(
+            !samples_per_task.is_empty() && samples_per_task.iter().all(|&s| s > 0),
+            "every tenant needs at least one sample"
+        );
         let mut rng = Rng::new(seed);
         let mut out = Vec::with_capacity(n);
         let mut t = 0.0f64;
@@ -179,7 +241,17 @@ impl TraceGenerator {
                 if out.len() >= n {
                     break;
                 }
-                out.push(Request { arrival_s: t, sample: rng.range(0, n_samples) });
+                let task = if samples_per_task.len() == 1 {
+                    0
+                } else {
+                    rng.range(0, samples_per_task.len())
+                };
+                out.push(TaggedRequest {
+                    id: out.len(),
+                    task,
+                    arrival_s: t,
+                    sample: rng.range(0, samples_per_task[task]),
+                });
             }
         }
         out
@@ -261,5 +333,62 @@ mod tests {
     fn deterministic_in_seed() {
         let g = TraceGenerator::poisson(10.0);
         assert_eq!(g.generate(50, 8, 7), g.generate(50, 8, 7));
+        let counts = [5usize, 9, 3];
+        assert_eq!(
+            g.generate_tagged(50, &counts, 7),
+            g.generate_tagged(50, &counts, 7)
+        );
+    }
+
+    #[test]
+    fn tagged_trace_covers_tenants_with_unique_ids() {
+        let g = TraceGenerator::poisson(30.0);
+        let counts = [10usize, 4, 7];
+        let reqs = g.generate_tagged(300, &counts, 11);
+        assert_eq!(reqs.len(), 300);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i, "ids are trace positions");
+            assert!(r.task < counts.len());
+            assert!(r.sample < counts[r.task], "sample within tenant bounds");
+        }
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        // all three tenants get traffic over 300 draws
+        for task in 0..counts.len() {
+            assert!(reqs.iter().any(|r| r.task == task), "tenant {task} starved");
+        }
+    }
+
+    #[test]
+    fn tag_trace_preserves_order_and_tags() {
+        let g = TraceGenerator::poisson(10.0);
+        let base = g.generate(20, 5, 3);
+        let tagged = tag_trace(&base, 2);
+        assert_eq!(tagged.len(), 20);
+        for (i, (t, r)) in tagged.iter().zip(&base).enumerate() {
+            assert_eq!(t.id, i);
+            assert_eq!(t.task, 2);
+            assert_eq!(t.arrival_s, r.arrival_s);
+            assert_eq!(t.sample, r.sample);
+        }
+    }
+
+    #[test]
+    fn replay_on_virtual_clock_is_instant_and_complete() {
+        use crate::util::clock::Clock;
+        // a ~100-virtual-second trace must deliver fully and advance the
+        // virtual clock to the last arrival without any real sleeping
+        let g = TraceGenerator::poisson(2.0);
+        let trace = g.generate_tagged(200, &[6], 5);
+        let span = trace.last().unwrap().arrival_s;
+        assert!(span > 50.0, "expected a long trace, got {span}s");
+        let clock = Clock::virt();
+        let t0 = std::time::Instant::now();
+        let mut got = Vec::new();
+        replay(&trace, &clock, |r| got.push(r.id));
+        assert!(t0.elapsed().as_secs_f64() < 1.0, "virtual replay must not sleep");
+        assert_eq!(got, (0..200).collect::<Vec<_>>());
+        assert!((clock.now_s() - span).abs() < 1e-6, "clock at last arrival");
     }
 }

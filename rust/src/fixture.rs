@@ -1,0 +1,127 @@
+//! Hermetic test/bench fixtures: shape-realistic synthetic checkpoints and
+//! datasets, so the serving tests (`rust/tests/serving.rs`) and the
+//! serving benches run under plain `cargo test -q` / `cargo bench` with no
+//! `artifacts/` directory — unlike `tests/integration.rs` and
+//! `tests/parity.rs`, which replay real artifacts and skip without them.
+//!
+//! Lifted out of `benches/common/mod.rs` (which now delegates here) so
+//! integration tests, benches, and doc examples share one definition of
+//! "a deployable model without `make artifacts`". Not behind `cfg(test)`:
+//! benches and integration tests build the library without the test cfg
+//! (same rationale as [`crate::model::params::testing`]).
+
+use anyhow::Result;
+
+use crate::coordinator::QuantizePipeline;
+use crate::data::Dataset;
+use crate::model::{params, ModelConfig, Params, QuantizedModel};
+use crate::quant::QuantConfig;
+use crate::util::rng::Rng;
+
+/// The bench-scale synthetic model: big enough that kernel/threading
+/// effects are visible, small enough to quantize in well under a second.
+pub fn small_config() -> ModelConfig {
+    ModelConfig {
+        vocab_size: 512,
+        max_len: 32,
+        hidden: 128,
+        layers: 4,
+        heads: 4,
+        ffn: 256,
+        n_classes: 2,
+        export_batch: 8,
+    }
+}
+
+/// The test-scale synthetic model: a full transformer in miniature, fast
+/// enough that a multi-hundred-request serving trace executes in
+/// milliseconds (what keeps `tests/serving.rs` deterministic-and-fast).
+pub fn tiny_config() -> ModelConfig {
+    ModelConfig {
+        vocab_size: 64,
+        max_len: 8,
+        hidden: 16,
+        layers: 1,
+        heads: 2,
+        ffn: 32,
+        n_classes: 2,
+        export_batch: 4,
+    }
+}
+
+/// A randomly-initialized, shape-correct checkpoint for `cfg`.
+pub fn synthetic_checkpoint(cfg: &ModelConfig, seed: u64) -> Params {
+    params::testing::synthetic_params(cfg, seed)
+}
+
+/// A synthetic labelled dataset matching `cfg`'s sequence geometry.
+pub fn synthetic_dataset(cfg: &ModelConfig, n: usize, seed: u64) -> Dataset {
+    let s = cfg.max_len;
+    let mut rng = Rng::new(seed);
+    let mut ids = Vec::with_capacity(n * s);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        for _ in 0..s {
+            ids.push(rng.range(1, cfg.vocab_size) as i32);
+        }
+        labels.push(rng.range(0, cfg.n_classes) as i32);
+    }
+    let mask = vec![1i32; n * s];
+    Dataset::from_raw("synthetic", ids, mask, labels, s).expect("synthetic dataset")
+}
+
+/// The serving-bench fixture: bench-scale checkpoint + 192-sample dev set
+/// (the exact shapes `benches/common/mod.rs` used before the lift).
+pub fn serving_fixture() -> (ModelConfig, Params, Dataset) {
+    let cfg = small_config();
+    let params = synthetic_checkpoint(&cfg, 0xC0FFEE);
+    let dev = synthetic_dataset(&cfg, 192, 0xDA7A);
+    (cfg, params, dev)
+}
+
+/// End-to-end hermetic deployment: synthetic checkpoint → data-free SVD
+/// selection at budget `k` (through the staged pipeline) → packed
+/// [`QuantizedModel`] + dataset of `n_samples`. This is the
+/// quantize→pack→serve path the hermetic serving suite exercises.
+pub fn deployed_fixture(
+    cfg: &ModelConfig,
+    seed: u64,
+    k: usize,
+    n_samples: usize,
+) -> Result<(QuantizedModel, Dataset)> {
+    let ckpt = synthetic_checkpoint(cfg, seed);
+    let qcfg = QuantConfig::default();
+    let sels = {
+        let mut pipe = QuantizePipeline::for_checkpoint(cfg, &ckpt)
+            .budget(k)
+            .quant(qcfg)
+            .build()?;
+        pipe.select(k)?
+    };
+    let qm = QuantizedModel::build(*cfg, ckpt, &qcfg, &sels)?;
+    let data = synthetic_dataset(cfg, n_samples, seed ^ 0xDA7A);
+    Ok((qm, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_validate_and_deploy() {
+        let (cfg, params, dev) = serving_fixture();
+        assert!(params.validate(&cfg).is_ok());
+        assert_eq!(dev.len(), 192);
+        assert_eq!(dev.seq_len(), cfg.max_len);
+
+        let tiny = tiny_config();
+        let (qm, data) = deployed_fixture(&tiny, 7, 8, 12).unwrap();
+        assert_eq!(data.len(), 12);
+        let (q, d) = qm.quantized_bytes();
+        assert!(q < d, "quantized model must be smaller: {q} vs {d}");
+        // the deployed model actually runs
+        let (ids, mask) = data.batch_slices(0, 2);
+        let logits = qm.forward_fused(&ids, &mask).unwrap();
+        assert_eq!(logits.shape(), (2, tiny.n_classes));
+    }
+}

@@ -59,6 +59,7 @@ pub mod calib;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod fixture;
 pub mod json;
 pub mod linalg;
 pub mod model;

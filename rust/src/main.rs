@@ -5,7 +5,8 @@
 //!   quantize   one (task, scorer, k) cell; prints accuracy vs fp32/floor
 //!   overlap    Fig. 2 IoU analysis
 //!   report     re-render tables/figures from the cached sweep results
-//!   serve      dynamic-batching demo over the deployed packed-int4 model
+//!   serve      multi-worker, multi-tenant batching demo over the
+//!              deployed packed-int4 models
 //!   selfcheck  engine ↔ PJRT ↔ parity-vector consistency checks
 //!   info       artifacts/manifest summary
 //!
@@ -18,10 +19,11 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use svdquant::calib::CalibStats;
-use svdquant::coordinator::server::{serve_trace, ServerConfig};
+use svdquant::coordinator::server::{serve, Registry, ServerConfig};
 use svdquant::coordinator::sweep::{run_sweep, SweepConfig, SweepResults};
 use svdquant::coordinator::{quantize_checkpoint, Artifacts, PreserveSpec, QuantizePipeline};
 use svdquant::data::TraceGenerator;
+use svdquant::util::clock::Clock;
 use svdquant::eval::{eval_engine, eval_pjrt, eval_quantized};
 use svdquant::model::{Engine, QuantizedModel};
 use svdquant::quant::QuantConfig;
@@ -77,7 +79,7 @@ fn print_help() {
          \x20 quantize   quantize one (task, scorer, k) and evaluate\n\
          \x20 overlap    Fig.2 IoU of SVD vs AWQ/SpQR selections\n\
          \x20 report     re-render report from cached sweep results\n\
-         \x20 serve      batching inference demo on packed int4 weights\n\
+         \x20 serve      multi-tenant batching inference on packed int4 weights\n\
          \x20 selfcheck  numerics: rust engine vs PJRT vs parity vectors\n\
          \x20 info       artifacts summary\n\n\
          scorers: {}\n\
@@ -439,60 +441,87 @@ fn cmd_report(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(rest: &[String]) -> Result<()> {
-    let p = threads_flag(artifacts_flag(Parser::new("serve", "batching inference demo")))
-        .flag("task", Some("mrpc"), "task name")
-        .flag("method", Some("svd"), "selection scorer")
-        .flag("k", Some("256"), "protection budget")
-        .flag("requests", Some("200"), "trace length")
-        .flag("rate", Some("50"), "arrival rate (req/s)")
-        .flag("max-batch", Some("16"), "batcher size cap")
-        .flag("max-wait-ms", Some("5"), "batcher deadline")
-        .switch("bursty", "bursty arrivals instead of poisson");
+    let p = threads_flag(artifacts_flag(Parser::new(
+        "serve",
+        "multi-tenant batching inference demo (one deployed model per task)",
+    )))
+    .flag("tasks", Some("mrpc"), "comma-separated tenant tasks (e.g. mrpc,rte,qnli)")
+    .flag("method", Some("svd"), "selection scorer")
+    .flag("k", Some("256"), "protection budget")
+    .flag("requests", Some("200"), "trace length")
+    .flag("rate", Some("50"), "arrival rate (req/s)")
+    .flag("max-batch", Some("16"), "batcher size cap")
+    .flag("max-wait-ms", Some("5"), "batcher deadline")
+    .flag("workers", Some("2"), "batch-execution worker threads")
+    .flag("queue-cap", Some("256"), "admission queue capacity (overflow is shed)")
+    .flag("deadline-ms", Some("0"), "per-request latency budget; 0 = none")
+    .switch("bursty", "bursty arrivals instead of poisson")
+    .switch("virtual", "replay the trace in virtual time (hermetic dry-run)");
     let a = p.parse(rest)?;
     let art = Artifacts::open(a.str("artifacts")?)?;
-    let task = a.str("task")?;
-    let scorer = resolve_scorer(a.str("method")?, &art.scorer_params())?;
-    let ckpt = art.checkpoint(task)?;
-    let calib =
-        load_calib_if_needed(&art, task, scorer.needs_calibration(), art.calib_samples())?;
+    let tasks = a.list("tasks");
+    anyhow::ensure!(!tasks.is_empty(), "--tasks needs at least one task");
+    let threads = apply_threads(&a)?;
     let qcfg = QuantConfig::default();
-    let sels = {
-        let mut pipe = QuantizePipeline::for_checkpoint(&art.model_cfg, &ckpt)
-            .scorer(scorer)
-            .budget(a.usize("k")?)
-            .quant(qcfg)
-            .calib(calib.as_ref())
-            .threads(apply_threads(&a)?)
-            .build()?;
-        pipe.select(pipe.budget())?
-    };
-    let qm = QuantizedModel::build(art.model_cfg, ckpt, &qcfg, &sels)?;
-    let (qbytes, dbytes) = qm.quantized_bytes();
-    println!(
-        "deployed model: quantized weights {} vs dense {} ({:.2}x smaller)",
-        svdquant::util::human_bytes(qbytes),
-        svdquant::util::human_bytes(dbytes),
-        dbytes as f64 / qbytes as f64
-    );
-    let dev = art.dataset(task, "dev")?;
+
+    // deploy one packed model per tenant task
+    let mut deployed: Vec<(String, QuantizedModel, svdquant::data::Dataset)> = Vec::new();
+    for task in &tasks {
+        let scorer = resolve_scorer(a.str("method")?, &art.scorer_params())?;
+        let ckpt = art.checkpoint(task)?;
+        let calib =
+            load_calib_if_needed(&art, task, scorer.needs_calibration(), art.calib_samples())?;
+        let sels = {
+            let mut pipe = QuantizePipeline::for_checkpoint(&art.model_cfg, &ckpt)
+                .scorer(scorer)
+                .budget(a.usize("k")?)
+                .quant(qcfg)
+                .calib(calib.as_ref())
+                .threads(threads)
+                .build()?;
+            pipe.select(pipe.budget())?
+        };
+        let qm = QuantizedModel::build(art.model_cfg, ckpt, &qcfg, &sels)?;
+        let (qbytes, dbytes) = qm.quantized_bytes();
+        println!(
+            "deployed {task}: quantized weights {} vs dense {} ({:.2}x smaller)",
+            svdquant::util::human_bytes(qbytes),
+            svdquant::util::human_bytes(dbytes),
+            dbytes as f64 / qbytes as f64
+        );
+        let dev = art.dataset(task, "dev")?;
+        deployed.push((task.clone(), qm, dev));
+    }
+    let mut registry = Registry::new();
+    for (name, qm, dev) in &deployed {
+        registry.add(name, qm, dev);
+    }
+
     let rate = a.f64("rate")?;
     let gen = if a.bool("bursty") {
         TraceGenerator::bursty(rate, 0.2, 8)
     } else {
         TraceGenerator::poisson(rate)
     };
-    let trace = gen.generate(a.usize("requests")?, dev.len(), 0xFEED);
+    let trace = gen.generate_tagged(a.usize("requests")?, &registry.sample_counts(), 0xFEED);
+    let deadline_ms = a.u64("deadline-ms")?;
     let scfg = ServerConfig {
         max_batch: a.usize("max-batch")?,
         max_wait: std::time::Duration::from_millis(a.u64("max-wait-ms")?),
-        ..Default::default()
+        queue_cap: a.usize("queue-cap")?,
+        workers: a.usize("workers")?,
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        clock: if a.bool("virtual") { Clock::virt() } else { Clock::wall() },
     };
-    let stats = serve_trace(&qm, &dev, &trace, &scfg)?;
+    let stats = serve(&registry, &trace, &scfg)?;
     println!(
-        "served {} requests in {:.2}s: {:.1} req/s, p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms, \
-         mean batch {:.1}, accuracy {:.4}",
+        "served {} requests ({} shed, {} expired) in {:.2}s on {} workers: \
+         {:.1} req/s, p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms, mean batch {:.1}, accuracy {:.4}",
         stats.completions,
+        stats.shed,
+        stats.expired,
         stats.wall_s,
+        scfg.workers,
         stats.throughput_rps,
         stats.p50_ms,
         stats.p95_ms,
@@ -500,6 +529,14 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         stats.mean_batch,
         stats.accuracy
     );
+    for t in &stats.per_tenant {
+        println!(
+            "  [{}] {} done / {} shed / {} expired | p50 {:.1}ms p95 {:.1}ms | \
+             mean batch {:.1} | acc {:.4}",
+            t.task, t.completions, t.shed, t.expired, t.p50_ms, t.p95_ms, t.mean_batch,
+            t.accuracy
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,157 @@
+//! Wall vs. virtual time for the serving subsystem (DESIGN.md §6).
+//!
+//! Everything time-dependent on the serving path — trace replay, the
+//! batcher's size-or-deadline wait, per-request deadlines, latency
+//! bookkeeping — reads time through a [`Clock`] instead of touching
+//! `Instant` directly. Two implementations:
+//!
+//! * [`Clock::wall`] — real time: `now_s` is seconds since the clock was
+//!   created and `sleep_until` actually sleeps. Production serving.
+//! * [`Clock::virt`] — virtual time: a shared atomic nanosecond counter
+//!   that only moves when someone calls `sleep_until`/`advance`. A sleeper
+//!   *advances the timeline* instead of blocking, so a ten-minute arrival
+//!   trace replays in microseconds of test time and batch-formation
+//!   deadlines become a pure function of queue content + timestamps
+//!   rather than of scheduler races. This is what makes
+//!   `rust/tests/serving.rs` hermetic and fast.
+//!
+//! Timestamps are `f64` seconds since the clock's epoch — the same unit
+//! `data::Request::arrival_s` uses, so traces replay against either clock
+//! unchanged.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A monotonic time source: real (`Wall`) or simulated (`Virtual`).
+#[derive(Debug, Clone)]
+pub enum Clock {
+    /// Real time; the `Instant` is the epoch (`now_s` = elapsed since it).
+    Wall(Instant),
+    /// Simulated time: nanoseconds since epoch, advanced explicitly.
+    Virtual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// A wall clock whose epoch is "now".
+    pub fn wall() -> Self {
+        Clock::Wall(Instant::now())
+    }
+
+    /// A virtual clock starting at t = 0.
+    pub fn virt() -> Self {
+        Clock::Virtual(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
+
+    /// Seconds since this clock's epoch.
+    pub fn now_s(&self) -> f64 {
+        match self {
+            Clock::Wall(epoch) => epoch.elapsed().as_secs_f64(),
+            Clock::Virtual(ns) => ns.load(Ordering::SeqCst) as f64 * 1e-9,
+        }
+    }
+
+    /// Block (wall) or advance the timeline (virtual) until `t_s` seconds
+    /// after the epoch. A target already in the past is a no-op — virtual
+    /// time never moves backwards (`fetch_max`), so concurrent sleepers
+    /// keep the counter monotone.
+    pub fn sleep_until(&self, t_s: f64) {
+        match self {
+            Clock::Wall(epoch) => {
+                let target = Duration::from_secs_f64(t_s.max(0.0));
+                if let Some(d) = target.checked_sub(epoch.elapsed()) {
+                    if d > Duration::ZERO {
+                        std::thread::sleep(d);
+                    }
+                }
+            }
+            Clock::Virtual(ns) => {
+                ns.fetch_max((t_s.max(0.0) * 1e9) as u64, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Advance a virtual clock by `d_s` seconds. No-op on a wall clock
+    /// (where time advances on its own).
+    pub fn advance(&self, d_s: f64) {
+        if let Clock::Virtual(ns) = self {
+            ns.fetch_add((d_s.max(0.0) * 1e9) as u64, Ordering::SeqCst);
+        }
+    }
+
+    /// A fresh clock of the same kind with its epoch reset to zero.
+    /// `serve` re-bases the configured clock per run so one `ServerConfig`
+    /// can drive many traces (a wall epoch captured at config time would
+    /// make every later run's arrivals "already late").
+    pub fn restarted(&self) -> Clock {
+        match self {
+            Clock::Wall(_) => Clock::wall(),
+            Clock::Virtual(_) => Clock::virt(),
+        }
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::wall()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_starts_at_zero_and_advances() {
+        let c = Clock::virt();
+        assert!(c.is_virtual());
+        assert_eq!(c.now_s(), 0.0);
+        c.advance(1.5);
+        assert!((c.now_s() - 1.5).abs() < 1e-9, "{}", c.now_s());
+        c.advance(0.25);
+        assert!((c.now_s() - 1.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn virtual_sleep_until_is_monotone_max() {
+        let c = Clock::virt();
+        c.sleep_until(2.0);
+        assert!((c.now_s() - 2.0).abs() < 1e-9);
+        // sleeping to the past never rewinds
+        c.sleep_until(1.0);
+        assert!((c.now_s() - 2.0).abs() < 1e-9);
+        c.sleep_until(3.0);
+        assert!((c.now_s() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn virtual_clones_share_the_timeline() {
+        let a = Clock::virt();
+        let b = a.clone();
+        a.advance(1.0);
+        assert!((b.now_s() - 1.0).abs() < 1e-9);
+        // restarted() detaches onto a fresh timeline
+        let c = b.restarted();
+        assert!(c.is_virtual());
+        assert_eq!(c.now_s(), 0.0);
+        assert!((b.now_s() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wall_clock_moves_forward_without_sleeping() {
+        let c = Clock::wall();
+        assert!(!c.is_virtual());
+        let t0 = c.now_s();
+        // a target in the past returns immediately
+        c.sleep_until(0.0);
+        // advance() is a documented no-op on wall clocks
+        c.advance(1000.0);
+        let t1 = c.now_s();
+        assert!(t1 >= t0);
+        assert!(t1 < 100.0, "wall advance must not jump: {t1}");
+    }
+}

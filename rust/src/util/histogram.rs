@@ -1,0 +1,206 @@
+//! Fixed-bucket streaming latency histogram (DESIGN.md §6).
+//!
+//! The server used to keep every completion's latency in a `Vec` and sort
+//! it at the end to read percentiles — O(n log n) at drain time and O(n)
+//! memory for a path whose north star is "heavy traffic from millions of
+//! users". This replaces that with a constant-size linear histogram:
+//! `record` is O(1), `quantile` walks the bucket array, and independently
+//! recorded histograms `merge` without reordering anything (the
+//! combinator for per-worker sharding of the stats collector).
+//!
+//! Accuracy contract (pinned by `rust/tests/serving.rs`): for values
+//! inside the bucket range, `quantile(p)` agrees with the exact
+//! sorted-array percentile (`sorted[(n·p) as usize]`, the rule the old
+//! sort-at-end pass used) to within **one bucket width** — the exact
+//! order statistic lies in the bucket whose midpoint we report. Values
+//! past the range land in a single overflow bucket and report the
+//! observed maximum instead.
+
+/// Streaming histogram over non-negative millisecond values.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    width_ms: f64,
+    counts: Vec<u64>,
+    overflow: u64,
+    total: u64,
+    sum_ms: f64,
+    max_ms: f64,
+}
+
+impl Histogram {
+    /// `buckets` linear buckets of `width_ms` each, covering
+    /// `[0, width_ms·buckets)`, plus one overflow bucket.
+    pub fn new(width_ms: f64, buckets: usize) -> Self {
+        assert!(width_ms > 0.0 && buckets > 0, "degenerate histogram");
+        Self {
+            width_ms,
+            counts: vec![0; buckets],
+            overflow: 0,
+            total: 0,
+            sum_ms: 0.0,
+            max_ms: 0.0,
+        }
+    }
+
+    /// The serving default: 0.5 ms resolution out to ~4 s (8192 buckets,
+    /// 64 KiB) — sub-bucket precision where latencies live, overflow
+    /// handling for pathological stragglers.
+    pub fn latency_ms() -> Self {
+        Self::new(0.5, 8192)
+    }
+
+    /// Record one value. Negative / non-finite values clamp to 0 (they can
+    /// only arise from clock skew, which the virtual clock rules out).
+    pub fn record(&mut self, ms: f64) {
+        let ms = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        let b = (ms / self.width_ms) as usize;
+        if b < self.counts.len() {
+            self.counts[b] += 1;
+        } else {
+            self.overflow += 1;
+        }
+        self.total += 1;
+        self.sum_ms += ms;
+        if ms > self.max_ms {
+            self.max_ms = ms;
+        }
+    }
+
+    /// Fold another histogram (same geometry) into this one — how
+    /// per-worker histograms combine into the serve-level view.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert!(
+            self.width_ms == other.width_ms && self.counts.len() == other.counts.len(),
+            "merging histograms of different geometry"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.overflow += other.overflow;
+        self.total += other.total;
+        self.sum_ms += other.sum_ms;
+        if other.max_ms > self.max_ms {
+            self.max_ms = other.max_ms;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn width_ms(&self) -> f64 {
+        self.width_ms
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.total as f64
+        }
+    }
+
+    /// The p-quantile (p in [0, 1]) under the same rank rule the old
+    /// sort-at-end pass used: rank `min((n·p) as usize, n-1)`. Returns the
+    /// midpoint of the bucket holding that rank; 0 when empty; the
+    /// observed max when the rank falls in the overflow bucket.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((self.total as f64 * p) as u64).min(self.total - 1);
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return (b as f64 + 0.5) * self.width_ms;
+            }
+        }
+        self.max_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The exact percentile rule the server's old sort-at-end pass used.
+    fn exact_pct(sorted: &[f64], p: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = Histogram::new(1.0, 16);
+        assert_eq!(h.total(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_within_one_bucket_of_exact() {
+        let mut rng = Rng::new(0x4157);
+        for case in 0..20 {
+            let w = 0.5;
+            let mut h = Histogram::new(w, 2048); // range 0..1024ms
+            let n = rng.range(1, 400);
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                let v = rng.uniform(0.0, 1000.0);
+                h.record(v);
+                vals.push(v);
+            }
+            vals.sort_by(|a, b| a.total_cmp(b));
+            for p in [0.5, 0.95, 0.99] {
+                let d = (h.quantile(p) - exact_pct(&vals, p)).abs();
+                assert!(d <= w, "case {case} p={p}: off by {d} > width {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_reports_observed_max() {
+        let mut h = Histogram::new(1.0, 4); // range 0..4ms
+        h.record(100.0);
+        h.record(250.0);
+        assert_eq!(h.total(), 2);
+        assert_eq!(h.quantile(0.99), 250.0);
+        assert!((h.mean_ms() - 175.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_single_stream() {
+        let mut rng = Rng::new(7);
+        let mut all = Histogram::latency_ms();
+        let mut parts = [Histogram::latency_ms(), Histogram::latency_ms()];
+        for i in 0..500 {
+            let v = rng.uniform(0.0, 50.0);
+            all.record(v);
+            parts[i % 2].record(v);
+        }
+        let mut merged = parts[0].clone();
+        merged.merge(&parts[1]);
+        assert_eq!(merged.total(), all.total());
+        assert_eq!(merged.quantile(0.5), all.quantile(0.5));
+        assert_eq!(merged.quantile(0.95), all.quantile(0.95));
+        assert!((merged.mean_ms() - all.mean_ms()).abs() < 1e-9);
+        assert_eq!(merged.max_ms(), all.max_ms());
+    }
+
+    #[test]
+    fn negative_and_nan_clamp_to_zero() {
+        let mut h = Histogram::new(1.0, 8);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        assert_eq!(h.total(), 2);
+        assert_eq!(h.quantile(0.5), 0.5); // midpoint of bucket 0
+    }
+}

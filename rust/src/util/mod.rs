@@ -7,6 +7,8 @@
 //! * [`rng`] — SplitMix64 / Xoshiro256++ PRNGs and distributions,
 //! * [`cli`] — a declarative flag parser for the `svdquant` binary,
 //! * [`pool`] — a scoped work-stealing-ish thread pool,
+//! * [`clock`] — wall vs. virtual time for the serving subsystem,
+//! * [`histogram`] — fixed-bucket streaming latency histogram,
 //! * [`timer`] — wall-clock scopes and counters,
 //! * [`bench`] — the harness behind `cargo bench` (criterion replacement),
 //! * [`plot`] — ASCII line/bar charts for figure reproduction,
@@ -14,12 +16,16 @@
 
 pub mod bench;
 pub mod cli;
+pub mod clock;
+pub mod histogram;
 pub mod plot;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod timer;
 
+pub use clock::Clock;
+pub use histogram::Histogram;
 pub use pool::ThreadPool;
 pub use rng::Rng;
 pub use timer::Timer;

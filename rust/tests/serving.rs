@@ -1,0 +1,346 @@
+//! Hermetic, deterministic serving tests — the multi-worker multi-tenant
+//! server exercised end to end (quantize → pack → serve) under plain
+//! `cargo test -q`: no `artifacts/` (the models come from
+//! `svdquant::fixture`), no wall-clock sleeps (traces replay on a virtual
+//! clock, so multi-minute arrival spans complete in milliseconds of real
+//! time).
+//!
+//! Concurrency assertions are interleaving-invariant: conservation
+//! (`completions + shed + expired == trace.len()`), uniqueness of
+//! completed request ids, single-tenant batches, batch-size bounds — true
+//! under every legal schedule, so the suite is deterministic at any
+//! `SVDQUANT_THREADS` setting (CI runs 1 and 4).
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use svdquant::coordinator::server::{
+    serve, serve_trace, BoundedQueue, Enqueue, Registry, ServerConfig,
+};
+use svdquant::data::{TaggedRequest, TraceGenerator};
+use svdquant::fixture;
+use svdquant::util::clock::Clock;
+use svdquant::util::histogram::Histogram;
+use svdquant::util::proptest::{check, Shrink};
+
+/// Honor the CI thread matrix: `SVDQUANT_THREADS` caps the kernel pool the
+/// same way `--threads` does (1 = fully-serial reentrancy path, 4 =
+/// pool-parallel path). Idempotent, so concurrent tests don't race.
+fn init_threads() {
+    if let Ok(v) = std::env::var("SVDQUANT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            svdquant::util::pool::set_global_parallelism(n);
+        }
+    }
+}
+
+#[test]
+fn quantize_pack_serve_virtual_time_multi_tenant() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    // two tenants: independently quantized models over distinct datasets
+    let (qm_a, ds_a) = fixture::deployed_fixture(&cfg, 1, 8, 10).unwrap();
+    let (qm_b, ds_b) = fixture::deployed_fixture(&cfg, 2, 8, 14).unwrap();
+    let mut reg = Registry::new();
+    reg.add("alpha", &qm_a, &ds_a);
+    reg.add("beta", &qm_b, &ds_b);
+
+    // a bursty trace spanning ~2 virtual minutes
+    let trace =
+        TraceGenerator::bursty(5.0, 0.2, 6).generate_tagged(600, &reg.sample_counts(), 0x5EED);
+    let span = trace.last().unwrap().arrival_s;
+    assert!(span > 30.0, "trace should span tens of virtual seconds, got {span}");
+
+    let scfg = ServerConfig { workers: 2, clock: Clock::virt(), ..Default::default() };
+    let t0 = Instant::now();
+    let stats = serve(&reg, &trace, &scfg).unwrap();
+    let real_s = t0.elapsed().as_secs_f64();
+    assert!(
+        real_s < 2.0,
+        "a {span:.0}s virtual trace must replay in well under a second of real \
+         time, took {real_s:.3}s"
+    );
+
+    // conservation: every request accounted for exactly once
+    assert_eq!(stats.completions + stats.shed + stats.expired, trace.len());
+    assert_eq!(stats.expired, 0, "no deadline configured");
+    assert!(stats.completions > 0, "some requests must complete");
+
+    // no request lost or duplicated across the worker pool
+    assert_eq!(stats.completions_log.len(), stats.completions, "log covers this trace");
+    let ids: HashSet<usize> = stats.completions_log.iter().map(|c| c.id).collect();
+    assert_eq!(ids.len(), stats.completions, "duplicate completion ids");
+    assert!(ids.iter().all(|&i| i < trace.len()));
+
+    // per-tenant stats partition the totals
+    assert_eq!(stats.per_tenant.len(), 2);
+    assert_eq!(stats.per_tenant[0].task, "alpha");
+    assert_eq!(stats.per_tenant[1].task, "beta");
+    assert_eq!(stats.per_tenant.iter().map(|t| t.completions).sum::<usize>(), stats.completions);
+    assert_eq!(stats.per_tenant.iter().map(|t| t.shed).sum::<usize>(), stats.shed);
+    for t in &stats.per_tenant {
+        assert!(t.completions > 0, "tenant {} starved", t.task);
+        assert!((0.0..=1.0).contains(&t.accuracy));
+    }
+
+    // batches: bounded, and every sample within its tenant's dataset
+    for c in &stats.completions_log {
+        assert!(c.batch_size >= 1 && c.batch_size <= scfg.max_batch);
+        let bound = if c.task == 0 { ds_a.len() } else { ds_b.len() };
+        assert!(c.sample < bound, "cross-tenant sample index");
+    }
+
+    // virtual elapsed covers at least the arrival span
+    assert!(stats.wall_s >= span - 1e-6);
+    assert!((0.0..=1.0).contains(&stats.accuracy));
+}
+
+#[test]
+fn completion_latency_components_sum_to_total() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 3, 4, 8).unwrap();
+    let trace = TraceGenerator::poisson(50.0).generate(200, ds.len(), 0xABCD);
+    let scfg = ServerConfig { workers: 2, clock: Clock::virt(), ..Default::default() };
+    let stats = serve_trace(&qm, &ds, &trace, &scfg).unwrap();
+    assert!(stats.completions > 0);
+    for c in &stats.completions_log {
+        assert!(c.queue_ms >= 0.0, "queue_ms {}", c.queue_ms);
+        assert!(c.batch_ms >= 0.0, "batch_ms {}", c.batch_ms);
+        assert!(c.exec_ms >= 0.0, "exec_ms {}", c.exec_ms);
+        let sum = c.queue_ms + c.batch_ms + c.exec_ms;
+        assert!(
+            (sum - c.total_ms).abs() < 1e-6,
+            "components {sum} must sum to total {}",
+            c.total_ms
+        );
+    }
+}
+
+#[test]
+fn deadline_and_shed_accounting_stays_conserved() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 4, 4, 8).unwrap();
+    // tiny queue + tight deadline under a flooding virtual-time replay:
+    // admission control and expiry both get exercised; whatever the
+    // interleaving, the books must balance
+    let trace = TraceGenerator::bursty(200.0, 0.3, 12).generate(500, ds.len(), 0xF00D);
+    let scfg = ServerConfig {
+        queue_cap: 8,
+        workers: 2,
+        deadline: Some(Duration::from_millis(1)),
+        clock: Clock::virt(),
+        ..Default::default()
+    };
+    let stats = serve_trace(&qm, &ds, &trace, &scfg).unwrap();
+    assert_eq!(stats.completions + stats.shed + stats.expired, trace.len());
+    assert_eq!(stats.per_tenant.iter().map(|t| t.expired).sum::<usize>(), stats.expired);
+    assert_eq!(stats.per_tenant.iter().map(|t| t.shed).sum::<usize>(), stats.shed);
+    // ids of completed requests are still unique
+    let ids: HashSet<usize> = stats.completions_log.iter().map(|c| c.id).collect();
+    assert_eq!(ids.len(), stats.completions_log.len());
+}
+
+#[test]
+fn serve_handles_empty_trace_and_rejects_unknown_tasks() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 5, 4, 6).unwrap();
+    let reg = Registry::single("only", &qm, &ds);
+    let scfg = ServerConfig { workers: 2, clock: Clock::virt(), ..Default::default() };
+    // empty trace: graceful close, zero stats, no hang
+    let stats = serve(&reg, &[], &scfg).unwrap();
+    assert_eq!(stats.completions + stats.shed + stats.expired, 0);
+    // a request tagged for an unregistered tenant is an error, not a hang
+    let bad = [TaggedRequest { id: 0, task: 7, arrival_s: 0.0, sample: 0 }];
+    assert!(serve(&reg, &bad, &scfg).is_err());
+}
+
+#[test]
+fn queue_stress_no_request_lost_or_duplicated() {
+    init_threads();
+    let clock = Clock::virt();
+    let queue = Arc::new(BoundedQueue::new(4096, clock.clone()));
+    let n_producers = 4usize;
+    let per = 250usize;
+    let n = n_producers * per;
+    let consumed: Mutex<Vec<usize>> = Mutex::new(Vec::with_capacity(n));
+
+    std::thread::scope(|scope| {
+        let producers: Vec<_> = (0..n_producers)
+            .map(|p| {
+                let q = Arc::clone(&queue);
+                scope.spawn(move || {
+                    for i in 0..per {
+                        let id = p * per + i;
+                        let r = TaggedRequest { id, task: id % 3, arrival_s: 0.0, sample: 0 };
+                        // cap 4096 ≥ n: nothing may shed in this test
+                        assert_eq!(q.push(r), Enqueue::Accepted);
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&queue);
+                let consumed = &consumed;
+                scope.spawn(move || loop {
+                    let batch = q.pop_batch(8, Duration::from_millis(1));
+                    if batch.is_empty() {
+                        return; // closed and drained — exactly-once exit
+                    }
+                    assert!(batch.len() <= 8, "batch exceeds max_batch");
+                    let task = batch[0].req.task;
+                    assert!(
+                        batch.iter().all(|it| it.req.task == task),
+                        "mixed-tenant batch"
+                    );
+                    consumed.lock().unwrap().extend(batch.iter().map(|it| it.req.id));
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        queue.close();
+        for h in consumers {
+            h.join().unwrap();
+        }
+    });
+
+    assert_eq!(queue.shed_count(), 0);
+    assert!(queue.is_empty(), "close must drain completely");
+    let mut ids = consumed.into_inner().unwrap();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<_>>(), "every id exactly once");
+}
+
+/// Property-test input for the size-or-deadline batcher: a pre-filled
+/// queue (tenant per item), a batch cap, and a straggler budget.
+#[derive(Debug)]
+struct PopCase {
+    tasks: Vec<usize>,
+    max_batch: usize,
+    wait_ms: u64,
+}
+
+impl Shrink for PopCase {
+    fn shrink(&self) -> Vec<Self> {
+        if self.tasks.len() <= 1 {
+            return Vec::new();
+        }
+        let half = self.tasks.len() / 2;
+        vec![
+            PopCase {
+                tasks: self.tasks[..half].to_vec(),
+                max_batch: self.max_batch,
+                wait_ms: self.wait_ms,
+            },
+            PopCase {
+                tasks: self.tasks[half..].to_vec(),
+                max_batch: self.max_batch,
+                wait_ms: self.wait_ms,
+            },
+        ]
+    }
+}
+
+#[test]
+fn pop_batch_size_or_deadline_property() {
+    init_threads();
+    check(
+        "pop_batch size-or-deadline on the virtual clock",
+        |rng| PopCase {
+            tasks: (0..rng.range(1, 40)).map(|_| rng.range(0, 3)).collect(),
+            max_batch: rng.range(1, 16),
+            wait_ms: rng.range(1, 50) as u64,
+        },
+        |case| {
+            let clock = Clock::virt();
+            let q = BoundedQueue::new(4096, clock.clone());
+            for (i, &task) in case.tasks.iter().enumerate() {
+                if q.push(TaggedRequest { id: i, task, arrival_s: 0.0, sample: 0 })
+                    != Enqueue::Accepted
+                {
+                    return Err("push refused below capacity".into());
+                }
+            }
+            let head = case.tasks[0];
+            let same_head = case.tasks.iter().filter(|&&t| t == head).count();
+            let t0 = clock.now_s();
+            let batch = q.pop_batch(case.max_batch, Duration::from_millis(case.wait_ms));
+            let t1 = clock.now_s();
+
+            // the batch is the FIFO prefix of the head's tenant, capped
+            let expect = same_head.min(case.max_batch);
+            if batch.len() != expect {
+                return Err(format!("batch len {} expected {expect}", batch.len()));
+            }
+            if batch.iter().any(|it| it.req.task != head) {
+                return Err("batch must be single-tenant (head's tenant)".into());
+            }
+            let got_ids: Vec<usize> = batch.iter().map(|it| it.req.id).collect();
+            let want_ids: Vec<usize> = (0..case.tasks.len())
+                .filter(|&i| case.tasks[i] == head)
+                .take(expect)
+                .collect();
+            if got_ids != want_ids {
+                return Err(format!("FIFO order violated: {got_ids:?} vs {want_ids:?}"));
+            }
+
+            if same_head >= case.max_batch {
+                // size-triggered: no straggler wait, the clock is untouched
+                if t1 != t0 {
+                    return Err(format!("size-full batch advanced the clock by {}", t1 - t0));
+                }
+            } else {
+                // deadline-triggered: the batcher advanced exactly max_wait
+                let want = case.wait_ms as f64 * 1e-3;
+                if ((t1 - t0) - want).abs() > 1e-6 {
+                    return Err(format!("deadline batch advanced {} not {want}", t1 - t0));
+                }
+            }
+            // other tenants keep their queue positions
+            if q.len() != case.tasks.len() - expect {
+                return Err(format!(
+                    "queue kept {} items, expected {}",
+                    q.len(),
+                    case.tasks.len() - expect
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn serve_percentiles_match_exact_sorted_within_one_bucket() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 6, 4, 8).unwrap();
+    // short virtual span so every latency stays inside the histogram
+    // range, where the one-bucket agreement contract applies
+    let trace = TraceGenerator::poisson(1000.0).generate(300, ds.len(), 0xBEEF);
+    let scfg = ServerConfig { workers: 2, clock: Clock::virt(), ..Default::default() };
+    let stats = serve_trace(&qm, &ds, &trace, &scfg).unwrap();
+    assert_eq!(stats.completions_log.len(), stats.completions);
+    assert!(stats.completions > 0);
+
+    let mut lat: Vec<f64> = stats.completions_log.iter().map(|c| c.total_ms).collect();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let hist_default = Histogram::latency_ms();
+    let w = hist_default.width_ms();
+    assert!(
+        *lat.last().unwrap() < w * 8192.0,
+        "latencies must stay in histogram range for this test"
+    );
+    for (p, got) in [(0.50, stats.p50_ms), (0.95, stats.p95_ms), (0.99, stats.p99_ms)] {
+        let exact = lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)];
+        assert!(
+            (got - exact).abs() <= w,
+            "p{p}: histogram {got} vs exact {exact} (width {w})"
+        );
+    }
+}
