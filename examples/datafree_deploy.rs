@@ -1,5 +1,5 @@
 //! The privacy scenario that motivates the paper (§I, §VII): quantize a
-//! model **without ever seeing data**, deploy it as packed int4 + sparse
+//! model **without ever seeing data**, deploy it as packed b-bit + sparse
 //! FP32, and serve a live request trace with dynamic batching.
 //!
 //! End-to-end driver over the full stack: data-free SVD selection (L3

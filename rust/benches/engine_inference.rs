@@ -1,8 +1,9 @@
-//! Deploy-path benches: engine forward latency (fp32 vs packed-int4 fused,
-//! float vs integer kernel), PJRT executable latency (artifacts only), the
-//! multi-worker batching server under load (kernel × threads × workers),
-//! and a virtual-time replay of the same trace — the paper's deployment
-//! headline (compressed model, served). `harness = false`.
+//! Deploy-path benches: engine forward latency (fp32 vs packed fused,
+//! float vs integer kernel, per residual width 2/3/4/8), PJRT executable
+//! latency (artifacts only), the multi-worker batching server under load
+//! (kernel × threads × workers), and a virtual-time replay of the same
+//! trace — the paper's deployment headline (compressed model, served).
+//! `harness = false`.
 //!
 //! Always runs: when `make artifacts` hasn't been executed the bench falls
 //! back to a synthetic shape-realistic checkpoint, so the serving perf
@@ -70,6 +71,34 @@ fn main() {
                 qm.forward_fused(&ids, &mask).unwrap()
             });
             fwd_section.push((format!("fused_{name}_b{batch}_seq_per_s"), seq_per_s));
+        }
+    }
+
+    // ---- forward latency per residual width ------------------------------
+    // the mixed-precision axis: one packed model per supported width, int8
+    // kernel, b=16 — how much serving throughput each allocator-assignable
+    // width costs (4-bit has the LUT decode fast path)
+    let mut width_fwd: Vec<(String, Json)> = Vec::new();
+    {
+        let (ids, mask) = dev.batch_slices(0, 16);
+        qm.set_kernel(GemmKernel::Int8);
+        for bits in svdquant::quant::SUPPORTED_BITS {
+            // the default width reuses the already-packed model above
+            let built = (bits != qcfg.bits).then(|| {
+                QuantizedModel::build(cfg, ckpt.clone(), &qcfg.with_bits(bits), &sels)
+                    .expect("width model")
+            });
+            let qm_b = built.as_ref().unwrap_or(&qm);
+            b.timeit_throughput(
+                &format!("fused int8-kernel fwd b=16 ({bits}-bit codes)"),
+                16.0,
+                "seq",
+                || qm_b.forward_fused(&ids, &mask).unwrap(),
+            );
+            let seq_per_s = common::measure_units_per_s(16.0, 120, || {
+                qm_b.forward_fused(&ids, &mask).unwrap()
+            });
+            width_fwd.push((format!("fused_int8_w{bits}_b16_seq_per_s"), Json::from(seq_per_s)));
         }
     }
 
@@ -187,6 +216,7 @@ fn main() {
         Json::object(vec![
             ("source".to_string(), Json::from(source)),
             ("forward".to_string(), Json::object(fwd_json)),
+            ("forward_by_width".to_string(), Json::object(width_fwd)),
             ("serving".to_string(), Json::Array(json_rows)),
             (
                 "virtual_replay".to_string(),

@@ -12,7 +12,7 @@ use svdquant::quant::nf4::nf4_fake_quant;
 use svdquant::quant::symmetric::mse;
 use svdquant::quant::{
     dequantize, fake_quant, pack_nibbles, quant_params, quantize_codes, quantize_rows,
-    unpack_nibbles, QuantConfig, QuantizedMatrix,
+    unpack_nibbles, BitPack, QuantConfig, QuantizedMatrix, SUPPORTED_BITS,
 };
 use svdquant::sparse::Coo;
 use svdquant::util::bench::Bench;
@@ -50,6 +50,29 @@ fn main() {
     b.timeit_throughput("fake_quant 1024² end-to-end", bytes, "B", || {
         fake_quant(&w, &cfg)
     });
+
+    // --- BitPack codec bandwidth per supported width ----------------------
+    // codes are requantized per width so every value is in the codec's
+    // range; 3-bit is the interesting row (codes straddle byte boundaries)
+    for bits in SUPPORTED_BITS {
+        let wcfg = cfg.with_bits(bits);
+        let wp = quant_params(&w, &wcfg);
+        let wcodes = quantize_codes(&w, &wp);
+        let codec = BitPack::new(bits).unwrap();
+        let wpacked = codec.pack(&wcodes);
+        b.timeit_throughput(
+            &format!("BitPack({bits}) pack 1024²"),
+            (rows * cols) as f64,
+            "codes",
+            || codec.pack(&wcodes),
+        );
+        b.timeit_throughput(
+            &format!("BitPack({bits}) unpack 1024²"),
+            (rows * cols) as f64,
+            "codes",
+            || codec.unpack(&wpacked, rows * cols),
+        );
+    }
 
     // fused mixed-precision matvec vs dense f32 matvec
     let mut sal = Coo::new(rows, cols);
@@ -131,16 +154,34 @@ fn main() {
         igemm_json.push((format!("int8_{tkey}_gflop_s"), Json::from(gflop_s)));
     }
     pool::set_global_parallelism(0);
+
+    // --- igemm per residual width (the mixed-precision serving axis) ------
+    // one row per supported width at N threads: 4-bit runs the LUT decode
+    // fast path, 2/3/8 the generic bit-stream — the spread between them is
+    // the price of a width the allocator assigns
+    let mut width_json: Vec<(String, Json)> = Vec::new();
+    for bits in SUPPORTED_BITS {
+        let qm_b = QuantizedMatrix::from_dense(&w, &cfg.with_bits(bits), &sal);
+        b.timeit_throughput(
+            &format!("matmul_xt b=16 int8 igemm ({bits}-bit codes)"),
+            gflops,
+            "flop",
+            || qm_b.matmul_xt_int(&xb),
+        );
+        let gflop_s = common::measure_units_per_s(gflops, 150, || qm_b.matmul_xt_int(&xb)) / 1e9;
+        width_json.push((format!("int8_b{bits}_gflop_s"), Json::from(gflop_s)));
+    }
+
     let elems = (batch * cols) as f64;
     b.timeit_throughput("quantize_rows b=16 (dynamic int8 activations)", elems, "elem", || {
         quantize_rows(&xb)
     });
     common::write_bench_serving(
         "quant_throughput",
-        Json::object(vec![(
-            "igemm_1024_b16".to_string(),
-            Json::object(igemm_json),
-        )]),
+        Json::object(vec![
+            ("igemm_1024_b16".to_string(), Json::object(igemm_json)),
+            ("igemm_by_width".to_string(), Json::object(width_json)),
+        ]),
     );
 
     // --- ablations: quantization error by config --------------------------

@@ -12,7 +12,7 @@
 //! * [`sweep`] — the full battle: methods × budgets × tasks, score reuse by
 //!   pipeline construction, result caching and report emission;
 //! * [`server`] — multi-worker, multi-tenant dynamic-batching inference
-//!   server over the deployed packed-int4 models (the data-free deployment
+//!   server over the deployed packed b-bit models (the data-free deployment
 //!   story of §I): shared bounded queue with shed-don't-block admission,
 //!   per-tenant model registry, worker pool, wall/virtual
 //!   [`Clock`](crate::util::clock::Clock) batching, streaming latency

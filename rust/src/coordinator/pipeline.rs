@@ -31,7 +31,10 @@ use crate::calib::CalibStats;
 use crate::linalg::Matrix;
 use crate::model::{ModelConfig, Params};
 use crate::quant::QuantConfig;
-use crate::saliency::{select_topk, SalientSet, ScoreCtx, Scorer, SvdScorer};
+use crate::saliency::{
+    allocate_bits, select_topk, AllocStrategy, BitAllocation, LayerSpectrum, SalientSet,
+    ScoreCtx, Scorer, SvdScoreMode, SvdScorer,
+};
 use crate::util::{pool, timer, ThreadPool};
 
 use super::preserve;
@@ -103,6 +106,8 @@ impl<'a> PipelineBuilder<'a> {
             budget: self.budget,
             threads: ThreadPool::effective_threads(self.threads),
             cache: BTreeMap::new(),
+            spectra: BTreeMap::new(),
+            alloc: None,
         })
     }
 }
@@ -122,6 +127,10 @@ pub struct QuantizePipeline<'a> {
     threads: usize,
     /// (layer name, scorer cache key) → score map
     cache: BTreeMap<(String, String), Matrix>,
+    /// (layer name, head rank) → spectral statistics for the bit allocator
+    spectra: BTreeMap<(String, usize), LayerSpectrum>,
+    /// active per-layer bit-width allocation; `None` = uniform `qcfg.bits`
+    alloc: Option<BitAllocation>,
 }
 
 impl<'a> QuantizePipeline<'a> {
@@ -247,12 +256,89 @@ impl<'a> QuantizePipeline<'a> {
         Ok(sels)
     }
 
+    /// Spectral statistics of every quantizable layer at the given head
+    /// `rank` (memoized per `(layer, rank)`; fresh spectra are measured in
+    /// parallel on the pool). The allocator consumes these — pure weight
+    /// data, no calibration involved.
+    pub fn layer_spectra(&mut self, rank: usize) -> Result<Vec<LayerSpectrum>> {
+        let names = self.cfg.quantizable_names();
+        let missing: Vec<String> = names
+            .iter()
+            .filter(|n| !self.spectra.contains_key(&((*n).clone(), rank)))
+            .cloned()
+            .collect();
+        if !missing.is_empty() {
+            let ckpt = self.ckpt;
+            let measure = |name: String| -> Result<(String, LayerSpectrum)> {
+                let w = ckpt.get(&name)?;
+                let s = LayerSpectrum::from_weights(&name, w, rank, SvdScoreMode::default());
+                Ok((name, s))
+            };
+            let threads = self.threads;
+            let fresh: Vec<Result<(String, LayerSpectrum)>> =
+                timer::scope("pipeline.spectra", || {
+                    if threads <= 1 {
+                        missing.into_iter().map(measure).collect()
+                    } else {
+                        pool::global().map_capped(threads, missing, measure)
+                    }
+                });
+            for r in fresh {
+                let (name, s) = r?;
+                self.spectra.insert((name, rank), s);
+            }
+        }
+        Ok(names
+            .into_iter()
+            .map(|n| self.spectra[&(n, rank)].clone())
+            .collect())
+    }
+
+    /// Distribute an average-bits budget across the checkpoint's layers by
+    /// the chosen strategy (spectra at head `rank`, usually the same r as
+    /// the SVD scorer). Returns the allocation without installing it — call
+    /// [`QuantizePipeline::set_allocation`] to make `quantize_with` use it.
+    pub fn allocate(
+        &mut self,
+        avg_bits: f64,
+        strategy: AllocStrategy,
+        rank: usize,
+    ) -> Result<BitAllocation> {
+        let spectra = self.layer_spectra(rank)?;
+        allocate_bits(&spectra, avg_bits, strategy)
+    }
+
+    /// Install (or clear) a per-layer bit-width allocation. While set,
+    /// [`QuantizePipeline::quantize_with`] quantizes each layer's residual
+    /// at its allocated width instead of the uniform `qcfg.bits`; layers
+    /// the allocation does not cover fall back to the uniform width.
+    pub fn set_allocation(&mut self, alloc: Option<BitAllocation>) {
+        self.alloc = alloc;
+    }
+
+    /// The active per-layer allocation, if any.
+    pub fn allocation(&self) -> Option<&BitAllocation> {
+        self.alloc.as_ref()
+    }
+
+    /// The residual quant config `quantize_with` applies to `layer` —
+    /// the shared clip/scale knobs with the layer's allocated width (or
+    /// the uniform width when no allocation is installed).
+    pub fn layer_qcfg(&self, layer: &str) -> QuantConfig {
+        match &self.alloc {
+            Some(a) => self.qcfg.with_bits(a.bits_for(layer).unwrap_or(self.qcfg.bits)),
+            None => self.qcfg,
+        }
+    }
+
     /// Apply `W ≈ S + Q` for the given selections (no scoring involved).
+    /// Each layer's residual width comes from [`Self::layer_qcfg`].
     pub fn quantize_with(&self, sels: &BTreeMap<String, SalientSet>) -> Result<Params> {
         let mut subs = BTreeMap::new();
         for (name, sel) in sels {
             let w = self.ckpt.get(name)?;
-            let wq = timer::scope("pipeline.apply", || preserve(w, sel, &self.qcfg));
+            let qcfg = self.layer_qcfg(name);
+            let wq = timer::scope("pipeline.apply", || preserve(w, sel, &qcfg));
             subs.insert(name.clone(), wq);
         }
         self.ckpt.with_weights(&subs)
@@ -401,6 +487,53 @@ mod tests {
         pipe.clear_score_cache();
         assert_eq!(pipe.cached_maps(), 0);
         assert_eq!(pipe.ensure_scores().unwrap(), n);
+    }
+
+    #[test]
+    fn spectra_memoized_and_allocation_drives_widths() {
+        let cfg = tiny_cfg();
+        let p = synthetic_params(&cfg, 21);
+        let mut pipe = QuantizePipeline::for_checkpoint(&cfg, &p)
+            .budget(4)
+            .build()
+            .unwrap();
+        let n = cfg.quantizable_names().len();
+        let s1 = pipe.layer_spectra(4).unwrap();
+        assert_eq!(s1.len(), n);
+        // memoized: second call returns identical spectra
+        let s2 = pipe.layer_spectra(4).unwrap();
+        for (a, b) in s1.iter().zip(&s2) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.fro2, b.fro2);
+        }
+        // allocate under a tight budget and install it
+        let alloc = pipe.allocate(3.0, AllocStrategy::Spectral, 4).unwrap();
+        assert!(alloc.avg_bits() <= 3.0);
+        pipe.set_allocation(Some(alloc.clone()));
+        assert!(pipe.allocation().is_some());
+        // every layer's qcfg carries its allocated width, other knobs shared
+        for name in cfg.quantizable_names() {
+            let q = pipe.layer_qcfg(&name);
+            assert_eq!(q.bits, alloc.bits_for(&name).unwrap());
+            assert_eq!(q.clip_sigma, QuantConfig::default().clip_sigma);
+        }
+        // quantize_with applies exactly preserve(w, sel, per-layer qcfg)
+        let sels = pipe.select(4).unwrap();
+        let qp = pipe.quantize_with(&sels).unwrap();
+        for name in cfg.quantizable_names() {
+            let w = p.get(&name).unwrap();
+            let want = preserve(w, &sels[&name], &pipe.layer_qcfg(&name));
+            assert!(qp.get(&name).unwrap().approx_eq(&want, 0.0), "{name}");
+        }
+        // clearing the allocation restores uniform-width behavior
+        pipe.set_allocation(None);
+        let qp_uniform = pipe.quantize_with(&sels).unwrap();
+        let spec_uniform = preserve(
+            p.get("layer0.wq").unwrap(),
+            &sels["layer0.wq"],
+            &QuantConfig::default(),
+        );
+        assert!(qp_uniform.get("layer0.wq").unwrap().approx_eq(&spec_uniform, 0.0));
     }
 
     #[test]

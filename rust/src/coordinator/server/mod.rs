@@ -1,5 +1,5 @@
 //! Multi-worker, multi-tenant dynamic-batching inference server over the
-//! deployed packed-int4 models — the "data-free deployment" story of the
+//! deployed packed b-bit models — the "data-free deployment" story of the
 //! paper's introduction, and the workload behind `examples/datafree_deploy`
 //! + the engine_inference bench (DESIGN.md §6).
 //!

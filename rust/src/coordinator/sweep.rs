@@ -14,6 +14,15 @@
 //! Results are cached in `results/sweep.json` keyed by
 //! (task, method, k, bits, clip); re-runs skip completed cells, so an
 //! interrupted sweep resumes for free.
+//!
+//! When `avg_bits` is non-empty the sweep also walks the **mixed-precision
+//! frontier**: for each scorer × allocation strategy × average-bits budget
+//! it installs a per-layer width allocation (spectral = greedy marginal-
+//! error descent on singular-value tail energies, uniform = widest single
+//! width that fits — see [`crate::saliency::allocate`]) at a fixed salient
+//! k, evaluates end to end, and emits `results/frontier.json` — the
+//! accuracy-vs-average-bits curves where spectral allocation is expected to
+//! dominate uniform below ~3.5 bits.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -27,7 +36,8 @@ use crate::model::Engine;
 use crate::quant::QuantConfig;
 use crate::runtime::Runtime;
 use crate::saliency::{
-    record_selection_overlaps, resolve_scorer, Method, OverlapReport, ScorerParams, SelectionGrid,
+    record_selection_overlaps, resolve_scorer, AllocStrategy, Method, OverlapReport, ScorerParams,
+    SelectionGrid,
 };
 use crate::util::timer::{self, Timer};
 
@@ -49,6 +59,13 @@ pub struct SweepConfig {
     pub out_dir: PathBuf,
     /// scoring threads per task pipeline; 0 = available parallelism
     pub threads: usize,
+    /// average-bits budgets for the mixed-precision frontier; empty = skip
+    /// the frontier axis entirely
+    pub avg_bits: Vec<f64>,
+    /// allocation strategies compared on the frontier
+    pub allocs: Vec<AllocStrategy>,
+    /// salient budget k held fixed across frontier cells
+    pub frontier_k: usize,
 }
 
 impl SweepConfig {
@@ -66,6 +83,9 @@ impl SweepConfig {
             include_baselines: true,
             out_dir: out_dir.to_path_buf(),
             threads: 0,
+            avg_bits: Vec::new(),
+            allocs: vec![AllocStrategy::Spectral, AllocStrategy::Uniform],
+            frontier_k: 256,
         }
     }
 }
@@ -81,11 +101,31 @@ pub struct Cell {
     pub wall_s: f64,
 }
 
+/// One accuracy-vs-average-bits frontier cell: a (task, scorer, allocation
+/// strategy, budget) point, with both the requested and the achieved
+/// weight-weighted average width.
+#[derive(Debug, Clone)]
+pub struct FrontierCell {
+    pub task: String,
+    pub method: String,
+    /// allocation strategy name (`"spectral"` / `"uniform"`)
+    pub alloc: String,
+    pub requested_avg: f64,
+    pub achieved_avg: f64,
+    /// salient budget k the cell was evaluated at
+    pub k: usize,
+    pub accuracy: f64,
+    pub total: usize,
+    pub wall_s: f64,
+}
+
 /// All results of a sweep, plus the overlap analysis.
 #[derive(Debug, Default)]
 pub struct SweepResults {
     pub cells: Vec<Cell>,
     pub overlap: OverlapReport,
+    /// mixed-precision frontier cells (empty unless `avg_bits` was set)
+    pub frontier: Vec<FrontierCell>,
 }
 
 impl SweepResults {
@@ -102,6 +142,24 @@ fn cell_key(task: &str, method: &str, k: usize, q: &QuantConfig) -> String {
     format!(
         "{task}/{method}/k{k}/b{}c{}r{}",
         q.bits,
+        q.clip_sigma.map(|c| c.to_string()).unwrap_or_else(|| "none".into()),
+        q.per_row as u8
+    )
+}
+
+/// Cache key for one frontier cell. The `bits` axis of [`cell_key`] is
+/// replaced by the (requested) average-bits budget + allocation strategy;
+/// clip/per-row still distinguish residual configs.
+fn frontier_key(
+    task: &str,
+    method: &str,
+    k: usize,
+    avg: f64,
+    strategy: AllocStrategy,
+    q: &QuantConfig,
+) -> String {
+    format!(
+        "{task}/{method}/k{k}/avg{avg:.2}-{strategy}/c{}r{}",
         q.clip_sigma.map(|c| c.to_string()).unwrap_or_else(|| "none".into()),
         q.per_row as u8
     )
@@ -152,8 +210,38 @@ fn save_cache(path: &Path, cache: &BTreeMap<String, (f64, usize, f64)>) -> Resul
     Ok(())
 }
 
+/// Serialize the accuracy-vs-average-bits frontier to
+/// `<out_dir>/frontier.json` — one record per (task, scorer, strategy,
+/// budget) cell, machine-readable for plotting.
+fn save_frontier(path: &Path, cells: &[FrontierCell]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let arr = Json::Array(
+        cells
+            .iter()
+            .map(|c| {
+                Json::object(vec![
+                    ("task".into(), Json::from(c.task.as_str())),
+                    ("method".into(), Json::from(c.method.as_str())),
+                    ("alloc".into(), Json::from(c.alloc.as_str())),
+                    ("requested_avg_bits".into(), Json::from(c.requested_avg)),
+                    ("achieved_avg_bits".into(), Json::from(c.achieved_avg)),
+                    ("k".into(), Json::from(c.k)),
+                    ("accuracy".into(), Json::from(c.accuracy)),
+                    ("total".into(), Json::from(c.total)),
+                    ("wall_s".into(), Json::from(c.wall_s)),
+                ])
+            })
+            .collect(),
+    );
+    std::fs::write(path, arr.pretty())?;
+    Ok(())
+}
+
 /// Run the full sweep. Progress goes to stdout; results to
-/// `<out_dir>/sweep.json` (resumable cache) and the returned struct.
+/// `<out_dir>/sweep.json` (resumable cache), `<out_dir>/frontier.json`
+/// (when the average-bits axis is configured) and the returned struct.
 pub fn run_sweep(art: &Artifacts, rt: &Runtime, cfg: &SweepConfig) -> Result<SweepResults> {
     let cache_path = cfg.out_dir.join("sweep.json");
     let mut cache = load_cache(&cache_path);
@@ -275,10 +363,66 @@ pub fn run_sweep(art: &Artifacts, rt: &Runtime, cfg: &SweepConfig) -> Result<Swe
                 });
                 selections.insert((method_key.clone(), k), sels);
             }
+
+            // --- mixed-precision frontier: accuracy vs average bits --------
+            // per allocation strategy × budget at a fixed salient k, while
+            // this scorer's score maps are still memoized (the allocator
+            // itself reads only the pipeline's layer spectra — data-free;
+            // "uniform" is the widest-single-width baseline)
+            if !cfg.avg_bits.is_empty() {
+                let sels = pipe.select(cfg.frontier_k)?;
+                for &strategy in &cfg.allocs {
+                    for &avg in &cfg.avg_bits {
+                        let alloc = pipe.allocate(avg, strategy, cfg.svd_rank)?;
+                        let achieved = alloc.avg_bits();
+                        let hist = alloc.width_histogram();
+                        pipe.set_allocation(Some(alloc));
+                        let key = frontier_key(
+                            task,
+                            &method_key,
+                            cfg.frontier_k,
+                            avg,
+                            strategy,
+                            &cfg.qcfg,
+                        );
+                        let (acc, total, wall) = if let Some(&hit) = cache.get(&key) {
+                            hit
+                        } else {
+                            let t = Timer::start();
+                            let qp = pipe.quantize_with(&sels)?;
+                            let r = eval_pjrt(&exe, mcfg, &qp, &dev)?;
+                            let cell = (r.accuracy(), r.total, t.elapsed_s());
+                            cache.insert(key, cell);
+                            save_cache(&cache_path, &cache)?;
+                            cell
+                        };
+                        println!(
+                            "  [{method_key}/{strategy}] avg={avg:.2} \
+                             (achieved {achieved:.2}, widths {hist:?}) acc {acc:.4}"
+                        );
+                        results.frontier.push(FrontierCell {
+                            task: task.clone(),
+                            method: method_key.clone(),
+                            alloc: strategy.name().to_string(),
+                            requested_avg: avg,
+                            achieved_avg: achieved,
+                            k: cfg.frontier_k,
+                            accuracy: acc,
+                            total,
+                            wall_s: wall,
+                        });
+                    }
+                }
+                pipe.set_allocation(None);
+            }
+
             // nothing later revisits this scorer's maps (overlap reads the
             // retained selections) — drop them so peak memory stays one
             // checkpoint-sized map set regardless of how many methods run
             pipe.clear_score_cache();
+        }
+        if !cfg.avg_bits.is_empty() {
+            save_frontier(&cfg.out_dir.join("frontier.json"), &results.frontier)?;
         }
 
         // --- Fig. 2 overlap: SVD vs each data-aware baseline ---------------
@@ -330,6 +474,50 @@ mod tests {
             cell_key("rte", "hybrid", 64, &QuantConfig::default()),
             "rte/hybrid/k64/b4c2.5r0"
         );
+    }
+
+    #[test]
+    fn frontier_keys_distinct_from_cell_keys_and_each_other() {
+        let q = QuantConfig::default();
+        let base = cell_key("mrpc", "svd", 256, &q);
+        let fa = frontier_key("mrpc", "svd", 256, 3.0, AllocStrategy::Spectral, &q);
+        let fb = frontier_key("mrpc", "svd", 256, 3.0, AllocStrategy::Uniform, &q);
+        let fc = frontier_key("mrpc", "svd", 256, 3.5, AllocStrategy::Spectral, &q);
+        let fd = frontier_key("rte", "svd", 256, 3.0, AllocStrategy::Spectral, &q);
+        let all = [&base, &fa, &fb, &fc, &fd];
+        for (i, x) in all.iter().enumerate() {
+            for (j, y) in all.iter().enumerate() {
+                if i != j {
+                    assert_ne!(x, y);
+                }
+            }
+        }
+        assert_eq!(fa, "mrpc/svd/k256/avg3.00-spectral/c2.5r0");
+    }
+
+    #[test]
+    fn frontier_json_roundtrips_through_parser() {
+        let dir = std::env::temp_dir().join("svdquant_frontier_cache");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("frontier.json");
+        let cells = vec![FrontierCell {
+            task: "mrpc".into(),
+            method: "svd".into(),
+            alloc: "spectral".into(),
+            requested_avg: 3.0,
+            achieved_avg: 2.97,
+            k: 256,
+            accuracy: 0.8421,
+            total: 408,
+            wall_s: 1.5,
+        }];
+        save_frontier(&p, &cells).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        let arr = j.as_array().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("alloc").and_then(|v| v.as_str()), Some("spectral"));
+        let acc = arr[0].get("accuracy").and_then(|v| v.as_f64()).unwrap();
+        assert!((acc - 0.8421).abs() < 1e-12);
     }
 
     #[test]

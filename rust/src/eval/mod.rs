@@ -5,7 +5,7 @@
 //!   with (possibly quantized) weights passed as arguments. Used by the
 //!   sweep; fast because XLA CPU vectorizes the matmuls.
 //! * [`eval_engine`] — the pure-Rust engine; used for cross-checks and for
-//!   the deployed packed-int4 model.
+//!   the deployed packed b-bit model.
 //!
 //! Both pad the last batch to the executable's static batch size and count
 //! only real samples.
@@ -98,7 +98,7 @@ pub fn eval_engine(engine: &Engine, data: &Dataset, batch: usize) -> Result<Eval
     Ok(result)
 }
 
-/// Evaluate the deployed packed-int4 model (fused path).
+/// Evaluate the deployed packed b-bit model (fused path).
 pub fn eval_quantized(qm: &QuantizedModel, data: &Dataset, batch: usize) -> Result<EvalResult> {
     let mut result = EvalResult { correct: 0, total: 0 };
     let mut lo = 0;

@@ -7,11 +7,13 @@
 //! The paper decomposes every linear weight `W ≈ S + Q`: a sparse FP32
 //! salient component `S` (the top-k entries of the rank-r principal
 //! reconstruction `|U_r Σ_r V_rᵀ|` — **no calibration data needed**) plus a
-//! symmetric 4-bit quantized residual `Q`. This crate implements that
-//! scheme end to end, together with the data-aware baselines it is
-//! evaluated against (AWQ activation-magnitude scoring and SpQR damped-
-//! Hessian scoring), a pure-Rust transformer inference engine, and a PJRT
-//! runtime that executes the AOT-compiled JAX model produced by
+//! symmetric b-bit quantized residual `Q` (paper default 4; the spectral
+//! allocator in [`saliency::allocate`] assigns per-layer widths 2/3/4/8
+//! under a global average-bits budget, still data-free). This crate
+//! implements that scheme end to end, together with the data-aware
+//! baselines it is evaluated against (AWQ activation-magnitude scoring and
+//! SpQR damped-Hessian scoring), a pure-Rust transformer inference engine,
+//! and a PJRT runtime that executes the AOT-compiled JAX model produced by
 //! `python/compile/aot.py`.
 //!
 //! ## The quantization API (see DESIGN.md §4)

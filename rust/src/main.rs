@@ -6,7 +6,7 @@
 //!   overlap    Fig. 2 IoU analysis
 //!   report     re-render tables/figures from the cached sweep results
 //!   serve      multi-worker, multi-tenant batching demo over the
-//!              deployed packed-int4 models
+//!              deployed packed b-bit models
 //!   selfcheck  engine ↔ PJRT ↔ parity-vector consistency checks
 //!   info       artifacts/manifest summary
 //!
@@ -30,8 +30,8 @@ use svdquant::quant::QuantConfig;
 use svdquant::report;
 use svdquant::runtime::Runtime;
 use svdquant::saliency::{
-    available_scorers, record_selection_overlaps, resolve_scorer, Method, ScorerParams,
-    SelectionGrid,
+    available_scorers, record_selection_overlaps, resolve_scorer, AllocStrategy, Method,
+    ScorerParams, SelectionGrid,
 };
 use svdquant::tensorfile::TensorFile;
 use svdquant::util::cli::Parser;
@@ -79,7 +79,7 @@ fn print_help() {
          \x20 quantize   quantize one (task, scorer, k) and evaluate\n\
          \x20 overlap    Fig.2 IoU of SVD vs AWQ/SpQR selections\n\
          \x20 report     re-render report from cached sweep results\n\
-         \x20 serve      multi-tenant batching inference on packed int4 weights\n\
+         \x20 serve      multi-tenant batching inference on packed b-bit weights\n\
          \x20 selfcheck  numerics: rust engine vs PJRT vs parity vectors\n\
          \x20 info       artifacts summary\n\n\
          scorers: {}\n\
@@ -144,6 +144,18 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         .flag("bits", Some("4"), "residual bit width")
         .flag("clip", Some("2.5"), "clip threshold in sigmas; 'none' disables")
         .switch("per-row", "per-row scales instead of per-tensor")
+        .flag(
+            "avg-bits",
+            None,
+            "comma-separated average-bits budgets for the mixed-precision \
+             frontier (e.g. 2.5,3,3.5,4); empty = skip the frontier axis",
+        )
+        .flag(
+            "alloc",
+            Some("spectral,uniform"),
+            "comma-separated bit-allocation strategies for the frontier",
+        )
+        .flag("frontier-k", Some("256"), "salient budget k held fixed on frontier cells")
         .switch("timers", "print the timer registry at the end");
     let a = p.parse(rest)?;
     let art = Artifacts::open(a.str("artifacts")?)?;
@@ -169,6 +181,17 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
     }
     cfg.qcfg = quant_cfg_from_args(&a)?;
     cfg.threads = apply_threads(&a)?;
+    cfg.avg_bits = a
+        .list("avg-bits")
+        .iter()
+        .map(|v| v.parse().context("bad --avg-bits entry"))
+        .collect::<Result<_>>()?;
+    cfg.allocs = a
+        .list("alloc")
+        .iter()
+        .map(|s| AllocStrategy::parse(s))
+        .collect::<Result<_>>()?;
+    cfg.frontier_k = a.usize("frontier-k")?;
     let res = run_sweep(&art, &rt, &cfg)?;
     report::write_report(&art, &res, &cfg.budgets, &out)?;
     if a.bool("timers") {
@@ -300,6 +323,13 @@ fn cmd_quantize(rest: &[String]) -> Result<()> {
         .flag("bits", Some("4"), "residual bit width")
         .flag("clip", Some("2.5"), "clip sigmas or 'none'")
         .flag("rank", Some("8"), "SVD rank r")
+        .flag(
+            "avg-bits",
+            None,
+            "average-bits budget: allocate per-layer widths instead of the \
+             uniform --bits (data-free, from the layer spectra)",
+        )
+        .flag("alloc", Some("spectral"), "bit-allocation strategy (spectral|uniform)")
         .switch("per-row", "per-row scales")
         .switch("engine", "evaluate on the rust engine instead of PJRT")
         .flag("save", None, "write the quantized checkpoint to this .qtz path");
@@ -324,6 +354,17 @@ fn cmd_quantize(rest: &[String]) -> Result<()> {
         .calib(calib.as_ref())
         .threads(apply_threads(&a)?)
         .build()?;
+    if let Some(avg) = a.get("avg-bits") {
+        let avg: f64 = avg.parse().context("bad --avg-bits")?;
+        let strategy = AllocStrategy::parse(a.str("alloc")?)?;
+        let alloc = pipe.allocate(avg, strategy, a.usize("rank")?)?;
+        println!(
+            "allocated widths ({strategy}, budget {avg:.2} -> achieved {:.2}): {:?}",
+            alloc.avg_bits(),
+            alloc.width_histogram()
+        );
+        pipe.set_allocation(Some(alloc));
+    }
     let (qp, sels) = pipe.run()?;
     println!(
         "quantized {} layers (k={} each) with {} on {} threads in {:.2}s",
@@ -455,6 +496,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     .flag("workers", Some("2"), "batch-execution worker threads")
     .flag("queue-cap", Some("256"), "admission queue capacity (overflow is shed)")
     .flag("deadline-ms", Some("0"), "per-request latency budget; 0 = none")
+    .flag("avg-bits", None, "deploy mixed-precision weights at this average-bits budget")
+    .flag("alloc", Some("spectral"), "bit-allocation strategy (spectral|uniform)")
     .switch("bursty", "bursty arrivals instead of poisson")
     .switch("virtual", "replay the trace in virtual time (hermetic dry-run)");
     let a = p.parse(rest)?;
@@ -471,7 +514,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         let ckpt = art.checkpoint(task)?;
         let calib =
             load_calib_if_needed(&art, task, scorer.needs_calibration(), art.calib_samples())?;
-        let sels = {
+        let (sels, alloc) = {
             let mut pipe = QuantizePipeline::for_checkpoint(&art.model_cfg, &ckpt)
                 .scorer(scorer)
                 .budget(a.usize("k")?)
@@ -479,9 +522,28 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                 .calib(calib.as_ref())
                 .threads(threads)
                 .build()?;
-            pipe.select(pipe.budget())?
+            let alloc = match a.get("avg-bits") {
+                Some(avg) => {
+                    let avg: f64 = avg.parse().context("bad --avg-bits")?;
+                    let strategy = AllocStrategy::parse(a.str("alloc")?)?;
+                    Some(pipe.allocate(avg, strategy, art.svd_rank())?)
+                }
+                None => None,
+            };
+            (pipe.select(pipe.budget())?, alloc)
         };
-        let qm = QuantizedModel::build(art.model_cfg, ckpt, &qcfg, &sels)?;
+        let qm = match &alloc {
+            Some(al) => {
+                println!(
+                    "  [{task}] mixed-precision widths ({}, achieved {:.2} avg bits): {:?}",
+                    al.strategy(),
+                    al.avg_bits(),
+                    al.width_histogram()
+                );
+                QuantizedModel::build_allocated(art.model_cfg, ckpt, &qcfg, &sels, al)?
+            }
+            None => QuantizedModel::build(art.model_cfg, ckpt, &qcfg, &sels)?,
+        };
         let (qbytes, dbytes) = qm.quantized_bytes();
         println!(
             "deployed {task}: quantized weights {} vs dense {} ({:.2}x smaller)",

@@ -1,7 +1,7 @@
 //! Pure-Rust transformer engine — the substrate that (a) produces
 //! calibration activations for AWQ/SpQR without any python, (b)
 //! cross-checks the PJRT executable's numerics, and (c) runs the *deployed*
-//! mixed-precision model (packed int4 + CSR salient) for the serving demo.
+//! mixed-precision model (packed b-bit + CSR salient) for the serving demo.
 //!
 //! Mirrors `python/compile/model.py` exactly: DistilBERT-style post-LN
 //! encoder, GELU FFN, CLS head. Parameter names match the checkpoint .qtz

@@ -1,8 +1,11 @@
 //! Deployed mixed-precision model: every quantizable linear holds a
-//! [`QuantizedMatrix`] (packed int4 residual + CSR salient overlay) instead
-//! of dense f32. This is what the serving demo (`examples/datafree_deploy`)
-//! runs and what the engine_inference bench measures — the actual memory
-//! saving, not the simulated-quantization accuracy path.
+//! [`QuantizedMatrix`] (packed b-bit residual + CSR salient overlay)
+//! instead of dense f32. Residual widths are per *layer*: uniform via
+//! [`QuantizedModel::build`], or assigned by the spectral allocator via
+//! [`QuantizedModel::build_allocated`] — the layers themselves carry their
+//! codec, so the forward pass is width-oblivious. This is what the
+//! multi-worker server and the engine_inference bench run — the actual
+//! memory saving, not the simulated-quantization accuracy path.
 
 use std::collections::BTreeMap;
 
@@ -10,11 +13,11 @@ use anyhow::{Context, Result};
 
 use crate::linalg::Matrix;
 use crate::quant::{GemmKernel, QuantConfig, QuantizedMatrix};
-use crate::saliency::SalientSet;
+use crate::saliency::{BitAllocation, SalientSet};
 
 use super::{Engine, ModelConfig, Params};
 
-/// A model whose quantizable weights live in packed int4 + sparse FP32.
+/// A model whose quantizable weights live in packed b-bit + sparse FP32.
 pub struct QuantizedModel {
     /// engine holding the *shared* FP32 parameters (embeddings, biases,
     /// LayerNorms) — its quantizable weights are ignored on this path
@@ -27,12 +30,37 @@ pub struct QuantizedModel {
 
 impl QuantizedModel {
     /// Quantize `params` under `cfg`/`qcfg` with the given per-layer
-    /// salient selections.
+    /// salient selections (every residual at the uniform `qcfg.bits`).
     pub fn build(
         cfg: ModelConfig,
         params: Params,
         qcfg: &QuantConfig,
         selections: &BTreeMap<String, SalientSet>,
+    ) -> Result<Self> {
+        Self::build_with(cfg, params, selections, |_| *qcfg)
+    }
+
+    /// Like [`QuantizedModel::build`], but each layer's residual width
+    /// comes from the allocator's per-layer assignment (layers the
+    /// allocation does not cover fall back to `qcfg.bits`). The shared
+    /// clip/scale knobs still come from `qcfg`.
+    pub fn build_allocated(
+        cfg: ModelConfig,
+        params: Params,
+        qcfg: &QuantConfig,
+        selections: &BTreeMap<String, SalientSet>,
+        alloc: &BitAllocation,
+    ) -> Result<Self> {
+        Self::build_with(cfg, params, selections, |name| {
+            qcfg.with_bits(alloc.bits_for(name).unwrap_or(qcfg.bits))
+        })
+    }
+
+    fn build_with(
+        cfg: ModelConfig,
+        params: Params,
+        selections: &BTreeMap<String, SalientSet>,
+        qcfg_for: impl Fn(&str) -> QuantConfig,
     ) -> Result<Self> {
         let mut qweights = BTreeMap::new();
         for name in cfg.quantizable_names() {
@@ -40,13 +68,23 @@ impl QuantizedModel {
             let sel = selections
                 .get(&name)
                 .with_context(|| format!("no salient selection for {name}"))?;
-            qweights.insert(name.clone(), QuantizedMatrix::from_dense(w, qcfg, &sel.to_coo(w)));
+            let qcfg = qcfg_for(&name);
+            qweights.insert(name.clone(), QuantizedMatrix::from_dense(w, &qcfg, &sel.to_coo(w)));
         }
         Ok(Self {
             engine: Engine::new(cfg, params)?,
             qweights,
             kernel: GemmKernel::default(),
         })
+    }
+
+    /// Residual width of each quantized layer, name-ordered — how many
+    /// bits the allocator actually deployed per layer.
+    pub fn layer_bits(&self) -> BTreeMap<String, u32> {
+        self.qweights
+            .iter()
+            .map(|(n, m)| (n.clone(), m.bits()))
+            .collect()
     }
 
     /// Select the GEMM kernel the fused forward runs on (builder form).
@@ -336,6 +374,53 @@ mod tests {
             int8.approx_eq(&f32_logits, 0.15),
             "int8 vs f32 kernel diff {}",
             int8.max_abs_diff(&f32_logits)
+        );
+    }
+
+    #[test]
+    fn mixed_width_model_serves_and_tracks_dense_semantics() {
+        use crate::saliency::{allocate_bits, AllocStrategy, LayerSpectrum};
+        let cfg = tiny_cfg();
+        let params = synthetic_params(&cfg, 77);
+        let mut sels = BTreeMap::new();
+        let mut spectra = Vec::new();
+        for name in cfg.quantizable_names() {
+            let w = params.get(&name).unwrap();
+            sels.insert(name.clone(), select_topk(&svd_score(w, 2, SvdScoreMode::Exact), 8));
+            spectra.push(LayerSpectrum::from_weights(&name, w, 2, SvdScoreMode::Exact));
+        }
+        // 2.5 avg bits cannot be met by any single width (2 < 2.5 < 3), so
+        // the spectral allocation must mix widths: some layers upgrade
+        // (each upgrade costs <= 512 bits, and > 512 bits of slack exist),
+        // and not all can (upgrading every layer would cost the full 2336)
+        let alloc = allocate_bits(&spectra, 2.5, AllocStrategy::Spectral).unwrap();
+        let qm = QuantizedModel::build_allocated(
+            cfg,
+            params.clone(),
+            &QuantConfig::default(),
+            &sels,
+            &alloc,
+        )
+        .unwrap();
+        // the deployed widths are exactly the allocator's assignment
+        let deployed = qm.layer_bits();
+        for (layer, bits) in alloc.iter() {
+            assert_eq!(deployed[layer], bits, "{layer}");
+        }
+        assert!(
+            deployed.values().collect::<std::collections::BTreeSet<_>>().len() > 1,
+            "allocation at avg 2.5 should mix widths: {deployed:?}"
+        );
+        // float-kernel fused forward still matches the dense reconstruction
+        let qm = qm.with_kernel(GemmKernel::F32);
+        let ids: Vec<i32> = (0..16).map(|i| (i % 60) as i32 + 1).collect();
+        let mask = vec![1i32; 16];
+        let fused = qm.forward_fused(&ids, &mask).unwrap();
+        let dense = qm.to_dense_engine().unwrap().forward(&ids, &mask).unwrap();
+        assert!(
+            fused.approx_eq(&dense, 2e-3),
+            "mixed-width fused vs dense diff {}",
+            fused.max_abs_diff(&dense)
         );
     }
 

@@ -1,15 +1,22 @@
 //! Integer-domain packed GEMM — the serving hot path (DESIGN.md §8).
 //!
 //! The float reference path (`QuantizedMatrix::matmul_xt`) decodes every
-//! nibble to f32 and multiplies in the float domain. Here the contraction
-//! stays in integers end to end:
+//! weight code to f32 and multiplies in the float domain. Here the
+//! contraction stays in integers end to end:
 //!
 //! ```text
 //! x̂_bj  = round(x_bj / s_x_b)          dynamic per-row int8 activations
-//! acc   = Σ_j ŵ_ij · x̂_bj             i32 accumulate over int4 × int8
+//! acc   = Σ_j ŵ_ij · x̂_bj             i32 accumulate over intb × int8
 //! y_bi  = acc · (s_w_i · s_x_b)        combined scale applied once
 //!         + Σ_{(i,c)∈S} (v_ic·x_bc − ŵ_ic·x̂_bc·s_w_i·s_x_b)
 //! ```
+//!
+//! The weight codes are whatever width the layer's
+//! [`BitPack`](super::packing::BitPack) codec carries (2/3/4/8 bits, per
+//! the allocator's per-layer assignment): each packed row is decoded to an
+//! i8 panel buffer once per batch — through the nibble LUT at 4 bits, the
+//! generic bit-stream otherwise — and the contraction itself is
+//! width-oblivious from there.
 //!
 //! The salient CSR overlay is folded in as an *override correction*: the
 //! residual's contribution at each salient coordinate is removed in exact
@@ -19,9 +26,9 @@
 //! exactly (the integer accumulator cancels to zero), and for non-salient
 //! coordinates the only divergence from the float path is the activation
 //! rounding, bounded per output by `½·s_x_b·s_w_i·Σ_j|ŵ_ij|` (the i32
-//! accumulation itself is exact: |ŵ|≤7, |x̂|≤127 keeps Σ far from i32
-//! overflow for any realistic width). The parity property test below pins
-//! that bound.
+//! accumulation itself is exact: |ŵ|≤127 even at 8 bits, |x̂|≤127 keeps Σ
+//! far from i32 overflow for any realistic width). The parity property
+//! test below pins that bound at every supported width.
 //!
 //! Perf structure (EXPERIMENTS.md §Perf):
 //! * each packed weight row is decoded to int8 **once per batch** (the
@@ -57,7 +64,9 @@ pub(crate) fn nibble_i8_lut() -> &'static [[i8; 2]; 256] {
 /// An activation batch quantized to int8, one dynamic scale per row
 /// (`s_x = max|x| / 127`; a zero row gets scale 1 and all-zero codes).
 pub struct QuantizedRows {
+    /// number of activation rows (the batch)
     pub rows: usize,
+    /// activation feature dimension
     pub cols: usize,
     /// row-major int8 codes
     pub codes: Vec<i8>,
@@ -66,6 +75,7 @@ pub struct QuantizedRows {
 }
 
 impl QuantizedRows {
+    /// The int8 codes of activation row `i`.
     #[inline]
     pub fn row(&self, i: usize) -> &[i8] {
         &self.codes[i * self.cols..(i + 1) * self.cols]
@@ -171,21 +181,27 @@ fn igemm_panel(
 ) -> Vec<f32> {
     let (_, cols) = qm.shape();
     let batch = qx.rows;
+    let codec = qm.codec();
     let lut = nibble_i8_lut();
     let mut part = Vec::with_capacity((hi - lo) * batch);
     let mut wbuf = vec![0i8; cols];
-    // (col, fp32 value, residual int4 code) triples of the current row
+    // (col, fp32 value, residual code) triples of the current row
     let mut overrides: Vec<(usize, f32, i32)> = Vec::new();
     for i in lo..hi {
         let prow = qm.packed_row(i);
-        let pairs = cols / 2;
-        for b in 0..pairs {
-            let d = lut[prow[b] as usize];
-            wbuf[2 * b] = d[0];
-            wbuf[2 * b + 1] = d[1];
-        }
-        if cols % 2 == 1 {
-            wbuf[cols - 1] = sign_extend4(prow[pairs] & 0x0F);
+        if codec.bits() == 4 {
+            // LUT fast path: two codes per indexed load
+            let pairs = cols / 2;
+            for b in 0..pairs {
+                let d = lut[prow[b] as usize];
+                wbuf[2 * b] = d[0];
+                wbuf[2 * b + 1] = d[1];
+            }
+            if cols % 2 == 1 {
+                wbuf[cols - 1] = sign_extend4(prow[pairs] & 0x0F);
+            }
+        } else {
+            codec.unpack_into(prow, &mut wbuf);
         }
         let scale_w = qm.quant_params().scale_for_row(i);
         overrides.clear();
@@ -222,6 +238,7 @@ mod tests {
         cols: usize,
         batch: usize,
         k: usize,
+        bits: u32,
         per_row: bool,
         seed: u64,
     }
@@ -251,17 +268,62 @@ mod tests {
         k: usize,
         per_row: bool,
     ) -> (QuantizedMatrix, Matrix) {
+        random_setup_bits(rng, rows, cols, batch, k, 4, per_row)
+    }
+
+    fn random_setup_bits(
+        rng: &mut Rng,
+        rows: usize,
+        cols: usize,
+        batch: usize,
+        k: usize,
+        bits: u32,
+        per_row: bool,
+    ) -> (QuantizedMatrix, Matrix) {
         let mut w = Matrix::zeros(rows, cols);
         rng.fill_normal(w.data_mut(), 0.05);
         let mut sal = Coo::new(rows, cols);
         for idx in rng.sample_distinct(rows * cols, k.min(rows * cols)) {
             sal.push(idx / cols, idx % cols, w[(idx / cols, idx % cols)]);
         }
-        let cfg = QuantConfig { per_row, ..QuantConfig::default() };
+        let cfg = QuantConfig { bits, per_row, ..QuantConfig::default() };
         let qm = QuantizedMatrix::from_dense(&w, &cfg, &sal);
         let mut x = Matrix::zeros(batch, cols);
         rng.fill_normal(x.data_mut(), 1.0);
         (qm, x)
+    }
+
+    /// The derived-bound parity check one [`Case`] must satisfy: the
+    /// integer path matches the float path within
+    /// `½·s_x·s_w·Σ|ŵ|` per output, at the case's bit width.
+    fn check_parity_bound(case: &Case) -> Result<(), String> {
+        let &Case { rows, cols, batch, k, bits, per_row, seed } = case;
+        let mut rng = Rng::new(seed ^ 0xD00D);
+        let (qm, x) = random_setup_bits(&mut rng, rows, cols, batch, k, bits, per_row);
+        let qx = quantize_rows(&x);
+        let got = igemm_xt(&qm, &qx, &x);
+        let want = qm.matmul_xt(&x);
+        let codec = qm.codec();
+        let mut wdec = vec![0i8; cols];
+        for i in 0..rows {
+            let s_w = qm.quant_params().scale_for_row(i);
+            // Σ|ŵ_ij| from the packed codes
+            codec.unpack_into(qm.packed_row(i), &mut wdec);
+            let wabs: f64 = wdec.iter().map(|&c| (c as f64).abs()).sum();
+            for b in 0..batch {
+                let bound = 0.5 * qx.scales[b] as f64 * s_w as f64 * wabs * 1.01 + 1e-3;
+                let diff = (got[(b, i)] as f64 - want[(b, i)] as f64).abs();
+                if diff > bound {
+                    return Err(format!(
+                        "({rows}x{cols} b={batch} k={k} bits={bits} per_row={per_row}) \
+                         out[{b},{i}]: |{} - {}| = {diff:.3e} > bound {bound:.3e}",
+                        got[(b, i)],
+                        want[(b, i)]
+                    ));
+                }
+            }
+        }
+        Ok(())
     }
 
     #[test]
@@ -298,11 +360,13 @@ mod tests {
         }
     }
 
-    /// The satellite parity property: int-domain igemm matches the
-    /// float-domain `matmul_xt` within the derived activation-rounding
-    /// bound, with per-row weight scales and the salient override honored.
+    /// The parity property: int-domain igemm matches the float-domain
+    /// `matmul_xt` within the derived activation-rounding bound, with
+    /// per-row weight scales and the salient override honored, at a
+    /// randomly drawn supported bit width.
     #[test]
     fn prop_igemm_matches_float_path_within_bound() {
+        use crate::quant::packing::SUPPORTED_BITS;
         check(
             "igemm within ½·s_x·s_w·Σ|ŵ| of the float path",
             |rng| {
@@ -313,44 +377,33 @@ mod tests {
                     cols,
                     batch: rng.range(1, 6),
                     k: rng.range(0, rows * cols / 2 + 1),
+                    bits: SUPPORTED_BITS[rng.range(0, SUPPORTED_BITS.len())],
                     per_row: rng.range(0, 2) == 1,
                     seed: rng.range(0, 1 << 30) as u64,
                 }
             },
-            |case| {
-                let &Case { rows, cols, batch, k, per_row, seed } = case;
-                let mut rng = Rng::new(seed ^ 0xD00D);
-                let (qm, x) = random_setup(&mut rng, rows, cols, batch, k, per_row);
-                let qx = quantize_rows(&x);
-                let got = igemm_xt(&qm, &qx, &x);
-                let want = qm.matmul_xt(&x);
-                let lut = nibble_i8_lut();
-                for i in 0..rows {
-                    let s_w = qm.quant_params().scale_for_row(i);
-                    // Σ|ŵ_ij| from the packed codes
-                    let prow = qm.packed_row(i);
-                    let mut wabs = 0.0f64;
-                    for j in 0..cols {
-                        let c = lut[prow[j / 2] as usize][j % 2];
-                        wabs += (c as f64).abs();
-                    }
-                    for b in 0..batch {
-                        let bound =
-                            0.5 * qx.scales[b] as f64 * s_w as f64 * wabs * 1.01 + 1e-3;
-                        let diff = (got[(b, i)] as f64 - want[(b, i)] as f64).abs();
-                        if diff > bound {
-                            return Err(format!(
-                                "({rows}x{cols} b={batch} k={k} per_row={per_row}) \
-                                 out[{b},{i}]: |{} - {}| = {diff:.3e} > bound {bound:.3e}",
-                                got[(b, i)],
-                                want[(b, i)]
-                            ));
-                        }
-                    }
-                }
-                Ok(())
-            },
+            check_parity_bound,
         );
+    }
+
+    /// Deterministic width coverage on top of the sampled property: the
+    /// same derived bound holds at *every* supported width, including
+    /// odd column counts (bit-stream tails) and per-row scales.
+    #[test]
+    fn parity_bound_holds_for_every_width() {
+        for bits in crate::quant::packing::SUPPORTED_BITS {
+            for (rows, cols, batch, k, per_row, seed) in [
+                (9usize, 13usize, 3usize, 10usize, false, 1u64),
+                (16, 31, 5, 0, true, 2),
+                (24, 40, 2, 120, true, 3),
+                (5, 1, 1, 2, false, 4),
+            ] {
+                let case = Case { rows, cols, batch, k, bits, per_row, seed };
+                if let Err(msg) = check_parity_bound(&case) {
+                    panic!("width {bits}: {msg}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -4,12 +4,21 @@
 //!   (eq. 8–9), per-tensor and per-row scale variants + error metrics;
 //! * [`nf4`] — NormalFloat-4 codebook quantization (the paper cites NF4 as
 //!   the motivation for clipping; we carry it as an ablation);
-//! * [`packing`] — 2-nibble int4 bit-packing for real storage;
+//! * [`packing`] — the [`BitPack`] bit-stream codec: 2/3/4/8-bit signed
+//!   codes packed LSB-first for real storage;
 //! * [`qmatrix`] — [`QuantizedMatrix`]: the deployable `W ≈ S + Q` pair
-//!   (packed codes + sparse salient set) with fused dequant-matvec;
-//! * [`igemm`] — the integer-domain packed GEMM (int4×int8→i32 with the
+//!   (packed codes at the layer's assigned width + sparse salient set)
+//!   with fused dequant-matvec;
+//! * [`igemm`] — the integer-domain packed GEMM (intb×int8→i32 with the
 //!   salient override folded in) behind [`GemmKernel::Int8`], the serving
 //!   hot path (DESIGN.md §8).
+//!
+//! Per-layer bit widths come from the spectral allocator
+//! ([`crate::saliency::allocate`]): the allocator assigns
+//! [`QuantConfig::bits`] per layer, [`packing::BitPack`] stores the codes,
+//! and [`igemm`] executes them — see DESIGN.md §9 for the flow.
+
+#![warn(missing_docs)]
 
 pub mod igemm;
 pub mod nf4;
@@ -18,7 +27,7 @@ pub mod qmatrix;
 pub mod symmetric;
 
 pub use igemm::{quantize_rows, QuantizedRows};
-pub use packing::{pack_nibbles, unpack_nibbles};
+pub use packing::{pack_nibbles, unpack_nibbles, BitPack, SUPPORTED_BITS};
 pub use qmatrix::QuantizedMatrix;
 pub use symmetric::{
     dequantize, fake_quant, quant_params, quantize_codes, QuantParams,
@@ -31,15 +40,26 @@ pub enum GemmKernel {
     F32,
     /// Integer-domain path ([`QuantizedMatrix::matmul_xt_int`]): dynamic
     /// int8 activations, i32 accumulate, combined scale once per output.
-    /// Serving default — within the igemm error bound of `F32`.
+    /// Serving default — within the igemm error bound of `F32` at every
+    /// supported weight width.
     #[default]
     Int8,
 }
 
 /// Quantization configuration (paper defaults in `Default`).
+///
+/// ```
+/// use svdquant::quant::QuantConfig;
+///
+/// let c = QuantConfig::default();
+/// assert_eq!((c.bits, c.qmax()), (4, 7.0)); // paper: int4, codes in ±7
+/// let c3 = QuantConfig { bits: 3, ..QuantConfig::default() };
+/// assert_eq!(c3.qmax(), 3.0);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QuantConfig {
-    /// bit width of the residual (paper: 4)
+    /// bit width of the residual (paper: 4; the mixed-precision allocator
+    /// assigns one of [`SUPPORTED_BITS`] per layer)
     pub bits: u32,
     /// clip threshold in units of std(W) (paper: 2.5); `None` = no clipping
     pub clip_sigma: Option<f32>,
@@ -59,6 +79,13 @@ impl QuantConfig {
     pub fn qmax(&self) -> f32 {
         (1u32 << (self.bits - 1)) as f32 - 1.0
     }
+
+    /// This config with the residual width replaced — how the allocator's
+    /// per-layer bit assignment is applied on top of shared clip/scale
+    /// settings.
+    pub fn with_bits(&self, bits: u32) -> Self {
+        Self { bits, ..*self }
+    }
 }
 
 #[cfg(test)]
@@ -70,6 +97,7 @@ mod tests {
         assert_eq!(QuantConfig { bits: 4, ..Default::default() }.qmax(), 7.0);
         assert_eq!(QuantConfig { bits: 8, ..Default::default() }.qmax(), 127.0);
         assert_eq!(QuantConfig { bits: 3, ..Default::default() }.qmax(), 3.0);
+        assert_eq!(QuantConfig { bits: 2, ..Default::default() }.qmax(), 1.0);
     }
 
     #[test]
@@ -78,5 +106,14 @@ mod tests {
         assert_eq!(c.bits, 4);
         assert_eq!(c.clip_sigma, Some(2.5));
         assert!(!c.per_row);
+    }
+
+    #[test]
+    fn with_bits_keeps_other_knobs() {
+        let c = QuantConfig { clip_sigma: None, per_row: true, ..Default::default() };
+        let c8 = c.with_bits(8);
+        assert_eq!(c8.bits, 8);
+        assert_eq!(c8.clip_sigma, None);
+        assert!(c8.per_row);
     }
 }

@@ -48,6 +48,7 @@ pub fn nf4_encode(v: f32) -> u8 {
     lo as u8
 }
 
+/// Codebook value for a 4-bit NF4 code.
 #[inline]
 pub fn nf4_decode(code: u8) -> f32 {
     NF4_LEVELS[code as usize & 0x0F]

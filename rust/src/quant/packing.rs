@@ -1,35 +1,188 @@
-//! Int4 bit-packing: two signed nibbles per byte (low nibble = even index).
+//! [`BitPack`] — the bit-stream codec behind every deployable residual:
+//! signed 2/3/4/8-bit codes packed LSB-first into bytes.
 //!
 //! The simulated-quantization accuracy experiments never need packing, but
 //! the deployable [`super::QuantizedMatrix`] stores real packed codes —
-//! this is where the 4-bit memory saving (paper §I: "reducing the memory
-//! footprint") actually materializes, and the quant_throughput bench
-//! measures pack/unpack bandwidth.
+//! this is where the sub-byte memory saving (paper §I: "reducing the
+//! memory footprint") actually materializes, and the quant_throughput
+//! bench measures pack/unpack bandwidth per width.
 //!
-//! Encoding: code ∈ [-8, 7] (two's complement nibble). The symmetric
-//! quantizer only emits [-7, 7], so -8 is never produced but decodes fine.
+//! Layout: code `i` occupies bits `[i·b, (i+1)·b)` of the stream, least
+//! significant bits first within each byte. For `b = 4` this reproduces
+//! the historical two-nibbles-per-byte layout exactly (low nibble = even
+//! index), so packed 4-bit buffers from older checkpoints decode
+//! unchanged; `b = 3` codes straddle byte boundaries (a pure bit stream);
+//! `b = 2` packs four codes per byte; `b = 8` is a plain `i8` array.
+//!
+//! **Trailing-element contract** (explicit, not silent): [`BitPack::pack`]
+//! emits exactly [`BitPack::bytes_for`]`(n)` bytes and zero-fills only the
+//! final byte's unused *bits*; the element count is never recoverable from
+//! the byte length alone, so every decode entry point takes `n` (or a
+//! destination slice of length `n`) from the caller. The legacy
+//! [`pack_nibbles`]/[`unpack_nibbles`] helpers keep this contract for
+//! width 4.
+//!
+//! Encoding is two's complement at width `b`: code ∈ [−2^{b−1}, 2^{b−1}−1].
+//! The symmetric quantizer only emits the balanced range ±(2^{b−1}−1), so
+//! the most negative code is never produced but decodes fine.
 
-/// Pack signed int4 codes (values must fit in [-8, 7]) into bytes.
-pub fn pack_nibbles(codes: &[i8]) -> Vec<u8> {
-    let mut out = Vec::with_capacity((codes.len() + 1) / 2);
-    for pair in codes.chunks(2) {
-        let lo = (pair[0] as u8) & 0x0F;
-        let hi = if pair.len() == 2 { (pair[1] as u8) & 0x0F } else { 0 };
-        out.push(lo | (hi << 4));
+use anyhow::{bail, Result};
+
+/// Bit widths [`BitPack`] supports (and the allocator assigns).
+pub const SUPPORTED_BITS: [u32; 4] = [2, 3, 4, 8];
+
+/// A fixed-width bit-stream codec for signed sub-byte (or byte) codes.
+///
+/// ```
+/// use svdquant::quant::packing::BitPack;
+///
+/// let codec = BitPack::new(3).unwrap();
+/// let codes: Vec<i8> = vec![-4, 3, 0, -1, 2, 1, -3];
+/// let packed = codec.pack(&codes);
+/// assert_eq!(packed.len(), codec.bytes_for(codes.len())); // ⌈7·3/8⌉ = 3
+/// assert_eq!(codec.unpack(&packed, codes.len()), codes);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitPack {
+    bits: u32,
+}
+
+impl BitPack {
+    /// Codec for `bits`-wide codes. Errors on widths outside
+    /// [`SUPPORTED_BITS`] — the deployable kernels only decode these.
+    pub fn new(bits: u32) -> Result<Self> {
+        if !SUPPORTED_BITS.contains(&bits) {
+            bail!("unsupported pack width {bits} (supported: 2|3|4|8)");
+        }
+        Ok(Self { bits })
     }
-    out
+
+    /// The code width in bits.
+    #[inline]
+    pub fn bits(self) -> u32 {
+        self.bits
+    }
+
+    /// Most negative representable code: −2^{b−1}.
+    #[inline]
+    pub fn code_min(self) -> i8 {
+        -(1i16 << (self.bits - 1)) as i8
+    }
+
+    /// Most positive representable code: 2^{b−1}−1.
+    #[inline]
+    pub fn code_max(self) -> i8 {
+        ((1i16 << (self.bits - 1)) - 1) as i8
+    }
+
+    /// Exact packed size of `n` codes: ⌈n·b/8⌉ bytes. This is the whole
+    /// trailing-element contract — the byte length does not encode `n`, so
+    /// decoders are always handed the element count explicitly.
+    #[inline]
+    pub fn bytes_for(self, n: usize) -> usize {
+        (n * self.bits as usize + 7) / 8
+    }
+
+    /// Sign-extend a raw `b`-bit field to `i8`.
+    #[inline]
+    pub fn sign_extend(self, raw: u8) -> i8 {
+        let shift = 8 - self.bits;
+        (((raw as u32) << shift) as u8 as i8) >> shift
+    }
+
+    /// Pack codes into exactly [`BitPack::bytes_for`]`(codes.len())` bytes.
+    ///
+    /// Every code must lie in `[code_min, code_max]` (asserted). Unused
+    /// bits of the final byte are zero.
+    pub fn pack(self, codes: &[i8]) -> Vec<u8> {
+        let b = self.bits as usize;
+        let (lo, hi) = (self.code_min(), self.code_max());
+        let mask = ((1u16 << b) - 1) as u16;
+        let mut out = vec![0u8; self.bytes_for(codes.len())];
+        let mut bitpos = 0usize;
+        for &c in codes {
+            assert!(
+                c >= lo && c <= hi,
+                "code {c} out of range [{lo}, {hi}] for {b}-bit pack"
+            );
+            let u = (c as u8 as u16) & mask;
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            out[byte] |= (u << off) as u8;
+            if off + b > 8 {
+                out[byte + 1] |= (u >> (8 - off)) as u8;
+            }
+            bitpos += b;
+        }
+        out
+    }
+
+    /// Decode `out.len()` codes from `packed` into `out`.
+    ///
+    /// This is the kernels' hot decode (igemm row panels); `packed` must
+    /// hold at least [`BitPack::bytes_for`]`(out.len())` bytes.
+    pub fn unpack_into(self, packed: &[u8], out: &mut [i8]) {
+        let b = self.bits as usize;
+        assert!(
+            packed.len() >= self.bytes_for(out.len()),
+            "not enough packed bytes: {} < {}",
+            packed.len(),
+            self.bytes_for(out.len())
+        );
+        if b == 8 {
+            for (o, &p) in out.iter_mut().zip(packed) {
+                *o = p as i8;
+            }
+            return;
+        }
+        let mut bitpos = 0usize;
+        for o in out.iter_mut() {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let mut u = (packed[byte] >> off) as u16;
+            if off + b > 8 {
+                u |= (packed[byte + 1] as u16) << (8 - off);
+            }
+            *o = self.sign_extend(u as u8);
+            bitpos += b;
+        }
+    }
+
+    /// Decode `n` codes from `packed` (allocating form of
+    /// [`BitPack::unpack_into`]).
+    pub fn unpack(self, packed: &[u8], n: usize) -> Vec<i8> {
+        let mut out = vec![0i8; n];
+        self.unpack_into(packed, &mut out);
+        out
+    }
+
+    /// Decode the single code at `idx` without materializing the row.
+    #[inline]
+    pub fn unpack_at(self, packed: &[u8], idx: usize) -> i8 {
+        let b = self.bits as usize;
+        let bitpos = idx * b;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut u = (packed[byte] >> off) as u16;
+        if off + b > 8 {
+            u |= (packed[byte + 1] as u16) << (8 - off);
+        }
+        self.sign_extend(u as u8)
+    }
+}
+
+/// Pack signed int4 codes two nibbles per byte (low nibble = even index).
+///
+/// Legacy 4-bit entry point, byte-identical to `BitPack::new(4)` — an odd
+/// trailing code gets a zero high nibble, which is exactly the codec's
+/// explicit zero-fill of unused trailing bits; decode with the true length.
+pub fn pack_nibbles(codes: &[i8]) -> Vec<u8> {
+    BitPack { bits: 4 }.pack(codes)
 }
 
 /// Unpack `n` signed int4 codes from packed bytes.
 pub fn unpack_nibbles(packed: &[u8], n: usize) -> Vec<i8> {
-    assert!(packed.len() * 2 >= n, "not enough packed bytes");
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
-        let byte = packed[i / 2];
-        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
-        out.push(sign_extend4(nib));
-    }
-    out
+    BitPack { bits: 4 }.unpack(packed, n)
 }
 
 /// Sign-extend a 4-bit two's-complement value.
@@ -38,7 +191,7 @@ pub fn sign_extend4(nib: u8) -> i8 {
     ((nib << 4) as i8) >> 4
 }
 
-/// Unpack a single code at `idx` without materializing the whole row.
+/// Unpack a single int4 code at `idx` without materializing the whole row.
 #[inline]
 pub fn unpack_at(packed: &[u8], idx: usize) -> i8 {
     let byte = packed[idx / 2];
@@ -49,6 +202,7 @@ pub fn unpack_at(packed: &[u8], idx: usize) -> i8 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{check, Shrink};
     use crate::util::rng::Rng;
 
     #[test]
@@ -65,6 +219,8 @@ mod tests {
         let packed = pack_nibbles(&codes);
         assert_eq!(packed.len(), 2);
         assert_eq!(unpack_nibbles(&packed, 3), codes);
+        // the explicit contract: the trailing half-byte is zero bits
+        assert_eq!(packed[1] >> 4, 0);
     }
 
     #[test]
@@ -88,11 +244,151 @@ mod tests {
         assert_eq!(sign_extend4(0x08), -8);
         assert_eq!(sign_extend4(0x07), 7);
         assert_eq!(sign_extend4(0x00), 0);
+        // generalized form agrees at width 4 and covers the others
+        let c4 = BitPack::new(4).unwrap();
+        for raw in 0u8..16 {
+            assert_eq!(c4.sign_extend(raw), sign_extend4(raw));
+        }
+        let c2 = BitPack::new(2).unwrap();
+        assert_eq!(c2.sign_extend(0b11), -1);
+        assert_eq!(c2.sign_extend(0b10), -2);
+        assert_eq!(c2.sign_extend(0b01), 1);
+        let c3 = BitPack::new(3).unwrap();
+        assert_eq!(c3.sign_extend(0b100), -4);
+        assert_eq!(c3.sign_extend(0b111), -1);
+        assert_eq!(c3.sign_extend(0b011), 3);
+        let c8 = BitPack::new(8).unwrap();
+        assert_eq!(c8.sign_extend(0xFF), -1);
+        assert_eq!(c8.sign_extend(0x80), -128);
     }
 
     #[test]
     fn memory_halving() {
         let codes = vec![1i8; 1000];
         assert_eq!(pack_nibbles(&codes).len(), 500);
+    }
+
+    #[test]
+    fn supported_widths_only() {
+        for bits in SUPPORTED_BITS {
+            assert!(BitPack::new(bits).is_ok());
+        }
+        for bits in [0u32, 1, 5, 6, 7, 9, 16] {
+            assert!(BitPack::new(bits).is_err(), "width {bits} must be rejected");
+        }
+    }
+
+    #[test]
+    fn bytes_for_every_width() {
+        let cases = [
+            // (bits, n, bytes): ⌈n·b/8⌉
+            (2u32, 0usize, 0usize),
+            (2, 1, 1),
+            (2, 4, 1),
+            (2, 5, 2),
+            (3, 0, 0),
+            (3, 1, 1),
+            (3, 8, 3),
+            (3, 9, 4),
+            (4, 0, 0),
+            (4, 3, 2),
+            (4, 1000, 500),
+            (8, 0, 0),
+            (8, 7, 7),
+        ];
+        for (bits, n, want) in cases {
+            assert_eq!(BitPack::new(bits).unwrap().bytes_for(n), want, "b={bits} n={n}");
+        }
+    }
+
+    #[test]
+    fn edge_cases_every_width() {
+        for bits in SUPPORTED_BITS {
+            let codec = BitPack::new(bits).unwrap();
+            // empty slice: zero bytes, decodes to nothing
+            let empty = codec.pack(&[]);
+            assert!(empty.is_empty(), "b={bits}");
+            assert!(codec.unpack(&empty, 0).is_empty());
+            // odd (non-byte-aligned) lengths roundtrip exactly
+            for n in [1usize, 3, 5, 7, 9, 17] {
+                let codes: Vec<i8> = (0..n)
+                    .map(|i| if i % 2 == 0 { codec.code_max() } else { codec.code_min() })
+                    .collect();
+                let packed = codec.pack(&codes);
+                assert_eq!(packed.len(), codec.bytes_for(n), "b={bits} n={n}");
+                assert_eq!(codec.unpack(&packed, n), codes, "b={bits} n={n}");
+            }
+            // the most negative code (never produced by the symmetric
+            // quantizer, must still decode) across a full buffer
+            let all_min = vec![codec.code_min(); 33];
+            let packed = codec.pack(&all_min);
+            assert_eq!(codec.unpack(&packed, 33), all_min, "b={bits} all-min");
+        }
+    }
+
+    #[test]
+    fn four_bit_layout_matches_legacy_nibbles() {
+        // low nibble = even index, high = odd; old buffers decode unchanged
+        let codec = BitPack::new(4).unwrap();
+        let codes: Vec<i8> = vec![-7, 3, 5];
+        assert_eq!(codec.pack(&codes), vec![0x39, 0x05]);
+        assert_eq!(codec.pack(&codes), pack_nibbles(&codes));
+    }
+
+    #[derive(Debug, Clone)]
+    struct PackCase {
+        bits: u32,
+        n: usize,
+        seed: u64,
+    }
+
+    impl Shrink for PackCase {
+        fn shrink(&self) -> Vec<Self> {
+            if self.n == 0 {
+                return Vec::new();
+            }
+            vec![
+                PackCase { n: self.n / 2, ..self.clone() },
+                PackCase { n: self.n - 1, ..self.clone() },
+            ]
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_every_width() {
+        check(
+            "pack/unpack/unpack_at roundtrip at widths 2/3/4/8",
+            |rng| PackCase {
+                bits: SUPPORTED_BITS[rng.range(0, SUPPORTED_BITS.len())],
+                n: rng.range(0, 300),
+                seed: rng.range(0, 1 << 30) as u64,
+            },
+            |case| {
+                let codec = BitPack::new(case.bits).map_err(|e| e.to_string())?;
+                let mut rng = Rng::new(case.seed ^ 0xBA5E);
+                let span = (codec.code_max() as i32 - codec.code_min() as i32 + 1) as usize;
+                let codes: Vec<i8> = (0..case.n)
+                    .map(|_| (codec.code_min() as i32 + rng.range(0, span) as i32) as i8)
+                    .collect();
+                let packed = codec.pack(&codes);
+                if packed.len() != codec.bytes_for(case.n) {
+                    return Err(format!(
+                        "packed {} bytes, want {}",
+                        packed.len(),
+                        codec.bytes_for(case.n)
+                    ));
+                }
+                if codec.unpack(&packed, case.n) != codes {
+                    return Err("bulk roundtrip mismatch".into());
+                }
+                for (i, &c) in codes.iter().enumerate() {
+                    let got = codec.unpack_at(&packed, i);
+                    if got != c {
+                        return Err(format!("unpack_at({i}) = {got} != {c}"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,19 +1,25 @@
 //! [`QuantizedMatrix`] — the deployable form of `W ≈ S + Q` (paper eq. 1):
-//! packed int4 residual codes + per-row scales + a CSR salient overlay.
+//! packed b-bit residual codes (any [`BitPack`] width, 2/3/4/8) + per-row
+//! scales + a CSR salient overlay.
 //!
 //! Three consumers:
 //! * the **simulated** path (`dequantize_dense`) reproduces exactly what
 //!   the paper's accuracy tables measure (and what the PJRT executable is
 //!   fed as weight arguments);
-//! * the **float deployed** path (`matvec` / `matmul_xt`) decodes nibbles
-//!   to f32 and dots in the float domain — `matmul_xt` decodes each packed
-//!   row once per *batch* (batch-panel blocking), salient CSR entries
+//! * the **float deployed** path (`matvec` / `matmul_xt`) decodes codes
+//!   to f32 and dots in the float domain — each packed row is decoded
+//!   once per *batch* (batch-panel blocking), salient CSR entries
 //!   *overriding* (not adding to) the residual contribution at their
 //!   coordinates, which mirrors the L1 Pallas `salient_matmul` mask-add
-//!   semantics;
+//!   semantics; 4-bit rows take a fused LUT fast path, other widths
+//!   decode through the [`BitPack`] bit stream;
 //! * the **integer deployed** path (`matmul_xt_int`) keeps the contraction
-//!   in int4×int8→i32 end to end (see [`super::igemm`]) — the serving hot
-//!   path.
+//!   in intb×int8→i32 end to end (see [`super::igemm`]) — the serving hot
+//!   path at every width.
+//!
+//! The width comes from [`QuantConfig::bits`]; under mixed-precision
+//! allocation each layer's matrix simply carries its own codec, so the
+//! whole serving stack is width-oblivious past this point.
 
 use std::sync::OnceLock;
 
@@ -22,14 +28,14 @@ use crate::linalg::Matrix;
 use crate::sparse::{Coo, Csr};
 
 use super::igemm;
-use super::packing::{pack_nibbles, sign_extend4};
+use super::packing::{sign_extend4, BitPack};
 use super::symmetric::{quant_params, quantize_codes, QuantParams};
 use super::QuantConfig;
 
 /// Byte → (low-nibble, high-nibble) decoded as f32 — one 2 KiB table turns
-/// the per-element shift/sign-extend/convert sequence of the matvec inner
-/// loop into a single indexed load (EXPERIMENTS.md §Perf L3: +~30% matvec
-/// throughput over the scalar decode).
+/// the per-element shift/sign-extend/convert sequence of the 4-bit matvec
+/// inner loop into a single indexed load (EXPERIMENTS.md §Perf L3: +~30%
+/// matvec throughput over the scalar decode).
 static NIBBLE_LUT: OnceLock<[[f32; 2]; 256]> = OnceLock::new();
 
 fn nibble_lut() -> &'static [[f32; 2]; 256] {
@@ -48,10 +54,12 @@ fn nibble_lut() -> &'static [[f32; 2]; 256] {
 pub struct QuantizedMatrix {
     rows: usize,
     cols: usize,
-    /// packed int4 codes, row-major, each row padded to a whole byte
+    /// packed b-bit codes, row-major, each row padded to a whole byte
     packed: Vec<u8>,
     bytes_per_row: usize,
     params: QuantParams,
+    /// the residual's bit-stream codec (width = `QuantConfig::bits`)
+    codec: BitPack,
     /// salient overlay (k entries kept FP32)
     salient: Csr,
 }
@@ -59,31 +67,49 @@ pub struct QuantizedMatrix {
 impl QuantizedMatrix {
     /// Quantize `w` under `cfg`, keeping the entries of `salient`
     /// (COO of exact FP32 values) at full precision.
+    ///
+    /// Panics if `cfg.bits` is not a deployable width
+    /// ([`super::packing::SUPPORTED_BITS`]); the simulated
+    /// [`super::fake_quant`] path has no such restriction.
     pub fn from_dense(w: &Matrix, cfg: &QuantConfig, salient: &Coo) -> Self {
+        let codec = BitPack::new(cfg.bits).expect("deployable residual width (2|3|4|8)");
         let (rows, cols) = w.shape();
         assert_eq!((salient.rows, salient.cols), (rows, cols), "salient shape");
         let params = quant_params(w, cfg);
         let codes = quantize_codes(w, &params);
-        let bytes_per_row = (cols + 1) / 2;
+        let bytes_per_row = codec.bytes_for(cols);
         let mut packed = Vec::with_capacity(rows * bytes_per_row);
         for i in 0..rows {
-            packed.extend_from_slice(&pack_nibbles(&codes[i * cols..(i + 1) * cols]));
+            packed.extend_from_slice(&codec.pack(&codes[i * cols..(i + 1) * cols]));
         }
-        Self { rows, cols, packed, bytes_per_row, params, salient: salient.to_csr() }
+        Self { rows, cols, packed, bytes_per_row, params, codec, salient: salient.to_csr() }
     }
 
+    /// `(rows, cols)` of the dense weight this matrix stands in for.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
 
+    /// Number of FP32 entries in the salient overlay.
     pub fn nnz_salient(&self) -> usize {
         self.salient.nnz()
     }
 
-    /// Packed int4 codes of row `i` (igemm decodes them itself).
+    /// Residual code width in bits (2, 3, 4 or 8).
+    pub fn bits(&self) -> u32 {
+        self.codec.bits()
+    }
+
+    /// Packed codes of row `i` (igemm decodes them itself).
     #[inline]
     pub(crate) fn packed_row(&self, i: usize) -> &[u8] {
         &self.packed[i * self.bytes_per_row..(i + 1) * self.bytes_per_row]
+    }
+
+    /// The residual's bit-stream codec.
+    #[inline]
+    pub(crate) fn codec(&self) -> BitPack {
+        self.codec
     }
 
     /// Residual quantization parameters (per-row or per-tensor scales).
@@ -108,18 +134,45 @@ impl QuantizedMatrix {
         (self.rows * self.cols * 4) as f64 / self.nbytes() as f64
     }
 
+    /// Decode row `i` into `wrow` as scaled f32 with the salient entries
+    /// patched in — `W_eff[i, :]` materialized once. `cbuf` is an i8
+    /// scratch of at least `cols` (unused on the 4-bit LUT fast path).
+    fn decode_row_patched(&self, i: usize, wrow: &mut [f32], cbuf: &mut [i8]) {
+        let scale = self.params.scale_for_row(i);
+        let prow = self.packed_row(i);
+        if self.codec.bits() == 4 {
+            let lut = nibble_lut();
+            let pairs = self.cols / 2;
+            for b in 0..pairs {
+                let d = lut[prow[b] as usize];
+                wrow[2 * b] = d[0] * scale;
+                wrow[2 * b + 1] = d[1] * scale;
+            }
+            if self.cols % 2 == 1 {
+                wrow[self.cols - 1] = sign_extend4(prow[pairs] & 0x0F) as f32 * scale;
+            }
+        } else {
+            self.codec.unpack_into(prow, &mut cbuf[..self.cols]);
+            for (o, &c) in wrow.iter_mut().zip(cbuf.iter()) {
+                *o = c as f32 * scale;
+            }
+        }
+        for (c, v) in self.salient.row(i) {
+            wrow[c] = v;
+        }
+    }
+
     /// Reconstruct the effective dense weight the paper evaluates:
     /// salient coordinates exact, everything else dequantized.
     pub fn dequantize_dense(&self) -> Matrix {
         let mut out = Matrix::zeros(self.rows, self.cols);
+        let mut cbuf = vec![0i8; self.cols];
         for i in 0..self.rows {
             let scale = self.params.scale_for_row(i);
-            let prow = &self.packed[i * self.bytes_per_row..(i + 1) * self.bytes_per_row];
+            self.codec.unpack_into(self.packed_row(i), &mut cbuf);
             let orow = out.row_mut(i);
-            for j in 0..self.cols {
-                let byte = prow[j / 2];
-                let nib = if j % 2 == 0 { byte & 0x0F } else { byte >> 4 };
-                orow[j] = sign_extend4(nib) as f32 * scale;
+            for (o, &c) in orow.iter_mut().zip(&cbuf) {
+                *o = c as f32 * scale;
             }
             for (c, v) in self.salient.row(i) {
                 orow[c] = v;
@@ -130,16 +183,31 @@ impl QuantizedMatrix {
 
     /// Fused mixed-precision matvec: `y = W_eff x`.
     ///
-    /// Per row: unpack-dequant-dot over the packed residual, then patch the
-    /// salient coordinates by adding `(v - deq) * x[c]` — two reads per
-    /// salient entry instead of a dense branch per element.
+    /// 4-bit rows run the fused LUT kernel (`matvec4`): unpack-
+    /// dequant-dot over the packed residual, then patch the salient
+    /// coordinates by adding `(v - deq) * x[c]` — two reads per salient
+    /// entry instead of a dense branch per element. Other widths decode
+    /// each row once through the codec and dot the patched row.
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
+        if self.codec.bits() == 4 {
+            return self.matvec4(x, y);
+        }
+        let mut wrow = vec![0.0f32; self.cols];
+        let mut cbuf = vec![0i8; self.cols];
+        for i in 0..self.rows {
+            self.decode_row_patched(i, &mut wrow, &mut cbuf);
+            y[i] = dot(&wrow, x, self.cols);
+        }
+    }
+
+    /// The fused 4-bit matvec kernel (see [`Self::matvec`]).
+    fn matvec4(&self, x: &[f32], y: &mut [f32]) {
         let lut = nibble_lut();
         for i in 0..self.rows {
             let scale = self.params.scale_for_row(i);
-            let prow = &self.packed[i * self.bytes_per_row..(i + 1) * self.bytes_per_row];
+            let prow = self.packed_row(i);
             // dot over packed pairs: LUT-decoded codes accumulate in two
             // f32 lanes (per-nibble), scaled once per row
             let pairs = self.cols / 2;
@@ -171,10 +239,10 @@ impl QuantizedMatrix {
     /// Batch-panel blocking: each packed weight row is decoded (and
     /// salient-patched) **once per batch** into a scratch row, then
     /// streamed against every request row with the unrolled f32 dot — the
-    /// old per-(row, request) nibble decode was the dominant waste of the
-    /// fused forward (EXPERIMENTS.md §Perf). Single-row batches fall back
-    /// to the fused [`QuantizedMatrix::matvec`], which never materializes
-    /// the decoded row.
+    /// old per-(row, request) decode was the dominant waste of the fused
+    /// forward (EXPERIMENTS.md §Perf). Single-row batches fall back to
+    /// the fused [`QuantizedMatrix::matvec`], which at 4 bits never
+    /// materializes the decoded row.
     pub fn matmul_xt(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols(), self.cols);
         let batch = x.rows();
@@ -183,23 +251,10 @@ impl QuantizedMatrix {
             self.matvec(x.row(0), out.row_mut(0));
             return out;
         }
-        let lut = nibble_lut();
         let mut wrow = vec![0.0f32; self.cols];
-        let pairs = self.cols / 2;
+        let mut cbuf = vec![0i8; self.cols];
         for i in 0..self.rows {
-            let scale = self.params.scale_for_row(i);
-            let prow = self.packed_row(i);
-            for b in 0..pairs {
-                let d = lut[prow[b] as usize];
-                wrow[2 * b] = d[0] * scale;
-                wrow[2 * b + 1] = d[1] * scale;
-            }
-            if self.cols % 2 == 1 {
-                wrow[self.cols - 1] = sign_extend4(prow[pairs] & 0x0F) as f32 * scale;
-            }
-            for (c, v) in self.salient.row(i) {
-                wrow[c] = v;
-            }
+            self.decode_row_patched(i, &mut wrow, &mut cbuf);
             for b in 0..batch {
                 out[(b, i)] = dot(x.row(b), &wrow, self.cols);
             }
@@ -209,7 +264,7 @@ impl QuantizedMatrix {
 
     /// `Y = X W_effᵀ` on the integer-domain kernel ([`super::igemm`]):
     /// dynamic per-row int8 activations, i32 accumulation, salient
-    /// override correction — the serving hot path.
+    /// override correction — the serving hot path at every width.
     pub fn matmul_xt_int(&self, x: &Matrix) -> Matrix {
         let qx = igemm::quantize_rows(x);
         igemm::igemm_xt(self, &qx, x)
@@ -219,6 +274,7 @@ impl QuantizedMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::packing::SUPPORTED_BITS;
     use crate::quant::symmetric::fake_quant;
     use crate::util::rng::Rng;
 
@@ -238,13 +294,24 @@ mod tests {
     }
 
     #[test]
-    fn dequant_matches_fake_quant_when_no_salient() {
+    fn dequant_matches_fake_quant_when_no_salient_every_width() {
         let mut rng = Rng::new(111);
-        let w = random_w(&mut rng, 33, 47);
-        let cfg = QuantConfig::default();
-        let qm = QuantizedMatrix::from_dense(&w, &cfg, &Coo::new(33, 47));
-        let want = fake_quant(&w, &cfg);
-        assert!(qm.dequantize_dense().approx_eq(&want, 1e-7));
+        for bits in SUPPORTED_BITS {
+            let w = random_w(&mut rng, 33, 47);
+            let cfg = QuantConfig { bits, ..QuantConfig::default() };
+            let qm = QuantizedMatrix::from_dense(&w, &cfg, &Coo::new(33, 47));
+            assert_eq!(qm.bits(), bits);
+            let want = fake_quant(&w, &cfg);
+            assert!(qm.dequantize_dense().approx_eq(&want, 1e-7), "bits {bits}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "deployable residual width")]
+    fn undeployable_width_panics() {
+        let w = Matrix::zeros(4, 4);
+        let cfg = QuantConfig { bits: 5, ..QuantConfig::default() };
+        QuantizedMatrix::from_dense(&w, &cfg, &Coo::new(4, 4));
     }
 
     #[test]
@@ -261,50 +328,57 @@ mod tests {
     }
 
     #[test]
-    fn matvec_matches_dense_reconstruction() {
+    fn matvec_matches_dense_reconstruction_every_width() {
         let mut rng = Rng::new(113);
-        for &(r, c) in &[(8, 16), (13, 31), (64, 65)] {
-            let w = random_w(&mut rng, r, c);
-            let sal = random_salient(&mut rng, &w, r.min(c));
-            let qm = QuantizedMatrix::from_dense(&w, &QuantConfig::default(), &sal);
-            let dense = qm.dequantize_dense();
-            let x: Vec<f32> = (0..c).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-            let mut y = vec![0.0f32; r];
-            qm.matvec(&x, &mut y);
-            for i in 0..r {
-                let want: f32 = (0..c).map(|j| dense[(i, j)] * x[j]).sum();
-                assert!(
-                    (y[i] - want).abs() < 1e-3,
-                    "({r},{c}) row {i}: {} vs {want}",
-                    y[i]
-                );
+        for bits in SUPPORTED_BITS {
+            let cfg = QuantConfig { bits, ..QuantConfig::default() };
+            for &(r, c) in &[(8, 16), (13, 31), (64, 65)] {
+                let w = random_w(&mut rng, r, c);
+                let sal = random_salient(&mut rng, &w, r.min(c));
+                let qm = QuantizedMatrix::from_dense(&w, &cfg, &sal);
+                let dense = qm.dequantize_dense();
+                let x: Vec<f32> = (0..c).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let mut y = vec![0.0f32; r];
+                qm.matvec(&x, &mut y);
+                for i in 0..r {
+                    let want: f32 = (0..c).map(|j| dense[(i, j)] * x[j]).sum();
+                    assert!(
+                        (y[i] - want).abs() < 1e-3,
+                        "b={bits} ({r},{c}) row {i}: {} vs {want}",
+                        y[i]
+                    );
+                }
             }
         }
     }
 
     #[test]
-    fn matmul_xt_matches_matvec_rows() {
+    fn matmul_xt_matches_matvec_rows_every_width() {
         // the batch-blocked path dots a decoded+patched row (4-lane f32)
-        // while matvec fuses decode into two lanes + corrections — same
-        // semantics, different summation order, so compare with a small tol
+        // while the 4-bit matvec fuses decode into two lanes + corrections
+        // — same semantics, different summation order, so compare with a
+        // small tolerance
         let mut rng = Rng::new(114);
-        for &(r, c, k) in &[(10usize, 12usize, 0usize), (9, 13, 20), (16, 31, 40)] {
-            let w = random_w(&mut rng, r, c);
-            let sal = random_salient(&mut rng, &w, k);
-            let qm = QuantizedMatrix::from_dense(&w, &QuantConfig::default(), &sal);
-            let mut x = Matrix::zeros(5, c);
-            rng.fill_normal(x.data_mut(), 1.0);
-            let y = qm.matmul_xt(&x);
-            for i in 0..5 {
-                let mut want = vec![0.0f32; r];
-                qm.matvec(x.row(i), &mut want);
-                for j in 0..r {
-                    assert!(
-                        (y[(i, j)] - want[j]).abs() < 1e-4,
-                        "({r},{c},k={k}) [{i},{j}]: {} vs {}",
-                        y[(i, j)],
-                        want[j]
-                    );
+        for bits in SUPPORTED_BITS {
+            let cfg = QuantConfig { bits, ..QuantConfig::default() };
+            for &(r, c, k) in &[(10usize, 12usize, 0usize), (9, 13, 20), (16, 31, 40)] {
+                let w = random_w(&mut rng, r, c);
+                let sal = random_salient(&mut rng, &w, k);
+                let qm = QuantizedMatrix::from_dense(&w, &cfg, &sal);
+                let mut x = Matrix::zeros(5, c);
+                rng.fill_normal(x.data_mut(), 1.0);
+                let y = qm.matmul_xt(&x);
+                for i in 0..5 {
+                    let mut want = vec![0.0f32; r];
+                    qm.matvec(x.row(i), &mut want);
+                    for j in 0..r {
+                        assert!(
+                            (y[(i, j)] - want[j]).abs() < 1e-4,
+                            "b={bits} ({r},{c},k={k}) [{i},{j}]: {} vs {}",
+                            y[(i, j)],
+                            want[j]
+                        );
+                    }
                 }
             }
         }
@@ -349,5 +423,21 @@ mod tests {
         let qm = QuantizedMatrix::from_dense(&w, &QuantConfig::default(), &Coo::new(256, 1024));
         let ratio = qm.compression_ratio();
         assert!(ratio > 7.5 && ratio <= 8.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn compression_scales_with_width() {
+        // 2-bit ≈ 16x, 3-bit ≈ 32/3 ≈ 10.7x, 8-bit ≈ 4x (scales amortized)
+        let mut rng = Rng::new(118);
+        let w = random_w(&mut rng, 256, 1024);
+        let ratio_at = |bits: u32| {
+            let cfg = QuantConfig { bits, ..QuantConfig::default() };
+            QuantizedMatrix::from_dense(&w, &cfg, &Coo::new(256, 1024)).compression_ratio()
+        };
+        let (r2, r3, r4, r8) = (ratio_at(2), ratio_at(3), ratio_at(4), ratio_at(8));
+        assert!(r2 > 15.5 && r2 <= 16.0, "r2 {r2}");
+        assert!(r3 > 10.3 && r3 <= 32.0 / 3.0, "r3 {r3}");
+        assert!(r4 > 7.5 && r4 <= 8.0, "r4 {r4}");
+        assert!(r8 > 3.9 && r8 <= 4.0, "r8 {r8}");
     }
 }

@@ -23,12 +23,17 @@ use super::QuantConfig;
 pub struct QuantParams {
     /// per-tensor scale, or one scale per row when `per_row`
     pub scales: Vec<f32>,
+    /// the absolute clip threshold applied (∞ when clipping is off)
     pub clip: f32,
+    /// whether `scales` holds one scale per row (vs a single scale)
     pub per_row: bool,
+    /// code width these params were computed for
     pub bits: u32,
 }
 
 impl QuantParams {
+    /// The scale governing row `row` (per-tensor params return the single
+    /// shared scale).
     #[inline]
     pub fn scale_for_row(&self, row: usize) -> f32 {
         if self.per_row {
@@ -161,7 +166,7 @@ mod tests {
         let mut rng = Rng::new(72);
         let mut w = Matrix::zeros(10, 10);
         rng.fill_normal(w.data_mut(), 1.0);
-        for bits in [3u32, 4, 8] {
+        for bits in [2u32, 3, 4, 8] {
             let c = QuantConfig { bits, ..Default::default() };
             let p = quant_params(&w, &c);
             let codes = quantize_codes(&w, &p);

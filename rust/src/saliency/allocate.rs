@@ -1,0 +1,501 @@
+//! Spectral-budget mixed-precision bit allocation — the first place the
+//! SVD spectrum drives the *memory budget itself*, not just the FP32
+//! overlay.
+//!
+//! The paper's thesis is that the singular-value spectrum is a data-free
+//! proxy for saliency. The scorers use it to decide *which weights* to
+//! protect; this module uses the same spectrum to decide *how many bits*
+//! each layer's residual deserves under a global bits-per-weight budget
+//! (SliM-LLM-style salience-driven mixed precision, but with zero
+//! calibration data, in the spirit of AdpQ).
+//!
+//! **Sensitivity model.** The salient overlay already preserves the top-r
+//! principal component of each layer, so what b-bit quantization must
+//! carry is the *spectral tail*: `tail_i = ‖W_i‖²_F − Σ_{j≤r} σ_j²`. A
+//! uniform b-bit grid's MSE scales as `4^{-b}` (halving the step per added
+//! bit quarters the squared error), so we model layer i's residual error
+//! at width b as `err_i(b) = tail_i · 4^{-b}` and minimize
+//! `Σ_i err_i(b_i)` subject to `Σ_i n_i·b_i ≤ budget·Σ_i n_i`.
+//!
+//! **Algorithm.** Greedy marginal-error descent: every layer starts at the
+//! narrowest supported width; candidate upgrades (2→3, 3→4, 4→8 per
+//! layer) are ranked once by error-reduction per bit-cost
+//! `tail_i·(4^{-b} − 4^{-b'}) / (n_i·(b'−b))` and accepted in rank order
+//! until the next upgrade would exceed the budget. Because the ranking
+//! depends only on the spectra (never on the budget) and acceptance stops
+//! at the first miss, the accepted set at a larger budget is a superset of
+//! the accepted set at a smaller one — the allocation is **monotone in the
+//! budget** and **never exceeds it**, both property-tested below.
+//!
+//! ```
+//! use svdquant::saliency::allocate::{allocate_bits, AllocStrategy, LayerSpectrum};
+//!
+//! let layers = vec![
+//!     // a layer whose energy is all in the protected head: tail ≈ 0
+//!     LayerSpectrum { name: "flat".into(), numel: 1000, head: vec![10.0], fro2: 100.0 },
+//!     // a layer with a heavy spectral tail: quantization hurts it most
+//!     LayerSpectrum { name: "tailed".into(), numel: 1000, head: vec![10.0], fro2: 900.0 },
+//! ];
+//! let alloc = allocate_bits(&layers, 3.0, AllocStrategy::Spectral).unwrap();
+//! assert!(alloc.avg_bits() <= 3.0);
+//! assert!(alloc.bits_for("tailed").unwrap() > alloc.bits_for("flat").unwrap());
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{rsvd, svd_jacobi, Matrix};
+use crate::quant::packing::SUPPORTED_BITS;
+
+use super::score::SvdScoreMode;
+
+/// How a global average-bits budget is distributed across layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocStrategy {
+    /// Every layer gets the widest supported width ≤ the budget — the
+    /// baseline mixed-precision ablations compare against.
+    Uniform,
+    /// Greedy marginal-error descent on the singular-value tail energy
+    /// (this module's contribution; data-free).
+    Spectral,
+}
+
+impl AllocStrategy {
+    /// Canonical CLI/results name (`"uniform"` / `"spectral"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocStrategy::Uniform => "uniform",
+            AllocStrategy::Spectral => "spectral",
+        }
+    }
+
+    /// Parse a CLI string (case-insensitive).
+    pub fn parse(s: &str) -> Result<AllocStrategy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "uniform" => AllocStrategy::Uniform,
+            "spectral" => AllocStrategy::Spectral,
+            other => bail!("unknown allocation strategy {other:?} (uniform|spectral)"),
+        })
+    }
+}
+
+impl std::fmt::Display for AllocStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The per-layer spectral statistics the allocator consumes — everything
+/// is derived from the weight matrix alone (no calibration data).
+#[derive(Debug, Clone)]
+pub struct LayerSpectrum {
+    /// canonical layer name (matches `ModelConfig::quantizable_names`)
+    pub name: String,
+    /// number of weights in the layer
+    pub numel: usize,
+    /// top singular values, descending (the protected principal head)
+    pub head: Vec<f32>,
+    /// squared Frobenius norm = total spectral energy `Σ_j σ_j²`
+    pub fro2: f64,
+}
+
+impl LayerSpectrum {
+    /// Measure one layer: top-`rank` singular values via the chosen
+    /// factorization plus the exact Frobenius energy.
+    pub fn from_weights(name: &str, w: &Matrix, rank: usize, mode: SvdScoreMode) -> Self {
+        let svd = match mode {
+            SvdScoreMode::Exact => svd_jacobi(w),
+            SvdScoreMode::Randomized { oversample, power_iters, seed } => {
+                rsvd(w, rank, oversample, power_iters, seed)
+            }
+        };
+        let head: Vec<f32> = svd.s.iter().take(rank).copied().collect();
+        let fro2 = w.data().iter().map(|&v| (v as f64) * (v as f64)).sum();
+        Self { name: name.to_string(), numel: w.len(), head, fro2 }
+    }
+
+    /// Spectral tail energy `max(‖W‖²_F − Σ σ_head², 0)` — the part of the
+    /// layer the quantized residual (not the salient overlay) must carry.
+    pub fn tail_energy(&self) -> f64 {
+        let head2: f64 = self.head.iter().map(|&s| (s as f64) * (s as f64)).sum();
+        (self.fro2 - head2).max(0.0)
+    }
+}
+
+/// A per-layer bit-width assignment under a global average-bits budget.
+#[derive(Debug, Clone)]
+pub struct BitAllocation {
+    per_layer: BTreeMap<String, u32>,
+    total_weights: usize,
+    total_bits: u64,
+    strategy: AllocStrategy,
+    requested_avg: f64,
+}
+
+impl BitAllocation {
+    /// The assigned residual width of `layer`, if it was allocated.
+    pub fn bits_for(&self, layer: &str) -> Option<u32> {
+        self.per_layer.get(layer).copied()
+    }
+
+    /// Achieved weight-count-weighted average bits (≤ the requested
+    /// budget by construction).
+    pub fn avg_bits(&self) -> f64 {
+        if self.total_weights == 0 {
+            0.0
+        } else {
+            self.total_bits as f64 / self.total_weights as f64
+        }
+    }
+
+    /// The budget this allocation was asked for.
+    pub fn requested_avg(&self) -> f64 {
+        self.requested_avg
+    }
+
+    /// The strategy that produced it.
+    pub fn strategy(&self) -> AllocStrategy {
+        self.strategy
+    }
+
+    /// Iterate `(layer, bits)` in stable (name) order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u32)> + '_ {
+        self.per_layer.iter().map(|(n, &b)| (n.as_str(), b))
+    }
+
+    /// How many layers sit at each width — the compact summary the CLI
+    /// and the frontier JSON print.
+    pub fn width_histogram(&self) -> BTreeMap<u32, usize> {
+        let mut h = BTreeMap::new();
+        for &b in self.per_layer.values() {
+            *h.entry(b).or_insert(0) += 1;
+        }
+        h
+    }
+}
+
+/// Distribute `avg_budget` bits per weight across `layers`.
+///
+/// `avg_budget` must be ≥ the narrowest supported width (2.0) — below
+/// that no assignment over [`SUPPORTED_BITS`] can satisfy the budget.
+/// Guarantees (property-tested):
+/// * the weight-weighted average of the result never exceeds `avg_budget`;
+/// * monotonicity: raising the budget never lowers any layer's width.
+pub fn allocate_bits(
+    layers: &[LayerSpectrum],
+    avg_budget: f64,
+    strategy: AllocStrategy,
+) -> Result<BitAllocation> {
+    let base = SUPPORTED_BITS[0];
+    if layers.is_empty() {
+        bail!("no layers to allocate bits for");
+    }
+    if !avg_budget.is_finite() || avg_budget < base as f64 {
+        bail!("average-bits budget {avg_budget} below the narrowest width ({base})");
+    }
+    let total_n: usize = layers.iter().map(|l| l.numel).sum();
+    if total_n == 0 {
+        bail!("layers have no weights");
+    }
+    let mut alloc = BitAllocation {
+        per_layer: BTreeMap::new(),
+        total_weights: total_n,
+        total_bits: 0,
+        strategy,
+        requested_avg: avg_budget,
+    };
+    match strategy {
+        AllocStrategy::Uniform => {
+            // widest supported width that fits the budget for every layer
+            let width = SUPPORTED_BITS
+                .iter()
+                .rev()
+                .copied()
+                .find(|&w| w as f64 <= avg_budget + 1e-9)
+                .expect("budget >= narrowest width");
+            for l in layers {
+                alloc.per_layer.insert(l.name.clone(), width);
+            }
+            alloc.total_bits = width as u64 * total_n as u64;
+        }
+        AllocStrategy::Spectral => {
+            // every layer starts at the narrowest width
+            let budget_bits = (avg_budget * total_n as f64).floor() as u64;
+            let mut spent = base as u64 * total_n as u64;
+            debug_assert!(spent <= budget_bits, "guarded by the avg_budget check");
+            let mut bits: Vec<u32> = vec![base; layers.len()];
+            // candidate upgrades ranked by marginal error reduction per
+            // bit-cost; the ranking is budget-independent, and per-layer
+            // ratios strictly decrease with width (4^{-b} is convex), so
+            // sorted order respects each layer's width sequence
+            struct Upgrade {
+                ratio: f64,
+                layer: usize,
+                step: usize,
+                cost: u64,
+                to: u32,
+            }
+            let mut ups: Vec<Upgrade> = Vec::new();
+            for (li, l) in layers.iter().enumerate() {
+                let tail = l.tail_energy();
+                for step in 0..SUPPORTED_BITS.len() - 1 {
+                    let (b0, b1) = (SUPPORTED_BITS[step], SUPPORTED_BITS[step + 1]);
+                    let gain = tail * (4f64.powi(-(b0 as i32)) - 4f64.powi(-(b1 as i32)));
+                    let cost = l.numel as u64 * (b1 - b0) as u64;
+                    ups.push(Upgrade {
+                        ratio: gain / cost.max(1) as f64,
+                        layer: li,
+                        step,
+                        cost,
+                        to: b1,
+                    });
+                }
+            }
+            // ratio desc; ties (e.g. zero-tail layers) break by layer name
+            // then step so the order — and with it the monotonicity
+            // guarantee — is fully deterministic
+            ups.sort_by(|a, b| {
+                b.ratio
+                    .total_cmp(&a.ratio)
+                    .then_with(|| layers[a.layer].name.cmp(&layers[b.layer].name))
+                    .then(a.step.cmp(&b.step))
+            });
+            // prefix acceptance: stop at the FIRST upgrade that does not
+            // fit. Skipping it and continuing would use the budget better
+            // but breaks monotonicity (a larger budget could absorb the
+            // expensive upgrade and then reject a cheap one this budget
+            // accepted).
+            for u in &ups {
+                if spent + u.cost > budget_bits {
+                    break;
+                }
+                spent += u.cost;
+                bits[u.layer] = u.to;
+            }
+            for (li, l) in layers.iter().enumerate() {
+                alloc.per_layer.insert(l.name.clone(), bits[li]);
+            }
+            alloc.total_bits = spent;
+        }
+    }
+    Ok(alloc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Shrink};
+    use crate::util::rng::Rng;
+
+    fn synth_layers(rng: &mut Rng, n_layers: usize) -> Vec<LayerSpectrum> {
+        (0..n_layers)
+            .map(|i| {
+                let numel = rng.range(1, 5000);
+                let head_e = rng.uniform(0.0, 100.0);
+                // tails spread over orders of magnitude so rankings are
+                // non-trivial; some layers get a (near-)zero tail
+                let tail = match rng.range(0, 4) {
+                    0 => 0.0,
+                    1 => rng.uniform(0.0, 1e-3),
+                    2 => rng.uniform(0.0, 1.0),
+                    _ => rng.uniform(0.0, 100.0),
+                };
+                LayerSpectrum {
+                    name: format!("layer{i:02}"),
+                    numel,
+                    head: vec![(head_e as f32).sqrt()],
+                    fro2: head_e + tail,
+                }
+            })
+            .collect()
+    }
+
+    #[derive(Debug, Clone)]
+    struct AllocCase {
+        n_layers: usize,
+        seed: u64,
+        /// budgets in milli-bits so the case stays integer (Debug-friendly)
+        lo_mbits: u64,
+        hi_mbits: u64,
+    }
+
+    impl Shrink for AllocCase {
+        fn shrink(&self) -> Vec<Self> {
+            if self.n_layers <= 1 {
+                return Vec::new();
+            }
+            vec![AllocCase { n_layers: self.n_layers / 2, ..self.clone() }]
+        }
+    }
+
+    fn gen_case(rng: &mut Rng) -> AllocCase {
+        let lo = rng.range(2000, 8001) as u64;
+        let hi = rng.range(lo as usize, 8001) as u64;
+        AllocCase {
+            n_layers: rng.range(1, 12),
+            seed: rng.range(0, 1 << 30) as u64,
+            lo_mbits: lo,
+            hi_mbits: hi,
+        }
+    }
+
+    #[test]
+    fn prop_allocation_never_exceeds_budget() {
+        check(
+            "avg_bits() <= requested budget for both strategies",
+            gen_case,
+            |case| {
+                let mut rng = Rng::new(case.seed ^ 0xA110);
+                let layers = synth_layers(&mut rng, case.n_layers);
+                for strategy in [AllocStrategy::Uniform, AllocStrategy::Spectral] {
+                    for &mbits in &[case.lo_mbits, case.hi_mbits] {
+                        let budget = mbits as f64 / 1000.0;
+                        let a = allocate_bits(&layers, budget, strategy)
+                            .map_err(|e| e.to_string())?;
+                        if a.avg_bits() > budget + 1e-9 {
+                            return Err(format!(
+                                "{strategy} at {budget}: avg {} exceeds budget",
+                                a.avg_bits()
+                            ));
+                        }
+                        // every width is a supported one
+                        for (l, b) in a.iter() {
+                            if !SUPPORTED_BITS.contains(&b) {
+                                return Err(format!("{l} got unsupported width {b}"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_allocation_monotone_in_budget() {
+        check(
+            "a larger budget never assigns fewer bits to any layer",
+            gen_case,
+            |case| {
+                let mut rng = Rng::new(case.seed ^ 0x0A11);
+                let layers = synth_layers(&mut rng, case.n_layers);
+                let (lo, hi) = (case.lo_mbits as f64 / 1000.0, case.hi_mbits as f64 / 1000.0);
+                for strategy in [AllocStrategy::Uniform, AllocStrategy::Spectral] {
+                    let a_lo = allocate_bits(&layers, lo, strategy).map_err(|e| e.to_string())?;
+                    let a_hi = allocate_bits(&layers, hi, strategy).map_err(|e| e.to_string())?;
+                    for (layer, b_lo) in a_lo.iter() {
+                        let b_hi = a_hi.bits_for(layer).ok_or("layer vanished")?;
+                        if b_hi < b_lo {
+                            return Err(format!(
+                                "{strategy}: {layer} dropped {b_lo} -> {b_hi} \
+                                 when budget rose {lo} -> {hi}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn spectral_prefers_heavy_tails() {
+        let mk = |name: &str, tail: f64| LayerSpectrum {
+            name: name.into(),
+            numel: 100,
+            head: vec![10.0],
+            fro2: 100.0 + tail,
+        };
+        let layers = vec![mk("big_tail", 1000.0), mk("flat", 0.001)];
+        let a = allocate_bits(&layers, 3.0, AllocStrategy::Spectral).unwrap();
+        assert!(
+            a.bits_for("big_tail").unwrap() > a.bits_for("flat").unwrap(),
+            "{:?}",
+            a
+        );
+        assert!(a.avg_bits() <= 3.0);
+        // at avg 3.0 over two equal layers the only split is {4, 2}
+        assert_eq!(a.bits_for("big_tail"), Some(4));
+        assert_eq!(a.bits_for("flat"), Some(2));
+    }
+
+    #[test]
+    fn uniform_picks_widest_fitting_width() {
+        let layers = vec![LayerSpectrum {
+            name: "l".into(),
+            numel: 10,
+            head: vec![],
+            fro2: 1.0,
+        }];
+        for (budget, want) in
+            [(2.0, 2u32), (2.9, 2), (3.0, 3), (3.5, 3), (4.0, 4), (7.9, 4), (8.0, 8)]
+        {
+            let a = allocate_bits(&layers, budget, AllocStrategy::Uniform).unwrap();
+            assert_eq!(a.bits_for("l"), Some(want), "budget {budget}");
+            assert!(a.avg_bits() <= budget);
+        }
+    }
+
+    #[test]
+    fn budget_extremes() {
+        let layers = vec![
+            LayerSpectrum { name: "a".into(), numel: 7, head: vec![], fro2: 5.0 },
+            LayerSpectrum { name: "b".into(), numel: 13, head: vec![], fro2: 0.5 },
+        ];
+        // below the narrowest width: impossible
+        for strategy in [AllocStrategy::Uniform, AllocStrategy::Spectral] {
+            assert!(allocate_bits(&layers, 1.5, strategy).is_err());
+            assert!(allocate_bits(&layers, f64::NAN, strategy).is_err());
+        }
+        assert!(allocate_bits(&[], 4.0, AllocStrategy::Spectral).is_err());
+        // a giant budget saturates every layer at the widest width
+        let a = allocate_bits(&layers, 8.0, AllocStrategy::Spectral).unwrap();
+        assert!(a.iter().all(|(_, b)| b == 8), "{a:?}");
+        assert!((a.avg_bits() - 8.0).abs() < 1e-12);
+        // exactly the base width: nothing can upgrade
+        let a2 = allocate_bits(&layers, 2.0, AllocStrategy::Spectral).unwrap();
+        assert!(a2.iter().all(|(_, b)| b == 2));
+    }
+
+    #[test]
+    fn width_histogram_counts_layers() {
+        let layers = vec![
+            LayerSpectrum { name: "a".into(), numel: 100, head: vec![], fro2: 100.0 },
+            LayerSpectrum { name: "b".into(), numel: 100, head: vec![], fro2: 0.0 },
+            LayerSpectrum { name: "c".into(), numel: 100, head: vec![], fro2: 0.0 },
+        ];
+        let a = allocate_bits(&layers, 3.0, AllocStrategy::Spectral).unwrap();
+        let h = a.width_histogram();
+        assert_eq!(h.values().sum::<usize>(), 3);
+        assert_eq!(a.strategy(), AllocStrategy::Spectral);
+        assert_eq!(a.requested_avg(), 3.0);
+    }
+
+    #[test]
+    fn layer_spectrum_from_weights() {
+        let mut rng = Rng::new(55);
+        let mut w = Matrix::zeros(20, 30);
+        rng.fill_normal(w.data_mut(), 1.0);
+        let exact = LayerSpectrum::from_weights("l", &w, 4, SvdScoreMode::Exact);
+        assert_eq!(exact.numel, 600);
+        assert_eq!(exact.head.len(), 4);
+        // head energy + tail energy = total Frobenius energy
+        let head2: f64 = exact.head.iter().map(|&s| (s as f64).powi(2)).sum();
+        assert!((head2 + exact.tail_energy() - exact.fro2).abs() < 1e-6 * exact.fro2);
+        // the randomized estimate lands close to the exact one
+        let approx = LayerSpectrum::from_weights("l", &w, 4, SvdScoreMode::default());
+        let rel = (approx.tail_energy() - exact.tail_energy()).abs() / exact.tail_energy();
+        assert!(rel < 0.05, "tail energy rel err {rel}");
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [AllocStrategy::Uniform, AllocStrategy::Spectral] {
+            assert_eq!(AllocStrategy::parse(s.name()).unwrap(), s);
+            assert_eq!(format!("{s}"), s.name());
+        }
+        assert_eq!(AllocStrategy::parse("SPECTRAL").unwrap(), AllocStrategy::Spectral);
+        assert!(AllocStrategy::parse("greedy").is_err());
+    }
+}

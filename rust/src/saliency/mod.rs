@@ -19,15 +19,24 @@
 //! [`QuantizePipeline`](crate::coordinator::QuantizePipeline) drives
 //! scorers over whole checkpoints with memoization and layer parallelism.
 //!
+//! [`allocate`] extends the same spectral signal from *which weights* to
+//! *how many bits*: a per-layer bit-width allocator over a global
+//! average-bits budget, driven purely by singular-value tail energies
+//! (still no calibration data — DESIGN.md §9).
+//!
 //! [`Method`] survives only as a parse/display shim for the paper's five
 //! original method names — results keys and old CLI strings keep working —
 //! new code should hold `Box<dyn Scorer>` resolved via [`resolve_scorer`].
 
+#![warn(missing_docs)]
+
+pub mod allocate;
 pub mod overlap;
 pub mod score;
 pub mod scorer;
 pub mod topk;
 
+pub use allocate::{allocate_bits, AllocStrategy, BitAllocation, LayerSpectrum};
 pub use overlap::{iou, record_selection_overlaps, OverlapReport, SelectionGrid};
 pub use score::{awq_score, magnitude_score, random_score, spqr_score, svd_score, SvdScoreMode};
 pub use scorer::{
@@ -44,20 +53,28 @@ use anyhow::{bail, Result};
 /// accepts names outside this enum, e.g. `"hybrid"`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Method {
+    /// Uniform random scores (§III-A1 baseline).
     Random,
+    /// Plain `|w|` (sanity baseline, not in the paper's tables).
     Magnitude,
+    /// AWQ activation-magnitude scoring (§III-A2, data-aware).
     Awq,
+    /// SpQR/OBS damped-Hessian scoring (§III-A3, data-aware).
     Spqr,
+    /// The paper's SVD principal-reconstruction scoring (§III-A4,
+    /// data-free).
     Svd,
 }
 
 impl Method {
+    /// Every legacy method, registry order.
     pub const ALL: [Method; 5] =
         [Method::Random, Method::Magnitude, Method::Awq, Method::Spqr, Method::Svd];
 
     /// The trio the paper's tables compare.
     pub const PAPER: [Method; 3] = [Method::Awq, Method::Spqr, Method::Svd];
 
+    /// Canonical results/CLI name (identical to the registry scorer name).
     pub fn name(&self) -> &'static str {
         match self {
             Method::Random => "random",
@@ -68,6 +85,8 @@ impl Method {
         }
     }
 
+    /// Parse a historical CLI string (canonical names + aliases like
+    /// `"ours"`/`"hessian"`), case-insensitive.
     pub fn parse(s: &str) -> Result<Method> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "random" | "rand" => Method::Random,

@@ -40,10 +40,12 @@ pub struct OverlapReport {
 }
 
 impl OverlapReport {
+    /// Empty report.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one layer's IoU against `baseline` at budget `k`.
     pub fn record(&mut self, baseline: &str, k: usize, layer_iou: f64) {
         let e = self.acc.entry((baseline.to_string(), k)).or_insert((0.0, 0));
         e.0 += layer_iou;
@@ -65,6 +67,7 @@ impl OverlapReport {
         ks
     }
 
+    /// All baselines present (sorted).
     pub fn baselines(&self) -> Vec<String> {
         let mut bs: Vec<String> = self.acc.keys().map(|(b, _)| b.clone()).collect();
         bs.sort();

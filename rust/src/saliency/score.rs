@@ -17,7 +17,14 @@ pub enum SvdScoreMode {
     /// one-sided Jacobi, O(d³) — the reference
     Exact,
     /// randomized range-finder, O(r·d²) — the paper's §VI-A fast path
-    Randomized { oversample: usize, power_iters: usize, seed: u64 },
+    Randomized {
+        /// extra random directions beyond the target rank
+        oversample: usize,
+        /// subspace power iterations for spectral contrast
+        power_iters: usize,
+        /// RNG seed (the factorization is deterministic given it)
+        seed: u64,
+    },
 }
 
 impl Default for SvdScoreMode {

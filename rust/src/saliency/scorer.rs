@@ -44,6 +44,7 @@ impl<'a> ScoreCtx<'a> {
         ScoreCtx { calib: None }
     }
 
+    /// Context carrying calibration statistics for data-aware scorers.
     pub fn with_calib(calib: &'a CalibStats) -> ScoreCtx<'a> {
         ScoreCtx { calib: Some(calib) }
     }
@@ -83,10 +84,12 @@ pub trait Scorer: Send + Sync {
 /// deterministic in `(seed, layer name)`.
 #[derive(Debug, Clone, Copy)]
 pub struct RandomScorer {
+    /// Base seed; each layer derives its own stream from it.
     pub seed: u64,
 }
 
 impl RandomScorer {
+    /// Scorer whose per-layer streams derive from `seed`.
     pub fn new(seed: u64) -> Self {
         Self { seed }
     }
@@ -156,10 +159,12 @@ impl Scorer for AwqScorer {
 /// (data-aware).
 #[derive(Debug, Clone, Copy)]
 pub struct SpqrScorer {
+    /// Hessian damping factor (paper: 0.01).
     pub damp: f32,
 }
 
 impl SpqrScorer {
+    /// Scorer with the given Hessian damping.
     pub fn new(damp: f32) -> Self {
         Self { damp }
     }
@@ -194,11 +199,14 @@ impl Scorer for SpqrScorer {
 /// principal reconstruction. Data-free.
 #[derive(Debug, Clone, Copy)]
 pub struct SvdScorer {
+    /// Rank of the principal reconstruction (paper: 8).
     pub rank: usize,
+    /// Exact Jacobi or randomized factorization.
     pub mode: SvdScoreMode,
 }
 
 impl SvdScorer {
+    /// Scorer at the given reconstruction rank and factorization mode.
     pub fn new(rank: usize, mode: SvdScoreMode) -> Self {
         Self { rank, mode }
     }
@@ -310,6 +318,7 @@ impl Scorer for HybridScorer {
 pub struct ScorerParams {
     /// rank of the principal reconstruction (paper: 8)
     pub svd_rank: usize,
+    /// exact vs randomized SVD factorization
     pub svd_mode: SvdScoreMode,
     /// SpQR Hessian damping (paper: 0.01)
     pub spqr_damp: f32,
@@ -376,6 +385,16 @@ pub fn available_scorers() -> Vec<&'static str> {
 
 /// Resolve a CLI/config string (canonical name or alias, case-insensitive)
 /// to a scorer built from `params`.
+///
+/// ```
+/// use svdquant::saliency::{resolve_scorer, ScorerParams};
+///
+/// let params = ScorerParams::default();
+/// let svd = resolve_scorer("ours", &params).unwrap(); // paper alias
+/// assert_eq!(svd.name(), "svd");
+/// assert!(!svd.needs_calibration()); // the data-free headline
+/// assert!(resolve_scorer("gptq", &params).is_err());
+/// ```
 pub fn resolve(name: &str, params: &ScorerParams) -> Result<Box<dyn Scorer>> {
     let key = name.to_ascii_lowercase();
     for (canon, aliases, factory) in REGISTRY {

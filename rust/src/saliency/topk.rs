@@ -15,13 +15,16 @@ use crate::sparse::Coo;
 /// The selected salient coordinates of one weight matrix.
 #[derive(Debug, Clone)]
 pub struct SalientSet {
+    /// rows of the matrix the selection indexes into
     pub rows: usize,
+    /// columns of the matrix the selection indexes into
     pub cols: usize,
     /// flat indices (row-major), sorted ascending
     pub indices: Vec<u32>,
 }
 
 impl SalientSet {
+    /// Number of selected entries.
     pub fn k(&self) -> usize {
         self.indices.len()
     }
