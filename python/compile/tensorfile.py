@@ -3,28 +3,40 @@ path and the rust runtime.
 
 Layout (all little-endian):
 
-    bytes 0..4    magic  b"QTZ1"
+    bytes 0..4    magic  b"QTZ1" (checkpoints) or b"QTZ2" (quantized-model
+                         artifacts, which carry an explicit format version)
     bytes 4..8    u32    header_len (bytes of JSON that follow)
     bytes 8..8+h  JSON   {"tensors": {name: {"dtype", "shape", "offset",
-                          "nbytes"}}, "meta": {...}}
+                          "nbytes", "crc32"?}}, "meta": {...},
+                          "version"?: int}
+                         — space-padded so the data section starts at a
+                         64-byte-aligned absolute file offset
     then          raw tensor bytes; each tensor's offset is relative to the
                   start of the data section and 64-byte aligned.
 
-dtypes: "f32", "i32", "i64", "u8", "i8". The rust reader lives in
-rust/src/tensorfile/. Keep the two implementations in lock-step; the format
-is deliberately trivial (safetensors-like) so both sides stay small.
+dtypes: "f32", "i32", "i64", "u8", "i8", "u32". Per-tensor "crc32" is the
+zlib/IEEE CRC-32 of the raw bytes; readers verify it when present (legacy
+files without it still load). QTZ2 files carry "version"; readers refuse
+versions newer than FORMAT_VERSION. The rust reader/writer lives in
+rust/src/tensorfile/. Keep the two implementations in lock-step; the
+format is deliberately trivial (safetensors-like) so both sides stay
+small.
 """
 
 from __future__ import annotations
 
 import json
 import struct
+import zlib
 from typing import Dict, Any, Tuple
 
 import numpy as np
 
-MAGIC = b"QTZ1"
+MAGIC_V1 = b"QTZ1"
+MAGIC_V2 = b"QTZ2"
+MAGIC = MAGIC_V1  # legacy alias
 ALIGN = 64
+FORMAT_VERSION = 1
 
 _DTYPES = {
     "f32": np.float32,
@@ -32,6 +44,7 @@ _DTYPES = {
     "i64": np.int64,
     "u8": np.uint8,
     "i8": np.int8,
+    "u32": np.uint32,
 }
 _NP2STR = {np.dtype(v): k for k, v in _DTYPES.items()}
 
@@ -40,8 +53,19 @@ def _align(n: int) -> int:
     return (n + ALIGN - 1) // ALIGN * ALIGN
 
 
-def write(path: str, tensors: Dict[str, np.ndarray], meta: Dict[str, Any] | None = None) -> None:
-    """Write a dict of numpy arrays (+ JSON-able metadata) to `path`."""
+def write(
+    path: str,
+    tensors: Dict[str, np.ndarray],
+    meta: Dict[str, Any] | None = None,
+    qtz2: bool = False,
+) -> None:
+    """Write a dict of numpy arrays (+ JSON-able metadata) to `path`.
+
+    `qtz2=True` stamps the artifact magic and an explicit format version
+    (the rust `TensorFile::save_qtz2` counterpart); the default writes a
+    legacy checkpoint container. Both stamp per-tensor crc32 and pad the
+    header so the data section is 64-byte aligned in the file.
+    """
     entries: Dict[str, Any] = {}
     blobs = []
     offset = 0
@@ -55,14 +79,19 @@ def write(path: str, tensors: Dict[str, np.ndarray], meta: Dict[str, Any] | None
             "shape": list(arr.shape),
             "offset": offset,
             "nbytes": len(raw),
+            "crc32": zlib.crc32(raw) & 0xFFFFFFFF,
         }
         blobs.append((offset, raw))
         offset = _align(offset + len(raw))
-    header = json.dumps(
-        {"tensors": entries, "meta": meta or {}}, separators=(",", ":"), sort_keys=True
-    ).encode("utf-8")
+    doc: Dict[str, Any] = {"tensors": entries, "meta": meta or {}}
+    if qtz2:
+        doc["version"] = FORMAT_VERSION
+    header = json.dumps(doc, separators=(",", ":"), sort_keys=True).encode("utf-8")
+    # space-pad so the data section starts 64-byte aligned in the file
+    # (JSON parsers on both sides tolerate trailing whitespace)
+    header += b" " * (_align(8 + len(header)) - 8 - len(header))
     with open(path, "wb") as f:
-        f.write(MAGIC)
+        f.write(MAGIC_V2 if qtz2 else MAGIC_V1)
         f.write(struct.pack("<I", len(header)))
         f.write(header)
         written = 0
@@ -79,18 +108,46 @@ def write(path: str, tensors: Dict[str, np.ndarray], meta: Dict[str, Any] | None
 
 
 def read(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
-    """Read a qtz file back into {name: array}, meta."""
+    """Read a qtz file (either magic) back into {name: array}, meta.
+
+    Verifies per-tensor crc32 when present and refuses containers written
+    by a newer format version — mirror of the rust `TensorFileView`.
+    """
     with open(path, "rb") as f:
         blob = f.read()
-    if blob[:4] != MAGIC:
-        raise ValueError(f"{path}: bad magic {blob[:4]!r}")
+    if len(blob) < 8:
+        raise ValueError(f"{path}: truncated file ({len(blob)} bytes)")
+    magic = blob[:4]
+    if magic not in (MAGIC_V1, MAGIC_V2):
+        raise ValueError(f"{path}: bad magic {magic!r}")
     (hlen,) = struct.unpack("<I", blob[4:8])
+    if 8 + hlen > len(blob):
+        raise ValueError(f"{path}: truncated header")
     header = json.loads(blob[8 : 8 + hlen].decode("utf-8"))
+    version = header.get("version", 0)
+    if magic == MAGIC_V2 and "version" not in header:
+        raise ValueError(f"{path}: QTZ2 header missing version")
+    if version > FORMAT_VERSION:
+        raise ValueError(
+            f"{path}: unsupported container version {version} "
+            f"(this reader understands <= {FORMAT_VERSION}; written by a newer tool)"
+        )
     data = blob[8 + hlen :]
     out: Dict[str, np.ndarray] = {}
     for name, ent in header["tensors"].items():
         dt = _DTYPES[ent["dtype"]]
         start, n = ent["offset"], ent["nbytes"]
-        arr = np.frombuffer(data[start : start + n], dtype=dt).reshape(ent["shape"])
+        if start + n > len(data):
+            raise ValueError(f"{path}: tensor {name} extends past end of file")
+        raw = data[start : start + n]
+        want = ent.get("crc32")
+        if want is not None:
+            got = zlib.crc32(raw) & 0xFFFFFFFF
+            if got != want:
+                raise ValueError(
+                    f"{path}: tensor {name}: checksum mismatch "
+                    f"(stored {want:#010x}, computed {got:#010x}) — file is corrupt"
+                )
+        arr = np.frombuffer(raw, dtype=dt).reshape(ent["shape"])
         out[name] = arr.copy()
     return out, header.get("meta", {})

@@ -206,6 +206,78 @@ fn main() {
         vs.wall_s / virt_wall_s.max(1e-9)
     );
 
+    // ---- artifact cold start: pipeline-from-scratch vs mmap load ---------
+    // quantize-once/serve-many: the deployed model goes to a QTZ2 artifact,
+    // then cold start (fresh process wants to serve its first request) is
+    // measured both ways — full score→select→pack pipeline vs artifact
+    // open+load — each including the first fused forward. The loaded
+    // model's logits must be bitwise identical to the in-memory model's.
+    qm.set_kernel(GemmKernel::Int8);
+    let art_path = std::path::PathBuf::from("results/bench_model.qtz2");
+    svdquant::artifact::write_artifact(&art_path, &qm, Json::from("engine_inference bench"))
+        .expect("write artifact");
+    let (cold_ids, cold_mask) = dev.batch_slices(0, 8);
+    let reference = qm.forward_fused(&cold_ids, &cold_mask).expect("reference fwd");
+
+    let t0 = std::time::Instant::now();
+    let qm_cold = QuantizePipeline::for_checkpoint(&cfg, &ckpt)
+        .budget(256)
+        .quant(qcfg)
+        .build()
+        .expect("cold pipeline")
+        .deploy(256)
+        .expect("cold deploy");
+    let out_pipe = qm_cold.forward_fused(&cold_ids, &cold_mask).expect("cold fwd");
+    let pipeline_cold_s = t0.elapsed().as_secs_f64();
+    assert_eq!(out_pipe.max_abs_diff(&reference), 0.0, "pipeline redeploy must be deterministic");
+
+    let t0 = std::time::Instant::now();
+    let qa = svdquant::artifact::QuantizedArtifact::open(&art_path).expect("open artifact");
+    let qm_art = qa.load_model().expect("load model");
+    let out_art = qm_art.forward_fused(&cold_ids, &cold_mask).expect("artifact fwd");
+    let artifact_cold_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        out_art.max_abs_diff(&reference),
+        0.0,
+        "artifact-loaded model must match the in-memory model bit for bit"
+    );
+    println!(
+        "  cold start to first logits: pipeline {:.1}ms vs artifact load {:.2}ms ({:.0}x, {})",
+        pipeline_cold_s * 1e3,
+        artifact_cold_s * 1e3,
+        pipeline_cold_s / artifact_cold_s.max(1e-12),
+        if qa.is_mapped() { "mmap" } else { "owned read" },
+    );
+    b.timeit("artifact open + load_model", || {
+        svdquant::artifact::QuantizedArtifact::open(&art_path)
+            .and_then(|qa| qa.load_model())
+            .expect("reload")
+    });
+
+    // resident memory at 1 vs 4 workers loading from one artifact: each
+    // worker owns only scales/overlay/shared-fp32; the packed code streams
+    // are borrowed from one shared mapping, resident once per process
+    let workers: Vec<QuantizedModel> = (0..4).map(|_| qa.load_model().expect("load")).collect();
+    let (owned_1, shared_mapped) = workers[0].resident_split();
+    let owned_4: usize = workers.iter().map(|m| m.resident_split().0).sum();
+    let (in_mem_total, _) = {
+        let (o, b2) = qm.resident_split();
+        (o + b2, b2)
+    };
+    println!(
+        "  resident: 1 worker {} owned + {} shared-mapped; 4 workers {} owned + {} \
+         shared-mapped (4 in-process copies would be {})",
+        svdquant::util::human_bytes(owned_1),
+        svdquant::util::human_bytes(shared_mapped),
+        svdquant::util::human_bytes(owned_4),
+        svdquant::util::human_bytes(shared_mapped),
+        svdquant::util::human_bytes(4 * in_mem_total),
+    );
+    if let Some(rss) = svdquant::util::resident_set_bytes() {
+        println!("  process RSS with 4 artifact workers live: {}", svdquant::util::human_bytes(rss));
+    }
+    drop(workers);
+
     // ---- machine-readable trajectory -------------------------------------
     let fwd_json: Vec<(String, Json)> = fwd_section
         .into_iter()
@@ -224,6 +296,25 @@ fn main() {
                     ("trace_span_s".to_string(), Json::from(vs.wall_s)),
                     ("real_wall_s".to_string(), Json::from(virt_wall_s)),
                     ("completions".to_string(), Json::from(vs.completions as f64)),
+                ]),
+            ),
+            (
+                "cold_start".to_string(),
+                Json::object(vec![
+                    ("pipeline_s".to_string(), Json::from(pipeline_cold_s)),
+                    ("artifact_load_s".to_string(), Json::from(artifact_cold_s)),
+                    (
+                        "speedup".to_string(),
+                        Json::from(pipeline_cold_s / artifact_cold_s.max(1e-12)),
+                    ),
+                    ("artifact_bytes".to_string(), Json::from(qa.file_bytes() as f64)),
+                    ("mapped".to_string(), Json::from(qa.is_mapped())),
+                    ("resident_owned_1_worker".to_string(), Json::from(owned_1 as f64)),
+                    ("resident_owned_4_workers".to_string(), Json::from(owned_4 as f64)),
+                    (
+                        "resident_shared_mapped".to_string(),
+                        Json::from(shared_mapped as f64),
+                    ),
                 ]),
             ),
         ]),

@@ -1,0 +1,217 @@
+//! Read-only blob backing for artifact files: a private file mapping on
+//! 64-bit unix, with a plain `std::fs::read` fallback everywhere else.
+//!
+//! The sandbox carries no `libc` crate, so the two calls we need are
+//! declared by hand — std already links the platform libc on unix. The
+//! FFI is gated on `target_pointer_width = "64"` to sidestep `off_t` ABI
+//! width differences on 32-bit targets, where the fallback path is used
+//! instead. `SVDQUANT_NO_MMAP=1` forces the fallback (tests exercise both
+//! paths; operators can opt out on exotic filesystems).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A read-only byte blob: either a private file mapping or an owned copy.
+///
+/// Lives behind an `Arc` inside [`super::QuantizedArtifact`]; every
+/// `PackedStore::Shared` window of every model loaded from the artifact
+/// clones that `Arc`, so the mapping is unmapped exactly once — after the
+/// last borrower drops.
+pub struct Blob {
+    data: Data,
+}
+
+enum Data {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped { ptr: std::ptr::NonNull<u8>, len: usize },
+    Owned(Vec<u8>),
+}
+
+// SAFETY: the mapping is PROT_READ | MAP_PRIVATE and never written; the
+// pointer is exclusively owned by this Blob until munmap in Drop, so
+// sharing &Blob across threads only ever aliases immutable bytes.
+unsafe impl Send for Blob {}
+unsafe impl Sync for Blob {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod ffi {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+impl Blob {
+    /// Open `path`, preferring a zero-copy private mapping; falls back to
+    /// reading the whole file into memory.
+    pub fn open(path: &Path) -> Result<Self> {
+        if std::env::var_os("SVDQUANT_NO_MMAP").is_some() {
+            return Self::read_owned(path);
+        }
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Ok(blob) = Self::map(path) {
+            return Ok(blob);
+        }
+        Self::read_owned(path)
+    }
+
+    fn read_owned(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(Self { data: Data::Owned(bytes) })
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn map(path: &Path) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            // zero-length mmap is EINVAL; an empty blob needs no mapping
+            return Ok(Self { data: Data::Owned(Vec::new()) });
+        }
+        // SAFETY: fd is valid for the duration of the call, len > 0, and
+        // MAP_FAILED is checked below. The mapping survives the fd close.
+        let ptr = unsafe {
+            ffi::mmap(
+                std::ptr::null_mut(),
+                len,
+                ffi::PROT_READ,
+                ffi::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            anyhow::bail!("mmap({}) failed", path.display());
+        }
+        let ptr = std::ptr::NonNull::new(ptr as *mut u8).expect("checked non-null");
+        Ok(Self { data: Data::Mapped { ptr, len } })
+    }
+
+    /// Whether the bytes are a live file mapping (vs an owned heap copy).
+    pub fn is_mapped(&self) -> bool {
+        match &self.data {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Data::Mapped { .. } => true,
+            Data::Owned(_) => false,
+        }
+    }
+
+    /// The bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.data {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+            // self; the slice's lifetime is tied to &self, and Drop (the
+            // only munmap) cannot run while the borrow is alive.
+            Data::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(ptr.as_ptr(), *len)
+            },
+            Data::Owned(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Data::Mapped { len, .. } => *len,
+            Data::Owned(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl AsRef<[u8]> for Blob {
+    fn as_ref(&self) -> &[u8] {
+        self.bytes()
+    }
+}
+
+impl Drop for Blob {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Data::Mapped { ptr, len } = &self.data {
+            // SAFETY: exactly the region mmap returned; dropped once.
+            unsafe {
+                ffi::munmap(ptr.as_ptr() as *mut std::os::raw::c_void, *len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Blob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Blob({} B, {})",
+            self.len(),
+            if self.is_mapped() { "mapped" } else { "owned" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("svdquant_test_blob");
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(name)
+    }
+
+    #[test]
+    fn mapped_and_owned_agree() {
+        let path = tmp("blob.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(5000).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let mapped = Blob::open(&path).unwrap();
+        assert_eq!(mapped.bytes(), &payload[..]);
+        assert_eq!(mapped.len(), payload.len());
+        let owned = Blob::read_owned(&path).unwrap();
+        assert!(!owned.is_mapped());
+        assert_eq!(owned.bytes(), mapped.bytes());
+    }
+
+    #[test]
+    fn empty_file_is_owned_empty() {
+        let path = tmp("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let blob = Blob::open(&path).unwrap();
+        assert!(blob.is_empty());
+        assert!(!blob.is_mapped());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Blob::open(std::path::Path::new("/nonexistent/x.qtz2")).is_err());
+    }
+
+    #[test]
+    fn mapping_outlives_shared_borrowers() {
+        let path = tmp("shared.bin");
+        std::fs::write(&path, vec![42u8; 1024]).unwrap();
+        let blob = std::sync::Arc::new(Blob::open(&path).unwrap());
+        let clone: std::sync::Arc<dyn AsRef<[u8]> + Send + Sync> = blob.clone();
+        drop(blob);
+        assert!((*clone).as_ref().iter().all(|&b| b == 42));
+    }
+}

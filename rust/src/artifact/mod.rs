@@ -1,0 +1,416 @@
+//! QTZ2 quantized-model artifacts: quantize once, serve many times.
+//!
+//! The paper's saliency score is data-free, so the full
+//! score → allocate → pack pipeline only ever needs to run once per
+//! checkpoint. [`write_artifact`] serializes a deployed
+//! [`QuantizedModel`] — per-layer packed code streams, quant scales, the
+//! salient CSR overlay, per-layer bit widths, the model config, and
+//! per-tensor CRC-32 checksums — into a [`crate::tensorfile`] container
+//! with the `QTZ2` magic. [`QuantizedArtifact::open`] maps the file back
+//! (raw `mmap`, see [`mmap::Blob`]) and [`QuantizedArtifact::load_model`]
+//! rebuilds a servable model in milliseconds: packed code bytes are
+//! *borrowed* straight out of the shared mapping into the igemm kernel
+//! (`PackedStore::Shared`), so N models/workers loaded from one artifact
+//! keep a single resident copy of the code streams.
+//!
+//! Byte-level layout, alignment, checksum scheme and the version policy
+//! are documented in DESIGN.md §10; the header structure is shared with
+//! the legacy checkpoint container (`python/compile/tensorfile.py` reads
+//! both magics — lock-step contract).
+
+pub mod mmap;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::linalg::Matrix;
+use crate::model::{Engine, ModelConfig, Params, QuantizedModel};
+use crate::quant::packing::BitPack;
+use crate::quant::qmatrix::PackedStore;
+use crate::quant::{QuantParams, QuantizedMatrix};
+use crate::sparse::Csr;
+use crate::tensorfile::{DType, Tensor, TensorEntry, TensorFile, TensorFileView};
+use crate::util::human_bytes;
+
+pub use mmap::Blob;
+
+/// `meta.kind` stamped into every quantized-model artifact; `open` refuses
+/// QTZ2 containers carrying anything else.
+pub const ARTIFACT_KIND: &str = "svdquant/quantized-model";
+
+/// Serialize a deployed model to `path` as a QTZ2 artifact.
+///
+/// Tensor naming: `model/<param>` holds each *shared* (non-quantizable)
+/// FP32 parameter; each quantizable layer contributes `q/<layer>/codes`
+/// (u8, `[rows, bytes_per_row]`), `q/<layer>/scales` (f32),
+/// `q/<layer>/sal_indptr` + `q/<layer>/sal_cols` (u32) and
+/// `q/<layer>/sal_vals` (f32). Dense copies of quantizable weights are
+/// deliberately *not* stored — that is the artifact's memory saving.
+/// Layer metadata (bits, shape, per_row, clip) and the model config live
+/// in the header's `meta`; `provenance` is caller-supplied free-form JSON
+/// (task, scoring method, budget, seed, ...).
+pub fn write_artifact(
+    path: impl AsRef<Path>,
+    model: &QuantizedModel,
+    provenance: Json,
+) -> Result<()> {
+    let path = path.as_ref();
+    let cfg = *model.engine().cfg();
+    let params = model.engine().params();
+    let quantizable: BTreeSet<String> = cfg.quantizable_names().into_iter().collect();
+    let mut tf = TensorFile::new();
+    for name in cfg.param_names() {
+        if quantizable.contains(&name) {
+            continue;
+        }
+        let m = params.get(&name)?;
+        tf.insert(
+            &format!("model/{name}"),
+            Tensor::from_f32(vec![m.rows(), m.cols()], m.data()),
+        );
+    }
+    let mut layers = Vec::new();
+    for (name, q) in model.qweights() {
+        let (rows, cols) = q.shape();
+        let p = q.quant_params();
+        let s = q.salient();
+        tf.insert(
+            &format!("q/{name}/codes"),
+            Tensor::from_u8(vec![rows, q.bytes_per_row()], q.packed_bytes().to_vec()),
+        );
+        tf.insert(
+            &format!("q/{name}/scales"),
+            Tensor::from_f32(vec![p.scales.len()], &p.scales),
+        );
+        tf.insert(
+            &format!("q/{name}/sal_indptr"),
+            Tensor::from_u32(vec![s.row_ptr.len()], &s.row_ptr),
+        );
+        tf.insert(
+            &format!("q/{name}/sal_cols"),
+            Tensor::from_u32(vec![s.col_idx.len()], &s.col_idx),
+        );
+        tf.insert(
+            &format!("q/{name}/sal_vals"),
+            Tensor::from_f32(vec![s.values.len()], &s.values),
+        );
+        // clip may be +inf (no clipping), which JSON cannot carry — null
+        let clip = if p.clip.is_finite() { Json::from(p.clip as f64) } else { Json::Null };
+        layers.push((
+            name.clone(),
+            Json::object(vec![
+                ("bits".into(), Json::from(q.bits() as usize)),
+                ("rows".into(), Json::from(rows)),
+                ("cols".into(), Json::from(cols)),
+                ("per_row".into(), Json::from(p.per_row)),
+                ("clip".into(), clip),
+                ("nnz".into(), Json::from(s.nnz())),
+            ]),
+        ));
+    }
+    tf.meta = Json::object(vec![
+        ("kind".into(), Json::from(ARTIFACT_KIND)),
+        ("model".into(), cfg.to_json()),
+        ("layers".into(), Json::object(layers)),
+        ("provenance".into(), provenance),
+    ]);
+    tf.save_qtz2(path)
+        .with_context(|| format!("writing artifact {}", path.display()))
+}
+
+/// An opened (mapped or read) QTZ2 artifact: header decoded, every
+/// checksum verified, blob shared behind an `Arc` so loaded models can
+/// borrow packed code bytes from it for as long as they live.
+#[derive(Debug)]
+pub struct QuantizedArtifact {
+    blob: Arc<Blob>,
+    entries: BTreeMap<String, TensorEntry>,
+    data_start: usize,
+    version: u32,
+    verified: usize,
+    meta: Json,
+    model_cfg: ModelConfig,
+}
+
+impl QuantizedArtifact {
+    /// Open `path`: map (or read) the file, parse and validate the
+    /// header, verify every per-tensor checksum. Any corruption —
+    /// truncation, bad magic, header damage, flipped data bits, or a
+    /// format version from the future — errors here with context; nothing
+    /// is deferred to the kernels.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        Self::open_inner(path)
+            .with_context(|| format!("loading artifact {}", path.display()))
+    }
+
+    fn open_inner(path: &Path) -> Result<Self> {
+        let blob = Arc::new(Blob::open(path)?);
+        let (entries, data_start, version, verified, meta) = {
+            let view = TensorFileView::parse(blob.bytes())?;
+            if !view.is_qtz2() {
+                bail!("not a QTZ2 artifact (legacy QTZ1 container — a checkpoint, not a quantized model)");
+            }
+            let verified = view.verify_checksums()?;
+            (
+                view.entries().clone(),
+                view.data_start(),
+                view.version(),
+                verified,
+                view.meta().clone(),
+            )
+        };
+        let kind = meta.get("kind").and_then(|k| k.as_str()).unwrap_or("");
+        if kind != ARTIFACT_KIND {
+            bail!("meta.kind is {kind:?}, expected {ARTIFACT_KIND:?}");
+        }
+        let model_cfg = ModelConfig::from_json(
+            meta.get("model").context("meta missing model config")?,
+        )
+        .context("artifact model config")?;
+        Ok(Self { blob, entries, data_start, version, verified, meta, model_cfg })
+    }
+
+    /// The model configuration stored in the header.
+    pub fn model_cfg(&self) -> &ModelConfig {
+        &self.model_cfg
+    }
+
+    /// Header metadata (kind, model, layers, provenance).
+    pub fn meta(&self) -> &Json {
+        &self.meta
+    }
+
+    /// Container format version.
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Whether the backing bytes are an actual file mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.blob.is_mapped()
+    }
+
+    /// On-disk size in bytes.
+    pub fn file_bytes(&self) -> usize {
+        self.blob.len()
+    }
+
+    fn entry(&self, name: &str) -> Result<&TensorEntry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("artifact missing tensor {name:?}"))
+    }
+
+    fn bytes(&self, name: &str) -> Result<&[u8]> {
+        let e = self.entry(name)?;
+        Ok(&self.blob.bytes()[self.data_start + e.offset..self.data_start + e.offset + e.nbytes])
+    }
+
+    fn f32s(&self, name: &str) -> Result<Vec<f32>> {
+        let e = self.entry(name)?;
+        if e.dtype != DType::F32 {
+            bail!("tensor {name} is {:?}, wanted F32", e.dtype);
+        }
+        Ok(self
+            .bytes(name)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn u32s(&self, name: &str) -> Result<Vec<u32>> {
+        let e = self.entry(name)?;
+        if e.dtype != DType::U32 {
+            bail!("tensor {name} is {:?}, wanted U32", e.dtype);
+        }
+        Ok(self
+            .bytes(name)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Rebuild a servable [`QuantizedModel`]. Packed code streams are
+    /// borrowed zero-copy from the shared blob (every call shares the same
+    /// mapping); scales, CSR overlay and the shared FP32 parameters are
+    /// parsed into owned storage (small, and element-wise `from_le_bytes`
+    /// sidesteps any alignment hazard). Call it N times to get N models
+    /// sharing one resident copy of the code bytes.
+    pub fn load_model(&self) -> Result<QuantizedModel> {
+        self.load_model_inner()
+            .context("reconstructing model from artifact")
+    }
+
+    fn load_model_inner(&self) -> Result<QuantizedModel> {
+        let cfg = self.model_cfg;
+        let quantizable: BTreeSet<String> = cfg.quantizable_names().into_iter().collect();
+        let mut map = BTreeMap::new();
+        for name in cfg.param_names() {
+            if quantizable.contains(&name) {
+                continue;
+            }
+            let tname = format!("model/{name}");
+            let e = self.entry(&tname)?;
+            if e.shape.len() != 2 {
+                bail!("tensor {tname}: expected a 2-d matrix, got shape {:?}", e.shape);
+            }
+            let (r, c) = (e.shape[0], e.shape[1]);
+            map.insert(name, Matrix::from_vec(r, c, self.f32s(&tname)?));
+        }
+        let layer_meta = self
+            .meta
+            .get("layers")
+            .and_then(|l| l.as_object())
+            .context("meta missing layers")?;
+        let stored: BTreeSet<&String> = layer_meta.keys().collect();
+        for name in &quantizable {
+            if !stored.contains(name) {
+                bail!("artifact has no layer entry for {name}");
+            }
+        }
+        for name in &stored {
+            if !quantizable.contains(name.as_str()) {
+                bail!("artifact layer {name} is not quantizable under the stored model config");
+            }
+        }
+        let mut qweights = BTreeMap::new();
+        for (name, lm) in layer_meta {
+            let qm = self
+                .load_layer(name, lm)
+                .with_context(|| format!("layer {name}"))?;
+            qweights.insert(name.clone(), qm);
+        }
+        let engine = Engine::with_shared_params(cfg, Params::from_map(map))?;
+        QuantizedModel::from_parts(engine, qweights)
+    }
+
+    fn load_layer(&self, name: &str, lm: &Json) -> Result<QuantizedMatrix> {
+        let get = |k: &str| -> Result<usize> {
+            lm.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("layer meta missing {k}"))
+        };
+        let bits = get("bits")? as u32;
+        let rows = get("rows")?;
+        let cols = get("cols")?;
+        let per_row = lm
+            .get("per_row")
+            .and_then(|v| v.as_bool())
+            .context("layer meta missing per_row")?;
+        let clip = match lm.get("clip") {
+            Some(Json::Null) => f32::INFINITY,
+            Some(v) => v.as_f64().context("layer meta clip not a number")? as f32,
+            None => bail!("layer meta missing clip"),
+        };
+        let codec = BitPack::new(bits)?;
+        let codes_name = format!("q/{name}/codes");
+        let e = self.entry(&codes_name)?;
+        if e.dtype != DType::U8 {
+            bail!("tensor {codes_name} is {:?}, wanted U8", e.dtype);
+        }
+        if e.shape.len() != 2 || e.shape[0] != rows {
+            bail!("tensor {codes_name}: shape {:?} does not match {rows} rows", e.shape);
+        }
+        codec
+            .validate_stream(e.shape[1], cols)
+            .with_context(|| format!("tensor {codes_name} row stride"))?;
+        let (offset, len) = (self.data_start + e.offset, e.nbytes);
+        let blob: Arc<dyn AsRef<[u8]> + Send + Sync> = self.blob.clone();
+        let packed = PackedStore::Shared { blob, offset, len };
+        let scales = self.f32s(&format!("q/{name}/scales"))?;
+        let salient = Csr {
+            rows,
+            cols,
+            row_ptr: self.u32s(&format!("q/{name}/sal_indptr"))?,
+            col_idx: self.u32s(&format!("q/{name}/sal_cols"))?,
+            values: self.f32s(&format!("q/{name}/sal_vals"))?,
+        };
+        QuantizedMatrix::from_parts(
+            rows,
+            cols,
+            packed,
+            QuantParams { scales, clip, per_row, bits },
+            codec,
+            salient,
+        )
+    }
+
+    /// Human-readable dump for `svdquant artifact inspect`: container
+    /// facts, model config, per-layer widths/shapes/overlay sizes, and
+    /// checksum status (checksums were already verified at `open`).
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        let cfg = &self.model_cfg;
+        out.push_str(&format!(
+            "QTZ2 quantized-model artifact (version {}, {}, {} on disk)\n",
+            self.version,
+            if self.is_mapped() { "mmap" } else { "owned read" },
+            human_bytes(self.file_bytes()),
+        ));
+        out.push_str(&format!(
+            "model: hidden {}, layers {}, heads {}, ffn {}, vocab {}, max_len {}, classes {}\n",
+            cfg.hidden, cfg.layers, cfg.heads, cfg.ffn, cfg.vocab_size, cfg.max_len, cfg.n_classes,
+        ));
+        out.push_str(&format!(
+            "checksums: {}/{} tensors verified OK\n",
+            self.verified,
+            self.entries.len(),
+        ));
+        if let Some(prov) = self.meta.get("provenance") {
+            out.push_str(&format!("provenance: {}\n", prov.compact()));
+        }
+        let layers = self.meta.get("layers").and_then(|l| l.as_object());
+        let n_layers = layers.map_or(0, |l| l.len());
+        out.push_str(&format!("layers ({n_layers}):\n"));
+        out.push_str(&format!(
+            "  {:<20} {:>4} {:>6} {:>6} {:>7} {:>7} {:>12}\n",
+            "name", "bits", "rows", "cols", "scales", "nnz", "codes",
+        ));
+        let mut code_bytes = 0usize;
+        let mut overlay_bytes = 0usize;
+        let mut dense_bytes = 0usize;
+        if let Some(layers) = layers {
+            for (name, lm) in layers {
+                let g = |k: &str| lm.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+                let (bits, rows, cols, nnz) = (g("bits"), g("rows"), g("cols"), g("nnz"));
+                let codes = self
+                    .entry(&format!("q/{name}/codes"))
+                    .map(|e| e.nbytes)
+                    .unwrap_or(0);
+                let scales = self
+                    .entry(&format!("q/{name}/scales"))
+                    .map(|e| e.nbytes / 4)
+                    .unwrap_or(0);
+                out.push_str(&format!(
+                    "  {name:<20} {bits:>4} {rows:>6} {cols:>6} {scales:>7} {nnz:>7} {:>12}\n",
+                    human_bytes(codes),
+                ));
+                code_bytes += codes;
+                overlay_bytes += (rows + 1) * 4 + nnz * 8 + scales * 4;
+                dense_bytes += rows * cols * 4;
+            }
+        }
+        let shared: usize = self
+            .entries
+            .iter()
+            .filter(|(n, _)| n.starts_with("model/"))
+            .map(|(_, e)| e.nbytes)
+            .sum();
+        let quant_total = code_bytes + overlay_bytes;
+        out.push_str(&format!(
+            "totals: codes {}, salient+scales {}, shared fp32 {}; quantized layers {} vs dense {} ({:.2}x)\n",
+            human_bytes(code_bytes),
+            human_bytes(overlay_bytes),
+            human_bytes(shared),
+            human_bytes(quant_total),
+            human_bytes(dense_bytes),
+            if quant_total > 0 { dense_bytes as f64 / quant_total as f64 } else { 0.0 },
+        ));
+        out
+    }
+}

@@ -359,6 +359,26 @@ impl<'a> QuantizePipeline<'a> {
         let k = self.budget;
         self.run_with_budget(k)
     }
+
+    /// Select at budget `k` and build the *deployable* packed model — the
+    /// serving-side sibling of [`QuantizePipeline::run_with_budget`]
+    /// (which produces the simulated dense-reconstruction params). Honors
+    /// the installed per-layer bit allocation, if any. This is also what
+    /// `quantize --emit-artifact` serializes via `artifact::write_artifact`.
+    pub fn deploy(&mut self, k: usize) -> Result<crate::model::QuantizedModel> {
+        use crate::model::QuantizedModel;
+        let sels = self.select(k)?;
+        match &self.alloc {
+            Some(a) => QuantizedModel::build_allocated(
+                *self.cfg,
+                self.ckpt.clone(),
+                &self.qcfg,
+                &sels,
+                a,
+            ),
+            None => QuantizedModel::build(*self.cfg, self.ckpt.clone(), &self.qcfg, &sels),
+        }
+    }
 }
 
 #[cfg(test)]

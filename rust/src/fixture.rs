@@ -90,15 +90,13 @@ pub fn deployed_fixture(
     n_samples: usize,
 ) -> Result<(QuantizedModel, Dataset)> {
     let ckpt = synthetic_checkpoint(cfg, seed);
-    let qcfg = QuantConfig::default();
-    let sels = {
+    let qm = {
         let mut pipe = QuantizePipeline::for_checkpoint(cfg, &ckpt)
             .budget(k)
-            .quant(qcfg)
+            .quant(QuantConfig::default())
             .build()?;
-        pipe.select(k)?
+        pipe.deploy(k)?
     };
-    let qm = QuantizedModel::build(*cfg, ckpt, &qcfg, &sels)?;
     let data = synthetic_dataset(cfg, n_samples, seed ^ 0xDA7A);
     Ok((qm, data))
 }

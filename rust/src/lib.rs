@@ -43,7 +43,9 @@
 //! * **L3 (this crate)** — selection ([`saliency`]: scorers + top-k),
 //!   quantization ([`quant`]), calibration ([`calib`]), the pipeline and
 //!   sweep orchestration ([`coordinator`]), evaluation ([`eval`]),
-//!   reporting ([`report`]), serving ([`coordinator::server`]).
+//!   reporting ([`report`]), serving ([`coordinator::server`]), and the
+//!   QTZ2 quantized-artifact format with mmap-shared weights
+//!   ([`artifact`], DESIGN.md §10).
 //! * **L2** — the JAX model, AOT-lowered once to `artifacts/hlo/*.hlo.txt`;
 //!   executed from [`runtime`]. Python never runs on the request path.
 //! * **L1** — Pallas kernels (quant-dequant, SVD score map, mixed-precision
@@ -57,6 +59,7 @@
 //! property-testing generators), and `rust/vendor/` carries the `anyhow`
 //! shim and the `xla` stub the manifest points at. See DESIGN.md §7.
 
+pub mod artifact;
 pub mod calib;
 pub mod coordinator;
 pub mod data;
@@ -75,6 +78,7 @@ pub mod util;
 
 /// Convenience re-exports for the common pipeline.
 pub mod prelude {
+    pub use crate::artifact::{write_artifact, QuantizedArtifact};
     pub use crate::calib::CalibStats;
     pub use crate::coordinator::{Artifacts, PreserveSpec, QuantizePipeline};
     pub use crate::linalg::Matrix;

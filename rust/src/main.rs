@@ -6,7 +6,8 @@
 //!   overlap    Fig. 2 IoU analysis
 //!   report     re-render tables/figures from the cached sweep results
 //!   serve      multi-worker, multi-tenant batching demo over the
-//!              deployed packed b-bit models
+//!              deployed packed b-bit models (or mmap-loaded --artifact)
+//!   artifact   emit / inspect QTZ2 quantized-model artifacts
 //!   selfcheck  engine ↔ PJRT ↔ parity-vector consistency checks
 //!   info       artifacts/manifest summary
 //!
@@ -18,6 +19,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use svdquant::artifact::{write_artifact, QuantizedArtifact};
 use svdquant::calib::CalibStats;
 use svdquant::coordinator::server::{serve, Registry, ServerConfig};
 use svdquant::coordinator::sweep::{run_sweep, SweepConfig, SweepResults};
@@ -54,6 +56,7 @@ fn main() {
             "overlap" => cmd_overlap(&rest),
             "report" => cmd_report(&rest),
             "serve" => cmd_serve(&rest),
+            "artifact" => cmd_artifact(&rest),
             "selfcheck" => cmd_selfcheck(&rest),
             "info" => cmd_info(&rest),
             "help" | "-h" | "--help" => {
@@ -80,6 +83,7 @@ fn print_help() {
          \x20 overlap    Fig.2 IoU of SVD vs AWQ/SpQR selections\n\
          \x20 report     re-render report from cached sweep results\n\
          \x20 serve      multi-tenant batching inference on packed b-bit weights\n\
+         \x20 artifact   emit/inspect QTZ2 quantized-model artifacts (mmap cold start)\n\
          \x20 selfcheck  numerics: rust engine vs PJRT vs parity vectors\n\
          \x20 info       artifacts summary\n\n\
          scorers: {}\n\
@@ -332,7 +336,13 @@ fn cmd_quantize(rest: &[String]) -> Result<()> {
         .flag("alloc", Some("spectral"), "bit-allocation strategy (spectral|uniform)")
         .switch("per-row", "per-row scales")
         .switch("engine", "evaluate on the rust engine instead of PJRT")
-        .flag("save", None, "write the quantized checkpoint to this .qtz path");
+        .flag("save", None, "write the quantized checkpoint to this .qtz path")
+        .flag(
+            "emit-artifact",
+            None,
+            "write the deployed packed model to this QTZ2 artifact path \
+             (serve it later with `serve --artifact`, no re-quantization)",
+        );
     let a = p.parse(rest)?;
     let art = Artifacts::open(a.str("artifacts")?)?;
     let task = a.str("task")?;
@@ -402,6 +412,18 @@ fn cmd_quantize(rest: &[String]) -> Result<()> {
         }
         tf.save(path)?;
         println!("saved quantized checkpoint -> {path}");
+    }
+    if let Some(path) = a.get("emit-artifact") {
+        let qm = pipe.deploy(pipe.budget())?;
+        let provenance = svdquant::json::Json::object(vec![
+            ("task".into(), svdquant::json::Json::from(task)),
+            ("method".into(), svdquant::json::Json::from(method.as_str())),
+            ("k".into(), svdquant::json::Json::from(pipe.budget())),
+        ]);
+        write_artifact(path, &qm, provenance)?;
+        println!(
+            "emitted QTZ2 artifact -> {path} (inspect: `svdquant artifact inspect {path}`)"
+        );
     }
     Ok(())
 }
@@ -498,17 +520,60 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     .flag("deadline-ms", Some("0"), "per-request latency budget; 0 = none")
     .flag("avg-bits", None, "deploy mixed-precision weights at this average-bits budget")
     .flag("alloc", Some("spectral"), "bit-allocation strategy (spectral|uniform)")
+    .flag(
+        "artifact",
+        None,
+        "comma-separated QTZ2 artifact paths, one per --tasks entry: mmap-load \
+         prepackaged models (millisecond cold start, weights shared across \
+         workers) instead of scoring/packing in-process",
+    )
     .switch("bursty", "bursty arrivals instead of poisson")
     .switch("virtual", "replay the trace in virtual time (hermetic dry-run)");
     let a = p.parse(rest)?;
-    let art = Artifacts::open(a.str("artifacts")?)?;
     let tasks = a.list("tasks");
     anyhow::ensure!(!tasks.is_empty(), "--tasks needs at least one task");
     let threads = apply_threads(&a)?;
     let qcfg = QuantConfig::default();
 
-    // deploy one packed model per tenant task
     let mut deployed: Vec<(String, QuantizedModel, svdquant::data::Dataset)> = Vec::new();
+    let apaths = a.list("artifact");
+    if !apaths.is_empty() {
+        // cold-start path: mmap each artifact, borrow packed weights zero-copy
+        anyhow::ensure!(
+            apaths.len() == tasks.len(),
+            "--artifact needs one path per --tasks entry ({} tasks, {} artifacts)",
+            tasks.len(),
+            apaths.len()
+        );
+        // artifacts dir is optional here: real dev sets are used when the
+        // stored model config matches, synthetic ones otherwise
+        let art = a.get("artifacts").and_then(|p| Artifacts::open(p).ok());
+        for (task, apath) in tasks.iter().zip(&apaths) {
+            let t = timer::Timer::start();
+            let qa = QuantizedArtifact::open(apath)?;
+            let qm = qa.load_model()?;
+            let load_ms = t.elapsed_s() * 1e3;
+            let (owned, borrowed) = qm.resident_split();
+            println!(
+                "loaded {task} from {apath} in {load_ms:.1}ms ({}): resident {} owned + {} {}",
+                if qa.is_mapped() { "mmap" } else { "owned read" },
+                svdquant::util::human_bytes(owned),
+                svdquant::util::human_bytes(borrowed),
+                if qa.is_mapped() { "shared-mapped" } else { "file-backed (read)" },
+            );
+            let dev = match &art {
+                Some(art) if art.model_cfg == *qa.model_cfg() => art.dataset(task, "dev")?,
+                // same seeds as fixture::serving_fixture — matches the
+                // in-process deployment bit for bit on synthetic checkpoints
+                _ => svdquant::fixture::synthetic_dataset(qa.model_cfg(), 192, 0xDA7A),
+            };
+            deployed.push((task.clone(), qm, dev));
+        }
+        return serve_deployed(&a, deployed);
+    }
+
+    // in-process path: score, select and pack one model per tenant task
+    let art = Artifacts::open(a.str("artifacts")?)?;
     for task in &tasks {
         let scorer = resolve_scorer(a.str("method")?, &art.scorer_params())?;
         let ckpt = art.checkpoint(task)?;
@@ -554,6 +619,15 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         let dev = art.dataset(task, "dev")?;
         deployed.push((task.clone(), qm, dev));
     }
+    serve_deployed(&a, deployed)
+}
+
+/// Run the batching server over already-deployed models; shared tail of
+/// both `serve` paths (in-process quantization and `--artifact` loading).
+fn serve_deployed(
+    a: &svdquant::util::cli::Args,
+    deployed: Vec<(String, QuantizedModel, svdquant::data::Dataset)>,
+) -> Result<()> {
     let mut registry = Registry::new();
     for (name, qm, dev) in &deployed {
         registry.add(name, qm, dev);
@@ -599,6 +673,86 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             t.accuracy
         );
     }
+    Ok(())
+}
+
+fn cmd_artifact(rest: &[String]) -> Result<()> {
+    let (sub, rest) = match rest.split_first() {
+        Some((s, r)) if !s.starts_with('-') => (s.as_str(), r.to_vec()),
+        _ => bail!(
+            "usage: svdquant artifact <emit|inspect> [flags]\n\
+             \x20 emit     quantize the hermetic synthetic checkpoint into a QTZ2 artifact\n\
+             \x20 inspect  validate checksums and dump an artifact's header"
+        ),
+    };
+    match sub {
+        "emit" => cmd_artifact_emit(&rest),
+        "inspect" => cmd_artifact_inspect(&rest),
+        other => bail!("unknown artifact subcommand {other:?} (emit|inspect)"),
+    }
+}
+
+fn cmd_artifact_emit(rest: &[String]) -> Result<()> {
+    let p = threads_flag(Parser::new(
+        "artifact emit",
+        "quantize the hermetic synthetic checkpoint (fixture::small_config, \
+         seed 0xC0FFEE) and write it as a QTZ2 artifact; needs no `make \
+         artifacts` — CI serves from exactly this",
+    ))
+    .flag("out", Some("results/model.qtz2"), "output artifact path")
+    .flag("k", Some("64"), "salient protection budget per layer")
+    .flag(
+        "avg-bits",
+        None,
+        "mixed-precision average-bits budget (spectral allocator, rank 8)",
+    );
+    let a = p.parse(rest)?;
+    let threads = apply_threads(&a)?;
+    let cfg = svdquant::fixture::small_config();
+    let ckpt = svdquant::fixture::synthetic_checkpoint(&cfg, 0xC0FFEE);
+    let k = a.usize("k")?;
+    let t = timer::Timer::start();
+    let mut pipe = QuantizePipeline::for_checkpoint(&cfg, &ckpt)
+        .budget(k)
+        .quant(QuantConfig::default())
+        .threads(threads)
+        .build()?;
+    if let Some(avg) = a.get("avg-bits") {
+        let avg: f64 = avg.parse().context("bad --avg-bits")?;
+        let alloc = pipe.allocate(avg, AllocStrategy::parse("spectral")?, 8)?;
+        println!(
+            "allocated widths (budget {avg:.2} -> achieved {:.2}): {:?}",
+            alloc.avg_bits(),
+            alloc.width_histogram()
+        );
+        pipe.set_allocation(Some(alloc));
+    }
+    let qm = pipe.deploy(k)?;
+    let out = a.str("out")?;
+    let provenance = svdquant::json::Json::object(vec![
+        ("task".into(), svdquant::json::Json::from("synthetic")),
+        ("method".into(), svdquant::json::Json::from("svd")),
+        ("k".into(), svdquant::json::Json::from(k)),
+        ("seed".into(), svdquant::json::Json::from(0xC0FFEE_usize)),
+    ]);
+    write_artifact(out, &qm, provenance)?;
+    println!("quantized + packed + serialized in {:.2}s -> {out}", t.elapsed_s());
+    Ok(())
+}
+
+fn cmd_artifact_inspect(rest: &[String]) -> Result<()> {
+    let p = Parser::new(
+        "artifact inspect",
+        "open a QTZ2 artifact (verifying every per-tensor checksum) and \
+         print its header: model config, per-layer widths, overlay sizes",
+    );
+    let a = p.parse(rest)?;
+    let path = a
+        .positional()
+        .first()
+        .context("usage: svdquant artifact inspect <path.qtz2>")?;
+    let qa = QuantizedArtifact::open(path)?;
+    print!("{}", qa.describe());
     Ok(())
 }
 

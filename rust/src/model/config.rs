@@ -58,6 +58,21 @@ impl ModelConfig {
         })
     }
 
+    /// Serialize as the `model` object (manifest / QTZ2 artifact header);
+    /// exact inverse of [`ModelConfig::from_json`].
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("vocab_size".into(), Json::from(self.vocab_size)),
+            ("max_len".into(), Json::from(self.max_len)),
+            ("hidden".into(), Json::from(self.hidden)),
+            ("layers".into(), Json::from(self.layers)),
+            ("heads".into(), Json::from(self.heads)),
+            ("ffn".into(), Json::from(self.ffn)),
+            ("n_classes".into(), Json::from(self.n_classes)),
+            ("export_batch".into(), Json::from(self.export_batch)),
+        ])
+    }
+
     /// Canonical parameter order (mirror of python `param_names`); this is
     /// also the HLO argument order after (input_ids, attention_mask).
     pub fn param_names(&self) -> Vec<String> {
@@ -96,6 +111,30 @@ impl ModelConfig {
         names
     }
 
+    /// Dense `(rows, cols)` of a quantizable matrix — what the artifact
+    /// loader validates packed streams against. `None` for names outside
+    /// [`ModelConfig::quantizable_names`].
+    pub fn quantizable_shape(&self, name: &str) -> Option<(usize, usize)> {
+        let h = self.hidden;
+        if name == "pre_classifier.w" {
+            Some((h, h))
+        } else if name == "classifier.w" {
+            Some((self.n_classes, h))
+        } else if name.ends_with(".wf1") {
+            Some((self.ffn, h))
+        } else if name.ends_with(".wf2") {
+            Some((h, self.ffn))
+        } else if name.ends_with(".wq")
+            || name.ends_with(".wk")
+            || name.ends_with(".wv")
+            || name.ends_with(".wo")
+        {
+            Some((h, h))
+        } else {
+            None
+        }
+    }
+
     /// Total parameter count (diagnostics / README).
     pub fn param_count(&self) -> usize {
         let h = self.hidden;
@@ -129,6 +168,25 @@ mod tests {
         assert_eq!(ModelConfig::from_json(&j).unwrap(), ModelConfig::default());
         let bad = Json::parse(r#"{"hidden":256}"#).unwrap();
         assert!(ModelConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn to_json_roundtrips() {
+        let cfg = ModelConfig::default();
+        assert_eq!(ModelConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+    }
+
+    #[test]
+    fn quantizable_shape_covers_all_quantizable_names() {
+        let cfg = ModelConfig::default();
+        for name in cfg.quantizable_names() {
+            let (r, c) = cfg.quantizable_shape(&name).expect("shape known");
+            assert!(r > 0 && c > 0, "{name}");
+        }
+        assert!(cfg.quantizable_shape("tok_emb").is_none());
+        assert!(cfg.quantizable_shape("layer0.bq").is_none());
+        assert_eq!(cfg.quantizable_shape("layer0.wf1"), Some((cfg.ffn, cfg.hidden)));
+        assert_eq!(cfg.quantizable_shape("classifier.w"), Some((cfg.n_classes, cfg.hidden)));
     }
 
     #[test]

@@ -30,6 +30,15 @@ impl Engine {
         Ok(Self { cfg, params })
     }
 
+    /// An engine over the *shared* parameter subset only (embeddings,
+    /// biases, LayerNorms) — what a QTZ2 artifact carries in dense form.
+    /// The dense [`Engine::forward`] will fail on the missing quantizable
+    /// weights; the fused quantized forward never reads them.
+    pub fn with_shared_params(cfg: ModelConfig, params: Params) -> Result<Self> {
+        params.validate_shared(&cfg)?;
+        Ok(Self { cfg, params })
+    }
+
     pub fn cfg(&self) -> &ModelConfig {
         &self.cfg
     }

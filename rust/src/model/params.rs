@@ -61,6 +61,29 @@ impl Params {
         Ok(())
     }
 
+    /// Validate only the *shared* (non-quantizable) tensors: what an
+    /// artifact-backed model carries. The quantizable layers live in
+    /// packed form elsewhere (DESIGN.md §10), so their dense entries are
+    /// deliberately absent here — `validate` would reject that.
+    pub fn validate_shared(&self, cfg: &ModelConfig) -> Result<()> {
+        let h = cfg.hidden;
+        let checks = [("tok_emb", (cfg.vocab_size, h)), ("pos_emb", (cfg.max_len, h))];
+        for (name, shape) in checks {
+            let m = self.get(name)?;
+            if m.shape() != shape {
+                bail!("{name}: shape {:?}, expected {:?}", m.shape(), shape);
+            }
+        }
+        let quantizable: std::collections::BTreeSet<String> =
+            cfg.quantizable_names().into_iter().collect();
+        for name in cfg.param_names() {
+            if !quantizable.contains(&name) {
+                self.get(&name)?;
+            }
+        }
+        Ok(())
+    }
+
     pub fn get(&self, name: &str) -> Result<&Matrix> {
         self.map
             .get(name)
@@ -84,6 +107,13 @@ impl Params {
         }
         self.map.insert(name.to_string(), m);
         Ok(())
+    }
+
+    /// Insert or replace without checking against an existing entry —
+    /// the artifact load path materializes dense reconstructions for
+    /// layers the shared store deliberately omits.
+    pub(crate) fn insert_unchecked(&mut self, name: &str, m: Matrix) {
+        self.map.insert(name.to_string(), m);
     }
 
     pub fn names(&self) -> impl Iterator<Item = &String> {

@@ -78,6 +78,69 @@ impl QuantizedModel {
         })
     }
 
+    /// Reassemble a deployed model from parts (the QTZ2 artifact loader):
+    /// an engine over the shared FP32 parameters and one packed matrix per
+    /// quantizable layer. The qweights must cover exactly
+    /// `cfg.quantizable_names()` with config-derived shapes.
+    pub fn from_parts(
+        engine: Engine,
+        qweights: BTreeMap<String, QuantizedMatrix>,
+    ) -> Result<Self> {
+        let cfg = *engine.cfg();
+        let names = cfg.quantizable_names();
+        for name in &names {
+            let qm = qweights
+                .get(name)
+                .with_context(|| format!("missing quantized layer {name}"))?;
+            if let Some(want) = cfg.quantizable_shape(name) {
+                anyhow::ensure!(
+                    qm.shape() == want,
+                    "layer {name}: packed shape {:?} != config shape {want:?}",
+                    qm.shape()
+                );
+            }
+        }
+        anyhow::ensure!(
+            qweights.len() == names.len(),
+            "{} quantized layers, expected {}",
+            qweights.len(),
+            names.len()
+        );
+        Ok(Self { engine, qweights, kernel: GemmKernel::default() })
+    }
+
+    /// The engine holding the shared FP32 parameters (artifact writer).
+    pub(crate) fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// The packed per-layer matrices (artifact writer).
+    pub(crate) fn qweights(&self) -> &BTreeMap<String, QuantizedMatrix> {
+        &self.qweights
+    }
+
+    /// Resident-memory split `(owned, borrowed)` in bytes: shared FP32
+    /// parameters + per-model scales/CSR are owned; packed code streams of
+    /// an artifact-loaded model are borrowed from the shared mapping and
+    /// resident once per process, no matter how many models borrow them.
+    pub fn resident_split(&self) -> (usize, usize) {
+        let mut owned = 0usize;
+        let mut borrowed = 0usize;
+        for m in self.qweights.values() {
+            let (o, b) = m.storage_split();
+            owned += o;
+            borrowed += b;
+        }
+        let p = self.engine.params();
+        let names: Vec<String> = p.names().cloned().collect();
+        for name in names {
+            if let Ok(m) = p.get(&name) {
+                owned += m.data().len() * 4;
+            }
+        }
+        (owned, borrowed)
+    }
+
     /// Residual width of each quantized layer, name-ordered — how many
     /// bits the allocator actually deployed per layer.
     pub fn layer_bits(&self) -> BTreeMap<String, u32> {
@@ -125,7 +188,12 @@ impl QuantizedModel {
     pub fn to_dense_engine(&self) -> Result<Engine> {
         let mut params = self.engine.params().clone();
         for (name, qm) in &self.qweights {
-            params.set(name, qm.dequantize_dense())?;
+            if params.get(name).is_ok() {
+                params.set(name, qm.dequantize_dense())?;
+            } else {
+                // artifact-loaded models omit the dense quantizable slots
+                params.insert_unchecked(name, qm.dequantize_dense());
+            }
         }
         Engine::new(*self.engine.cfg(), params)
     }

@@ -83,6 +83,23 @@ impl BitPack {
         (n * self.bits as usize + 7) / 8
     }
 
+    /// Non-panicking stream-length check: `Ok` iff `packed_len` bytes hold
+    /// exactly `n` codes at this width. The decode entry points *assert*
+    /// their length contract (hot path); loaders reading untrusted bytes
+    /// (the QTZ2 artifact path) call this first so a truncated or padded
+    /// stream fails with context instead of panicking mid-decode.
+    pub fn validate_stream(self, packed_len: usize, n: usize) -> Result<()> {
+        let want = self.bytes_for(n);
+        if packed_len != want {
+            bail!(
+                "packed stream is {packed_len} bytes, expected {want} \
+                 for {n} codes at {} bits",
+                self.bits
+            );
+        }
+        Ok(())
+    }
+
     /// Sign-extend a raw `b`-bit field to `i8`.
     #[inline]
     pub fn sign_extend(self, raw: u8) -> i8 {
@@ -204,6 +221,21 @@ mod tests {
     use super::*;
     use crate::util::proptest::{check, Shrink};
     use crate::util::rng::Rng;
+
+    #[test]
+    fn validate_stream_accepts_exact_and_rejects_off_by_one() {
+        for bits in SUPPORTED_BITS {
+            let codec = BitPack::new(bits).unwrap();
+            for n in [0usize, 1, 7, 8, 65] {
+                let want = codec.bytes_for(n);
+                assert!(codec.validate_stream(want, n).is_ok(), "b={bits} n={n}");
+                if want > 0 {
+                    assert!(codec.validate_stream(want - 1, n).is_err());
+                }
+                assert!(codec.validate_stream(want + 1, n).is_err());
+            }
+        }
+    }
 
     #[test]
     fn roundtrip_all_values() {

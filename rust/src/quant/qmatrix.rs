@@ -21,7 +21,9 @@
 //! allocation each layer's matrix simply carries its own codec, so the
 //! whole serving stack is width-oblivious past this point.
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{bail, Result};
 
 use crate::linalg::matmul::dot;
 use crate::linalg::Matrix;
@@ -49,13 +51,72 @@ fn nibble_lut() -> &'static [[f32; 2]; 256] {
     })
 }
 
+/// Backing storage for the packed residual code stream.
+///
+/// In-process quantization owns its bytes; a model loaded from a QTZ2
+/// artifact instead borrows a window of the shared read-only blob (one
+/// mmap serving N models/workers — DESIGN.md §10). The enum keeps the
+/// rest of `quant` oblivious to where the bytes live: every consumer
+/// goes through [`PackedStore::as_slice`].
+#[derive(Clone)]
+pub(crate) enum PackedStore {
+    /// Codes packed by [`QuantizedMatrix::from_dense`] in this process.
+    Owned(Vec<u8>),
+    /// Zero-copy window `[offset, offset + len)` into a shared blob.
+    /// Every matrix loaded from the same artifact clones the same `Arc`,
+    /// so the mapping's bytes are resident once per process.
+    Shared {
+        blob: Arc<dyn AsRef<[u8]> + Send + Sync>,
+        offset: usize,
+        len: usize,
+    },
+}
+
+impl PackedStore {
+    #[inline]
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            PackedStore::Owned(v) => v,
+            PackedStore::Shared { blob, offset, len } => {
+                &(**blob).as_ref()[*offset..*offset + *len]
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            PackedStore::Owned(v) => v.len(),
+            PackedStore::Shared { len, .. } => *len,
+        }
+    }
+
+    /// `(owned, borrowed)` byte split for resident-memory accounting.
+    fn storage_split(&self) -> (usize, usize) {
+        match self {
+            PackedStore::Owned(v) => (v.len(), 0),
+            PackedStore::Shared { len, .. } => (0, *len),
+        }
+    }
+}
+
+impl std::fmt::Debug for PackedStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PackedStore::Owned(v) => write!(f, "PackedStore::Owned({} B)", v.len()),
+            PackedStore::Shared { offset, len, .. } => {
+                write!(f, "PackedStore::Shared({offset}+{len} B)")
+            }
+        }
+    }
+}
+
 /// A quantized weight matrix: dense packed residual + sparse FP32 salient.
 #[derive(Debug, Clone)]
 pub struct QuantizedMatrix {
     rows: usize,
     cols: usize,
     /// packed b-bit codes, row-major, each row padded to a whole byte
-    packed: Vec<u8>,
+    packed: PackedStore,
     bytes_per_row: usize,
     params: QuantParams,
     /// the residual's bit-stream codec (width = `QuantConfig::bits`)
@@ -82,7 +143,70 @@ impl QuantizedMatrix {
         for i in 0..rows {
             packed.extend_from_slice(&codec.pack(&codes[i * cols..(i + 1) * cols]));
         }
-        Self { rows, cols, packed, bytes_per_row, params, codec, salient: salient.to_csr() }
+        Self {
+            rows,
+            cols,
+            packed: PackedStore::Owned(packed),
+            bytes_per_row,
+            params,
+            codec,
+            salient: salient.to_csr(),
+        }
+    }
+
+    /// Reassemble a matrix from serialized parts (the QTZ2 artifact
+    /// loader). Every length invariant the kernels rely on is validated
+    /// here so a corrupt or mismatched artifact fails with context instead
+    /// of panicking inside a decode loop.
+    pub(crate) fn from_parts(
+        rows: usize,
+        cols: usize,
+        packed: PackedStore,
+        params: QuantParams,
+        codec: BitPack,
+        salient: Csr,
+    ) -> Result<Self> {
+        if params.bits != codec.bits() {
+            bail!("scale bits {} != codec bits {}", params.bits, codec.bits());
+        }
+        let bytes_per_row = codec.bytes_for(cols);
+        if packed.len() != rows * bytes_per_row {
+            bail!(
+                "packed stream is {} bytes, expected {} ({} rows x {} bytes/row)",
+                packed.len(),
+                rows * bytes_per_row,
+                rows,
+                bytes_per_row
+            );
+        }
+        let want_scales = if params.per_row { rows } else { 1 };
+        if params.scales.len() != want_scales {
+            bail!("{} scales, expected {}", params.scales.len(), want_scales);
+        }
+        if (salient.rows, salient.cols) != (rows, cols) {
+            bail!(
+                "salient overlay is {}x{}, matrix is {rows}x{cols}",
+                salient.rows,
+                salient.cols
+            );
+        }
+        if salient.row_ptr.len() != rows + 1 {
+            bail!("salient indptr has {} entries, expected {}", salient.row_ptr.len(), rows + 1);
+        }
+        let nnz = salient.values.len();
+        if salient.col_idx.len() != nnz {
+            bail!("salient col/value length mismatch ({} vs {nnz})", salient.col_idx.len());
+        }
+        if salient.row_ptr[0] != 0 || salient.row_ptr[rows] as usize != nnz {
+            bail!("salient indptr does not span [0, {nnz}]");
+        }
+        if salient.row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            bail!("salient indptr is not monotonic");
+        }
+        if salient.col_idx.iter().any(|&c| c as usize >= cols) {
+            bail!("salient column index out of range (cols = {cols})");
+        }
+        Ok(Self { rows, cols, packed, bytes_per_row, params, codec, salient })
     }
 
     /// `(rows, cols)` of the dense weight this matrix stands in for.
@@ -100,10 +224,22 @@ impl QuantizedMatrix {
         self.codec.bits()
     }
 
-    /// Packed codes of row `i` (igemm decodes them itself).
+    /// Packed codes of row `i` (igemm decodes them itself). On an
+    /// artifact-loaded matrix this slices straight into the shared
+    /// mapping — no copy between disk and the kernel.
     #[inline]
     pub(crate) fn packed_row(&self, i: usize) -> &[u8] {
-        &self.packed[i * self.bytes_per_row..(i + 1) * self.bytes_per_row]
+        &self.packed.as_slice()[i * self.bytes_per_row..(i + 1) * self.bytes_per_row]
+    }
+
+    /// The whole packed code stream, row-major (artifact writer).
+    pub(crate) fn packed_bytes(&self) -> &[u8] {
+        self.packed.as_slice()
+    }
+
+    /// Bytes per packed row (`codec.bytes_for(cols)`).
+    pub(crate) fn bytes_per_row(&self) -> usize {
+        self.bytes_per_row
     }
 
     /// The residual's bit-stream codec.
@@ -127,6 +263,14 @@ impl QuantizedMatrix {
     /// Total storage in bytes (packed codes + scales + CSR overlay).
     pub fn nbytes(&self) -> usize {
         self.packed.len() + self.params.scales.len() * 4 + self.salient.nbytes()
+    }
+
+    /// `(owned, borrowed)` byte split: borrowed bytes live in a shared
+    /// artifact mapping and are resident once per process however many
+    /// models borrow them; scales and the CSR overlay are always owned.
+    pub fn storage_split(&self) -> (usize, usize) {
+        let (owned, borrowed) = self.packed.storage_split();
+        (owned + self.params.scales.len() * 4 + self.salient.nbytes(), borrowed)
     }
 
     /// Compression ratio vs dense f32.

@@ -3,12 +3,31 @@
 //!
 //! Layout (little-endian):
 //! ```text
-//! bytes 0..4    magic  "QTZ1"
+//! bytes 0..4    magic  "QTZ1" (checkpoints) or "QTZ2" (quantized artifacts)
 //! bytes 4..8    u32    header_len
-//! bytes 8..8+h  JSON   {"tensors": {name: {dtype, shape, offset, nbytes}},
+//! bytes 8..8+h  JSON   {"version": v,                       (QTZ2 only)
+//!                       "tensors": {name: {dtype, shape, offset, nbytes,
+//!                                          crc32}},
 //!                       "meta": {...}}
 //! then          data section; offsets are relative to it, 64-byte aligned
 //! ```
+//!
+//! The header JSON is space-padded so the data section starts at a 64-byte
+//! aligned *absolute* file offset: a mapped file therefore hands out
+//! page/cacheline-aligned tensor windows. `crc32` is zlib-compatible
+//! (see `util::crc`) and optional per tensor — files written by older
+//! tools simply skip verification.
+//!
+//! Version policy: "QTZ1" is the frozen legacy magic (implicit version 0,
+//! structure above minus `version`/`crc32`). "QTZ2" carries an explicit
+//! `version` key; readers accept `version <= FORMAT_VERSION` and must
+//! refuse anything newer rather than guess at the layout.
+//!
+//! Two read paths:
+//! * [`TensorFileView`] — zero-copy: parses the header and borrows tensor
+//!   bytes straight from the caller's blob (the artifact mmap path),
+//! * [`TensorFile`] — owned: copies every tensor out (checkpoint loading,
+//!   where the blob is transient anyway). Built on the view.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -17,10 +36,15 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::json::Json;
-use crate::util::align_up;
+use crate::util::{align_up, crc::crc32};
 
-const MAGIC: &[u8; 4] = b"QTZ1";
+const MAGIC_V1: &[u8; 4] = b"QTZ1";
+const MAGIC_V2: &[u8; 4] = b"QTZ2";
 const ALIGN: usize = 64;
+
+/// Highest container `version` this build can read (stamped into QTZ2
+/// headers on write).
+pub const FORMAT_VERSION: u32 = 1;
 
 /// Supported element types.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,12 +54,13 @@ pub enum DType {
     I64,
     U8,
     I8,
+    U32,
 }
 
 impl DType {
     pub fn size(self) -> usize {
         match self {
-            DType::F32 | DType::I32 => 4,
+            DType::F32 | DType::I32 | DType::U32 => 4,
             DType::I64 => 8,
             DType::U8 | DType::I8 => 1,
         }
@@ -48,6 +73,7 @@ impl DType {
             DType::I64 => "i64",
             DType::U8 => "u8",
             DType::I8 => "i8",
+            DType::U32 => "u32",
         }
     }
 
@@ -58,6 +84,7 @@ impl DType {
             "i64" => DType::I64,
             "u8" => DType::U8,
             "i8" => DType::I8,
+            "u32" => DType::U32,
             other => bail!("unsupported dtype {other:?}"),
         })
     }
@@ -90,6 +117,15 @@ impl Tensor {
         Self { dtype: DType::I32, shape, bytes }
     }
 
+    pub fn from_u32(shape: Vec<usize>, data: &[u32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::U32, shape, bytes }
+    }
+
     pub fn from_u8(shape: Vec<usize>, data: Vec<u8>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Self { dtype: DType::U8, shape, bytes: data }
@@ -107,11 +143,7 @@ impl Tensor {
         if self.dtype != DType::F32 {
             bail!("tensor is {:?}, wanted F32", self.dtype);
         }
-        Ok(self
-            .bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        Ok(bytes_to_f32(&self.bytes))
     }
 
     pub fn as_i32(&self) -> Result<Vec<i32>> {
@@ -125,11 +157,243 @@ impl Tensor {
             .collect())
     }
 
+    pub fn as_u32(&self) -> Result<Vec<u32>> {
+        if self.dtype != DType::U32 {
+            bail!("tensor is {:?}, wanted U32", self.dtype);
+        }
+        Ok(bytes_to_u32(&self.bytes))
+    }
+
     pub fn as_u8(&self) -> Result<&[u8]> {
         if self.dtype != DType::U8 {
             bail!("tensor is {:?}, wanted U8", self.dtype);
         }
         Ok(&self.bytes)
+    }
+}
+
+fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn bytes_to_u32(bytes: &[u8]) -> Vec<u32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Header record for one tensor: where it lives in the data section.
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Offset relative to the start of the data section.
+    pub offset: usize,
+    pub nbytes: usize,
+    /// zlib-compatible CRC-32 of the tensor bytes; absent in legacy files.
+    pub crc32: Option<u32>,
+}
+
+/// Zero-copy view of one tensor: header record + borrowed bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    entry: &'a TensorEntry,
+    bytes: &'a [u8],
+}
+
+impl<'a> TensorView<'a> {
+    pub fn dtype(&self) -> DType {
+        self.entry.dtype
+    }
+
+    pub fn shape(&self) -> &'a [usize] {
+        &self.entry.shape
+    }
+
+    /// The raw bytes, borrowed from the underlying blob (no copy).
+    pub fn bytes(&self) -> &'a [u8] {
+        self.bytes
+    }
+
+    /// Decode as f32 (copies; the blob's alignment is not guaranteed by
+    /// the *legacy* format, so elements are re-assembled via `from_le_bytes`).
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.entry.dtype != DType::F32 {
+            bail!("tensor is {:?}, wanted F32", self.entry.dtype);
+        }
+        Ok(bytes_to_f32(self.bytes))
+    }
+
+    pub fn as_u32(&self) -> Result<Vec<u32>> {
+        if self.entry.dtype != DType::U32 {
+            bail!("tensor is {:?}, wanted U32", self.entry.dtype);
+        }
+        Ok(bytes_to_u32(self.bytes))
+    }
+
+    /// Borrow as u8 without any copy (the packed-code fast path).
+    pub fn as_u8(&self) -> Result<&'a [u8]> {
+        if self.entry.dtype != DType::U8 {
+            bail!("tensor is {:?}, wanted U8", self.entry.dtype);
+        }
+        Ok(self.bytes)
+    }
+}
+
+/// Borrowed, zero-copy parse of a `.qtz`/QTZ2 blob: the header is decoded
+/// once, tensor bytes stay in the caller's buffer (file read or mmap) and
+/// are handed out as borrowed slices. [`TensorFile::from_bytes`] and the
+/// artifact loader are both built on this.
+#[derive(Debug)]
+pub struct TensorFileView<'a> {
+    blob: &'a [u8],
+    version: u32,
+    qtz2: bool,
+    data_start: usize,
+    entries: BTreeMap<String, TensorEntry>,
+    meta: Json,
+}
+
+impl<'a> TensorFileView<'a> {
+    pub fn parse(blob: &'a [u8]) -> Result<Self> {
+        if blob.len() < 8 {
+            bail!("truncated file ({} bytes, need at least 8)", blob.len());
+        }
+        let qtz2 = match &blob[..4] {
+            m if m == MAGIC_V1 => false,
+            m if m == MAGIC_V2 => true,
+            _ => bail!("bad magic (not a qtz file)"),
+        };
+        let hlen = u32::from_le_bytes([blob[4], blob[5], blob[6], blob[7]]) as usize;
+        if blob.len() < 8 + hlen {
+            bail!("truncated header");
+        }
+        let text = std::str::from_utf8(&blob[8..8 + hlen])
+            .context("header is not valid UTF-8")?;
+        let header = Json::parse(text).context("header is not valid JSON")?;
+        let version = match header.get("version").and_then(|v| v.as_usize()) {
+            Some(v) => v as u32,
+            None if qtz2 => bail!("QTZ2 header missing \"version\""),
+            None => 0,
+        };
+        if version > FORMAT_VERSION {
+            bail!(
+                "unsupported container version {version} (this build reads \
+                 versions <= {FORMAT_VERSION}; the file was written by a newer tool)"
+            );
+        }
+        let data_start = 8 + hlen;
+        let data_len = blob.len() - data_start;
+        let raw = header
+            .get("tensors")
+            .and_then(|t| t.as_object())
+            .context("header missing tensors")?;
+        let mut entries = BTreeMap::new();
+        for (name, ent) in raw {
+            let dtype = DType::parse(
+                ent.get("dtype").and_then(|d| d.as_str()).context("dtype")?,
+            )?;
+            let shape: Vec<usize> = ent
+                .get("shape")
+                .and_then(|s| s.as_array())
+                .context("shape")?
+                .iter()
+                .map(|v| v.as_usize().context("shape item"))
+                .collect::<Result<_>>()?;
+            let offset = ent.get("offset").and_then(|v| v.as_usize()).context("offset")?;
+            let nbytes = ent.get("nbytes").and_then(|v| v.as_usize()).context("nbytes")?;
+            if offset.checked_add(nbytes).map_or(true, |end| end > data_len) {
+                bail!("tensor {name} extends past end of file");
+            }
+            let expected = shape.iter().product::<usize>() * dtype.size();
+            if expected != nbytes {
+                bail!("tensor {name}: shape/nbytes mismatch ({expected} vs {nbytes})");
+            }
+            let crc = ent.get("crc32").and_then(|v| v.as_usize()).map(|v| v as u32);
+            entries.insert(
+                name.clone(),
+                TensorEntry { dtype, shape, offset, nbytes, crc32: crc },
+            );
+        }
+        let meta = header.get("meta").cloned().unwrap_or(Json::Null);
+        Ok(Self { blob, version, qtz2, data_start, entries, meta })
+    }
+
+    /// Container version (0 for legacy "QTZ1" files).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Whether the blob carries the "QTZ2" magic (quantized artifact).
+    pub fn is_qtz2(&self) -> bool {
+        self.qtz2
+    }
+
+    /// Absolute file offset of the data section (64-byte aligned for
+    /// files written by this crate's QTZ2 writer).
+    pub fn data_start(&self) -> usize {
+        self.data_start
+    }
+
+    pub fn meta(&self) -> &Json {
+        &self.meta
+    }
+
+    pub fn entries(&self) -> &BTreeMap<String, TensorEntry> {
+        &self.entries
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&TensorEntry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("tensor {name:?} not in file"))
+    }
+
+    /// Borrowed raw bytes of `name` (no copy).
+    pub fn bytes(&self, name: &str) -> Result<&'a [u8]> {
+        let e = self.entry(name)?;
+        Ok(self.bytes_of(e))
+    }
+
+    /// Borrowed typed view of `name` (no copy).
+    pub fn view(&self, name: &str) -> Result<TensorView<'_>> {
+        let e = self.entry(name)?;
+        Ok(TensorView { entry: e, bytes: self.bytes_of(e) })
+    }
+
+    /// Absolute `(offset, len)` of `name`'s bytes within the whole blob —
+    /// what the artifact loader records so a shared mapping can hand out
+    /// the same window later without re-parsing the header.
+    pub fn abs_range(&self, name: &str) -> Result<(usize, usize)> {
+        let e = self.entry(name)?;
+        Ok((self.data_start + e.offset, e.nbytes))
+    }
+
+    fn bytes_of(&self, e: &TensorEntry) -> &'a [u8] {
+        &self.blob[self.data_start + e.offset..self.data_start + e.offset + e.nbytes]
+    }
+
+    /// Verify every stored CRC-32; returns how many tensors were checked
+    /// (legacy files without checksums verify vacuously as 0).
+    pub fn verify_checksums(&self) -> Result<usize> {
+        let mut checked = 0usize;
+        for (name, e) in &self.entries {
+            if let Some(want) = e.crc32 {
+                let got = crc32(self.bytes_of(e));
+                if got != want {
+                    bail!(
+                        "tensor {name}: checksum mismatch (stored {want:#010x}, \
+                         computed {got:#010x}) — file is corrupt"
+                    );
+                }
+                checked += 1;
+            }
+        }
+        Ok(checked)
     }
 }
 
@@ -168,96 +432,105 @@ impl TensorFile {
         Self::from_bytes(&blob).with_context(|| format!("parsing {}", path.display()))
     }
 
+    /// Owned parse: borrow via [`TensorFileView`], verify checksums, copy
+    /// each tensor out exactly once.
     pub fn from_bytes(blob: &[u8]) -> Result<Self> {
-        if blob.len() < 8 || &blob[..4] != MAGIC {
-            bail!("bad magic (not a qtz file)");
-        }
-        let hlen = u32::from_le_bytes([blob[4], blob[5], blob[6], blob[7]]) as usize;
-        if blob.len() < 8 + hlen {
-            bail!("truncated header");
-        }
-        let header = Json::parse(std::str::from_utf8(&blob[8..8 + hlen])?)?;
-        let data = &blob[8 + hlen..];
+        let view = TensorFileView::parse(blob)?;
+        view.verify_checksums()?;
         let mut tensors = BTreeMap::new();
-        let entries = header
-            .get("tensors")
-            .and_then(|t| t.as_object())
-            .context("header missing tensors")?;
-        for (name, ent) in entries {
-            let dtype = DType::parse(
-                ent.get("dtype").and_then(|d| d.as_str()).context("dtype")?,
-            )?;
-            let shape: Vec<usize> = ent
-                .get("shape")
-                .and_then(|s| s.as_array())
-                .context("shape")?
-                .iter()
-                .map(|v| v.as_usize().context("shape item"))
-                .collect::<Result<_>>()?;
-            let offset = ent.get("offset").and_then(|v| v.as_usize()).context("offset")?;
-            let nbytes = ent.get("nbytes").and_then(|v| v.as_usize()).context("nbytes")?;
-            if offset + nbytes > data.len() {
-                bail!("tensor {name} extends past end of file");
-            }
-            let expected = shape.iter().product::<usize>() * dtype.size();
-            if expected != nbytes {
-                bail!("tensor {name}: shape/nbytes mismatch ({expected} vs {nbytes})");
-            }
+        for (name, e) in view.entries() {
             tensors.insert(
                 name.clone(),
-                Tensor { dtype, shape, bytes: data[offset..offset + nbytes].to_vec() },
+                Tensor {
+                    dtype: e.dtype,
+                    shape: e.shape.clone(),
+                    bytes: view.bytes(name)?.to_vec(),
+                },
             );
         }
-        let meta = header.get("meta").cloned().unwrap_or(Json::Null);
-        Ok(Self { tensors, meta })
+        Ok(Self { tensors, meta: view.meta().clone() })
     }
 
+    /// Write as a legacy-magic "QTZ1" container (checkpoints, datasets).
+    /// Checksums are stamped; readers that predate them ignore the key.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let mut entries = BTreeMap::new();
-        let mut offset = 0usize;
-        let mut order = Vec::new();
-        for (name, t) in &self.tensors {
-            entries.insert(
-                name.clone(),
-                Json::object(vec![
-                    ("dtype".into(), Json::from(t.dtype.name())),
-                    (
-                        "shape".into(),
-                        Json::Array(t.shape.iter().map(|&s| Json::from(s)).collect()),
-                    ),
-                    ("offset".into(), Json::from(offset)),
-                    ("nbytes".into(), Json::from(t.bytes.len())),
-                ]),
-            );
-            order.push((offset, name.clone()));
-            offset = align_up(offset + t.bytes.len(), ALIGN);
-        }
-        let header = Json::object(vec![
-            ("tensors".into(), Json::Object(entries)),
-            ("meta".into(), self.meta.clone()),
-        ])
-        .compact();
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        f.write_all(&(header.len() as u32).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
-        let mut written = 0usize;
-        for (off, name) in order {
-            if off > written {
-                f.write_all(&vec![0u8; off - written])?;
-                written = off;
-            }
-            let t = &self.tensors[&name];
-            f.write_all(&t.bytes)?;
-            written += t.bytes.len();
-        }
-        f.flush()?;
-        Ok(())
+        write_container(path.as_ref(), MAGIC_V1, None, &self.tensors, &self.meta)
     }
+
+    /// Write as a "QTZ2" container with an explicit format version —
+    /// the quantized-artifact flavor (see `artifact` module).
+    pub fn save_qtz2(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_container(
+            path.as_ref(),
+            MAGIC_V2,
+            Some(FORMAT_VERSION),
+            &self.tensors,
+            &self.meta,
+        )
+    }
+}
+
+/// Shared writer behind both magics: checksums every tensor, pads the
+/// header with spaces so the data section starts 64-byte aligned in the
+/// file, zero-pads between tensors to keep relative offsets aligned.
+fn write_container(
+    path: &Path,
+    magic: &[u8; 4],
+    version: Option<u32>,
+    tensors: &BTreeMap<String, Tensor>,
+    meta: &Json,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut entries = BTreeMap::new();
+    let mut offset = 0usize;
+    let mut order = Vec::new();
+    for (name, t) in tensors {
+        entries.insert(
+            name.clone(),
+            Json::object(vec![
+                ("dtype".into(), Json::from(t.dtype.name())),
+                (
+                    "shape".into(),
+                    Json::Array(t.shape.iter().map(|&s| Json::from(s)).collect()),
+                ),
+                ("offset".into(), Json::from(offset)),
+                ("nbytes".into(), Json::from(t.bytes.len())),
+                ("crc32".into(), Json::from(crc32(&t.bytes) as usize)),
+            ]),
+        );
+        order.push((offset, name.clone()));
+        offset = align_up(offset + t.bytes.len(), ALIGN);
+    }
+    let mut top = vec![
+        ("tensors".into(), Json::Object(entries)),
+        ("meta".into(), meta.clone()),
+    ];
+    if let Some(v) = version {
+        top.push(("version".into(), Json::from(v as usize)));
+    }
+    let mut header = Json::object(top).compact();
+    // space-pad so the data section starts at an ALIGN-ed absolute offset
+    // (JSON parsers on both sides tolerate trailing whitespace)
+    let padded_len = align_up(8 + header.len(), ALIGN) - 8;
+    header.extend(std::iter::repeat(' ').take(padded_len - header.len()));
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(magic)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut written = 0usize;
+    for (off, name) in order {
+        if off > written {
+            f.write_all(&vec![0u8; off - written])?;
+            written = off;
+        }
+        let t = &tensors[&name];
+        f.write_all(&t.bytes)?;
+        written += t.bytes.len();
+    }
+    f.flush()?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -284,6 +557,19 @@ mod tests {
     }
 
     #[test]
+    fn u32_roundtrip() {
+        let mut tf = TensorFile::new();
+        tf.insert("ptr", Tensor::from_u32(vec![3], &[0, 7, u32::MAX]));
+        let dir = std::env::temp_dir().join("svdquant_test_tf");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("u32.qtz");
+        tf.save(&path).unwrap();
+        let re = TensorFile::open(&path).unwrap();
+        assert_eq!(re.get("ptr").unwrap().as_u32().unwrap(), vec![0, 7, u32::MAX]);
+        assert!(re.get("ptr").unwrap().as_f32().is_err());
+    }
+
+    #[test]
     fn missing_tensor_errors() {
         let tf = TensorFile::new();
         assert!(tf.get("nope").is_err());
@@ -300,8 +586,10 @@ mod tests {
         assert_eq!(DType::F32.size(), 4);
         assert_eq!(DType::I64.size(), 8);
         assert_eq!(DType::U8.size(), 1);
+        assert_eq!(DType::U32.size(), 4);
         assert!(DType::parse("f16").is_err());
         assert_eq!(DType::parse("i8").unwrap(), DType::I8);
+        assert_eq!(DType::parse("u32").unwrap(), DType::U32);
     }
 
     #[test]
@@ -309,12 +597,14 @@ mod tests {
         let t = Tensor::from_f32(vec![1], &[1.0]);
         assert!(t.as_i32().is_err());
         assert!(t.as_u8().is_err());
+        assert!(t.as_u32().is_err());
         assert!(t.as_f32().is_ok());
     }
 
     #[test]
     fn alignment_respected() {
-        // two tensors; second must start at a 64-byte aligned offset
+        // two tensors; second must start at a 64-byte aligned offset,
+        // and the data section itself must start 64-byte aligned
         let mut tf = TensorFile::new();
         tf.insert("a", Tensor::from_u8(vec![3], vec![1, 2, 3]));
         tf.insert("b", Tensor::from_u8(vec![2], vec![9, 9]));
@@ -323,7 +613,68 @@ mod tests {
         let path = dir.join("align.qtz");
         tf.save(&path).unwrap();
         let blob = std::fs::read(&path).unwrap();
+        let view = TensorFileView::parse(&blob).unwrap();
+        assert_eq!(view.data_start() % ALIGN, 0);
+        let (abs, len) = view.abs_range("b").unwrap();
+        assert_eq!(abs % ALIGN, 0);
+        assert_eq!(len, 2);
         let re = TensorFile::from_bytes(&blob).unwrap();
         assert_eq!(re.get("b").unwrap().as_u8().unwrap(), &[9, 9]);
+    }
+
+    #[test]
+    fn view_is_zero_copy_and_checksummed() {
+        let mut tf = TensorFile::new();
+        tf.insert("w", Tensor::from_f32(vec![4], &[1.0, -2.0, 3.0, 0.25]));
+        tf.insert("codes", Tensor::from_u8(vec![5], vec![10, 20, 30, 40, 50]));
+        let dir = std::env::temp_dir().join("svdquant_test_tf");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("view.qtz");
+        tf.save(&path).unwrap();
+        let blob = std::fs::read(&path).unwrap();
+        let view = TensorFileView::parse(&blob).unwrap();
+        assert_eq!(view.version(), 0);
+        assert!(!view.is_qtz2());
+        // borrowed slice points inside the blob — no copy
+        let codes = view.view("codes").unwrap().as_u8().unwrap();
+        let blob_range = blob.as_ptr() as usize..blob.as_ptr() as usize + blob.len();
+        assert!(blob_range.contains(&(codes.as_ptr() as usize)));
+        assert_eq!(codes, &[10, 20, 30, 40, 50]);
+        assert_eq!(view.view("w").unwrap().as_f32().unwrap(), vec![1.0, -2.0, 3.0, 0.25]);
+        // both tensors carry checksums and verify
+        assert_eq!(view.verify_checksums().unwrap(), 2);
+        // flip one data byte -> checksum catches it
+        let mut bad = blob.clone();
+        let (abs, _) = view.abs_range("codes").unwrap();
+        bad[abs] ^= 0x40;
+        let bad_view = TensorFileView::parse(&bad).unwrap();
+        let err = bad_view.verify_checksums().unwrap_err();
+        assert!(format!("{err:#}").contains("checksum mismatch"));
+        // owned parse verifies too
+        assert!(TensorFile::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn qtz2_version_gate() {
+        let mut tf = TensorFile::new();
+        tf.insert("x", Tensor::from_u8(vec![1], vec![42]));
+        let dir = std::env::temp_dir().join("svdquant_test_tf");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("v2.qtz2");
+        tf.save_qtz2(&path).unwrap();
+        let blob = std::fs::read(&path).unwrap();
+        let view = TensorFileView::parse(&blob).unwrap();
+        assert!(view.is_qtz2());
+        assert_eq!(view.version(), FORMAT_VERSION);
+        // bump the version in place (same header length) -> must refuse
+        let needle = format!("\"version\":{FORMAT_VERSION}");
+        let pos = blob
+            .windows(needle.len())
+            .position(|w| w == needle.as_bytes())
+            .expect("version key present");
+        let mut bumped = blob.clone();
+        bumped[pos + needle.len() - 1] = b'9';
+        let err = TensorFileView::parse(&bumped).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported container version"));
     }
 }

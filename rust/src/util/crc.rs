@@ -1,0 +1,54 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) — the per-section
+//! checksum of the `.qtz` / QTZ2 containers.
+//!
+//! Matches `zlib.crc32` exactly so `python/compile/tensorfile.py` can verify
+//! the same values without extra dependencies.
+
+use std::sync::OnceLock;
+
+static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+
+fn table() -> &'static [u32; 256] {
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 of `bytes` with init/xor-out `0xFFFFFFFF` (`zlib.crc32` semantics).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard check values, identical to zlib.crc32
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit_flip() {
+        let a = vec![7u8; 1024];
+        let mut b = a.clone();
+        b[512] ^= 0x10;
+        assert_ne!(crc32(&a), crc32(&b));
+    }
+}

@@ -12,11 +12,13 @@
 //! * [`timer`] — wall-clock scopes and counters,
 //! * [`bench`] — the harness behind `cargo bench` (criterion replacement),
 //! * [`plot`] — ASCII line/bar charts for figure reproduction,
-//! * [`proptest`] — property-testing generators with case shrinking.
+//! * [`proptest`] — property-testing generators with case shrinking,
+//! * [`crc`] — zlib-compatible CRC-32 for the `.qtz`/QTZ2 containers.
 
 pub mod bench;
 pub mod cli;
 pub mod clock;
+pub mod crc;
 pub mod histogram;
 pub mod plot;
 pub mod pool;
@@ -33,6 +35,16 @@ pub use timer::Timer;
 /// Round `n` up to a multiple of `align`.
 pub fn align_up(n: usize, align: usize) -> usize {
     (n + align - 1) / align * align
+}
+
+/// Resident-set size of this process in bytes (linux `/proc`; `None`
+/// elsewhere). Ground truth for the shared-mapping accounting in the
+/// `engine_inference` cold-start bench.
+pub fn resident_set_bytes() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    let kb: usize = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
 }
 
 /// Human-readable byte count.

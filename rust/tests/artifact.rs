@@ -1,0 +1,314 @@
+//! QTZ2 artifact round-trip and robustness suite — hermetic, no
+//! `artifacts/` directory needed (models come from `svdquant::fixture`).
+//!
+//! Covers the two contracts the artifact subsystem makes:
+//!
+//! * **Fidelity** — save → open → `load_model` → `forward_fused` is
+//!   *bitwise* identical to the in-memory [`QuantizedModel`] it was
+//!   serialized from, on the Int8 serving kernel, across every supported
+//!   residual width {2,3,4,8}, salient densities from empty to
+//!   full-coverage, per-row scales and the clip=∞ (null) encoding.
+//! * **Robustness** — a corrupted file (truncation, bad magic, damaged
+//!   header JSON, a flipped data bit, a future format version) fails
+//!   `open` with a contextful error; it never panics and never serves
+//!   garbage.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use svdquant::artifact::{write_artifact, Blob, QuantizedArtifact};
+use svdquant::fixture;
+use svdquant::json::Json;
+use svdquant::model::{ModelConfig, QuantizedModel};
+use svdquant::quant::QuantConfig;
+use svdquant::coordinator::QuantizePipeline;
+use svdquant::tensorfile::{Tensor, TensorFile, TensorFileView};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("svdquant_test_artifact");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(name)
+}
+
+/// Quantize a synthetic checkpoint through the staged pipeline (the same
+/// path `deployed_fixture` and `svdquant artifact emit` use).
+fn deploy(cfg: &ModelConfig, seed: u64, k: usize, qcfg: QuantConfig) -> QuantizedModel {
+    let ckpt = fixture::synthetic_checkpoint(cfg, seed);
+    let mut pipe = QuantizePipeline::for_checkpoint(cfg, &ckpt)
+        .budget(k)
+        .quant(qcfg)
+        .build()
+        .unwrap();
+    pipe.deploy(k).unwrap()
+}
+
+/// A small batch of valid token ids for `cfg`.
+fn batch(cfg: &ModelConfig, n: usize) -> (Vec<i32>, Vec<i32>) {
+    let len = n * cfg.max_len;
+    let ids: Vec<i32> = (0..len).map(|i| (i % (cfg.vocab_size - 1)) as i32 + 1).collect();
+    (ids, vec![1i32; len])
+}
+
+/// Assert the loaded model's fused Int8 forward is bit-for-bit the
+/// in-memory model's — the artifact stores exactly the deployed numbers
+/// (packed codes verbatim, f32 scales/overlay via lossless LE bytes).
+fn assert_forward_identical(cfg: &ModelConfig, reference: &QuantizedModel, loaded: &QuantizedModel) {
+    let (ids, mask) = batch(cfg, 4);
+    let want = reference.forward_fused(&ids, &mask).unwrap();
+    let got = loaded.forward_fused(&ids, &mask).unwrap();
+    assert_eq!(want.shape(), got.shape());
+    assert_eq!(
+        got.max_abs_diff(&want),
+        0.0,
+        "artifact round-trip must be bitwise exact"
+    );
+}
+
+#[test]
+fn roundtrip_is_bitwise_identical() {
+    let cfg = fixture::tiny_config();
+    let qm = deploy(&cfg, 7, 8, QuantConfig::default());
+    let path = tmp("roundtrip.qtz2");
+    write_artifact(&path, &qm, Json::from("test")).unwrap();
+
+    let qa = QuantizedArtifact::open(&path).unwrap();
+    assert_eq!(qa.version(), svdquant::tensorfile::FORMAT_VERSION);
+    assert_eq!(qa.model_cfg(), &cfg);
+    let loaded = qa.load_model().unwrap();
+    assert_forward_identical(&cfg, &qm, &loaded);
+
+    // the in-memory model owns everything; the loaded one borrows its
+    // packed code streams from the shared blob
+    let (mem_owned, mem_borrowed) = qm.resident_split();
+    let (ld_owned, ld_borrowed) = loaded.resident_split();
+    assert_eq!(mem_borrowed, 0, "in-memory packing is fully owned");
+    assert!(ld_borrowed > 0, "loaded code streams must be borrowed");
+    assert!(
+        ld_owned < mem_owned,
+        "borrowing the codes must shrink owned residency: {ld_owned} vs {mem_owned}"
+    );
+    assert_eq!(mem_owned + mem_borrowed, ld_owned + ld_borrowed, "same total bytes");
+}
+
+#[test]
+fn roundtrip_all_widths_and_densities() {
+    // odd hidden/ffn so 2- and 3-bit rows carry trailing pad bits in the
+    // packed stream — the length contract the loader must get right
+    let cfg = ModelConfig {
+        vocab_size: 64,
+        max_len: 8,
+        hidden: 20,
+        layers: 1,
+        heads: 2,
+        ffn: 36,
+        n_classes: 2,
+        export_batch: 4,
+    };
+    for (i, &bits) in [2u32, 3, 4, 8].iter().enumerate() {
+        // k = 0: empty overlay (zero-length CSR tensors); k = 8: sparse;
+        // k = 4096: larger than any layer, full FP32 coverage
+        for (j, &k) in [0usize, 8, 4096].iter().enumerate() {
+            // vary the scale/clip encoding across cells too: per-row scales
+            // and clip=None (stored as JSON null → f32::INFINITY)
+            let qcfg = QuantConfig {
+                bits,
+                clip_sigma: if j == 1 { None } else { Some(2.5) },
+                per_row: i % 2 == 1,
+            };
+            let qm = deploy(&cfg, 11 + i as u64, k, qcfg);
+            let path = tmp(&format!("prop_{bits}b_k{k}.qtz2"));
+            write_artifact(&path, &qm, Json::Null).unwrap();
+            let loaded = QuantizedArtifact::open(&path).unwrap().load_model().unwrap();
+            assert_eq!(
+                loaded.layer_bits().values().copied().collect::<Vec<_>>(),
+                qm.layer_bits().values().copied().collect::<Vec<_>>(),
+                "{bits}-bit widths survive the round trip"
+            );
+            assert_forward_identical(&cfg, &qm, &loaded);
+        }
+    }
+}
+
+#[test]
+fn many_loads_share_one_mapping() {
+    let cfg = fixture::tiny_config();
+    let qm = deploy(&cfg, 3, 8, QuantConfig::default());
+    let path = tmp("shared.qtz2");
+    write_artifact(&path, &qm, Json::Null).unwrap();
+
+    let qa = QuantizedArtifact::open(&path).unwrap();
+    let a = qa.load_model().unwrap();
+    let b = qa.load_model().unwrap();
+    // N models borrow the same blob: the borrowed bytes are per-process,
+    // not per-model — this is the "resident once" serving story
+    assert_eq!(a.resident_split().1, b.resident_split().1);
+    assert!(a.resident_split().1 > 0);
+
+    // the mapping must outlive the artifact handle: models keep an Arc
+    drop(qa);
+    assert_forward_identical(&cfg, &qm, &a);
+    assert_forward_identical(&cfg, &qm, &b);
+}
+
+#[test]
+fn no_mmap_fallback_is_equivalent() {
+    let cfg = fixture::tiny_config();
+    let qm = deploy(&cfg, 5, 8, QuantConfig::default());
+    let path = tmp("fallback.qtz2");
+    write_artifact(&path, &qm, Json::Null).unwrap();
+
+    std::env::set_var("SVDQUANT_NO_MMAP", "1");
+    let qa = QuantizedArtifact::open(&path).unwrap();
+    std::env::remove_var("SVDQUANT_NO_MMAP");
+    assert!(!qa.is_mapped(), "SVDQUANT_NO_MMAP must force the read path");
+    let loaded = qa.load_model().unwrap();
+    assert_forward_identical(&cfg, &qm, &loaded);
+}
+
+#[test]
+fn blob_mapped_and_owned_bytes_agree() {
+    let cfg = fixture::tiny_config();
+    let qm = deploy(&cfg, 9, 4, QuantConfig::default());
+    let path = tmp("blob_agree.qtz2");
+    write_artifact(&path, &qm, Json::Null).unwrap();
+    let blob = Arc::new(Blob::open(&path).unwrap());
+    assert_eq!(blob.bytes(), &std::fs::read(&path).unwrap()[..]);
+}
+
+/// Write `bytes` to a fresh file and return `open`'s error rendered with
+/// its full context chain (panics if open unexpectedly succeeds).
+fn open_corrupt(name: &str, bytes: &[u8]) -> String {
+    let path = tmp(name);
+    std::fs::write(&path, bytes).unwrap();
+    let err = QuantizedArtifact::open(&path).expect_err("corrupt file must not open");
+    format!("{err:#}")
+}
+
+#[test]
+fn corruption_is_detected_not_served() {
+    let cfg = fixture::tiny_config();
+    let qm = deploy(&cfg, 13, 8, QuantConfig::default());
+    let path = tmp("victim.qtz2");
+    write_artifact(&path, &qm, Json::Null).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    // sanity: the untouched bytes open fine
+    QuantizedArtifact::open(&path).unwrap();
+
+    // severed mid-magic: too short to even carry a header length
+    let msg = open_corrupt("trunc_tiny.qtz2", &good[..6]);
+    assert!(msg.contains("truncated"), "{msg}");
+    assert!(msg.contains("loading artifact"), "{msg}");
+
+    // severed mid-data: some tensor now extends past EOF
+    let msg = open_corrupt("trunc_data.qtz2", &good[..good.len() - 16]);
+    assert!(
+        msg.contains("extends past end of file") || msg.contains("truncated"),
+        "{msg}"
+    );
+
+    // wrong magic entirely
+    let mut bad = good.clone();
+    bad[..4].copy_from_slice(b"NOPE");
+    let msg = open_corrupt("bad_magic.qtz2", &bad);
+    assert!(msg.contains("bad magic"), "{msg}");
+
+    // a valid *legacy* container is not an artifact
+    let mut legacy = TensorFile::new();
+    legacy.insert("w", Tensor::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]));
+    let lp = tmp("legacy.qtz");
+    legacy.save(&lp).unwrap();
+    let err = QuantizedArtifact::open(&lp).expect_err("legacy container must not open");
+    assert!(format!("{err:#}").contains("not a QTZ2 artifact"), "{err:#}");
+
+    // header JSON damaged (first header byte is the opening brace)
+    let mut bad = good.clone();
+    bad[8] = b'X';
+    let msg = open_corrupt("bad_header.qtz2", &bad);
+    assert!(msg.contains("header"), "{msg}");
+
+    // one flipped bit inside a tensor's data → checksum mismatch
+    let view = TensorFileView::parse(&good).unwrap();
+    let (name, _) = view
+        .entries()
+        .iter()
+        .find(|(_, e)| e.nbytes > 0)
+        .map(|(n, e)| (n.clone(), e.clone()))
+        .unwrap();
+    let (abs, len) = view.abs_range(&name).unwrap();
+    let mut bad = good.clone();
+    bad[abs + len / 2] ^= 0x01;
+    let msg = open_corrupt("bit_flip.qtz2", &bad);
+    assert!(msg.contains("checksum mismatch"), "{msg}");
+    assert!(msg.contains("corrupt"), "{msg}");
+
+    // a file stamped by a newer tool: version gate, not a parse attempt
+    let needle = b"\"version\":1";
+    let pos = good
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .expect("QTZ2 header carries an explicit version");
+    let mut bad = good.clone();
+    bad[pos + needle.len() - 1] = b'9';
+    let msg = open_corrupt("future.qtz2", &bad);
+    assert!(msg.contains("unsupported container version"), "{msg}");
+
+    // right container, wrong payload kind
+    let mut other = TensorFile::new();
+    other.insert("x", Tensor::from_f32(vec![1], &[0.5]));
+    other.meta = Json::object(vec![("kind".into(), Json::from("something/else"))]);
+    let op = tmp("wrong_kind.qtz2");
+    other.save_qtz2(&op).unwrap();
+    let err = QuantizedArtifact::open(&op).expect_err("wrong kind must not open");
+    assert!(format!("{err:#}").contains("meta.kind"), "{err:#}");
+}
+
+#[test]
+fn eval_accuracy_matches_in_process_deployment() {
+    // the acceptance property behind `serve --artifact`: same seed, same
+    // dataset → identical per-request outputs, therefore identical accuracy
+    let cfg = fixture::tiny_config();
+    let (qm, data) = fixture::deployed_fixture(&cfg, 7, 8, 24).unwrap();
+    let path = tmp("serve_equiv.qtz2");
+    write_artifact(&path, &qm, Json::Null).unwrap();
+    let loaded = QuantizedArtifact::open(&path).unwrap().load_model().unwrap();
+
+    let mut agree = 0usize;
+    for lo in (0..data.len()).step_by(4) {
+        let hi = (lo + 4).min(data.len());
+        let (ids, mask) = data.batch_slices(lo, hi);
+        let a = qm.forward_fused(&ids, &mask).unwrap();
+        let b = loaded.forward_fused(&ids, &mask).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0, "logits must be bitwise equal");
+        agree += hi - lo;
+    }
+    assert_eq!(agree, data.len());
+}
+
+#[test]
+fn writer_records_layer_meta_faithfully() {
+    let cfg = fixture::tiny_config();
+    let qm = deploy(&cfg, 21, 8, QuantConfig { bits: 3, ..Default::default() });
+    let path = tmp("meta.qtz2");
+    write_artifact(
+        &path,
+        &qm,
+        Json::object(vec![("task".into(), Json::from("unit-test"))]),
+    )
+    .unwrap();
+    let qa = QuantizedArtifact::open(&path).unwrap();
+    let layers = qa.meta().get("layers").and_then(|l| l.as_object()).unwrap();
+    let expect: BTreeMap<String, u32> = qm.layer_bits();
+    assert_eq!(layers.len(), expect.len());
+    for (name, bits) in &expect {
+        let got = layers[name].get("bits").and_then(|b| b.as_usize()).unwrap();
+        assert_eq!(got as u32, *bits, "{name}");
+    }
+    let prov = qa.meta().get("provenance").unwrap();
+    assert_eq!(prov.get("task").and_then(|t| t.as_str()), Some("unit-test"));
+    // inspect output renders without panicking and names every layer
+    let desc = qa.describe();
+    for name in expect.keys() {
+        assert!(desc.contains(name.as_str()), "describe() must list {name}");
+    }
+}
