@@ -56,7 +56,9 @@ pub fn measure_units_per_s<R>(
 
 /// Merge `section` into `results/BENCH_serving.json` under `key` — the
 /// machine-readable serving-perf trajectory tracked across PRs. Each bench
-/// overwrites only its own section.
+/// overwrites only its own section, and every write refreshes the shared
+/// `provenance` block so the file always records which kernel ISA
+/// produced its numbers.
 #[allow(dead_code)]
 pub fn write_bench_serving(key: &str, section: Json) {
     let path = std::path::Path::new("results/BENCH_serving.json");
@@ -69,8 +71,15 @@ pub fn write_bench_serving(key: &str, section: Json) {
         .and_then(|j| j.as_object())
         .map(|m| m.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
         .unwrap_or_default();
-    pairs.retain(|(k, _)| k != key);
+    pairs.retain(|(k, _)| k != key && k != "provenance");
     pairs.push((key.to_string(), section));
+    pairs.push((
+        "provenance".to_string(),
+        Json::object(vec![(
+            "kernel_isa".to_string(),
+            Json::from(svdquant::util::simd::active_isa().name()),
+        )]),
+    ));
     let doc = Json::object(pairs);
     match std::fs::write(path, doc.pretty()) {
         Ok(()) => println!("\n  serving trajectory -> {}", path.display()),

@@ -77,7 +77,8 @@ fn main() {
     // ---- forward latency per residual width ------------------------------
     // the mixed-precision axis: one packed model per supported width, int8
     // kernel, b=16 — how much serving throughput each allocator-assignable
-    // width costs (4-bit has the LUT decode fast path)
+    // width costs (4-bit runs the SIMD nibble expand, 2/3 the unrolled
+    // decoders, 8 a byte copy)
     let mut width_fwd: Vec<(String, Json)> = Vec::new();
     {
         let (ids, mask) = dev.batch_slices(0, 16);
@@ -101,6 +102,52 @@ fn main() {
             width_fwd.push((format!("fused_int8_w{bits}_b16_seq_per_s"), Json::from(seq_per_s)));
         }
     }
+
+    // ---- fused forward: scalar-forced vs SIMD dispatch -------------------
+    // the end-to-end view of the kernel-ISA speedup (quant_throughput has
+    // the isolated igemm number): same model, same batch, dispatch forced
+    // scalar vs the resolved hardware arm — logits asserted bitwise equal,
+    // so the delta is pure kernel speed
+    let simd_fwd = {
+        use svdquant::util::simd;
+        let (ids, mask) = dev.batch_slices(0, 16);
+        qm.set_kernel(GemmKernel::Int8);
+        let (scalar_seq_s, scalar_out) = {
+            let _g = simd::override_isa(simd::Isa::Scalar);
+            b.timeit_throughput("fused int8 fwd b=16 (forced scalar)", 16.0, "seq", || {
+                qm.forward_fused(&ids, &mask).unwrap()
+            });
+            let s = common::measure_units_per_s(16.0, 120, || {
+                qm.forward_fused(&ids, &mask).unwrap()
+            });
+            (s, qm.forward_fused(&ids, &mask).unwrap())
+        };
+        let isa = simd::active_isa();
+        b.timeit_throughput(
+            &format!("fused int8 fwd b=16 ({})", isa.name()),
+            16.0,
+            "seq",
+            || qm.forward_fused(&ids, &mask).unwrap(),
+        );
+        let simd_seq_s = common::measure_units_per_s(16.0, 120, || {
+            qm.forward_fused(&ids, &mask).unwrap()
+        });
+        let simd_out = qm.forward_fused(&ids, &mask).unwrap();
+        assert_eq!(
+            simd_out.max_abs_diff(&scalar_out),
+            0.0,
+            "SIMD and scalar fused forwards must be bitwise identical"
+        );
+        Json::object(vec![
+            ("kernel_isa".to_string(), Json::from(isa.name())),
+            ("fused_int8_b16_scalar_seq_per_s".to_string(), Json::from(scalar_seq_s)),
+            ("fused_int8_b16_simd_seq_per_s".to_string(), Json::from(simd_seq_s)),
+            (
+                "simd_speedup".to_string(),
+                Json::from(simd_seq_s / scalar_seq_s.max(1e-12)),
+            ),
+        ])
+    };
 
     // ---- PJRT path (artifacts + real xla crate only) ---------------------
     if source.starts_with("artifacts") {
@@ -289,6 +336,7 @@ fn main() {
             ("source".to_string(), Json::from(source)),
             ("forward".to_string(), Json::object(fwd_json)),
             ("forward_by_width".to_string(), Json::object(width_fwd)),
+            ("simd_forward".to_string(), simd_fwd),
             ("serving".to_string(), Json::Array(json_rows)),
             (
                 "virtual_replay".to_string(),

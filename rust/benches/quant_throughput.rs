@@ -18,6 +18,7 @@ use svdquant::sparse::Coo;
 use svdquant::util::bench::Bench;
 use svdquant::util::pool;
 use svdquant::util::rng::Rng;
+use svdquant::util::simd::{self, Isa};
 
 fn main() {
     let mut b = Bench::new("quant_throughput");
@@ -53,7 +54,11 @@ fn main() {
 
     // --- BitPack codec bandwidth per supported width ----------------------
     // codes are requantized per width so every value is in the codec's
-    // range; 3-bit is the interesting row (codes straddle byte boundaries)
+    // range; 3-bit is the interesting row (codes straddle byte boundaries).
+    // Each width also records decode bandwidth on the pre-PR7 bit-serial
+    // walk vs the dispatched fast arm (SIMD nibble expand at 4 bits,
+    // unrolled loops at 2/3, byte copy at 8) for the `simd` JSON section.
+    let mut decode_json: Vec<(String, Json)> = Vec::new();
     for bits in SUPPORTED_BITS {
         let wcfg = cfg.with_bits(bits);
         let wp = quant_params(&w, &wcfg);
@@ -72,6 +77,28 @@ fn main() {
             "codes",
             || codec.unpack(&wpacked, rows * cols),
         );
+        let n = rows * cols;
+        let mut dec = vec![0i8; n];
+        b.timeit_throughput(
+            &format!("BitPack({bits}) unpack_into serial (before)"),
+            n as f64,
+            "codes",
+            || codec.unpack_into_serial(&wpacked, &mut dec),
+        );
+        b.timeit_throughput(
+            &format!("BitPack({bits}) unpack_into fast arm"),
+            n as f64,
+            "codes",
+            || codec.unpack_into(&wpacked, &mut dec),
+        );
+        let serial_cs = common::measure_units_per_s(n as f64, 100, || {
+            codec.unpack_into_serial(&wpacked, &mut dec)
+        });
+        let fast_cs = common::measure_units_per_s(n as f64, 100, || {
+            codec.unpack_into(&wpacked, &mut dec)
+        });
+        decode_json.push((format!("b{bits}_serial_mcodes_s"), Json::from(serial_cs / 1e6)));
+        decode_json.push((format!("b{bits}_fast_mcodes_s"), Json::from(fast_cs / 1e6)));
     }
 
     // fused mixed-precision matvec vs dense f32 matvec
@@ -156,9 +183,9 @@ fn main() {
     pool::set_global_parallelism(0);
 
     // --- igemm per residual width (the mixed-precision serving axis) ------
-    // one row per supported width at N threads: 4-bit runs the LUT decode
-    // fast path, 2/3/8 the generic bit-stream — the spread between them is
-    // the price of a width the allocator assigns
+    // one row per supported width at N threads: 4-bit runs the SIMD nibble
+    // expand, 2/3 the unrolled multi-code decoders, 8 a byte copy — the
+    // spread between them is the price of a width the allocator assigns
     let mut width_json: Vec<(String, Json)> = Vec::new();
     for bits in SUPPORTED_BITS {
         let qm_b = QuantizedMatrix::from_dense(&w, &cfg.with_bits(bits), &sal);
@@ -172,15 +199,53 @@ fn main() {
         width_json.push((format!("int8_b{bits}_gflop_s"), Json::from(gflop_s)));
     }
 
+    // --- scalar vs SIMD dispatch (ROADMAP acceptance metric) --------------
+    // single-thread igemm with the dispatch forced scalar vs the resolved
+    // hardware arm — outputs are bitwise-identical (rust/tests/simd.rs),
+    // so this isolates the kernel speedup from any numerical drift;
+    // target ≥2× on AVX2 hosts
+    let mut simd_json: Vec<(String, Json)> = Vec::new();
+    simd_json.push(("kernel_isa".to_string(), Json::from(simd::active_isa().name())));
+    pool::set_global_parallelism(1);
+    let scalar_t1 = {
+        let _g = simd::override_isa(Isa::Scalar);
+        b.timeit_throughput("matmul_xt b=16 int8 igemm t1 (forced scalar)", gflops, "flop", || {
+            qm.matmul_xt_int(&xb)
+        });
+        common::measure_units_per_s(gflops, 200, || qm.matmul_xt_int(&xb)) / 1e9
+    };
+    let simd_t1 = {
+        let label = format!("matmul_xt b=16 int8 igemm t1 ({})", simd::active_isa().name());
+        b.timeit_throughput(&label, gflops, "flop", || qm.matmul_xt_int(&xb));
+        common::measure_units_per_s(gflops, 200, || qm.matmul_xt_int(&xb)) / 1e9
+    };
+    pool::set_global_parallelism(0);
+    simd_json.push(("int8_t1_scalar_gflop_s".to_string(), Json::from(scalar_t1)));
+    simd_json.push(("int8_t1_simd_gflop_s".to_string(), Json::from(simd_t1)));
+    simd_json.push(("simd_speedup_t1".to_string(), Json::from(simd_t1 / scalar_t1.max(1e-12))));
+
     let elems = (batch * cols) as f64;
     b.timeit_throughput("quantize_rows b=16 (dynamic int8 activations)", elems, "elem", || {
         quantize_rows(&xb)
     });
+    let q_scalar = {
+        let _g = simd::override_isa(Isa::Scalar);
+        b.timeit_throughput("quantize_rows b=16 (forced scalar)", elems, "elem", || {
+            quantize_rows(&xb)
+        });
+        common::measure_units_per_s(elems, 100, || quantize_rows(&xb))
+    };
+    let q_simd = common::measure_units_per_s(elems, 100, || quantize_rows(&xb));
+    simd_json.push(("quantize_rows_scalar_melem_s".to_string(), Json::from(q_scalar / 1e6)));
+    simd_json.push(("quantize_rows_simd_melem_s".to_string(), Json::from(q_simd / 1e6)));
+    simd_json.push(("decode_by_width".to_string(), Json::object(decode_json)));
+
     common::write_bench_serving(
         "quant_throughput",
         Json::object(vec![
             ("igemm_1024_b16".to_string(), Json::object(igemm_json)),
             ("igemm_by_width".to_string(), Json::object(width_json)),
+            ("simd".to_string(), Json::object(simd_json)),
         ]),
     );
 

@@ -361,6 +361,10 @@ impl QuantizedArtifact {
             self.verified,
             self.entries.len(),
         ));
+        out.push_str(&format!(
+            "kernel dispatch: {} (serving ISA on this host)\n",
+            crate::util::simd::active_isa().name(),
+        ));
         if let Some(prov) = self.meta.get("provenance") {
             out.push_str(&format!("provenance: {}\n", prov.compact()));
         }

@@ -86,6 +86,14 @@ pub fn serve(
 ) -> Result<ServeStats> {
     anyhow::ensure!(!registry.is_empty(), "registry has no tenants");
     anyhow::ensure!(cfg.max_batch > 0, "max_batch must be positive");
+    // announce the resolved kernel dispatch once per process so every
+    // serving log records which ISA produced its numbers
+    {
+        static ISA_LOGGED: std::sync::Once = std::sync::Once::new();
+        ISA_LOGGED.call_once(|| {
+            eprintln!("kernel dispatch: {}", crate::util::simd::active_isa().name());
+        });
+    }
     for r in trace {
         anyhow::ensure!(
             r.task < registry.len(),

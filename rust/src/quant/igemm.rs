@@ -5,7 +5,7 @@
 //! contraction stays in integers end to end:
 //!
 //! ```text
-//! x̂_bj  = round(x_bj / s_x_b)          dynamic per-row int8 activations
+//! x̂_bj  = round_ties_even(x_bj / s_x_b)  dynamic per-row int8 activations
 //! acc   = Σ_j ŵ_ij · x̂_bj             i32 accumulate over intb × int8
 //! y_bi  = acc · (s_w_i · s_x_b)        combined scale applied once
 //!         + Σ_{(i,c)∈S} (v_ic·x_bc − ŵ_ic·x̂_bc·s_w_i·s_x_b)
@@ -14,9 +14,15 @@
 //! The weight codes are whatever width the layer's
 //! [`BitPack`](super::packing::BitPack) codec carries (2/3/4/8 bits, per
 //! the allocator's per-layer assignment): each packed row is decoded to an
-//! i8 panel buffer once per batch — through the nibble LUT at 4 bits, the
-//! generic bit-stream otherwise — and the contraction itself is
-//! width-oblivious from there.
+//! i8 panel buffer once per batch — through the codec's per-width fast
+//! arms (runtime-dispatched SIMD nibble expand at 4 bits, unrolled
+//! multi-code loops at 2/3 bits, a byte copy at 8) — and the contraction
+//! itself is width-oblivious from there.
+//!
+//! Activation rounding is round-ties-even (the IEEE default the SIMD
+//! float→int conversion implements) so the scalar and vector quantizers
+//! agree bit for bit; the roundoff magnitude is still ≤ ½ ulp, so every
+//! bound below is unchanged.
 //!
 //! The salient CSR overlay is folded in as an *override correction*: the
 //! residual's contribution at each salient coordinate is removed in exact
@@ -30,36 +36,41 @@
 //! far from i32 overflow for any realistic width). The parity property
 //! test below pins that bound at every supported width.
 //!
-//! Perf structure (EXPERIMENTS.md §Perf):
+//! Perf structure (EXPERIMENTS.md §Perf, DESIGN.md §8):
 //! * each packed weight row is decoded to int8 **once per batch** (the
 //!   float path used to decode once per (row, request));
+//! * the contraction is **cache-blocked**: columns are tiled in
+//!   [`COL_BLOCK`]-element chunks, each chunk decoded into a reused
+//!   L1/L2-resident buffer and contracted against every batch row before
+//!   the next chunk is touched (i32 partial sums are exact, so blocking
+//!   cannot change a single bit of the result);
+//! * the inner dot product, the activation quantizer, and the 4-bit
+//!   decode run on the [`crate::util::simd`] runtime dispatch
+//!   (AVX2/SSE4.1/scalar, every arm bitwise-identical);
 //! * weight rows fan out in contiguous panels over the global
 //!   [`pool`](crate::util::pool) — every output row's arithmetic order is
 //!   independent of the split, so results are identical under any thread
 //!   count.
 
-use std::sync::OnceLock;
-
 use crate::linalg::Matrix;
 use crate::util::pool;
+use crate::util::simd;
 
-use super::packing::sign_extend4;
+pub use crate::util::simd::dot_i8;
+
 use super::QuantizedMatrix;
 
-/// Byte → two sign-extended int4 codes: the integer sibling of the f32
-/// nibble LUT in `qmatrix.rs` (one indexed load per packed byte).
-static NIBBLE_I8: OnceLock<[[i8; 2]; 256]> = OnceLock::new();
+/// Contraction tile: 8 KiB of decoded i8 weight codes, sized so the
+/// decoded block plus the matching activation segments stay cache-resident
+/// across the whole batch loop. A multiple of 8, so every block starts on
+/// a whole packed byte at all supported widths (8 codes · b bits is whole
+/// bytes for b ∈ {2, 3, 4, 8}).
+const COL_BLOCK: usize = 8192;
 
-pub(crate) fn nibble_i8_lut() -> &'static [[i8; 2]; 256] {
-    NIBBLE_I8.get_or_init(|| {
-        let mut t = [[0i8; 2]; 256];
-        for (b, item) in t.iter_mut().enumerate() {
-            item[0] = sign_extend4(b as u8 & 0x0F);
-            item[1] = sign_extend4((b as u8) >> 4);
-        }
-        t
-    })
-}
+/// Edge length of the square tiles `scatter_panel` transposes through —
+/// 32×32 f32 (4 KiB of each side) so both the strided reads and the
+/// contiguous writes stay within one tile's worth of cache lines.
+const SCATTER_TILE: usize = 32;
 
 /// An activation batch quantized to int8, one dynamic scale per row
 /// (`s_x = max|x| / 127`; a zero row gets scale 1 and all-zero codes).
@@ -82,42 +93,18 @@ impl QuantizedRows {
     }
 }
 
-/// Dynamic per-row symmetric int8 quantization of an activation batch.
+/// Dynamic per-row symmetric int8 quantization of an activation batch
+/// (codes written straight into one preallocated buffer; amax + round on
+/// the [`crate::util::simd`] dispatch).
 pub fn quantize_rows(x: &Matrix) -> QuantizedRows {
     let (rows, cols) = x.shape();
-    let mut codes = Vec::with_capacity(rows * cols);
+    let mut codes = vec![0i8; rows * cols];
     let mut scales = Vec::with_capacity(rows);
     for i in 0..rows {
-        let row = x.row(i);
-        let amax = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-        let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
-        let inv = 1.0 / scale;
-        scales.push(scale);
-        codes.extend(
-            row.iter()
-                .map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8),
-        );
+        let out = &mut codes[i * cols..(i + 1) * cols];
+        scales.push(simd::quantize_row(x.row(i), out));
     }
     QuantizedRows { rows, cols, codes, scales }
-}
-
-/// 4-lane unrolled i8 × i8 → i32 dot product.
-#[inline]
-pub fn dot_i8(a: &[i8], b: &[i8], len: usize) -> i32 {
-    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
-    let chunks = len / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] as i32 * b[i] as i32;
-        s1 += a[i + 1] as i32 * b[i + 1] as i32;
-        s2 += a[i + 2] as i32 * b[i + 2] as i32;
-        s3 += a[i + 3] as i32 * b[i + 3] as i32;
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..len {
-        s += a[i] as i32 * b[i] as i32;
-    }
-    s
 }
 
 /// `Y = X W_effᵀ` with the contraction in the integer domain.
@@ -161,17 +148,26 @@ pub fn igemm_xt(qm: &QuantizedMatrix, qx: &QuantizedRows, x: &Matrix) -> Matrix 
 }
 
 /// Transpose one weight-row panel's `[panel_rows × batch]` result into the
-/// `[batch × w_rows]` output.
+/// `[batch × w_rows]` output, [`SCATTER_TILE`]² tile by tile: within a
+/// tile the writes (`out` row `b`, consecutive `i`) are contiguous and the
+/// strided `part` reads all land in the tile's resident lines, instead of
+/// the old per-element walk that touched a fresh `out` line every store.
 fn scatter_panel(out: &mut Matrix, lo: usize, hi: usize, batch: usize, part: &[f32]) {
-    for (pi, i) in (lo..hi).enumerate() {
-        for b in 0..batch {
-            out[(b, i)] = part[pi * batch + b];
+    let panel = hi - lo;
+    for b0 in (0..batch).step_by(SCATTER_TILE) {
+        let b1 = (b0 + SCATTER_TILE).min(batch);
+        for p0 in (0..panel).step_by(SCATTER_TILE) {
+            let p1 = (p0 + SCATTER_TILE).min(panel);
+            for b in b0..b1 {
+                for pi in p0..p1 {
+                    out[(b, lo + pi)] = part[pi * batch + b];
+                }
+            }
         }
     }
 }
 
-/// One weight-row panel: decode each packed row to int8 once, run the i32
-/// contraction against every request row, fold in the salient overrides.
+/// One weight-row panel at the default [`COL_BLOCK`] tiling.
 fn igemm_panel(
     qm: &QuantizedMatrix,
     qx: &QuantizedRows,
@@ -179,46 +175,71 @@ fn igemm_panel(
     lo: usize,
     hi: usize,
 ) -> Vec<f32> {
+    igemm_panel_blocked(qm, qx, x, lo, hi, COL_BLOCK)
+}
+
+/// One weight-row panel with an explicit column-block size: decode each
+/// packed row block-by-block into a reused buffer, accumulate the i32
+/// contraction against every request row while the block is resident,
+/// then fold in the salient overrides and the combined scale once per
+/// output.
+///
+/// `block` must be a positive multiple of 8 so every block starts on a
+/// whole packed byte at any supported width. i32 partial sums are exact,
+/// so the result is bitwise-independent of `block` (tested below) — the
+/// tiling exists purely so `wbuf` + the activation segments fit in cache.
+fn igemm_panel_blocked(
+    qm: &QuantizedMatrix,
+    qx: &QuantizedRows,
+    x: &Matrix,
+    lo: usize,
+    hi: usize,
+    block: usize,
+) -> Vec<f32> {
+    debug_assert!(block > 0 && block % 8 == 0, "col block must be a positive multiple of 8");
     let (_, cols) = qm.shape();
     let batch = qx.rows;
     let codec = qm.codec();
-    let lut = nibble_i8_lut();
+    let bits = codec.bits() as usize;
+    let isa = simd::active_isa();
     let mut part = Vec::with_capacity((hi - lo) * batch);
-    let mut wbuf = vec![0i8; cols];
+    let mut wbuf = vec![0i8; block.min(cols)];
+    let mut acc = vec![0i32; batch];
     // (col, fp32 value, residual code) triples of the current row
     let mut overrides: Vec<(usize, f32, i32)> = Vec::new();
     for i in lo..hi {
         let prow = qm.packed_row(i);
-        if codec.bits() == 4 {
-            // LUT fast path: two codes per indexed load
-            let pairs = cols / 2;
-            for b in 0..pairs {
-                let d = lut[prow[b] as usize];
-                wbuf[2 * b] = d[0];
-                wbuf[2 * b + 1] = d[1];
+        acc.iter_mut().for_each(|a| *a = 0);
+        let mut c0 = 0usize;
+        while c0 < cols {
+            let blen = block.min(cols - c0);
+            // exact: c0 is a multiple of 8, so c0·bits is whole bytes
+            let byte0 = c0 * bits / 8;
+            codec.unpack_into(&prow[byte0..], &mut wbuf[..blen]);
+            for (b, a) in acc.iter_mut().enumerate() {
+                let xq = &qx.row(b)[c0..c0 + blen];
+                *a += simd::dot_i8_on(isa, &wbuf[..blen], xq, blen);
             }
-            if cols % 2 == 1 {
-                wbuf[cols - 1] = sign_extend4(prow[pairs] & 0x0F);
-            }
-        } else {
-            codec.unpack_into(prow, &mut wbuf);
+            c0 += blen;
         }
         let scale_w = qm.quant_params().scale_for_row(i);
         overrides.clear();
-        overrides.extend(qm.salient().row(i).map(|(c, v)| (c, v, wbuf[c] as i32)));
+        overrides.extend(
+            qm.salient().row(i).map(|(c, v)| (c, v, codec.unpack_at(prow, c) as i32)),
+        );
         for b in 0..batch {
             let xq = qx.row(b);
-            let mut acc = dot_i8(&wbuf, xq, cols);
+            let xrow = x.row(b);
             // override: remove the residual's integer contribution at the
             // salient coordinates (exact in i32)...
+            let mut a = acc[b];
             let mut sal = 0.0f32;
-            let xrow = x.row(b);
             for &(c, v, wq) in &overrides {
-                acc -= wq * xq[c] as i32;
+                a -= wq * xq[c] as i32;
                 sal += v * xrow[c];
             }
             // ...apply the combined scale once, then add the FP32 terms
-            part.push(acc as f32 * (scale_w * qx.scales[b]) + sal);
+            part.push(a as f32 * (scale_w * qx.scales[b]) + sal);
         }
     }
     part
@@ -451,5 +472,48 @@ mod tests {
         // cross-check against the float path loosely (bound test covers rigor)
         let want = qm.matmul_xt(&x);
         assert!(got.max_abs_diff(&want) < 0.5);
+    }
+
+    #[test]
+    fn blocked_contraction_is_bitwise_invariant_to_block_size() {
+        // i32 partial sums are exact, so the column tiling must not change
+        // a single bit — at any width, including non-multiple-of-block
+        // column counts (tail blocks) and salient overrides
+        let mut rng = Rng::new(306);
+        for bits in crate::quant::packing::SUPPORTED_BITS {
+            let (qm, x) = random_setup_bits(&mut rng, 17, 301, 4, 40, bits, true);
+            let qx = quantize_rows(&x);
+            let (rows, _) = qm.shape();
+            let full = igemm_panel_blocked(&qm, &qx, &x, 0, rows, 1 << 20);
+            for block in [8usize, 16, 48, 128, 8192] {
+                let got = igemm_panel_blocked(&qm, &qx, &x, 0, rows, block);
+                assert_eq!(got, full, "bits {bits} block {block}");
+            }
+        }
+    }
+
+    #[test]
+    fn igemm_bitwise_identical_across_isas() {
+        // the end-to-end kernel — activation quantize, block decode, dot,
+        // overrides — must agree bit for bit on every dispatch arm
+        use crate::util::simd::{override_isa, supported_isas, Isa};
+        let mut rng = Rng::new(307);
+        for bits in crate::quant::packing::SUPPORTED_BITS {
+            let (qm, x) = random_setup_bits(&mut rng, 12, 77, 3, 30, bits, false);
+            let (qx_ref, want) = {
+                let _g = override_isa(Isa::Scalar);
+                let qx = quantize_rows(&x);
+                let y = igemm_xt(&qm, &qx, &x);
+                (qx, y)
+            };
+            for isa in supported_isas() {
+                let _g = override_isa(isa);
+                let qx = quantize_rows(&x);
+                assert_eq!(qx.codes, qx_ref.codes, "{isa:?} bits {bits} activation codes");
+                assert_eq!(qx.scales, qx_ref.scales, "{isa:?} bits {bits} scales");
+                let got = igemm_xt(&qm, &qx, &x);
+                assert!(got.approx_eq(&want, 0.0), "{isa:?} bits {bits} igemm output");
+            }
+        }
     }
 }

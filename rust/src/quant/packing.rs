@@ -137,8 +137,37 @@ impl BitPack {
     /// Decode `out.len()` codes from `packed` into `out`.
     ///
     /// This is the kernels' hot decode (igemm row panels); `packed` must
-    /// hold at least [`BitPack::bytes_for`]`(out.len())` bytes.
+    /// hold at least [`BitPack::bytes_for`]`(out.len())` bytes. Each width
+    /// dispatches to its fast arm — 8-bit is a byte copy, 4-bit goes
+    /// through the runtime-dispatched SIMD nibble expand
+    /// ([`crate::util::simd::unpack4_into`]), 2/3-bit run unrolled
+    /// multi-code decoders — all bitwise-identical to
+    /// [`BitPack::unpack_into_serial`] (property-tested per width and
+    /// tail remainder).
     pub fn unpack_into(self, packed: &[u8], out: &mut [i8]) {
+        assert!(
+            packed.len() >= self.bytes_for(out.len()),
+            "not enough packed bytes: {} < {}",
+            packed.len(),
+            self.bytes_for(out.len())
+        );
+        match self.bits {
+            8 => {
+                for (o, &p) in out.iter_mut().zip(packed) {
+                    *o = p as i8;
+                }
+            }
+            4 => crate::util::simd::unpack4_into(packed, out),
+            2 => unpack2_unrolled(packed, out),
+            3 => unpack3_unrolled(packed, out),
+            _ => self.unpack_into_serial(packed, out),
+        }
+    }
+
+    /// The width-generic bit-serial decode — the reference every fast arm
+    /// in [`BitPack::unpack_into`] is tested against, kept public so the
+    /// parity suite (and any future width) can always reach it.
+    pub fn unpack_into_serial(self, packed: &[u8], out: &mut [i8]) {
         let b = self.bits as usize;
         assert!(
             packed.len() >= self.bytes_for(out.len()),
@@ -146,12 +175,6 @@ impl BitPack {
             packed.len(),
             self.bytes_for(out.len())
         );
-        if b == 8 {
-            for (o, &p) in out.iter_mut().zip(packed) {
-                *o = p as i8;
-            }
-            return;
-        }
         let mut bitpos = 0usize;
         for o in out.iter_mut() {
             let byte = bitpos / 8;
@@ -185,6 +208,63 @@ impl BitPack {
             u |= (packed[byte + 1] as u16) << (8 - off);
         }
         self.sign_extend(u as u8)
+    }
+}
+
+/// 2-bit fast arm: four codes per byte, each sign-extended by shifting the
+/// field to the top two bits and arithmetic-shifting back down.
+fn unpack2_unrolled(packed: &[u8], out: &mut [i8]) {
+    let n = out.len();
+    for (o, &byte) in out.chunks_exact_mut(4).zip(packed) {
+        o[0] = ((byte << 6) as i8) >> 6;
+        o[1] = ((byte << 4) as i8) >> 6;
+        o[2] = ((byte << 2) as i8) >> 6;
+        o[3] = (byte as i8) >> 6;
+    }
+    let done = n / 4 * 4;
+    if done < n {
+        let byte = packed[n / 4];
+        for (k, o) in out[done..].iter_mut().enumerate() {
+            *o = ((byte << (6 - 2 * k)) as i8) >> 6;
+        }
+    }
+}
+
+/// 3-bit fast arm: eight codes per three bytes. The group's 24 bits are
+/// widened into one `u32` so no code straddles a load; the tail (< 8
+/// codes) falls back to the bit-serial walk at the group boundary, which
+/// lands on a whole byte (8 codes · 3 bits = 3 bytes exactly).
+fn unpack3_unrolled(packed: &[u8], out: &mut [i8]) {
+    #[inline]
+    fn sx3(u: u32) -> i8 {
+        (((u as u8) << 5) as i8) >> 5
+    }
+    let n = out.len();
+    let groups = n / 8;
+    for g in 0..groups {
+        let pb = &packed[g * 3..g * 3 + 3];
+        let u = pb[0] as u32 | (pb[1] as u32) << 8 | (pb[2] as u32) << 16;
+        let o = &mut out[g * 8..g * 8 + 8];
+        o[0] = sx3(u);
+        o[1] = sx3(u >> 3);
+        o[2] = sx3(u >> 6);
+        o[3] = sx3(u >> 9);
+        o[4] = sx3(u >> 12);
+        o[5] = sx3(u >> 15);
+        o[6] = sx3(u >> 18);
+        o[7] = sx3(u >> 21);
+    }
+    let done = groups * 8;
+    let mut bitpos = done * 3;
+    for o in out[done..].iter_mut() {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut u = (packed[byte] >> off) as u16;
+        if off + 3 > 8 {
+            u |= (packed[byte + 1] as u16) << (8 - off);
+        }
+        *o = sx3(u as u32);
+        bitpos += 3;
     }
 }
 
@@ -365,6 +445,32 @@ mod tests {
         let codes: Vec<i8> = vec![-7, 3, 5];
         assert_eq!(codec.pack(&codes), vec![0x39, 0x05]);
         assert_eq!(codec.pack(&codes), pack_nibbles(&codes));
+    }
+
+    #[test]
+    fn fast_decode_matches_serial_every_width_and_tail() {
+        // the dispatched arms (byte copy / SIMD nibble expand / unrolled
+        // 2- and 3-bit) vs the bit-serial reference, across every tail
+        // remainder 0..=31 — the in-crate half of the parity contract
+        // (rust/tests/simd.rs covers explicit-ISA dispatch)
+        let mut rng = Rng::new(0xDEC0);
+        for bits in SUPPORTED_BITS {
+            let codec = BitPack::new(bits).unwrap();
+            let span = (codec.code_max() as i32 - codec.code_min() as i32 + 1) as usize;
+            for rem in 0..=31usize {
+                let n = 64 + rem;
+                let codes: Vec<i8> = (0..n)
+                    .map(|_| (codec.code_min() as i32 + rng.range(0, span) as i32) as i8)
+                    .collect();
+                let packed = codec.pack(&codes);
+                let mut serial = vec![0i8; n];
+                codec.unpack_into_serial(&packed, &mut serial);
+                assert_eq!(serial, codes, "b={bits} n={n} serial");
+                let mut fast = vec![0i8; n];
+                codec.unpack_into(&packed, &mut fast);
+                assert_eq!(fast, serial, "b={bits} n={n} fast vs serial");
+            }
+        }
     }
 
     #[derive(Debug, Clone)]

@@ -11,8 +11,9 @@
 //!   once per *batch* (batch-panel blocking), salient CSR entries
 //!   *overriding* (not adding to) the residual contribution at their
 //!   coordinates, which mirrors the L1 Pallas `salient_matmul` mask-add
-//!   semantics; 4-bit rows take a fused LUT fast path, other widths
-//!   decode through the [`BitPack`] bit stream;
+//!   semantics; batch decode goes through the dispatched [`BitPack`]
+//!   fast arms (`util::simd`), while batch-1 4-bit `matvec` keeps its
+//!   fused f32 nibble-LUT inner loop;
 //! * the **integer deployed** path (`matmul_xt_int`) keeps the contraction
 //!   in intb×int8→i32 end to end (see [`super::igemm`]) — the serving hot
 //!   path at every width.
@@ -280,26 +281,20 @@ impl QuantizedMatrix {
 
     /// Decode row `i` into `wrow` as scaled f32 with the salient entries
     /// patched in — `W_eff[i, :]` materialized once. `cbuf` is an i8
-    /// scratch of at least `cols` (unused on the 4-bit LUT fast path).
+    /// scratch of at least `cols`.
+    ///
+    /// Every width flows through the codec's dispatched
+    /// [`BitPack::unpack_into`] (at 4 bits that is the runtime-selected
+    /// SIMD nibble expand), then one scale multiply per element. This
+    /// replaced a separate f32 nibble-LUT branch with identical results:
+    /// the LUT held exact small integers, so `code as f32 * scale` is the
+    /// same product bit for bit.
     fn decode_row_patched(&self, i: usize, wrow: &mut [f32], cbuf: &mut [i8]) {
         let scale = self.params.scale_for_row(i);
         let prow = self.packed_row(i);
-        if self.codec.bits() == 4 {
-            let lut = nibble_lut();
-            let pairs = self.cols / 2;
-            for b in 0..pairs {
-                let d = lut[prow[b] as usize];
-                wrow[2 * b] = d[0] * scale;
-                wrow[2 * b + 1] = d[1] * scale;
-            }
-            if self.cols % 2 == 1 {
-                wrow[self.cols - 1] = sign_extend4(prow[pairs] & 0x0F) as f32 * scale;
-            }
-        } else {
-            self.codec.unpack_into(prow, &mut cbuf[..self.cols]);
-            for (o, &c) in wrow.iter_mut().zip(cbuf.iter()) {
-                *o = c as f32 * scale;
-            }
+        self.codec.unpack_into(prow, &mut cbuf[..self.cols]);
+        for (o, &c) in wrow.iter_mut().zip(cbuf.iter()) {
+            *o = c as f32 * scale;
         }
         for (c, v) in self.salient.row(i) {
             wrow[c] = v;

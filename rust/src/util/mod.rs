@@ -13,7 +13,9 @@
 //! * [`bench`] — the harness behind `cargo bench` (criterion replacement),
 //! * [`plot`] — ASCII line/bar charts for figure reproduction,
 //! * [`proptest`] — property-testing generators with case shrinking,
-//! * [`crc`] — zlib-compatible CRC-32 for the `.qtz`/QTZ2 containers.
+//! * [`crc`] — zlib-compatible CRC-32 for the `.qtz`/QTZ2 containers,
+//! * [`simd`] — runtime-dispatched AVX2/SSE4.1 kernels (scalar fallback,
+//!   bitwise-identical arms) behind the igemm/decode/quantize hot loops.
 
 pub mod bench;
 pub mod cli;
@@ -24,6 +26,7 @@ pub mod plot;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub mod simd;
 pub mod timer;
 
 pub use clock::Clock;

@@ -1,0 +1,694 @@
+//! Runtime-dispatched SIMD kernels for the serving hot loops
+//! (DESIGN.md §8): the i8×i8→i32 dot product behind `quant::igemm`, the
+//! dynamic int8 activation quantizer, and the 4-bit nibble expand behind
+//! `BitPack` decode.
+//!
+//! Dispatch policy:
+//!
+//! * the ISA is resolved **once** per process ([`active_isa`], `OnceLock`):
+//!   AVX2 if the CPU has it, else SSE4.1, else scalar — detected with
+//!   `is_x86_feature_detected!` so a generic build still runs the wide
+//!   paths on capable hardware;
+//! * `SVDQUANT_NO_SIMD=1` in the environment forces the scalar arm (the
+//!   CI matrix runs the whole test suite both ways);
+//! * [`override_isa`] swaps the dispatched arm programmatically (guarded,
+//!   restored on drop) so benches and parity tests can compare arms inside
+//!   one process. Requests for an ISA the CPU lacks degrade to scalar —
+//!   the wide arms are only ever entered behind a positive runtime check.
+//!
+//! **Every arm is bitwise-identical by construction.** The integer kernels
+//! (`dot_i8`, the nibble expand) are exact in any evaluation order; the
+//! quantizer's float work is a per-element `clamp → round-ties-even`
+//! with no cross-lane arithmetic, and its `amax` reduction is a pure
+//! `max` fold, which is order-insensitive for finite floats. Rounding is
+//! ties-to-even precisely because that is the IEEE-default mode hardware
+//! float→int conversion instructions implement (`cvtps2dq`) — the scalar
+//! arm uses [`f32::round_ties_even`] to match. The parity suite
+//! (`rust/tests/simd.rs`) asserts `==`, not tolerance, across every arm.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// An instruction-set arm the kernels can dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// 256-bit AVX2 integer + float paths (x86-64).
+    Avx2,
+    /// 128-bit SSE4.1 paths (x86-64; `pmovsxbw` needs 4.1).
+    Sse41,
+    /// Portable Rust fallback — also the reference the wide arms are
+    /// property-tested against.
+    Scalar,
+}
+
+impl Isa {
+    /// Short lowercase name (`avx2` / `sse4.1` / `scalar`) — logged at
+    /// serve startup and recorded as bench provenance.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Sse41 => "sse4.1",
+            Isa::Scalar => "scalar",
+        }
+    }
+
+    /// `true` for the wide (non-scalar) arms.
+    pub fn accelerated(self) -> bool {
+        !matches!(self, Isa::Scalar)
+    }
+}
+
+/// `(avx2, sse4.1)` hardware capability, detected once — independent of
+/// the `SVDQUANT_NO_SIMD` policy override.
+fn hw_features() -> (bool, bool) {
+    static HW: OnceLock<(bool, bool)> = OnceLock::new();
+    *HW.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            (
+                std::arch::is_x86_feature_detected!("avx2"),
+                std::arch::is_x86_feature_detected!("sse4.1"),
+            )
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            (false, false)
+        }
+    })
+}
+
+/// Does the running CPU support `isa`? (`Scalar` always does.)
+pub fn is_supported(isa: Isa) -> bool {
+    let (avx2, sse41) = hw_features();
+    match isa {
+        Isa::Avx2 => avx2,
+        Isa::Sse41 => sse41,
+        Isa::Scalar => true,
+    }
+}
+
+/// Clamp a requested arm to what the CPU can actually execute.
+fn sanitize(isa: Isa) -> Isa {
+    if is_supported(isa) {
+        isa
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Every runtime-supported arm, widest first, `Scalar` always last — the
+/// iteration axis of the parity tests and scalar-vs-SIMD bench rows.
+pub fn supported_isas() -> Vec<Isa> {
+    let mut out = Vec::new();
+    if is_supported(Isa::Avx2) {
+        out.push(Isa::Avx2);
+    }
+    if is_supported(Isa::Sse41) {
+        out.push(Isa::Sse41);
+    }
+    out.push(Isa::Scalar);
+    out
+}
+
+// override encoding: 0 = none, 1 = scalar, 2 = sse4.1, 3 = avx2
+static ISA_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+static DETECTED: OnceLock<Isa> = OnceLock::new();
+
+fn encode(isa: Isa) -> u8 {
+    match isa {
+        Isa::Scalar => 1,
+        Isa::Sse41 => 2,
+        Isa::Avx2 => 3,
+    }
+}
+
+/// The arm every dispatched kernel currently runs: the active
+/// [`override_isa`] if one is installed, else the once-resolved process
+/// default (hardware detection, unless `SVDQUANT_NO_SIMD=1` forced
+/// scalar).
+#[inline]
+pub fn active_isa() -> Isa {
+    match ISA_OVERRIDE.load(Ordering::Relaxed) {
+        1 => Isa::Scalar,
+        2 => Isa::Sse41,
+        3 => Isa::Avx2,
+        _ => *DETECTED.get_or_init(detect),
+    }
+}
+
+fn detect() -> Isa {
+    let no_simd = match std::env::var_os("SVDQUANT_NO_SIMD") {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    };
+    if no_simd {
+        return Isa::Scalar;
+    }
+    if is_supported(Isa::Avx2) {
+        Isa::Avx2
+    } else if is_supported(Isa::Sse41) {
+        Isa::Sse41
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Restores the previous dispatch override when dropped (see
+/// [`override_isa`]).
+pub struct IsaGuard {
+    prev: u8,
+}
+
+impl Drop for IsaGuard {
+    fn drop(&mut self) {
+        ISA_OVERRIDE.store(self.prev, Ordering::Relaxed);
+    }
+}
+
+/// Force every dispatched kernel onto `isa` until the returned guard
+/// drops (nestable; the guard restores whatever was installed before).
+///
+/// This is the bench/test facility behind the in-process scalar-vs-SIMD
+/// measurements and the cross-arm parity suite — because all arms are
+/// bitwise-identical, flipping the override concurrently with serving
+/// work changes only speed, never results. An `isa` the CPU cannot
+/// execute degrades to [`Isa::Scalar`].
+pub fn override_isa(isa: Isa) -> IsaGuard {
+    let prev = ISA_OVERRIDE.swap(encode(sanitize(isa)), Ordering::Relaxed);
+    IsaGuard { prev }
+}
+
+// ---------------------------------------------------------------------------
+// dot_i8: i8 × i8 → i32
+// ---------------------------------------------------------------------------
+
+/// `Σ a[i]·b[i]` over `len` elements in exact i32 arithmetic, on the
+/// dispatched arm. Both slices must hold at least `len` elements.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8], len: usize) -> i32 {
+    dot_i8_on(active_isa(), a, b, len)
+}
+
+/// [`dot_i8`] on an explicit arm (unsupported arms degrade to scalar).
+#[inline]
+pub fn dot_i8_on(isa: Isa, a: &[i8], b: &[i8], len: usize) -> i32 {
+    assert!(a.len() >= len && b.len() >= len, "dot_i8 slices shorter than len");
+    match sanitize(isa) {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dot_i8_avx2(a, b, len) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => unsafe { x86::dot_i8_sse41(a, b, len) },
+        _ => dot_i8_scalar(a, b, len),
+    }
+}
+
+/// Scalar reference: 4 independent accumulator lanes over `chunks_exact`
+/// windows — no bounds checks in the hot loop, so the compiler is free to
+/// autovectorize this arm too.
+pub fn dot_i8_scalar(a: &[i8], b: &[i8], len: usize) -> i32 {
+    let (a, b) = (&a[..len], &b[..len]);
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    for (ca, cb) in a.chunks_exact(4).zip(b.chunks_exact(4)) {
+        s0 += ca[0] as i32 * cb[0] as i32;
+        s1 += ca[1] as i32 * cb[1] as i32;
+        s2 += ca[2] as i32 * cb[2] as i32;
+        s3 += ca[3] as i32 * cb[3] as i32;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    let ra = a.chunks_exact(4).remainder();
+    let rb = b.chunks_exact(4).remainder();
+    for (&x, &y) in ra.iter().zip(rb) {
+        s += x as i32 * y as i32;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// quantize_row: dynamic symmetric int8 activation quantization
+// ---------------------------------------------------------------------------
+
+/// Quantize one activation row to int8 codes on the dispatched arm:
+/// `s = max|row| / 127` (zero rows get scale 1 and all-zero codes), then
+/// `code = round_ties_even(clamp(v/s, ±127))`. Returns the scale;
+/// `out.len()` must equal `row.len()`.
+#[inline]
+pub fn quantize_row(row: &[f32], out: &mut [i8]) -> f32 {
+    quantize_row_on(active_isa(), row, out)
+}
+
+/// [`quantize_row`] on an explicit arm (unsupported arms degrade to
+/// scalar).
+pub fn quantize_row_on(isa: Isa, row: &[f32], out: &mut [i8]) -> f32 {
+    assert_eq!(row.len(), out.len(), "quantize_row length mismatch");
+    match sanitize(isa) {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::quantize_row_avx2(row, out) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => unsafe { x86::quantize_row_sse41(row, out) },
+        _ => quantize_row_scalar(row, out),
+    }
+}
+
+/// Scalar reference for [`quantize_row`]: 8-lane chunked `amax` fold,
+/// then per-element clamp + ties-even round into the preallocated slice.
+pub fn quantize_row_scalar(row: &[f32], out: &mut [i8]) -> f32 {
+    let amax = amax_scalar(row);
+    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o = quantize_one(v, inv);
+    }
+    scale
+}
+
+/// One element of the quantizer — shared by the scalar arm and the SIMD
+/// arms' tail loops so tails cannot diverge from the vector body.
+#[inline]
+fn quantize_one(v: f32, inv: f32) -> i8 {
+    (v * inv).clamp(-127.0, 127.0).round_ties_even() as i8
+}
+
+/// `max |row[i]|` with an 8-lane chunked fold (`max` is order-insensitive
+/// for finite floats, so every arm lands on the same bits).
+fn amax_scalar(row: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    for ch in row.chunks_exact(8) {
+        for (m, &v) in lanes.iter_mut().zip(ch) {
+            *m = m.max(v.abs());
+        }
+    }
+    let mut amax = lanes.iter().fold(0.0f32, |a, &m| a.max(m));
+    for &v in row.chunks_exact(8).remainder() {
+        amax = amax.max(v.abs());
+    }
+    amax
+}
+
+// ---------------------------------------------------------------------------
+// unpack4: packed nibbles → sign-extended i8 codes
+// ---------------------------------------------------------------------------
+
+/// Byte → two sign-extended int4 codes; the 4-bit scalar arm (one indexed
+/// load per packed byte).
+static NIBBLE_I8: OnceLock<[[i8; 2]; 256]> = OnceLock::new();
+
+#[inline]
+fn sx4(nib: u8) -> i8 {
+    ((nib << 4) as i8) >> 4
+}
+
+fn nibble_i8_lut() -> &'static [[i8; 2]; 256] {
+    NIBBLE_I8.get_or_init(|| {
+        let mut t = [[0i8; 2]; 256];
+        for (b, item) in t.iter_mut().enumerate() {
+            item[0] = sx4(b as u8 & 0x0F);
+            item[1] = sx4((b as u8) >> 4);
+        }
+        t
+    })
+}
+
+/// Decode `out.len()` 4-bit codes (low nibble = even index) from `packed`
+/// on the dispatched arm. `packed` must hold at least
+/// `⌈out.len() / 2⌉` bytes.
+#[inline]
+pub fn unpack4_into(packed: &[u8], out: &mut [i8]) {
+    unpack4_into_on(active_isa(), packed, out);
+}
+
+/// [`unpack4_into`] on an explicit arm (unsupported arms degrade to the
+/// scalar nibble LUT).
+pub fn unpack4_into_on(isa: Isa, packed: &[u8], out: &mut [i8]) {
+    assert!(packed.len() >= (out.len() + 1) / 2, "unpack4: not enough packed bytes");
+    match sanitize(isa) {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::unpack4_avx2(packed, out) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => unsafe { x86::unpack4_sse41(packed, out) },
+        _ => unpack4_lut(packed, out),
+    }
+}
+
+/// Scalar 4-bit arm: the historical nibble-LUT decode.
+fn unpack4_lut(packed: &[u8], out: &mut [i8]) {
+    let lut = nibble_i8_lut();
+    let n = out.len();
+    for (o, &byte) in out.chunks_exact_mut(2).zip(packed) {
+        let d = lut[byte as usize];
+        o[0] = d[0];
+        o[1] = d[1];
+    }
+    if n % 2 == 1 {
+        out[n - 1] = sx4(packed[n / 2] & 0x0F);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 arms
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The AVX2 / SSE4.1 arms. Callers guarantee (via `sanitize`) that the
+    //! corresponding feature was runtime-detected before any of these run.
+    //!
+    //! Integer widening strategy for `dot_i8`: sign-extend 16 codes to
+    //! i16 (`pmovsxbw`), multiply-accumulate adjacent pairs into i32
+    //! lanes (`pmaddwd` — products are computed at i32 width, so
+    //! 127·127·2 cannot overflow), and keep 4/8 independent i32 lanes
+    //! until one horizontal reduction at the end. Exact at every step,
+    //! hence bitwise-equal to the scalar fold.
+
+    use std::arch::x86_64::*;
+
+    use super::{quantize_one, sx4};
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32_avx2(v: __m256i) -> i32 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4E>(s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_avx2(a: &[i8], b: &[i8], len: usize) -> i32 {
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let chunks = len / 32;
+        for c in 0..chunks {
+            let i = c * 32;
+            let a0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(ap.add(i) as *const __m128i));
+            let b0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(bp.add(i) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a0, b0));
+            let a1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(ap.add(i + 16) as *const __m128i));
+            let b1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(bp.add(i + 16) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a1, b1));
+        }
+        let mut i = chunks * 32;
+        if i + 16 <= len {
+            let a0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(ap.add(i) as *const __m128i));
+            let b0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(bp.add(i) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a0, b0));
+            i += 16;
+        }
+        let mut s = hsum_epi32_avx2(acc);
+        while i < len {
+            s += *ap.add(i) as i32 * *bp.add(i) as i32;
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dot_i8_sse41(a: &[i8], b: &[i8], len: usize) -> i32 {
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm_setzero_si128();
+        let chunks = len / 16;
+        for c in 0..chunks {
+            let i = c * 16;
+            let av = _mm_loadu_si128(ap.add(i) as *const __m128i);
+            let bv = _mm_loadu_si128(bp.add(i) as *const __m128i);
+            let lo = _mm_madd_epi16(_mm_cvtepi8_epi16(av), _mm_cvtepi8_epi16(bv));
+            let hi = _mm_madd_epi16(
+                _mm_cvtepi8_epi16(_mm_srli_si128::<8>(av)),
+                _mm_cvtepi8_epi16(_mm_srli_si128::<8>(bv)),
+            );
+            acc = _mm_add_epi32(acc, _mm_add_epi32(lo, hi));
+        }
+        let s = _mm_add_epi32(acc, _mm_shuffle_epi32::<0x4E>(acc));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s));
+        let mut sum = _mm_cvtsi128_si32(s);
+        for i in chunks * 16..len {
+            sum += *ap.add(i) as i32 * *bp.add(i) as i32;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_row_avx2(row: &[f32], out: &mut [i8]) -> f32 {
+        let n = row.len();
+        let p = row.as_ptr();
+        let chunks = n / 8;
+        // amax: 8-lane |v| max fold, reduced once
+        let signbit = _mm256_set1_ps(-0.0);
+        let mut mv = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let v = _mm256_loadu_ps(p.add(c * 8));
+            mv = _mm256_max_ps(mv, _mm256_andnot_ps(signbit, v));
+        }
+        let m = _mm_max_ps(_mm256_castps256_ps128(mv), _mm256_extractf128_ps::<1>(mv));
+        let m = _mm_max_ps(m, _mm_shuffle_ps::<0x4E>(m, m));
+        let m = _mm_max_ps(m, _mm_shuffle_ps::<0xB1>(m, m));
+        let mut amax = _mm_cvtss_f32(m);
+        for i in chunks * 8..n {
+            amax = amax.max((*p.add(i)).abs());
+        }
+        let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        let inv = 1.0 / scale;
+        // scale → clamp → convert (cvtps2dq rounds ties-to-even, matching
+        // the scalar arm's round_ties_even)
+        let vinv = _mm256_set1_ps(inv);
+        let vlo = _mm256_set1_ps(-127.0);
+        let vhi = _mm256_set1_ps(127.0);
+        for c in 0..chunks {
+            let t = _mm256_mul_ps(_mm256_loadu_ps(p.add(c * 8)), vinv);
+            let t = _mm256_min_ps(_mm256_max_ps(t, vlo), vhi);
+            let q = _mm256_cvtps_epi32(t);
+            let mut tmp = [0i32; 8];
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, q);
+            for (o, &code) in out[c * 8..c * 8 + 8].iter_mut().zip(tmp.iter()) {
+                *o = code as i8;
+            }
+        }
+        for i in chunks * 8..n {
+            out[i] = quantize_one(row[i], inv);
+        }
+        scale
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn quantize_row_sse41(row: &[f32], out: &mut [i8]) -> f32 {
+        let n = row.len();
+        let p = row.as_ptr();
+        let chunks = n / 4;
+        let signbit = _mm_set1_ps(-0.0);
+        let mut mv = _mm_setzero_ps();
+        for c in 0..chunks {
+            let v = _mm_loadu_ps(p.add(c * 4));
+            mv = _mm_max_ps(mv, _mm_andnot_ps(signbit, v));
+        }
+        let m = _mm_max_ps(mv, _mm_shuffle_ps::<0x4E>(mv, mv));
+        let m = _mm_max_ps(m, _mm_shuffle_ps::<0xB1>(m, m));
+        let mut amax = _mm_cvtss_f32(m);
+        for i in chunks * 4..n {
+            amax = amax.max((*p.add(i)).abs());
+        }
+        let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        let inv = 1.0 / scale;
+        let vinv = _mm_set1_ps(inv);
+        let vlo = _mm_set1_ps(-127.0);
+        let vhi = _mm_set1_ps(127.0);
+        for c in 0..chunks {
+            let t = _mm_mul_ps(_mm_loadu_ps(p.add(c * 4)), vinv);
+            let t = _mm_min_ps(_mm_max_ps(t, vlo), vhi);
+            let q = _mm_cvtps_epi32(t);
+            let mut tmp = [0i32; 4];
+            _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, q);
+            for (o, &code) in out[c * 4..c * 4 + 4].iter_mut().zip(tmp.iter()) {
+                *o = code as i8;
+            }
+        }
+        for i in chunks * 4..n {
+            out[i] = quantize_one(row[i], inv);
+        }
+        scale
+    }
+
+    /// 32 packed bytes → 64 sign-extended codes per iteration: mask the
+    /// nibbles apart, sign-extend 4→8 bits with `(x ^ 8) - 8`, interleave
+    /// lo/hi byte-wise, and fix AVX2's in-lane unpack with one
+    /// cross-lane permute per store.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack4_avx2(packed: &[u8], out: &mut [i8]) {
+        let n = out.len();
+        let nb = n / 2; // whole packed bytes
+        let pp = packed.as_ptr();
+        let op = out.as_mut_ptr();
+        let lomask = _mm256_set1_epi8(0x0F);
+        let bias = _mm256_set1_epi8(8);
+        let mut b = 0usize;
+        while b + 32 <= nb {
+            let v = _mm256_loadu_si256(pp.add(b) as *const __m256i);
+            let lo = _mm256_and_si256(v, lomask);
+            let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), lomask);
+            let lo = _mm256_sub_epi8(_mm256_xor_si256(lo, bias), bias);
+            let hi = _mm256_sub_epi8(_mm256_xor_si256(hi, bias), bias);
+            let u0 = _mm256_unpacklo_epi8(lo, hi);
+            let u1 = _mm256_unpackhi_epi8(lo, hi);
+            let first = _mm256_permute2x128_si256::<0x20>(u0, u1);
+            let second = _mm256_permute2x128_si256::<0x31>(u0, u1);
+            _mm256_storeu_si256(op.add(2 * b) as *mut __m256i, first);
+            _mm256_storeu_si256(op.add(2 * b + 32) as *mut __m256i, second);
+            b += 32;
+        }
+        while b < nb {
+            let byte = *pp.add(b);
+            *op.add(2 * b) = sx4(byte & 0x0F);
+            *op.add(2 * b + 1) = sx4(byte >> 4);
+            b += 1;
+        }
+        if n % 2 == 1 {
+            out[n - 1] = sx4(packed[nb] & 0x0F);
+        }
+    }
+
+    /// 16 packed bytes → 32 sign-extended codes per iteration (the SSE
+    /// unpacks interleave across the full register — no permute needed).
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn unpack4_sse41(packed: &[u8], out: &mut [i8]) {
+        let n = out.len();
+        let nb = n / 2;
+        let pp = packed.as_ptr();
+        let op = out.as_mut_ptr();
+        let lomask = _mm_set1_epi8(0x0F);
+        let bias = _mm_set1_epi8(8);
+        let mut b = 0usize;
+        while b + 16 <= nb {
+            let v = _mm_loadu_si128(pp.add(b) as *const __m128i);
+            let lo = _mm_and_si128(v, lomask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), lomask);
+            let lo = _mm_sub_epi8(_mm_xor_si128(lo, bias), bias);
+            let hi = _mm_sub_epi8(_mm_xor_si128(hi, bias), bias);
+            _mm_storeu_si128(op.add(2 * b) as *mut __m128i, _mm_unpacklo_epi8(lo, hi));
+            _mm_storeu_si128(op.add(2 * b + 16) as *mut __m128i, _mm_unpackhi_epi8(lo, hi));
+            b += 16;
+        }
+        while b < nb {
+            let byte = *pp.add(b);
+            *op.add(2 * b) = sx4(byte & 0x0F);
+            *op.add(2 * b + 1) = sx4(byte >> 4);
+            b += 1;
+        }
+        if n % 2 == 1 {
+            out[n - 1] = sx4(packed[nb] & 0x0F);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn supported_isas_ends_with_scalar() {
+        let isas = supported_isas();
+        assert_eq!(*isas.last().unwrap(), Isa::Scalar);
+        for isa in isas {
+            assert!(is_supported(isa), "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn override_guard_restores_previous_arm() {
+        let before = active_isa();
+        {
+            let _g = override_isa(Isa::Scalar);
+            assert_eq!(active_isa(), Isa::Scalar);
+        }
+        assert_eq!(active_isa(), before);
+    }
+
+    #[test]
+    fn unsupported_override_degrades_to_scalar() {
+        // requesting an arm the CPU may lack must never install an
+        // unexecutable arm — at minimum the result is a supported one
+        let _g = override_isa(Isa::Avx2);
+        assert!(is_supported(active_isa()));
+    }
+
+    #[test]
+    fn dot_i8_every_arm_matches_scalar() {
+        let mut rng = Rng::new(0x51D0);
+        for len in [0usize, 1, 3, 4, 15, 16, 17, 31, 32, 33, 63, 64, 100, 1024, 1031] {
+            let a: Vec<i8> = (0..len).map(|_| rng.range(0, 256) as u8 as i8).collect();
+            let b: Vec<i8> = (0..len).map(|_| rng.range(0, 256) as u8 as i8).collect();
+            let want = dot_i8_scalar(&a, &b, len);
+            for isa in supported_isas() {
+                assert_eq!(dot_i8_on(isa, &a, &b, len), want, "{isa:?} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_row_every_arm_matches_scalar() {
+        let mut rng = Rng::new(0x51D1);
+        for len in [0usize, 1, 5, 7, 8, 9, 16, 33, 100, 511] {
+            let row: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+            let mut want = vec![0i8; len];
+            let sw = quantize_row_scalar(&row, &mut want);
+            for isa in supported_isas() {
+                let mut got = vec![0i8; len];
+                let sg = quantize_row_on(isa, &row, &mut got);
+                assert_eq!(sg, sw, "{isa:?} len {len} scale");
+                assert_eq!(got, want, "{isa:?} len {len} codes");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_row_rounds_ties_to_even_on_every_arm() {
+        // amax 127 → scale exactly 1.0, so each value IS the pre-round
+        // code; .5 ties must land on the even neighbor on every arm
+        let row = [127.0f32, 0.5, -0.5, 1.5, -1.5, 2.5, 3.5, -2.5, -3.5];
+        let want = [127i8, 0, 0, 2, -2, 2, 4, -2, -4];
+        for isa in supported_isas() {
+            let mut got = [0i8; 9];
+            let s = quantize_row_on(isa, &row, &mut got);
+            assert_eq!(s, 1.0, "{isa:?}");
+            assert_eq!(got, want, "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn quantize_row_zero_row_scale_one() {
+        for isa in supported_isas() {
+            let row = [0.0f32; 13];
+            let mut out = [1i8; 13];
+            assert_eq!(quantize_row_on(isa, &row, &mut out), 1.0, "{isa:?}");
+            assert!(out.iter().all(|&c| c == 0), "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn unpack4_every_arm_matches_lut() {
+        let mut rng = Rng::new(0x51D2);
+        for n in [0usize, 1, 2, 3, 31, 32, 33, 63, 64, 65, 127, 128, 129, 500] {
+            // pack n random 4-bit codes the legacy way: two per byte
+            let codes: Vec<i8> = (0..n).map(|_| rng.range(0, 16) as i8 - 8).collect();
+            let mut packed = vec![0u8; (n + 1) / 2];
+            for (i, &c) in codes.iter().enumerate() {
+                let nib = (c as u8) & 0x0F;
+                if i % 2 == 0 {
+                    packed[i / 2] |= nib;
+                } else {
+                    packed[i / 2] |= nib << 4;
+                }
+            }
+            let mut want = vec![0i8; n];
+            unpack4_into_on(Isa::Scalar, &packed, &mut want);
+            assert_eq!(want, codes, "lut arm must reproduce the codes");
+            for isa in supported_isas() {
+                let mut got = vec![0i8; n];
+                unpack4_into_on(isa, &packed, &mut got);
+                assert_eq!(got, want, "{isa:?} n {n}");
+            }
+        }
+    }
+}

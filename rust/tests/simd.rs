@@ -1,0 +1,184 @@
+//! Cross-ISA parity suite for the runtime-dispatched kernels
+//! (`svdquant::util::simd`, DESIGN.md §8).
+//!
+//! The contract under test is *bitwise identity*: every dispatch arm
+//! (AVX2 / SSE4.1 / scalar) of `dot_i8`, the activation quantizer, and
+//! the BitPack decode must produce byte-for-byte the same outputs, across
+//! widths 2/3/4/8, odd/even lengths, and every tail remainder 0..=31 —
+//! plus an end-to-end `matmul_xt_int` case with the dispatch toggled,
+//! the in-process equivalent of rerunning under `SVDQUANT_NO_SIMD=1`
+//! (CI runs the whole suite both ways for the env-var path itself).
+//!
+//! Tests that flip the process-wide dispatch serialize on [`ISA_LOCK`] so
+//! a concurrently running override cannot *mask* an arm (identity itself
+//! is unaffected — that is the point of the contract — but a test that
+//! believes it pinned AVX2 while another pinned scalar would silently
+//! stop covering the wide arm).
+
+use std::sync::Mutex;
+
+use svdquant::linalg::Matrix;
+use svdquant::quant::packing::BitPack;
+use svdquant::quant::{quantize_rows, QuantConfig, QuantizedMatrix, SUPPORTED_BITS};
+use svdquant::sparse::Coo;
+use svdquant::util::rng::Rng;
+use svdquant::util::simd::{
+    dot_i8_on, override_isa, quantize_row_on, supported_isas, unpack4_into_on, Isa,
+};
+
+static ISA_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    ISA_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Lengths covering empty, sub-vector, exact-vector, and every tail
+/// remainder 0..=31 past a full 64-element body.
+fn tail_lengths() -> Vec<usize> {
+    let mut lens = vec![0, 1, 2, 3, 5, 8, 15, 16, 17, 31, 32, 33, 63];
+    lens.extend((0..=31).map(|rem| 64 + rem));
+    lens.push(1024);
+    lens.push(1031);
+    lens
+}
+
+#[test]
+fn dot_i8_bitwise_identical_across_arms() {
+    let mut rng = Rng::new(0xD07);
+    for len in tail_lengths() {
+        let a: Vec<i8> = (0..len).map(|_| rng.range(0, 256) as u8 as i8).collect();
+        let b: Vec<i8> = (0..len).map(|_| rng.range(0, 256) as u8 as i8).collect();
+        let want = dot_i8_on(Isa::Scalar, &a, &b, len);
+        // exact i32 reference, independently computed
+        let check: i32 = a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+        assert_eq!(want, check, "scalar arm vs naive reference, len {len}");
+        for isa in supported_isas() {
+            assert_eq!(dot_i8_on(isa, &a, &b, len), want, "{isa:?} len {len}");
+        }
+    }
+}
+
+#[test]
+fn quantize_bitwise_identical_across_arms() {
+    let mut rng = Rng::new(0xD08);
+    for len in tail_lengths() {
+        let row: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 2.5)).collect();
+        let mut want = vec![0i8; len];
+        let s_want = quantize_row_on(Isa::Scalar, &row, &mut want);
+        for isa in supported_isas() {
+            let mut got = vec![0i8; len];
+            let s_got = quantize_row_on(isa, &row, &mut got);
+            assert_eq!(s_got, s_want, "{isa:?} len {len}: scale");
+            assert_eq!(got, want, "{isa:?} len {len}: codes");
+        }
+    }
+}
+
+#[test]
+fn quantize_rounds_ties_to_even() {
+    // amax = 127 makes the scale exactly 1, so inputs are the pre-round
+    // values; every arm must land .5 ties on the even neighbor
+    let row = [127.0f32, 0.5, -0.5, 1.5, 2.5, 3.5, -1.5, -2.5, -3.5, 126.5];
+    let want = [127i8, 0, 0, 2, 2, 4, -2, -2, -4, 126];
+    for isa in supported_isas() {
+        let mut got = [0i8; 10];
+        let s = quantize_row_on(isa, &row, &mut got);
+        assert_eq!(s, 1.0, "{isa:?}: scale");
+        assert_eq!(got, want, "{isa:?}: ties-even codes");
+    }
+}
+
+#[test]
+fn bitpack_decode_bitwise_identical_across_arms_and_widths() {
+    let mut rng = Rng::new(0xD09);
+    for bits in SUPPORTED_BITS {
+        let codec = BitPack::new(bits).unwrap();
+        let span = (codec.code_max() as i32 - codec.code_min() as i32 + 1) as usize;
+        for n in tail_lengths() {
+            let codes: Vec<i8> = (0..n)
+                .map(|_| (codec.code_min() as i32 + rng.range(0, span) as i32) as i8)
+                .collect();
+            let packed = codec.pack(&codes);
+            // the serial bit-walk is the ground truth for the stream layout
+            let mut want = vec![0i8; n];
+            codec.unpack_into_serial(&packed, &mut want);
+            assert_eq!(want, codes, "b={bits} n={n}: serial roundtrip");
+            if bits == 4 {
+                // the SIMD nibble expand, pinned per arm explicitly
+                for isa in supported_isas() {
+                    let mut got = vec![0i8; n];
+                    unpack4_into_on(isa, &packed, &mut got);
+                    assert_eq!(got, want, "{isa:?} b=4 n={n}");
+                }
+            }
+            // the dispatched decode under each installed override
+            let _guard = lock();
+            for isa in supported_isas() {
+                let _g = override_isa(isa);
+                let mut got = vec![0i8; n];
+                codec.unpack_into(&packed, &mut got);
+                assert_eq!(got, want, "{isa:?} b={bits} n={n} dispatched");
+            }
+        }
+    }
+}
+
+#[test]
+fn matmul_xt_int_bitwise_identical_with_dispatch_toggled() {
+    // end to end: quantize a matrix at every width (salient overlay
+    // included), then run the full integer forward under scalar-forced
+    // dispatch and under every hardware arm — outputs must be equal to
+    // the last bit, which is exactly what makes `SVDQUANT_NO_SIMD=1` a
+    // pure perf switch
+    let _guard = lock();
+    let mut rng = Rng::new(0xD0A);
+    for bits in SUPPORTED_BITS {
+        let (rows, cols, batch) = (19, 173, 5);
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(w.data_mut(), 0.05);
+        let mut sal = Coo::new(rows, cols);
+        for idx in rng.sample_distinct(rows * cols, 60) {
+            sal.push(idx / cols, idx % cols, w[(idx / cols, idx % cols)]);
+        }
+        let cfg = QuantConfig::default().with_bits(bits);
+        let qm = QuantizedMatrix::from_dense(&w, &cfg, &sal);
+        let mut x = Matrix::zeros(batch, cols);
+        rng.fill_normal(x.data_mut(), 1.0);
+
+        let want = {
+            let _g = override_isa(Isa::Scalar);
+            qm.matmul_xt_int(&x)
+        };
+        for isa in supported_isas() {
+            let _g = override_isa(isa);
+            let got = qm.matmul_xt_int(&x);
+            assert!(got.approx_eq(&want, 0.0), "{isa:?} bits {bits}: forward diverged");
+            // and the float reference path, which also decodes through
+            // the dispatched codec at 4 bits
+            let fref = {
+                let _s = override_isa(Isa::Scalar);
+                qm.matmul_xt(&x)
+            };
+            let fgot = qm.matmul_xt(&x);
+            assert!(fgot.approx_eq(&fref, 0.0), "{isa:?} bits {bits}: float path diverged");
+        }
+    }
+}
+
+#[test]
+fn activation_batch_quantize_identical_across_arms() {
+    let _guard = lock();
+    let mut rng = Rng::new(0xD0B);
+    let mut x = Matrix::zeros(9, 201);
+    rng.fill_normal(x.data_mut(), 1.7);
+    let want = {
+        let _g = override_isa(Isa::Scalar);
+        quantize_rows(&x)
+    };
+    for isa in supported_isas() {
+        let _g = override_isa(isa);
+        let got = quantize_rows(&x);
+        assert_eq!(got.codes, want.codes, "{isa:?}: batch codes");
+        assert_eq!(got.scales, want.scales, "{isa:?}: batch scales");
+    }
+}
