@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
             workers: 2,
             deadline: Some(Duration::from_millis(250)),
             clock: svdquant::util::clock::Clock::wall(),
+            ..ServerConfig::default()
         };
         let s = serve_trace(&qm, &dev, &trace, &cfg)?;
         println!(

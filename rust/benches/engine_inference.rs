@@ -14,7 +14,10 @@ mod common;
 
 use std::time::Duration;
 
-use svdquant::coordinator::server::{serve_trace, ServerConfig};
+use svdquant::coordinator::server::{
+    serve, serve_trace, ChaosPlan, Registry, SchedPolicy, ServeStats, ServerConfig,
+    ServiceModel,
+};
 use svdquant::coordinator::QuantizePipeline;
 use svdquant::data::TraceGenerator;
 use svdquant::json::Json;
@@ -194,6 +197,7 @@ fn main() {
             workers,
             deadline: None,
             clock: Clock::wall(),
+            ..ServerConfig::default()
         };
         for (kernel, name) in [(GemmKernel::F32, "f32"), (GemmKernel::Int8, "int8")] {
             qm.set_kernel(kernel);
@@ -240,6 +244,7 @@ fn main() {
         workers: 2,
         deadline: None,
         clock: Clock::virt(),
+        ..ServerConfig::default()
     };
     let t0 = std::time::Instant::now();
     let vs = serve_trace(&qm, &dev, &trace, &vcfg).expect("virtual serve");
@@ -252,6 +257,183 @@ fn main() {
         virt_wall_s,
         vs.wall_s / virt_wall_s.max(1e-9)
     );
+
+    // ---- capacity-planning curves: offered load vs p99 / shed / SLO ------
+    // the serving stack as a discrete-event simulation: the measured int8
+    // forward costs calibrate a ServiceModel (cost(b) ≈ base + per_req·b),
+    // then a heavy-tailed three-tenant trace is swept across load multiples
+    // of modeled capacity on the virtual clock — thousands of simulated
+    // requests per point for milliseconds of real time. FIFO and EDF run on
+    // identical traces, so the SLO-attainment gap at each point is
+    // attributable to head selection alone.
+    let capacity_json = {
+        let lookup = |key: &str| {
+            fwd_section
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|&(_, v)| v)
+                .expect("forward section measured above")
+        };
+        let cost1 = 1.0 / lookup("fused_int8_b1_seq_per_s").max(1e-9);
+        let cost16 = 16.0 / lookup("fused_int8_b16_seq_per_s").max(1e-9);
+        let per_req_s = ((cost16 - cost1) / 15.0).max(1e-7);
+        let service =
+            ServiceModel { base_s: (cost1 - per_req_s).max(0.0), per_req_s, simulate: true };
+        let workers = 2usize;
+        let capacity = workers as f64 * service.capacity_rps(16);
+        println!(
+            "  capacity sweep: modeled cost(b=16) {:.2}ms -> {:.0} req/s across {workers} workers",
+            service.cost_s(16) * 1e3,
+            capacity
+        );
+
+        // SLOs scale with the modeled batch cost so the sweep stresses the
+        // scheduler identically on fast and slow machines
+        let mut registry = Registry::new();
+        let tight_s = (3.0 * service.cost_s(16)).max(0.010);
+        let relaxed_s = (10.0 * service.cost_s(16)).max(0.050);
+        registry.add_with_slo("interactive", &qm, &dev, Some(Duration::from_secs_f64(tight_s)));
+        registry.add_with_slo("standard", &qm, &dev, Some(Duration::from_secs_f64(relaxed_s)));
+        registry.add("batch", &qm, &dev);
+        let deadline = Duration::from_secs_f64((20.0 * service.cost_s(16)).max(0.2));
+
+        let n = 4000usize;
+        let mults = [0.25, 0.5, 0.75, 0.9, 1.1, 1.5, 2.0];
+        let mut curve_rows: Vec<Json> = Vec::new();
+        let mut table_rows = Vec::new();
+        let mut edf_delta_at_overload = 0.0;
+        for (mi, &mult) in mults.iter().enumerate() {
+            let rate = capacity * mult;
+            let trace = TraceGenerator::heavy_tailed(rate).generate_tagged(
+                n,
+                &registry.sample_counts(),
+                0xCA9A + mi as u64,
+            );
+            let mut att = [0.0f64; 2];
+            for (pi, sched) in [SchedPolicy::Fifo, SchedPolicy::Edf].into_iter().enumerate() {
+                let scfg = ServerConfig {
+                    max_batch: 16,
+                    max_wait: Duration::from_millis(4),
+                    queue_cap: 512,
+                    workers,
+                    deadline: Some(deadline),
+                    sched,
+                    service: Some(service),
+                    chaos: None,
+                    clock: Clock::virt(),
+                };
+                let s = serve(&registry, &trace, &scfg).expect("capacity serve");
+                att[pi] = s.slo_attainment;
+                curve_rows.push(capacity_row(mult, rate, sched, &s));
+                table_rows.push(vec![
+                    format!("{mult:.2}"),
+                    format!("{rate:.0}"),
+                    sched.to_string(),
+                    format!("{:.1}", s.p50_ms),
+                    format!("{:.1}", s.p99_ms),
+                    format!("{:.3}", s.shed as f64 / s.offered.max(1) as f64),
+                    format!("{:.3}", s.expired as f64 / s.offered.max(1) as f64),
+                    format!("{:.3}", s.slo_attainment),
+                ]);
+            }
+            if mult == 1.1 {
+                edf_delta_at_overload = att[1] - att[0];
+            }
+        }
+        b.table(
+            "capacity curves (heavy-tailed trace, simulated service, virtual clock)",
+            ["load x", "offered rps", "sched", "p50 ms", "p99 ms", "shed", "expired", "SLO att"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            table_rows,
+        );
+
+        // one chaos point at 0.9x load under EDF: a worker dies mid-drain
+        // and respawns, then a storm overwhelms admission — serve() itself
+        // enforces the conservation law, so this row doubles as an
+        // end-to-end chaos check on the real bench model
+        let chaos_row = {
+            let rate = capacity * 0.9;
+            let span = n as f64 / rate.max(1e-9);
+            let plan = ChaosPlan::new()
+                .kill_at(span * 0.25)
+                .respawn_at(span * 0.30)
+                .storm_at(span * 0.50, n / 8, 0);
+            let trace = TraceGenerator::heavy_tailed(rate).generate_tagged(
+                n,
+                &registry.sample_counts(),
+                0xC405,
+            );
+            let scfg = ServerConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(4),
+                queue_cap: 512,
+                workers,
+                deadline: Some(deadline),
+                sched: SchedPolicy::Edf,
+                service: Some(service),
+                chaos: Some(plan),
+                clock: Clock::virt(),
+            };
+            let s = serve(&registry, &trace, &scfg).expect("chaos serve");
+            println!(
+                "  chaos point: {} offered ({} injected), {} kill / {} respawn, \
+                 attainment {:.3}",
+                s.offered, s.injected, s.worker_kills, s.worker_respawns, s.slo_attainment
+            );
+            capacity_row(0.9, rate, SchedPolicy::Edf, &s)
+        };
+
+        let tenants_json: Vec<Json> = registry
+            .names()
+            .iter()
+            .zip(registry.slos_s())
+            .map(|(name, slo)| {
+                Json::object(vec![
+                    ("name".to_string(), Json::from(name.as_str())),
+                    (
+                        "slo_ms".to_string(),
+                        slo.map(|s| Json::from(s * 1e3)).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        let doc = Json::object(vec![
+            ("bench".to_string(), Json::from("engine_inference")),
+            ("source".to_string(), Json::from(source)),
+            (
+                "service_model".to_string(),
+                Json::object(vec![
+                    ("base_ms".to_string(), Json::from(service.base_s * 1e3)),
+                    ("per_req_ms".to_string(), Json::from(service.per_req_s * 1e3)),
+                    ("workers".to_string(), Json::from(workers)),
+                    ("capacity_rps".to_string(), Json::from(capacity)),
+                ]),
+            ),
+            ("tenants".to_string(), Json::Array(tenants_json)),
+            ("requests_per_point".to_string(), Json::from(n)),
+            ("curves".to_string(), Json::Array(curve_rows)),
+            ("chaos_point".to_string(), chaos_row),
+            (
+                "edf_minus_fifo_attainment_at_1p1x".to_string(),
+                Json::from(edf_delta_at_overload),
+            ),
+        ]);
+        let path = std::path::Path::new("results/capacity.json");
+        let _ = std::fs::create_dir_all("results");
+        match std::fs::write(path, doc.pretty()) {
+            Ok(()) => println!("  capacity curves -> {}", path.display()),
+            Err(e) => eprintln!("warn: could not write {}: {e}", path.display()),
+        }
+        Json::object(vec![
+            ("path".to_string(), Json::from("results/capacity.json")),
+            (
+                "edf_minus_fifo_attainment_at_1p1x".to_string(),
+                Json::from(edf_delta_at_overload),
+            ),
+        ])
+    };
 
     // ---- artifact cold start: pipeline-from-scratch vs mmap load ---------
     // quantize-once/serve-many: the deployed model goes to a QTZ2 artifact,
@@ -338,6 +520,7 @@ fn main() {
             ("forward_by_width".to_string(), Json::object(width_fwd)),
             ("simd_forward".to_string(), simd_fwd),
             ("serving".to_string(), Json::Array(json_rows)),
+            ("capacity".to_string(), capacity_json),
             (
                 "virtual_replay".to_string(),
                 Json::object(vec![
@@ -370,11 +553,54 @@ fn main() {
     b.finish();
 }
 
+/// One point on the capacity curve — everything a load-vs-latency or
+/// SLO-attainment plot needs, per scheduling policy.
+fn capacity_row(mult: f64, rate: f64, sched: SchedPolicy, s: &ServeStats) -> Json {
+    let offered = s.offered.max(1) as f64;
+    Json::object(vec![
+        ("load_multiple".to_string(), Json::from(mult)),
+        ("offered_rps".to_string(), Json::from(rate)),
+        ("sched".to_string(), Json::from(sched.to_string())),
+        ("achieved_rps".to_string(), Json::from(s.throughput_rps)),
+        ("p50_ms".to_string(), Json::from(s.p50_ms)),
+        ("p99_ms".to_string(), Json::from(s.p99_ms)),
+        ("shed_rate".to_string(), Json::from(s.shed as f64 / offered)),
+        ("expired_rate".to_string(), Json::from(s.expired as f64 / offered)),
+        ("slo_attainment".to_string(), Json::from(s.slo_attainment)),
+        ("expired_wait_p99_ms".to_string(), Json::from(s.expired_wait_p99_ms)),
+        ("injected".to_string(), Json::from(s.injected)),
+        ("worker_kills".to_string(), Json::from(s.worker_kills)),
+        ("worker_respawns".to_string(), Json::from(s.worker_respawns)),
+        (
+            "per_tenant".to_string(),
+            Json::Array(
+                s.per_tenant
+                    .iter()
+                    .map(|t| {
+                        Json::object(vec![
+                            ("task".to_string(), Json::from(t.task.as_str())),
+                            (
+                                "slo_ms".to_string(),
+                                t.slo_ms.map(Json::from).unwrap_or(Json::Null),
+                            ),
+                            ("slo_attainment".to_string(), Json::from(t.slo_attainment)),
+                            ("completions".to_string(), Json::from(t.completions)),
+                            ("shed".to_string(), Json::from(t.shed)),
+                            ("expired".to_string(), Json::from(t.expired)),
+                            ("p99_ms".to_string(), Json::from(t.p99_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 fn serve_stats_json(
     kernel: &str,
     threads: usize,
     workers: usize,
-    s: &svdquant::coordinator::server::ServeStats,
+    s: &ServeStats,
     tokens_s: f64,
 ) -> Json {
     Json::object(vec![

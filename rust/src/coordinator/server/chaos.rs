@@ -1,0 +1,286 @@
+//! Failure injection for the serving path, scripted on the serve clock.
+//!
+//! A [`ChaosPlan`] is a time-sorted list of events the admission front
+//! fires while it replays the trace — on a virtual clock the whole
+//! scenario (worker killed mid-drain, respawned two virtual seconds
+//! later, a queue-full storm at peak) runs deterministically in
+//! milliseconds of test time. Three actions:
+//!
+//! * **KillWorker** — the next worker to pop a non-empty batch hands the
+//!   batch back to the queue front ([`requeue_front`]) and exits. The
+//!   batch was popped but not processed, so redelivery (not re-admission)
+//!   is what keeps `completions + shed + expired == offered` intact:
+//!   nothing is counted twice and nothing vanishes.
+//! * **RespawnWorker** — the front spawns a replacement worker into the
+//!   same scoped pool.
+//! * **QueueStorm** — `n` synthetic requests for one tenant are pushed
+//!   back-to-back at the event instant, overwhelming admission; the
+//!   overflow sheds and the shed tally absorbs it. Storm requests extend
+//!   the offered count (`offered = trace.len() + injected`).
+//!
+//! Why the accounting invariant survives kill/respawn: every admitted
+//! request is always in exactly one place — the queue, a popped batch, or
+//! the collector. A kill moves a batch back into the queue; if *all*
+//! workers die, `serve`'s post-drain sweep turns whatever is left in the
+//! queue into expired records. No transition drops or duplicates a
+//! request, so the conservation law is interleaving-independent — which
+//! is exactly what the chaos property suite asserts.
+//!
+//! [`requeue_front`]: super::BoundedQueue::requeue_front
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+/// One scripted failure action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// Kill the next worker that pops a batch (it redelivers the batch
+    /// and exits).
+    KillWorker,
+    /// Spawn a replacement worker into the pool.
+    RespawnWorker,
+    /// Push `n` synthetic requests for tenant `task` at one instant.
+    QueueStorm {
+        /// number of requests injected back-to-back
+        n: usize,
+        /// target tenant/task id
+        task: usize,
+    },
+}
+
+/// A scripted failure event at a clock time (seconds from serve start).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosEvent {
+    pub at_s: f64,
+    pub action: ChaosAction,
+}
+
+/// A failure-injection script: events sorted by time, fired by the
+/// admission front as the trace replay passes each timestamp.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChaosPlan {
+    events: Vec<ChaosEvent>,
+}
+
+impl ChaosPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule a worker kill at `at_s`.
+    pub fn kill_at(self, at_s: f64) -> Self {
+        self.with(ChaosEvent { at_s, action: ChaosAction::KillWorker })
+    }
+
+    /// Schedule a worker respawn at `at_s`.
+    pub fn respawn_at(self, at_s: f64) -> Self {
+        self.with(ChaosEvent { at_s, action: ChaosAction::RespawnWorker })
+    }
+
+    /// Schedule a queue-full storm of `n` requests for `task` at `at_s`.
+    pub fn storm_at(self, at_s: f64, n: usize, task: usize) -> Self {
+        self.with(ChaosEvent { at_s, action: ChaosAction::QueueStorm { n, task } })
+    }
+
+    fn with(mut self, e: ChaosEvent) -> Self {
+        // insertion keeping time order, stable for equal timestamps
+        let pos = self.events.partition_point(|x| x.at_s <= e.at_s);
+        self.events.insert(pos, e);
+        self
+    }
+
+    /// Events in firing order.
+    pub fn events(&self) -> &[ChaosEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Total storm requests this plan injects on top of the trace.
+    pub fn injected(&self) -> usize {
+        self.events
+            .iter()
+            .map(|e| match e.action {
+                ChaosAction::QueueStorm { n, .. } => n,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Reject plans that cannot be executed against `n_tenants` tenants.
+    pub fn validate(&self, n_tenants: usize) -> Result<()> {
+        for e in &self.events {
+            if !e.at_s.is_finite() || e.at_s < 0.0 {
+                bail!("chaos event time {} is not a finite non-negative second", e.at_s);
+            }
+            if let ChaosAction::QueueStorm { n, task } = e.action {
+                if n == 0 {
+                    bail!("queue storm at {}s injects zero requests", e.at_s);
+                }
+                if task >= n_tenants {
+                    bail!(
+                        "queue storm at {}s targets task {task} but only {n_tenants} tenants are registered",
+                        e.at_s
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI mini-DSL: comma-separated events, each
+    /// `kill@T`, `respawn@T`, or `storm@T:NxTASK` (times in seconds).
+    /// Example: `kill@5,respawn@8,storm@10:200x0`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = part
+                .split_once('@')
+                .with_context(|| format!("chaos event '{part}': expected kind@time"))?;
+            match kind {
+                "kill" => {
+                    let t: f64 = rest
+                        .parse()
+                        .with_context(|| format!("chaos event '{part}': bad time"))?;
+                    plan = plan.kill_at(t);
+                }
+                "respawn" => {
+                    let t: f64 = rest
+                        .parse()
+                        .with_context(|| format!("chaos event '{part}': bad time"))?;
+                    plan = plan.respawn_at(t);
+                }
+                "storm" => {
+                    let (t, spec) = rest.split_once(':').with_context(|| {
+                        format!("chaos event '{part}': expected storm@T:NxTASK")
+                    })?;
+                    let (n, task) = spec.split_once('x').with_context(|| {
+                        format!("chaos event '{part}': expected storm@T:NxTASK")
+                    })?;
+                    plan = plan.storm_at(
+                        t.parse().with_context(|| format!("chaos event '{part}': bad time"))?,
+                        n.parse().with_context(|| format!("chaos event '{part}': bad count"))?,
+                        task.parse().with_context(|| format!("chaos event '{part}': bad task"))?,
+                    );
+                }
+                other => bail!("unknown chaos action '{other}' (expected kill|respawn|storm)"),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Shared runtime state for one serve run's chaos execution: the front
+/// thread publishes kill tokens and counters; workers consume tokens.
+#[derive(Debug, Default)]
+pub(super) struct ChaosRuntime {
+    /// outstanding kill requests — the next worker to pop a batch takes one
+    kill_tokens: AtomicUsize,
+    kills: AtomicUsize,
+    respawns: AtomicUsize,
+    injected: AtomicUsize,
+}
+
+impl ChaosRuntime {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish one kill token (front thread, at a KillWorker event).
+    pub fn request_kill(&self) {
+        self.kill_tokens.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Worker-side: try to consume a kill token. True means "this worker
+    /// must redeliver its batch and exit".
+    pub fn take_kill(&self) -> bool {
+        let mut cur = self.kill_tokens.load(Ordering::SeqCst);
+        while cur > 0 {
+            match self.kill_tokens.compare_exchange(
+                cur,
+                cur - 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => {
+                    self.kills.fetch_add(1, Ordering::SeqCst);
+                    return true;
+                }
+                Err(now) => cur = now,
+            }
+        }
+        false
+    }
+
+    pub fn note_respawn(&self) {
+        self.respawns.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn note_injected(&self, n: usize) {
+        self.injected.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Kill tokens actually consumed by workers (≤ requested).
+    pub fn kills(&self) -> usize {
+        self.kills.load(Ordering::SeqCst)
+    }
+
+    pub fn respawns(&self) -> usize {
+        self.respawns.load(Ordering::SeqCst)
+    }
+
+    pub fn injected(&self) -> usize {
+        self.injected.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_builders_keep_time_order() {
+        let p = ChaosPlan::new().respawn_at(8.0).kill_at(5.0).storm_at(10.0, 200, 0);
+        let times: Vec<f64> = p.events().iter().map(|e| e.at_s).collect();
+        assert_eq!(times, vec![5.0, 8.0, 10.0]);
+        assert_eq!(p.injected(), 200);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn parse_roundtrips_the_dsl() {
+        let p = ChaosPlan::parse("kill@5, respawn@8.5 ,storm@10:200x1").unwrap();
+        assert_eq!(
+            p,
+            ChaosPlan::new().kill_at(5.0).respawn_at(8.5).storm_at(10.0, 200, 1)
+        );
+        assert!(ChaosPlan::parse("").unwrap().is_empty());
+        assert!(ChaosPlan::parse("explode@3").is_err());
+        assert!(ChaosPlan::parse("kill@sometime").is_err());
+        assert!(ChaosPlan::parse("storm@1:20").is_err(), "storm needs NxTASK");
+    }
+
+    #[test]
+    fn validate_rejects_bad_storms_and_times() {
+        assert!(ChaosPlan::new().kill_at(1.0).validate(1).is_ok());
+        assert!(ChaosPlan::new().storm_at(1.0, 10, 2).validate(2).is_err());
+        assert!(ChaosPlan::new().storm_at(1.0, 0, 0).validate(1).is_err());
+        assert!(ChaosPlan::new().kill_at(f64::NAN).validate(1).is_err());
+        assert!(ChaosPlan::new().kill_at(-1.0).validate(1).is_err());
+    }
+
+    #[test]
+    fn kill_tokens_are_consumed_exactly_once() {
+        let rt = ChaosRuntime::new();
+        assert!(!rt.take_kill(), "no token published yet");
+        rt.request_kill();
+        rt.request_kill();
+        assert!(rt.take_kill());
+        assert!(rt.take_kill());
+        assert!(!rt.take_kill(), "two tokens, two takes");
+        assert_eq!(rt.kills(), 2);
+    }
+}

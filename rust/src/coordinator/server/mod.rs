@@ -8,42 +8,103 @@
 //! * a front thread replays a trace of [`TaggedRequest`]s into one shared
 //!   [`BoundedQueue`] through a [`Clock`] — wall time paces arrivals for
 //!   real serving, virtual time replays a ten-minute trace in
-//!   milliseconds for hermetic tests;
+//!   milliseconds for hermetic tests — and fires any scripted
+//!   [`ChaosPlan`] events (worker kill/respawn, queue-full storms) as the
+//!   timeline passes them;
 //! * **admission control**: the queue never blocks producers — pushes are
 //!   `Accepted`, `Shed` (full) or `Closed` (draining), with shed counts
 //!   reported per tenant in [`ServeStats`];
 //! * a **worker pool** of [`ServerConfig::workers`] threads drains the
-//!   queue with size-or-deadline batching; batches are single-tenant (the
-//!   [`Registry`] maps task ids to models), per-request deadlines expire
-//!   stale work before the forward pass is paid for, and each batch fans
-//!   out over the global kernel [`pool`](crate::util::pool) — `--workers`
-//!   scales batch pipelining, `--threads` scales within-batch kernels;
+//!   queue with size-or-deadline batching under a [`SchedPolicy`] (FIFO
+//!   or earliest-deadline-first against per-tenant SLO targets); batches
+//!   are single-tenant and single-length-bucket (the [`Registry`] maps
+//!   task ids to models), per-request deadlines expire stale work before
+//!   the forward pass is paid for, and each batch fans out over the
+//!   global kernel [`pool`](crate::util::pool) — `--workers` scales batch
+//!   pipelining, `--threads` scales within-batch kernels;
 //! * latency is recorded into fixed-bucket streaming
 //!   [`Histogram`](crate::util::histogram::Histogram)s (no sort-at-end
 //!   pass), split into queue/batching/exec components per request;
 //! * `close()` after the trace ends gives a **graceful drain**: workers
 //!   finish everything admitted, then exit on the first empty batch.
+//!
+//! The server *enforces* (not just asserts in debug) request
+//! conservation: `completions + shed + expired == offered`, where
+//! `offered = trace.len() + storm-injected`. Every admitted request is
+//! always in exactly one place — queue, popped batch, or collector — and
+//! every transition (including a chaos kill's batch redelivery and the
+//! post-drain sweep that expires requests stranded by a total worker
+//! wipeout) preserves that. See `chaos.rs` for the full argument.
 
+mod chaos;
 mod queue;
 mod registry;
 mod stats;
 mod worker;
 
-pub use queue::{BoundedQueue, Enqueue, QueueItem};
+pub use chaos::{ChaosAction, ChaosEvent, ChaosPlan};
+pub use queue::{BoundedQueue, Enqueue, QueueItem, SchedPolicy};
 pub use registry::{Registry, Tenant};
 pub use stats::{Completion, ServeStats, TenantStats, COMPLETION_LOG_CAP};
 
 use std::sync::Mutex;
+use std::thread::Scope;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::data::{replay, tag_trace, Dataset, Request, TaggedRequest};
+use crate::data::{tag_trace, Dataset, Request, TaggedRequest};
 use crate::model::QuantizedModel;
 use crate::util::clock::Clock;
 
+use chaos::ChaosRuntime;
 use stats::Collector;
-use worker::worker_loop;
+use worker::{worker_loop, ServeCtx};
+
+/// Modeled batch-execution cost, `base_s + per_req_s · batch_size`
+/// seconds per batch.
+///
+/// Two uses: as a **floor** (`simulate = false`) the worker runs the real
+/// forward pass and then spends at least the modeled cost in clock time;
+/// as a **simulation** (`simulate = true`) the forward pass is skipped
+/// entirely and the cost *is* the execution — on a virtual clock that
+/// turns `serve` into a discrete-event simulation where backlogs, sheds,
+/// expiries, and SLO misses unfold from the arrival process and the
+/// modeled capacity alone, at millions of requests per wall-second. In
+/// simulate mode predictions are `-1` and accuracy is meaningless by
+/// construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceModel {
+    /// fixed per-batch cost in seconds (dispatch overhead)
+    pub base_s: f64,
+    /// marginal per-request cost in seconds
+    pub per_req_s: f64,
+    /// replace the forward pass instead of flooring it
+    pub simulate: bool,
+}
+
+impl ServiceModel {
+    /// A pure-simulation model (no real forward pass).
+    pub fn simulated(base_s: f64, per_req_s: f64) -> Self {
+        Self { base_s, per_req_s, simulate: true }
+    }
+
+    /// A cost floor on top of the real forward pass.
+    pub fn floor(base_s: f64, per_req_s: f64) -> Self {
+        Self { base_s, per_req_s, simulate: false }
+    }
+
+    /// Cost of one batch of `batch` requests, in seconds.
+    pub fn cost_s(&self, batch: usize) -> f64 {
+        self.base_s + self.per_req_s * batch as f64
+    }
+
+    /// Steady-state per-worker throughput at full batches of `max_batch`
+    /// — the capacity anchor the load sweeps are expressed against.
+    pub fn capacity_rps(&self, max_batch: usize) -> f64 {
+        max_batch as f64 / self.cost_s(max_batch).max(1e-12)
+    }
+}
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -56,9 +117,16 @@ pub struct ServerConfig {
     pub queue_cap: usize,
     /// batch-execution worker threads (≥ 1; independent of `--threads`)
     pub workers: usize,
-    /// per-request latency budget; requests older than this at batch time
-    /// are expired instead of executed. `None` = no deadline.
+    /// per-request latency budget (from *arrival*); requests older than
+    /// this at batch time are expired instead of executed. `None` = no
+    /// deadline.
     pub deadline: Option<Duration>,
+    /// batch scheduling policy; EDF uses the registry's per-tenant SLOs
+    pub sched: SchedPolicy,
+    /// optional modeled execution cost (see [`ServiceModel`])
+    pub service: Option<ServiceModel>,
+    /// optional scripted failure injection (see [`ChaosPlan`])
+    pub chaos: Option<ChaosPlan>,
     /// time source; `serve` re-bases it per run ([`Clock::restarted`])
     pub clock: Clock,
 }
@@ -71,21 +139,25 @@ impl Default for ServerConfig {
             queue_cap: 256,
             workers: 1,
             deadline: None,
+            sched: SchedPolicy::Fifo,
+            service: None,
+            chaos: None,
             clock: Clock::wall(),
         }
     }
 }
 
 /// Serve a tagged multi-tenant trace against the registry; returns
-/// aggregate + per-tenant stats. Every admitted request is accounted for
-/// exactly once: `completions + shed + expired == trace.len()`.
+/// aggregate + per-tenant stats. Request conservation —
+/// `completions + shed + expired == trace.len() + injected` — is enforced
+/// with a descriptive error, under every chaos scenario.
 pub fn serve(
     registry: &Registry<'_>,
     trace: &[TaggedRequest],
     cfg: &ServerConfig,
 ) -> Result<ServeStats> {
-    anyhow::ensure!(!registry.is_empty(), "registry has no tenants");
-    anyhow::ensure!(cfg.max_batch > 0, "max_batch must be positive");
+    ensure!(!registry.is_empty(), "registry has no tenants");
+    ensure!(cfg.max_batch > 0, "max_batch must be positive");
     // announce the resolved kernel dispatch once per process so every
     // serving log records which ISA produced its numbers
     {
@@ -95,7 +167,7 @@ pub fn serve(
         });
     }
     for r in trace {
-        anyhow::ensure!(
+        ensure!(
             r.task < registry.len(),
             "request {} tagged with unknown task {} ({} registered)",
             r.id,
@@ -103,47 +175,172 @@ pub fn serve(
             registry.len()
         );
     }
+    let plan = cfg.chaos.clone().unwrap_or_default();
+    plan.validate(registry.len())?;
+
     let clock = cfg.clock.restarted();
-    let queue = BoundedQueue::new(cfg.queue_cap, clock.clone());
-    let collector = Mutex::new(Collector::new(registry.len()));
-    let n_tenants = registry.len();
+    let slo_s = registry.slos_s();
+    let queue = BoundedQueue::with_policy(cfg.queue_cap, clock.clone(), cfg.sched, slo_s.clone());
+    let slo_ms: Vec<Option<f64>> = slo_s.iter().map(|o| o.map(|s| s * 1e3)).collect();
+    let collector = Mutex::new(Collector::new(slo_ms));
+    let chaos = ChaosRuntime::new();
+    let errors = Mutex::new(Vec::new());
+    let samples_per_task = registry.sample_counts();
     let workers = cfg.workers.max(1);
 
-    let (shed_per_task, worker_result) = std::thread::scope(|scope| {
-        // front: replay arrivals in clock time, count sheds per tenant,
-        // then close the queue for a graceful drain
-        let front = scope.spawn(|| {
-            let mut shed = vec![0usize; n_tenants];
-            replay(trace, &clock, |r| {
-                if queue.push(r) == Enqueue::Shed {
-                    shed[r.task] += 1;
-                }
-            });
-            queue.close();
-            shed
-        });
-        let handles: Vec<_> = (0..workers)
-            .map(|_| scope.spawn(|| worker_loop(&queue, registry, cfg, &clock, &collector)))
-            .collect();
-        let shed = front.join().expect("front thread panicked");
-        let mut result = Ok(());
-        for h in handles {
-            if let Err(e) = h.join().expect("worker thread panicked") {
-                if result.is_ok() {
-                    result = Err(e);
-                }
-            }
+    let ctx = ServeCtx {
+        queue: &queue,
+        registry,
+        cfg,
+        clock: &clock,
+        collector: &collector,
+        chaos: &chaos,
+        errors: &errors,
+    };
+    let shed_per_task = std::thread::scope(|scope| {
+        // front: replay arrivals in clock time (firing chaos events as
+        // the timeline passes them), count sheds per tenant, then close
+        // the queue for a graceful drain
+        let front =
+            scope.spawn(|| front_loop(scope, &ctx, trace, &plan, &samples_per_task));
+        for _ in 0..workers {
+            scope.spawn(|| worker_loop(&ctx));
         }
-        (shed, result)
+        front.join().expect("front thread panicked")
+        // scope exit joins every worker, including chaos respawns
     });
-    worker_result?;
-    // the per-task verdict tally and the queue's own admission counter are
-    // two views of the same events; they must agree
-    debug_assert_eq!(queue.shed_count(), shed_per_task.iter().sum::<usize>());
+
+    // post-drain sweep: if chaos killed every worker, admitted requests
+    // are stranded in the (closed) queue — they can never complete, so
+    // they are accounted as expired with their waits recorded. This is
+    // the last transition that keeps the conservation law exact.
+    let leftovers = queue.drain_remaining();
+    if !leftovers.is_empty() {
+        let end_s = clock.now_s();
+        let mut g = collector.lock().unwrap();
+        for it in &leftovers {
+            g.record_expired(it.req.task, &[(end_s - it.req.arrival_s) * 1e3]);
+        }
+    }
+
+    let errs = errors.into_inner().unwrap();
+    ensure!(errs.is_empty(), "worker failure(s): {}", errs.join("; "));
 
     let wall_s = clock.now_s();
     let collector = collector.into_inner().unwrap();
-    Ok(collector.into_stats(registry.names(), &shed_per_task, wall_s))
+    let shed_total: usize = shed_per_task.iter().sum();
+    // the per-task verdict tally and the queue's own admission counter
+    // are two views of the same events; a mismatch means per-tenant shed
+    // attribution cannot be trusted, so it is an error in every build,
+    // not a debug assertion
+    ensure!(
+        queue.shed_count() == shed_total,
+        "shed accounting desynced: queue admission counter says {} but the per-tenant \
+         verdict tally says {shed_total}",
+        queue.shed_count()
+    );
+    let (completions, expired) = collector.totals();
+    let offered = trace.len() + chaos.injected();
+    ensure!(
+        completions + shed_total + expired == offered,
+        "request conservation broken: {completions} completed + {shed_total} shed + \
+         {expired} expired != {offered} offered ({} trace + {} injected; \
+         {} kills, {} respawns)",
+        trace.len(),
+        chaos.injected(),
+        chaos.kills(),
+        chaos.respawns()
+    );
+
+    let mut stats = collector.into_stats(registry.names(), &shed_per_task, wall_s);
+    stats.offered = offered;
+    stats.injected = chaos.injected();
+    stats.worker_kills = chaos.kills();
+    stats.worker_respawns = chaos.respawns();
+    Ok(stats)
+}
+
+/// The admission front: merge trace arrivals with chaos events on the
+/// clock timeline, push arrivals (tallying sheds per tenant), and close
+/// the queue when everything has been offered. Returns the per-tenant
+/// shed tally. Needs the scope so RespawnWorker events can spawn
+/// replacement workers into the same pool.
+fn front_loop<'scope, 'a, 'reg>(
+    scope: &'scope Scope<'scope, '_>,
+    ctx: &'scope ServeCtx<'a, 'reg>,
+    trace: &[TaggedRequest],
+    plan: &ChaosPlan,
+    samples_per_task: &[usize],
+) -> Vec<usize>
+where
+    'a: 'scope,
+    'reg: 'scope,
+{
+    let mut shed = vec![0usize; samples_per_task.len()];
+    let mut injected = 0usize;
+    let mut events = plan.events().iter();
+    let mut next_event = events.next();
+    for r in trace {
+        while let Some(e) = next_event {
+            if e.at_s > r.arrival_s {
+                break;
+            }
+            fire_event(scope, ctx, e, trace.len(), samples_per_task, &mut shed, &mut injected);
+            next_event = events.next();
+        }
+        ctx.clock.sleep_until(r.arrival_s);
+        if ctx.queue.push(*r) == Enqueue::Shed {
+            shed[r.task] += 1;
+        }
+    }
+    // events scheduled past the last arrival still fire, before close
+    while let Some(e) = next_event {
+        fire_event(scope, ctx, e, trace.len(), samples_per_task, &mut shed, &mut injected);
+        next_event = events.next();
+    }
+    ctx.queue.close();
+    shed
+}
+
+/// Execute one chaos event at its scheduled clock time.
+fn fire_event<'scope, 'a, 'reg>(
+    scope: &'scope Scope<'scope, '_>,
+    ctx: &'scope ServeCtx<'a, 'reg>,
+    e: &ChaosEvent,
+    trace_len: usize,
+    samples_per_task: &[usize],
+    shed: &mut [usize],
+    injected: &mut usize,
+) where
+    'a: 'scope,
+    'reg: 'scope,
+{
+    ctx.clock.sleep_until(e.at_s);
+    match e.action {
+        ChaosAction::KillWorker => ctx.chaos.request_kill(),
+        ChaosAction::RespawnWorker => {
+            ctx.chaos.note_respawn();
+            scope.spawn(move || worker_loop(ctx));
+        }
+        ChaosAction::QueueStorm { n, task } => {
+            // n synthetic requests for one tenant, back-to-back at one
+            // instant; ids continue past the trace so uniqueness holds
+            ctx.chaos.note_injected(n);
+            for k in 0..n {
+                let r = TaggedRequest {
+                    id: trace_len + *injected,
+                    task,
+                    arrival_s: e.at_s,
+                    sample: k % samples_per_task[task].max(1),
+                    len_bucket: 0,
+                };
+                *injected += 1;
+                if ctx.queue.push(r) == Enqueue::Shed {
+                    shed[task] += 1;
+                }
+            }
+        }
+    }
 }
 
 /// Single-tenant compatibility wrapper: replay `trace` against one

@@ -10,17 +10,22 @@
 //! non-blocking verdict removes that failure mode entirely.
 //!
 //! Consumers batch by **size or deadline** ([`BoundedQueue::pop_batch`]):
-//! wait for the first item, then collect same-tenant items until either
-//! `max_batch` is reached or `max_wait` of *clock* time has passed.
-//! Deadlines are measured on the queue's [`Clock`], so under a virtual
-//! clock the straggler wait advances the timeline instead of sleeping —
-//! batch formation becomes a function of queue content and timestamps,
-//! not scheduler races.
+//! wait for the first item, pick a head under the configured
+//! [`SchedPolicy`] (FIFO arrival order or earliest-deadline-first against
+//! per-tenant SLO targets), then collect same-key requests — same tenant
+//! *and* same sequence-length bucket, mirroring how production servers
+//! batch by padded length — until either `max_batch` is reached or
+//! `max_wait` of *clock* time has passed. Deadlines are measured on the
+//! queue's [`Clock`], so under a virtual clock the straggler wait
+//! advances the timeline instead of sleeping — batch formation becomes a
+//! function of queue content and timestamps, not scheduler races.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
+
+use anyhow::{bail, Result};
 
 use crate::data::TaggedRequest;
 use crate::util::clock::Clock;
@@ -36,11 +41,54 @@ pub enum Enqueue {
     Closed,
 }
 
-/// A queued request plus its enqueue timestamp (clock seconds).
+/// Which queued request anchors the next batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Strict arrival order across tenants: the FIFO head anchors.
+    #[default]
+    Fifo,
+    /// Earliest-deadline-first: the queued request with the nearest SLO
+    /// deadline anchors the batch. Requests of tenants without an SLO
+    /// carry an infinite deadline, so under pure-EDF they are served in
+    /// FIFO order whenever nothing urgent is queued — tight-SLO tenants
+    /// preempt bulk traffic during backlogs, which is the whole point.
+    Edf,
+}
+
+impl SchedPolicy {
+    /// Parse a CLI spelling (`fifo` | `edf`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fifo" => Ok(SchedPolicy::Fifo),
+            "edf" => Ok(SchedPolicy::Edf),
+            other => bail!("unknown scheduling policy '{other}' (expected fifo|edf)"),
+        }
+    }
+}
+
+impl std::fmt::Display for SchedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::Edf => "edf",
+        })
+    }
+}
+
+/// A queued request plus its queue-side timestamps (clock seconds).
 #[derive(Debug, Clone, Copy)]
 pub struct QueueItem {
     pub req: TaggedRequest,
+    /// admission timestamp: when the queue accepted the request. Under a
+    /// virtual-clock backlog this can run ahead of `req.arrival_s` (the
+    /// replay thread only pushes once the timeline reaches the arrival),
+    /// so *latency accounting measures from `arrival_s`*, and `enq_s` is
+    /// kept as the admission audit stamp.
     pub enq_s: f64,
+    /// absolute SLO deadline (`arrival_s` + tenant SLO), `f64::INFINITY`
+    /// for tenants without an SLO target — what EDF head selection sorts
+    /// by.
+    pub deadline_s: f64,
 }
 
 struct Inner {
@@ -55,10 +103,26 @@ pub struct BoundedQueue {
     cap: usize,
     clock: Clock,
     shed: AtomicUsize,
+    policy: SchedPolicy,
+    /// per-tenant SLO targets in seconds, indexed by task id; missing or
+    /// `None` entries mean "no deadline pressure"
+    slo_s: Vec<Option<f64>>,
 }
 
 impl BoundedQueue {
+    /// FIFO queue with no SLO targets (the back-compat constructor).
     pub fn new(cap: usize, clock: Clock) -> Self {
+        Self::with_policy(cap, clock, SchedPolicy::Fifo, Vec::new())
+    }
+
+    /// Queue with an explicit scheduling policy and per-tenant SLO
+    /// targets (seconds, indexed by task id).
+    pub fn with_policy(
+        cap: usize,
+        clock: Clock,
+        policy: SchedPolicy,
+        slo_s: Vec<Option<f64>>,
+    ) -> Self {
         assert!(cap > 0, "queue capacity must be positive");
         Self {
             inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
@@ -66,6 +130,8 @@ impl BoundedQueue {
             cap,
             clock,
             shed: AtomicUsize::new(0),
+            policy,
+            slo_s,
         }
     }
 
@@ -81,10 +147,42 @@ impl BoundedQueue {
             self.shed.fetch_add(1, Ordering::Relaxed);
             return Enqueue::Shed;
         }
-        g.items.push_back(QueueItem { req: r, enq_s: self.clock.now_s() });
+        let deadline_s = match self.slo_s.get(r.task).copied().flatten() {
+            Some(slo) => r.arrival_s + slo,
+            None => f64::INFINITY,
+        };
+        g.items.push_back(QueueItem { req: r, enq_s: self.clock.now_s(), deadline_s });
         drop(g);
         self.not_empty.notify_one();
         Enqueue::Accepted
+    }
+
+    /// Put already-admitted items back at the *front* of the queue in
+    /// their original order — the crash-recovery path a killed worker
+    /// uses to redeliver a popped-but-unprocessed batch. Bypasses
+    /// capacity and the closed flag on purpose: these requests were
+    /// admitted once and already counted; shedding or refusing them here
+    /// would double-count and break `completions + shed + expired ==
+    /// offered`.
+    pub fn requeue_front(&self, batch: Vec<QueueItem>) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for it in batch.into_iter().rev() {
+            g.items.push_front(it);
+        }
+        drop(g);
+        self.not_empty.notify_all();
+    }
+
+    /// Take everything still queued, in order. The post-drain sweep
+    /// `serve` runs after all workers have exited (e.g. chaos killed them
+    /// all): whatever is left can no longer complete and is accounted as
+    /// expired.
+    pub fn drain_remaining(&self) -> Vec<QueueItem> {
+        let mut g = self.inner.lock().unwrap();
+        g.items.drain(..).collect()
     }
 
     /// Stop admitting; consumers drain what is queued, then see empty
@@ -110,11 +208,37 @@ impl BoundedQueue {
         self.shed.load(Ordering::Relaxed)
     }
 
-    /// Pop one single-tenant batch. Blocks until at least one item is
-    /// queued (or returns empty once closed *and* drained), picks the
-    /// tenant of the FIFO head, then collects up to `max_batch` requests
-    /// of that tenant, waiting at most `max_wait` of clock time for
-    /// stragglers. Other tenants' requests keep their queue positions.
+    /// Index of the item that anchors the next batch under `policy`.
+    /// EDF ties (including the all-∞ no-SLO case) break toward the lowest
+    /// index, i.e. FIFO.
+    fn head_index(items: &VecDeque<QueueItem>, policy: SchedPolicy) -> usize {
+        match policy {
+            SchedPolicy::Fifo => 0,
+            SchedPolicy::Edf => items
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.deadline_s.total_cmp(&b.1.deadline_s))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+
+    /// Pop one batch. Blocks until at least one item is queued (or
+    /// returns empty once closed *and* drained), picks a head under the
+    /// scheduling policy, then collects up to `max_batch` requests with
+    /// the head's batch key — same tenant and same sequence-length bucket
+    /// — waiting at most `max_wait` of clock time for stragglers. Other
+    /// requests keep their queue positions.
+    ///
+    /// The head item itself is always in the returned batch: within one
+    /// batch key the tenant's SLO is uniform, so FIFO position order *is*
+    /// deadline order, and the EDF-minimal item of a key is also that
+    /// key's first match.
+    ///
+    /// The head is chosen once per pop; an even-more-urgent request
+    /// arriving during the straggler wait anchors the *next* batch rather
+    /// than re-anchoring this one (bounded work per pop, no livelock
+    /// under a storm of urgent arrivals).
     ///
     /// On a virtual clock the straggler wait does not block: the deadline
     /// is unreachable by waiting (virtual time only moves when someone
@@ -134,11 +258,19 @@ impl BoundedQueue {
                 }
                 g = self.not_empty.wait(g).unwrap();
             }
-            let task = g.items.front().unwrap().req.task;
+            let head = Self::head_index(&g.items, self.policy);
+            let (task, bucket) = {
+                let it = &g.items[head];
+                (it.req.task, it.req.len_bucket)
+            };
             // phase 2: size-or-deadline straggler wait (clock time)
             let deadline = self.clock.now_s() + max_wait.as_secs_f64();
             loop {
-                let same = g.items.iter().filter(|it| it.req.task == task).count();
+                let same = g
+                    .items
+                    .iter()
+                    .filter(|it| it.req.task == task && it.req.len_bucket == bucket)
+                    .count();
                 if same >= max_batch || g.closed {
                     break;
                 }
@@ -162,16 +294,30 @@ impl BoundedQueue {
                     break;
                 }
             }
-            // phase 3: drain up to max_batch items of the head's tenant
+            // phase 3: drain up to max_batch items with the head's batch
+            // key in ONE forward pass. A stable in-place compaction —
+            // kept items slide left over the holes the batched ones leave
+            // — so every other request keeps its relative queue position.
+            // (The previous implementation called `VecDeque::remove(i)`
+            // per batched item, shifting the tail each time: O(cap·batch)
+            // on a deep mixed-tenant queue. This is O(cap).)
             let mut batch = Vec::with_capacity(max_batch.min(g.items.len()));
-            let mut i = 0;
-            while i < g.items.len() && batch.len() < max_batch {
-                if g.items[i].req.task == task {
-                    batch.push(g.items.remove(i).unwrap());
+            let mut write = 0usize;
+            for read in 0..g.items.len() {
+                let it = g.items[read];
+                if batch.len() < max_batch
+                    && it.req.task == task
+                    && it.req.len_bucket == bucket
+                {
+                    batch.push(it);
                 } else {
-                    i += 1;
+                    if write != read {
+                        g.items.swap(write, read);
+                    }
+                    write += 1;
                 }
             }
+            g.items.truncate(write);
             if !batch.is_empty() {
                 return batch;
             }
@@ -189,7 +335,11 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: usize, task: usize) -> TaggedRequest {
-        TaggedRequest { id, task, arrival_s: 0.0, sample: id % 3 }
+        TaggedRequest { id, task, arrival_s: 0.0, sample: id % 3, len_bucket: 0 }
+    }
+
+    fn req_at(id: usize, task: usize, arrival_s: f64) -> TaggedRequest {
+        TaggedRequest { id, task, arrival_s, sample: 0, len_bucket: 0 }
     }
 
     #[test]
@@ -263,6 +413,23 @@ mod tests {
     }
 
     #[test]
+    fn batches_never_mix_len_buckets() {
+        let q = BoundedQueue::new(64, Clock::virt());
+        // one tenant, alternating length buckets
+        for i in 0..8 {
+            let mut r = req(i, 0);
+            r.len_bucket = (i % 2) as u8;
+            q.push(r);
+        }
+        let b = q.pop_batch(16, Duration::ZERO);
+        assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![0, 2, 4, 6]);
+        assert!(b.iter().all(|it| it.req.len_bucket == 0));
+        let b = q.pop_batch(16, Duration::ZERO);
+        assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![1, 3, 5, 7]);
+        assert!(b.iter().all(|it| it.req.len_bucket == 1));
+    }
+
+    #[test]
     fn virtual_deadline_advances_clock_instead_of_sleeping() {
         let clock = Clock::virt();
         let q = BoundedQueue::new(8, clock.clone());
@@ -285,5 +452,98 @@ mod tests {
         q.push(req(0, 0));
         let b = q.pop_batch(1, Duration::ZERO);
         assert!((b[0].enq_s - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn edf_serves_the_tight_slo_tenant_first() {
+        // tenant 0: 10s SLO (loose); tenant 1: 50ms SLO (tight)
+        let slos = vec![Some(10.0), Some(0.05)];
+        let q = BoundedQueue::with_policy(64, Clock::virt(), SchedPolicy::Edf, slos);
+        // bulk traffic arrives first and sits at the FIFO head…
+        q.push(req_at(0, 0, 0.0));
+        q.push(req_at(1, 0, 0.1));
+        q.push(req_at(2, 1, 0.2)); // …but this deadline (0.25s) is nearest
+        q.push(req_at(3, 1, 0.3));
+        let b = q.pop_batch(16, Duration::ZERO);
+        assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert!((b[0].deadline_s - 0.25).abs() < 1e-9);
+        // bulk tenant kept its FIFO positions and drains next
+        let b = q.pop_batch(16, Duration::ZERO);
+        assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn edf_without_slos_degrades_to_fifo() {
+        let q = BoundedQueue::with_policy(64, Clock::virt(), SchedPolicy::Edf, Vec::new());
+        for i in 0..6 {
+            q.push(req(i, i % 2));
+        }
+        // all deadlines are +∞ → ties break to the lowest index = FIFO
+        let b = q.pop_batch(16, Duration::ZERO);
+        assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn requeue_front_redelivers_in_order_even_when_closed() {
+        let q = BoundedQueue::new(2, Clock::virt());
+        q.push(req(0, 0));
+        q.push(req(1, 0));
+        let batch = q.pop_batch(2, Duration::ZERO);
+        assert_eq!(batch.len(), 2);
+        q.close();
+        // a killed worker hands its batch back after close; capacity and
+        // the closed flag must not apply to already-admitted requests
+        q.push(req(9, 0));
+        q.requeue_front(batch);
+        let b = q.pop_batch(4, Duration::ZERO);
+        assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(q.shed_count(), 0);
+    }
+
+    #[test]
+    fn drain_remaining_takes_everything_in_order() {
+        let q = BoundedQueue::new(8, Clock::virt());
+        for i in 0..5 {
+            q.push(req(i, i % 2));
+        }
+        let left = q.drain_remaining();
+        assert_eq!(left.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+    }
+
+    /// Regression for the O(cap·batch) phase-3 drain: a deep queue of
+    /// interleaved tenants must drain in large batches while preserving
+    /// the other tenant's FIFO order exactly, and fast enough that the
+    /// per-pop cost is clearly linear, not quadratic.
+    #[test]
+    fn deep_interleaved_queue_drains_linearly_and_preserves_order() {
+        const N: usize = 100_000;
+        let q = BoundedQueue::new(N, Clock::virt());
+        for i in 0..N {
+            assert_eq!(q.push(req(i, i % 2)), Enqueue::Accepted);
+        }
+        q.close();
+        let t0 = std::time::Instant::now();
+        let mut per_task: [Vec<usize>; 2] = [Vec::new(), Vec::new()];
+        loop {
+            let b = q.pop_batch(4096, Duration::ZERO);
+            if b.is_empty() {
+                break;
+            }
+            let task = b[0].req.task;
+            assert!(b.iter().all(|it| it.req.task == task), "single-tenant batches");
+            per_task[task].extend(b.iter().map(|it| it.req.id));
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "deep drain took {:?} — phase 3 has gone quadratic again",
+            t0.elapsed()
+        );
+        for (task, ids) in per_task.iter().enumerate() {
+            assert_eq!(ids.len(), N / 2);
+            for (k, &id) in ids.iter().enumerate() {
+                assert_eq!(id, 2 * k + task, "tenant {task} lost FIFO order at {k}");
+            }
+        }
     }
 }

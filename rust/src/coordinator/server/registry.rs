@@ -13,6 +13,8 @@
 //! scoped-thread server needs no cloning or `Arc`-wrapping of multi-MB
 //! weight blobs.
 
+use std::time::Duration;
+
 use crate::data::Dataset;
 use crate::model::QuantizedModel;
 
@@ -21,6 +23,11 @@ pub struct Tenant<'a> {
     pub name: String,
     pub model: &'a QuantizedModel,
     pub data: &'a Dataset,
+    /// per-tenant latency SLO target (arrival → completion). Drives EDF
+    /// head selection in the queue and the per-tenant SLO-attainment
+    /// figure in `ServeStats`; `None` means "best effort" — no deadline
+    /// pressure, attainment trivially reported as 1.0.
+    pub slo: Option<Duration>,
 }
 
 /// Dense task-id → tenant table.
@@ -43,8 +50,31 @@ impl<'a> Registry<'a> {
 
     /// Register a tenant; returns its task id (the id requests must carry).
     pub fn add(&mut self, name: &str, model: &'a QuantizedModel, data: &'a Dataset) -> usize {
-        self.tenants.push(Tenant { name: name.to_string(), model, data });
+        self.add_with_slo(name, model, data, None)
+    }
+
+    /// Register a tenant with a latency SLO target.
+    pub fn add_with_slo(
+        &mut self,
+        name: &str,
+        model: &'a QuantizedModel,
+        data: &'a Dataset,
+        slo: Option<Duration>,
+    ) -> usize {
+        self.tenants.push(Tenant { name: name.to_string(), model, data, slo });
         self.tenants.len() - 1
+    }
+
+    /// Set (or clear) a registered tenant's SLO. Returns false for an
+    /// unknown task id.
+    pub fn set_slo(&mut self, task: usize, slo: Option<Duration>) -> bool {
+        match self.tenants.get_mut(task) {
+            Some(t) => {
+                t.slo = slo;
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -68,5 +98,11 @@ impl<'a> Registry<'a> {
     /// [`crate::data::TraceGenerator::generate_tagged`] consumes.
     pub fn sample_counts(&self) -> Vec<usize> {
         self.tenants.iter().map(|t| t.data.len()).collect()
+    }
+
+    /// Per-tenant SLO targets in seconds, task-id order — the shape the
+    /// queue's EDF scheduler consumes.
+    pub fn slos_s(&self) -> Vec<Option<f64>> {
+        self.tenants.iter().map(|t| t.slo.map(|d| d.as_secs_f64())).collect()
     }
 }

@@ -5,11 +5,17 @@
 //! Latency is decomposed per request (the old `queue_ms` conflated queue
 //! wait with batch-formation wait):
 //!
-//! * `queue_ms`  — enqueue → drained from the shared queue,
+//! * `queue_ms`  — arrival → drained from the shared queue,
 //! * `batch_ms`  — drained → kernel start (input assembly),
 //! * `exec_ms`   — kernel start → logits ready,
-//! * `total_ms`  — enqueue → done; equals the sum of the three components
+//! * `total_ms`  — arrival → done; equals the sum of the three components
 //!   (pinned by `rust/tests/serving.rs`).
+//!
+//! All components measure from the request's *arrival* timestamp, not the
+//! queue-admission stamp: under a virtual-clock backlog admission happens
+//! when the timeline has already advanced past the arrival, so
+//! enqueue-based waits under-report exactly when the queue is deepest —
+//! the case capacity analysis exists to expose.
 //!
 //! Percentiles come from fixed-bucket streaming [`Histogram`]s — no
 //! sort-at-end pass, O(1) memory per completion — kept per tenant plus
@@ -19,6 +25,12 @@
 //! lock per ≤`max_batch` records is far off the hot path.) Timestamps are
 //! clock seconds from the serve clock, so the same bookkeeping works
 //! under wall and virtual time.
+//!
+//! Expired requests do not vanish from observability: their queue wait is
+//! recorded into dedicated per-tenant histograms (they *are* the
+//! worst-case tail — an SLO analysis that drops them under-reports
+//! exactly where it matters), and per-tenant SLO attainment counts every
+//! offered request, with sheds and expiries as misses.
 
 use crate::util::histogram::Histogram;
 
@@ -35,13 +47,13 @@ pub struct Completion {
     pub task: usize,
     pub sample: usize,
     pub pred: i32,
-    /// enqueue → drained from the queue
+    /// arrival → drained from the queue
     pub queue_ms: f64,
     /// drained → kernel start (batch assembly)
     pub batch_ms: f64,
     /// kernel start → logits ready
     pub exec_ms: f64,
-    /// enqueue → done (= queue + batch + exec)
+    /// arrival → done (= queue + batch + exec)
     pub total_ms: f64,
     pub batch_size: usize,
 }
@@ -53,13 +65,28 @@ pub struct TenantStats {
     pub completions: usize,
     /// dropped at admission (queue full)
     pub shed: usize,
-    /// admitted but past their deadline at batch time
+    /// admitted but past their deadline at batch time (plus any requests
+    /// stranded in the queue when every worker died)
     pub expired: usize,
     pub accuracy: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub mean_batch: f64,
+    /// the tenant's SLO target in milliseconds, if one is set
+    pub slo_ms: Option<f64>,
+    /// fraction of *offered* requests (completions + shed + expired) that
+    /// completed within the SLO. Sheds and expiries count as misses —
+    /// dropping a request is not meeting its SLO. Trivially 1.0 for
+    /// tenants without an SLO target.
+    pub slo_attainment: f64,
+    /// queue-wait percentiles of this tenant's *expired* requests —
+    /// the tail the completion histogram cannot see
+    pub expired_wait_p50_ms: f64,
+    pub expired_wait_p99_ms: f64,
+    /// negative/non-finite latency samples rejected by the histograms;
+    /// nonzero means a time-accounting bug (see `Histogram::clamped`)
+    pub clamped: u64,
 }
 
 /// Aggregate serving statistics across all tenants.
@@ -68,6 +95,16 @@ pub struct ServeStats {
     pub completions: usize,
     pub shed: usize,
     pub expired: usize,
+    /// everything the server was asked to handle: trace requests plus
+    /// chaos-storm injections. The conservation law the server enforces
+    /// is `completions + shed + expired == offered`.
+    pub offered: usize,
+    /// chaos-storm requests injected on top of the trace
+    pub injected: usize,
+    /// chaos worker kills actually executed (tokens consumed by workers)
+    pub worker_kills: usize,
+    /// chaos worker respawns executed
+    pub worker_respawns: usize,
     /// elapsed clock seconds (virtual seconds under a virtual clock)
     pub wall_s: f64,
     pub throughput_rps: f64,
@@ -76,6 +113,16 @@ pub struct ServeStats {
     pub p99_ms: f64,
     pub mean_batch: f64,
     pub accuracy: f64,
+    /// offered-weighted SLO attainment across tenants that have an SLO
+    /// target; 1.0 when none do
+    pub slo_attainment: f64,
+    /// queue-wait percentiles of expired requests, all tenants pooled
+    pub expired_wait_p50_ms: f64,
+    pub expired_wait_p99_ms: f64,
+    pub expired_wait_max_ms: f64,
+    /// total histogram-rejected samples across all latency streams —
+    /// nonzero means a time-accounting bug somewhere upstream
+    pub clamped: u64,
     pub per_tenant: Vec<TenantStats>,
     /// first [`COMPLETION_LOG_CAP`] completions, for diagnostics and tests
     pub completions_log: Vec<Completion>,
@@ -84,42 +131,54 @@ pub struct ServeStats {
 /// Mutable accumulation state shared (behind a mutex) by the worker pool.
 pub(super) struct Collector {
     hist: Histogram,
+    expired_hist: Histogram,
     completions: usize,
     correct: usize,
     batch_sum: usize,
     log: Vec<Completion>,
     per_tenant: Vec<TenantAcc>,
+    /// per-tenant SLO targets in milliseconds (task-id order)
+    slo_ms: Vec<Option<f64>>,
 }
 
 struct TenantAcc {
     hist: Histogram,
+    expired_hist: Histogram,
     completions: usize,
     correct: usize,
     expired: usize,
     batch_sum: usize,
+    /// completions that landed within the tenant's SLO
+    slo_ok: usize,
 }
 
 impl TenantAcc {
     fn new() -> Self {
         Self {
             hist: Histogram::latency_ms(),
+            expired_hist: Histogram::latency_ms(),
             completions: 0,
             correct: 0,
             expired: 0,
             batch_sum: 0,
+            slo_ok: 0,
         }
     }
 }
 
 impl Collector {
-    pub fn new(n_tenants: usize) -> Self {
+    /// One accumulator per tenant; `slo_ms` carries each tenant's SLO
+    /// target in milliseconds (None = best effort), task-id order.
+    pub fn new(slo_ms: Vec<Option<f64>>) -> Self {
         Self {
             hist: Histogram::latency_ms(),
+            expired_hist: Histogram::latency_ms(),
             completions: 0,
             correct: 0,
             batch_sum: 0,
             log: Vec::new(),
-            per_tenant: (0..n_tenants).map(|_| TenantAcc::new()).collect(),
+            per_tenant: (0..slo_ms.len()).map(|_| TenantAcc::new()).collect(),
+            slo_ms,
         }
     }
 
@@ -137,17 +196,37 @@ impl Collector {
         if correct {
             t.correct += 1;
         }
+        if let Some(slo) = self.slo_ms[c.task] {
+            if c.total_ms <= slo {
+                t.slo_ok += 1;
+            }
+        }
         if self.log.len() < COMPLETION_LOG_CAP {
             self.log.push(c);
         }
     }
 
-    pub fn record_expired(&mut self, task: usize, n: usize) {
-        self.per_tenant[task].expired += n;
+    /// Count expired requests *and* record their queue waits (ms) — the
+    /// expired tail is reported, not discarded.
+    pub fn record_expired(&mut self, task: usize, waits_ms: &[f64]) {
+        let t = &mut self.per_tenant[task];
+        t.expired += waits_ms.len();
+        for &w in waits_ms {
+            t.expired_hist.record(w);
+            self.expired_hist.record(w);
+        }
+    }
+
+    /// (completions, expired) totals — what `serve` needs for the
+    /// conservation check before finalizing.
+    pub fn totals(&self) -> (usize, usize) {
+        (self.completions, self.per_tenant.iter().map(|t| t.expired).sum())
     }
 
     /// Finalize into the public stats view. `shed_per_task` comes from the
-    /// admission front; `names` from the registry (task-id order).
+    /// admission front; `names` from the registry (task-id order). Chaos
+    /// fields (`offered`, `injected`, kill/respawn counts) are zeroed
+    /// here and filled in by `serve`.
     pub fn into_stats(
         self,
         names: Vec<String>,
@@ -161,29 +240,67 @@ impl Collector {
             .iter()
             .zip(names)
             .zip(shed_per_task)
-            .map(|((t, name), &shed)| TenantStats {
-                task: name,
-                completions: t.completions,
-                shed,
-                expired: t.expired,
-                accuracy: t.correct as f64 / t.completions.max(1) as f64,
-                p50_ms: t.hist.quantile(0.50),
-                p95_ms: t.hist.quantile(0.95),
-                p99_ms: t.hist.quantile(0.99),
-                mean_batch: t.batch_sum as f64 / t.completions.max(1) as f64,
+            .zip(&self.slo_ms)
+            .map(|(((t, name), &shed), &slo_ms)| {
+                let offered = t.completions + shed + t.expired;
+                TenantStats {
+                    task: name,
+                    completions: t.completions,
+                    shed,
+                    expired: t.expired,
+                    accuracy: t.correct as f64 / t.completions.max(1) as f64,
+                    p50_ms: t.hist.quantile(0.50),
+                    p95_ms: t.hist.quantile(0.95),
+                    p99_ms: t.hist.quantile(0.99),
+                    mean_batch: t.batch_sum as f64 / t.completions.max(1) as f64,
+                    slo_ms,
+                    slo_attainment: match slo_ms {
+                        Some(_) => t.slo_ok as f64 / offered.max(1) as f64,
+                        None => 1.0,
+                    },
+                    expired_wait_p50_ms: t.expired_hist.quantile(0.50),
+                    expired_wait_p99_ms: t.expired_hist.quantile(0.99),
+                    clamped: t.hist.clamped() + t.expired_hist.clamped(),
+                }
             })
             .collect();
+        // offered-weighted attainment across SLO'd tenants only
+        let (slo_ok, slo_offered) = self
+            .per_tenant
+            .iter()
+            .zip(shed_per_task)
+            .zip(&self.slo_ms)
+            .filter(|(_, slo)| slo.is_some())
+            .fold((0usize, 0usize), |(ok, off), ((t, &shed), _)| {
+                (ok + t.slo_ok, off + t.completions + shed + t.expired)
+            });
+        let completions = self.completions;
+        let expired: usize = self.per_tenant.iter().map(|t| t.expired).sum();
+        let shed: usize = shed_per_task.iter().sum();
         ServeStats {
-            completions: self.completions,
-            shed: shed_per_task.iter().sum(),
-            expired: self.per_tenant.iter().map(|t| t.expired).sum(),
+            completions,
+            shed,
+            expired,
+            offered: completions + shed + expired,
+            injected: 0,
+            worker_kills: 0,
+            worker_respawns: 0,
             wall_s,
-            throughput_rps: self.completions as f64 / wall_s.max(1e-9),
+            throughput_rps: completions as f64 / wall_s.max(1e-9),
             p50_ms: self.hist.quantile(0.50),
             p95_ms: self.hist.quantile(0.95),
             p99_ms: self.hist.quantile(0.99),
-            mean_batch: self.batch_sum as f64 / self.completions.max(1) as f64,
-            accuracy: self.correct as f64 / self.completions.max(1) as f64,
+            mean_batch: self.batch_sum as f64 / completions.max(1) as f64,
+            accuracy: self.correct as f64 / completions.max(1) as f64,
+            slo_attainment: if slo_offered == 0 {
+                1.0
+            } else {
+                slo_ok as f64 / slo_offered as f64
+            },
+            expired_wait_p50_ms: self.expired_hist.quantile(0.50),
+            expired_wait_p99_ms: self.expired_hist.quantile(0.99),
+            expired_wait_max_ms: self.expired_hist.max_ms(),
+            clamped: self.hist.clamped() + self.expired_hist.clamped(),
             per_tenant,
             completions_log: self.log,
         }
@@ -210,15 +327,16 @@ mod tests {
 
     #[test]
     fn collector_aggregates_per_tenant_and_globally() {
-        let mut c = Collector::new(2);
+        let mut c = Collector::new(vec![None, None]);
         c.record(comp(0, 0, 2.0, 2), true);
         c.record(comp(1, 0, 4.0, 2), false);
         c.record(comp(2, 1, 10.0, 1), true);
-        c.record_expired(1, 3);
+        c.record_expired(1, &[40.0, 55.0, 70.0]);
         let s = c.into_stats(vec!["a".into(), "b".into()], &[5, 0], 2.0);
         assert_eq!(s.completions, 3);
         assert_eq!(s.shed, 5);
         assert_eq!(s.expired, 3);
+        assert_eq!(s.offered, 11);
         assert!((s.throughput_rps - 1.5).abs() < 1e-9);
         assert!((s.accuracy - 2.0 / 3.0).abs() < 1e-9);
         assert!((s.mean_batch - 5.0 / 3.0).abs() < 1e-9);
@@ -231,8 +349,46 @@ mod tests {
         assert_eq!(s.per_tenant[1].completions, 1);
         assert_eq!(s.per_tenant[1].expired, 3);
         assert_eq!(s.completions_log.len(), 3);
+        // no SLOs configured → attainment trivially perfect
+        assert_eq!(s.slo_attainment, 1.0);
+        assert!(s.per_tenant.iter().all(|t| t.slo_ms.is_none() && t.slo_attainment == 1.0));
+        assert_eq!(s.clamped, 0);
         // percentiles come from the histogram: within one bucket width
         let w = crate::util::histogram::Histogram::latency_ms().width_ms();
         assert!((s.per_tenant[1].p50_ms - 10.0).abs() <= w);
+        // expired waits are observable, per tenant and pooled
+        assert!((s.per_tenant[1].expired_wait_p50_ms - 55.0).abs() <= w);
+        assert!((s.per_tenant[1].expired_wait_p99_ms - 70.0).abs() <= w);
+        assert!((s.expired_wait_max_ms - 70.0).abs() < 1e-9);
+        assert_eq!(s.per_tenant[0].expired_wait_p50_ms, 0.0, "no expiries on tenant 0");
+    }
+
+    #[test]
+    fn slo_attainment_counts_sheds_and_expiries_as_misses() {
+        // tenant 0: 5ms SLO; tenant 1: best effort
+        let mut c = Collector::new(vec![Some(5.0), None]);
+        c.record(comp(0, 0, 2.0, 1), true); // within SLO
+        c.record(comp(1, 0, 9.0, 1), true); // completed but too slow
+        c.record(comp(2, 1, 500.0, 1), true); // no SLO → irrelevant
+        c.record_expired(0, &[12.0]);
+        // tenant 0 offered = 2 completions + 1 shed + 1 expired = 4, ok = 1
+        let s = c.into_stats(vec!["t".into(), "b".into()], &[1, 0], 1.0);
+        assert!((s.per_tenant[0].slo_attainment - 0.25).abs() < 1e-9);
+        assert_eq!(s.per_tenant[0].slo_ms, Some(5.0));
+        assert_eq!(s.per_tenant[1].slo_attainment, 1.0);
+        // global pools only the SLO'd tenant
+        assert!((s.slo_attainment - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clamped_samples_surface_in_stats() {
+        let mut c = Collector::new(vec![None]);
+        c.record(comp(0, 0, f64::NAN, 1), false);
+        c.record(comp(1, 0, 3.0, 1), true);
+        let s = c.into_stats(vec!["t".into()], &[0], 1.0);
+        // the NaN is counted as a completion but its latency is rejected
+        assert_eq!(s.completions, 2);
+        assert_eq!(s.clamped, 1, "each bad sample counted once at the global level");
+        assert_eq!(s.per_tenant[0].clamped, 1);
     }
 }

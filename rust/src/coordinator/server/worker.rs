@@ -1,46 +1,76 @@
 //! The batch-execution worker: each worker thread loops
-//! pop-batch → expire → assemble → fused forward → record.
+//! pop-batch → chaos check → expire → assemble → fused forward → record.
 //!
 //! N workers ([`super::ServerConfig::workers`]) drain one shared
 //! [`BoundedQueue`], so batch execution scales independently of the
 //! kernel-level `--threads` pool: workers pipeline *batches* while the
 //! global [`crate::util::pool`] parallelizes *within* a batch's igemm
 //! panels. Batches are single-tenant by construction (the queue groups by
-//! the FIFO head's task), so a worker resolves its tenant once per batch.
+//! the head's task + length bucket), so a worker resolves its tenant once
+//! per batch.
 //!
-//! Per-request deadlines are enforced here, after the batch is drained and
-//! before the forward pass is paid for: a request older than
-//! `ServerConfig::deadline` is counted expired and dropped — serving a
-//! reply that the caller has already given up on is pure waste.
+//! Per-request deadlines are enforced here, after the batch is drained
+//! and before the forward pass is paid for: a request whose *arrival* is
+//! older than `ServerConfig::deadline` is expired instead of executed —
+//! serving a reply that the caller has already given up on is pure waste.
+//! Expired waits are recorded, not discarded (they are the worst tail).
+//!
+//! Two failure/measurement hooks thread through the loop:
+//!
+//! * **chaos kills** — a pending kill token makes the worker hand its
+//!   just-popped batch back to the queue front and exit, modeling a crash
+//!   mid-drain with at-least-once redelivery;
+//! * **service model** — with [`super::ServiceModel`] configured, the
+//!   worker spends the modeled execution cost in clock time (and in
+//!   `simulate` mode skips the real forward pass entirely), turning a
+//!   virtual-clock serve into a discrete-event simulation with realistic
+//!   backlog dynamics.
 
 use std::sync::Mutex;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::chaos::ChaosRuntime;
 use super::queue::{BoundedQueue, QueueItem};
 use super::registry::Registry;
 use super::stats::{Collector, Completion};
 use super::ServerConfig;
 use crate::util::clock::Clock;
 
-/// Partition a drained batch into live requests and an expired count — a
-/// request is expired when it has already waited longer than `deadline`.
+/// Everything a worker thread borrows, bundled so the front thread can
+/// spawn chaos-respawned workers with the same one-argument call.
+pub(super) struct ServeCtx<'a, 'reg> {
+    pub queue: &'a BoundedQueue,
+    pub registry: &'a Registry<'reg>,
+    pub cfg: &'a ServerConfig,
+    pub clock: &'a Clock,
+    pub collector: &'a Mutex<Collector>,
+    pub chaos: &'a ChaosRuntime,
+    /// worker failures land here instead of in scattered join results —
+    /// chaos-respawned workers have no handle anyone joins on
+    pub errors: &'a Mutex<Vec<String>>,
+}
+
+/// Partition a drained batch into live and expired requests — a request
+/// is expired when its *arrival* is more than `deadline` in the past.
+/// (Measuring from the queue-admission stamp instead would under-count
+/// waits exactly when a backlog delays admission past the arrival time.)
 /// Pure, so the deadline semantics are unit-testable without threads.
 pub(super) fn split_expired<'b>(
     batch: &'b [QueueItem],
     now_s: f64,
     deadline: Option<Duration>,
-) -> (Vec<&'b QueueItem>, usize) {
+) -> (Vec<&'b QueueItem>, Vec<&'b QueueItem>) {
     let Some(dl) = deadline else {
-        return (batch.iter().collect(), 0);
+        return (batch.iter().collect(), Vec::new());
     };
     let dl_s = dl.as_secs_f64();
     let mut live = Vec::with_capacity(batch.len());
-    let mut expired = 0usize;
+    let mut expired = Vec::new();
     for it in batch {
-        if now_s - it.enq_s > dl_s {
-            expired += 1;
+        if now_s - it.req.arrival_s > dl_s {
+            expired.push(it);
         } else {
             live.push(it);
         }
@@ -48,69 +78,105 @@ pub(super) fn split_expired<'b>(
     (live, expired)
 }
 
-pub(super) fn worker_loop(
-    queue: &BoundedQueue,
-    registry: &Registry<'_>,
-    cfg: &ServerConfig,
-    clock: &Clock,
-    collector: &Mutex<Collector>,
-) -> Result<()> {
+/// Worker entry point: runs the drain loop, reporting any error into the
+/// shared sink (a worker that fails must not strand the rest silently).
+pub(super) fn worker_loop(ctx: &ServeCtx<'_, '_>) {
+    if let Err(e) = worker_run(ctx) {
+        ctx.errors.lock().unwrap().push(format!("{e:#}"));
+    }
+}
+
+fn worker_run(ctx: &ServeCtx<'_, '_>) -> Result<()> {
+    let cfg = ctx.cfg;
     loop {
-        let batch = queue.pop_batch(cfg.max_batch, cfg.max_wait);
+        let batch = ctx.queue.pop_batch(cfg.max_batch, cfg.max_wait);
         if batch.is_empty() {
             // closed and drained — graceful exit
             return Ok(());
         }
-        let popped_s = clock.now_s();
+        // chaos: a pending kill token means this worker "crashes" here,
+        // mid-drain. The popped batch is redelivered, not processed —
+        // at-least-once semantics keep the conservation law intact.
+        if ctx.chaos.take_kill() {
+            ctx.queue.requeue_front(batch);
+            return Ok(());
+        }
+        let popped_s = ctx.clock.now_s();
         let task = batch[0].req.task;
-        let tenant = registry
+        let tenant = ctx
+            .registry
             .tenant(task)
             .with_context(|| format!("request tagged with unregistered task id {task}"))?;
 
-        // deadline enforcement: drop requests already past their budget
+        // deadline enforcement: drop requests already past their budget,
+        // recording their queue waits — the expired tail stays observable
         let (live, expired) = split_expired(&batch, popped_s, cfg.deadline);
-        if expired > 0 {
-            collector.lock().unwrap().record_expired(task, expired);
+        if !expired.is_empty() {
+            let waits: Vec<f64> = expired
+                .iter()
+                .map(|it| (popped_s - it.req.arrival_s) * 1e3)
+                .collect();
+            ctx.collector.lock().unwrap().record_expired(task, &waits);
         }
         if live.is_empty() {
             continue;
         }
 
-        // assemble the batch inputs from the tenant's dataset
-        let s = tenant.data.seq_len();
         let bsize = live.len();
-        let mut ids = Vec::with_capacity(bsize * s);
-        let mut mask = Vec::with_capacity(bsize * s);
-        for it in &live {
-            let (i, m) = tenant.data.batch_slices(it.req.sample, it.req.sample + 1);
-            ids.extend(i);
-            mask.extend(m);
+        let exec_start_s = ctx.clock.now_s();
+        let simulate = cfg.service.map(|m| m.simulate).unwrap_or(false);
+        // in simulate mode there are no logits: pred = -1, correct =
+        // false, accuracy is meaningless by construction — the run
+        // measures scheduling, not the model
+        let logits = if simulate {
+            None
+        } else {
+            // assemble the batch inputs from the tenant's dataset
+            let s = tenant.data.seq_len();
+            let mut ids = Vec::with_capacity(bsize * s);
+            let mut mask = Vec::with_capacity(bsize * s);
+            for it in &live {
+                let (i, m) = tenant.data.batch_slices(it.req.sample, it.req.sample + 1);
+                ids.extend(i);
+                mask.extend(m);
+            }
+            Some(tenant.model.forward_fused(&ids, &mask)?)
+        };
+        if let Some(m) = cfg.service {
+            // spend the modeled execution cost in clock time. On a
+            // virtual clock `sleep_until` is a fetch_max, so N workers
+            // modeling costs concurrently realize parallel-service
+            // semantics (timeline reaches the latest completion), not
+            // summed costs; on a wall clock the cost acts as a floor.
+            ctx.clock.sleep_until(exec_start_s + m.cost_s(bsize));
         }
+        let done_s = ctx.clock.now_s();
 
-        let exec_start_s = clock.now_s();
-        let logits = tenant.model.forward_fused(&ids, &mask)?;
-        let done_s = clock.now_s();
-
-        let mut g = collector.lock().unwrap();
+        let mut g = ctx.collector.lock().unwrap();
         for (bi, it) in live.iter().enumerate() {
-            let row = logits.row(bi);
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(j, _)| j as i32)
-                .unwrap();
-            let correct = pred == tenant.data.label(it.req.sample);
+            let (pred, correct) = match &logits {
+                Some(l) => {
+                    let row = l.row(bi);
+                    let pred = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(j, _)| j as i32)
+                        .unwrap();
+                    (pred, pred == tenant.data.label(it.req.sample))
+                }
+                None => (-1, false),
+            };
             g.record(
                 Completion {
                     id: it.req.id,
                     task,
                     sample: it.req.sample,
                     pred,
-                    queue_ms: (popped_s - it.enq_s) * 1e3,
+                    queue_ms: (popped_s - it.req.arrival_s) * 1e3,
                     batch_ms: (exec_start_s - popped_s) * 1e3,
                     exec_ms: (done_s - exec_start_s) * 1e3,
-                    total_ms: (done_s - it.enq_s) * 1e3,
+                    total_ms: (done_s - it.req.arrival_s) * 1e3,
                     batch_size: bsize,
                 },
                 correct,
@@ -124,10 +190,11 @@ mod tests {
     use super::*;
     use crate::data::TaggedRequest;
 
-    fn item(id: usize, enq_s: f64) -> QueueItem {
+    fn item(id: usize, arrival_s: f64) -> QueueItem {
         QueueItem {
-            req: TaggedRequest { id, task: 0, arrival_s: enq_s, sample: 0 },
-            enq_s,
+            req: TaggedRequest { id, task: 0, arrival_s, sample: 0, len_bucket: 0 },
+            enq_s: arrival_s,
+            deadline_s: f64::INFINITY,
         }
     }
 
@@ -136,17 +203,17 @@ mod tests {
         let batch = [item(0, 0.0), item(1, 5.0)];
         let (live, expired) = split_expired(&batch, 100.0, None);
         assert_eq!(live.len(), 2);
-        assert_eq!(expired, 0);
+        assert!(expired.is_empty());
     }
 
     #[test]
     fn deadline_expires_only_overdue_requests() {
-        // at t=1.0 with a 500ms budget: enq 0.2 is 800ms old (expired),
-        // enq 0.6 is 400ms old (live), enq 0.5 is exactly at the budget
-        // (live — the bound is strict)
+        // at t=1.0 with a 500ms budget: arrival 0.2 is 800ms old
+        // (expired), arrival 0.6 is 400ms old (live), arrival 0.5 is
+        // exactly at the budget (live — the bound is strict)
         let batch = [item(0, 0.2), item(1, 0.6), item(2, 0.5)];
         let (live, expired) = split_expired(&batch, 1.0, Some(Duration::from_millis(500)));
-        assert_eq!(expired, 1);
+        assert_eq!(expired.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![0]);
         assert_eq!(live.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![1, 2]);
     }
 
@@ -154,7 +221,18 @@ mod tests {
     fn zero_deadline_expires_anything_with_positive_wait() {
         let batch = [item(0, 0.0), item(1, 1.0)];
         let (live, expired) = split_expired(&batch, 1.0, Some(Duration::ZERO));
-        assert_eq!(expired, 1, "the t=0 request waited 1s against a 0 budget");
+        assert_eq!(expired.len(), 1, "the t=0 request waited 1s against a 0 budget");
         assert_eq!(live[0].req.id, 1, "the just-arrived request is exactly on budget");
+    }
+
+    #[test]
+    fn expiry_measures_from_arrival_not_admission() {
+        // admitted late (enq_s ≫ arrival_s): the wait already suffered in
+        // the backlog must count against the deadline
+        let mut it = item(0, 0.0);
+        it.enq_s = 0.9;
+        let (live, expired) = split_expired(&[it], 1.0, Some(Duration::from_millis(500)));
+        assert!(live.is_empty());
+        assert_eq!(expired.len(), 1, "1s since arrival > 500ms budget");
     }
 }

@@ -4,12 +4,15 @@
 //! always evaluate the identical dev split.
 //!
 //! Also home to [`TraceGenerator`]: synthetic request-arrival traces for
-//! the serving demo / engine_inference bench (Poisson arrivals, bursty
-//! variant, multi-tenant tagging), standing in for the production traces
-//! the paper's deployment story implies (DESIGN.md §2). Traces carry
-//! clock-relative arrival seconds; [`replay`] feeds them to the server
-//! through a [`Clock`], so the same trace drives real-time serving (wall
-//! clock) and millisecond-fast hermetic tests (virtual clock).
+//! the serving demo / engine_inference bench, standing in for the
+//! production traces the paper's deployment story implies (DESIGN.md §2,
+//! §6). The base process is Poisson; realism layers compose on top of it:
+//! coincident bursts, diurnal (sinusoidal) rate modulation via Poisson
+//! thinning, Zipf-distributed tenant selection, and mixed
+//! sequence-length buckets. Traces carry clock-relative arrival seconds;
+//! [`replay`] feeds them to the server through a [`Clock`], so the same
+//! trace drives real-time serving (wall clock) and millisecond-fast
+//! hermetic tests (virtual clock).
 
 use std::path::Path;
 
@@ -165,6 +168,12 @@ pub struct TaggedRequest {
     pub arrival_s: f64,
     /// sample index into the tenant's dataset
     pub sample: usize,
+    /// sequence-length bucket class. Production servers batch by padded
+    /// length; the queue mirrors that by never mixing buckets in one
+    /// batch, so a trace with mixed buckets fragments batches exactly the
+    /// way real mixed-length traffic does. Bucket 0 is the default for
+    /// generators that don't model length classes.
+    pub len_bucket: u8,
 }
 
 /// Tag a single-tenant trace for the multi-tenant server (ids are trace
@@ -173,7 +182,13 @@ pub fn tag_trace(trace: &[Request], task: usize) -> Vec<TaggedRequest> {
     trace
         .iter()
         .enumerate()
-        .map(|(id, r)| TaggedRequest { id, task, arrival_s: r.arrival_s, sample: r.sample })
+        .map(|(id, r)| TaggedRequest {
+            id,
+            task,
+            arrival_s: r.arrival_s,
+            sample: r.sample,
+            len_bucket: 0,
+        })
         .collect()
 }
 
@@ -189,22 +204,95 @@ pub fn replay<F: FnMut(TaggedRequest)>(trace: &[TaggedRequest], clock: &Clock, m
     }
 }
 
+/// Diurnal (time-of-day) modulation of the arrival rate: the
+/// instantaneous rate is `rate · (1 + amplitude · sin(2π t / period_s))`,
+/// so traffic swings between `rate·(1-amp)` troughs and `rate·(1+amp)`
+/// peaks over each period. Realized by Poisson thinning, which keeps the
+/// process exactly nonhomogeneous-Poisson rather than a warped grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Diurnal {
+    /// modulation period in seconds (a "day" compressed to trace scale)
+    pub period_s: f64,
+    /// swing fraction in `[0, 1]`: 1.0 means troughs go to zero traffic
+    pub amplitude: f64,
+}
+
 /// Synthetic arrival-trace generator for the serving demo.
+///
+/// Starts from a Poisson base process and layers realism on top:
+/// coincident bursts ([`Self::bursty`]), diurnal rate modulation
+/// ([`Self::with_diurnal`]), Zipf-skewed tenant selection
+/// ([`Self::with_zipf`]), and mixed sequence-length buckets
+/// ([`Self::with_seq_buckets`]). [`Self::heavy_tailed`] composes all four
+/// into the adversarial workload the chaos/capacity suites use.
 #[derive(Debug, Clone)]
 pub struct TraceGenerator {
     pub rate_per_s: f64,
     /// burstiness: probability a request brings a burst of `burst_size`
     pub burst_prob: f64,
     pub burst_size: usize,
+    /// optional diurnal rate modulation; `None` = homogeneous Poisson
+    pub diurnal: Option<Diurnal>,
+    /// Zipf exponent for tenant selection (tenant k gets weight
+    /// `1/(k+1)^s`); `None` = uniform tenants
+    pub zipf_s: Option<f64>,
+    /// sequence-length bucket weights; empty = every request in bucket 0.
+    /// Bucket b of B also narrows the sample draw to the b-th slice of
+    /// the tenant's dataset, so bucket identity is consistent with which
+    /// samples it covers.
+    pub seq_buckets: Vec<f64>,
 }
 
 impl TraceGenerator {
     pub fn poisson(rate_per_s: f64) -> Self {
-        Self { rate_per_s, burst_prob: 0.0, burst_size: 0 }
+        Self {
+            rate_per_s,
+            burst_prob: 0.0,
+            burst_size: 0,
+            diurnal: None,
+            zipf_s: None,
+            seq_buckets: Vec::new(),
+        }
     }
 
     pub fn bursty(rate_per_s: f64, burst_prob: f64, burst_size: usize) -> Self {
-        Self { rate_per_s, burst_prob, burst_size }
+        Self { burst_prob, burst_size, ..Self::poisson(rate_per_s) }
+    }
+
+    /// The full heavy-tailed preset: bursts, a compressed diurnal cycle,
+    /// Zipf tenants, and three length buckets (60/30/10). One knob — the
+    /// offered rate — which is what capacity sweeps vary.
+    pub fn heavy_tailed(rate_per_s: f64) -> Self {
+        Self::bursty(rate_per_s, 0.15, 8)
+            .with_diurnal(60.0, 0.6)
+            .with_zipf(1.1)
+            .with_seq_buckets(&[0.6, 0.3, 0.1])
+    }
+
+    /// Add diurnal modulation (see [`Diurnal`]).
+    pub fn with_diurnal(mut self, period_s: f64, amplitude: f64) -> Self {
+        assert!(period_s > 0.0, "diurnal period must be positive");
+        assert!((0.0..=1.0).contains(&amplitude), "amplitude in [0,1]");
+        self.diurnal = Some(Diurnal { period_s, amplitude });
+        self
+    }
+
+    /// Zipf-distribute tenant selection with exponent `s > 0`.
+    pub fn with_zipf(mut self, s: f64) -> Self {
+        assert!(s > 0.0 && s.is_finite(), "zipf exponent must be positive");
+        self.zipf_s = Some(s);
+        self
+    }
+
+    /// Mixed sequence-length buckets with the given relative weights.
+    pub fn with_seq_buckets(mut self, weights: &[f64]) -> Self {
+        assert!(
+            weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+            "bucket weights must be positive"
+        );
+        assert!(weights.len() <= u8::MAX as usize + 1, "too many buckets");
+        self.seq_buckets = weights.to_vec();
+        self
     }
 
     /// Generate `n` requests drawing sample indices from `[0, n_samples)`.
@@ -216,7 +304,7 @@ impl TraceGenerator {
     }
 
     /// Generate a multi-tenant trace of `n` requests: one shared arrival
-    /// process, each request targeting a uniformly-drawn tenant and a
+    /// process, each request targeting a (uniform or Zipf) tenant and a
     /// sample from that tenant's `samples_per_task` range. Ids are trace
     /// positions (0..n).
     pub fn generate_tagged(
@@ -229,33 +317,100 @@ impl TraceGenerator {
             !samples_per_task.is_empty() && samples_per_task.iter().all(|&s| s > 0),
             "every tenant needs at least one sample"
         );
+        let tenant_cdf = self.zipf_s.map(|s| {
+            cdf_from_weights(
+                &(0..samples_per_task.len())
+                    .map(|k| 1.0 / ((k + 1) as f64).powf(s))
+                    .collect::<Vec<_>>(),
+            )
+        });
+        let bucket_cdf = if self.seq_buckets.len() > 1 {
+            Some(cdf_from_weights(&self.seq_buckets))
+        } else {
+            None
+        };
+        let n_buckets = self.seq_buckets.len().max(1);
+        // candidate arrivals run at the peak rate; thinning accepts each
+        // with prob λ(t)/λ_peak, which realizes the modulated rate exactly
+        let peak_rate = match self.diurnal {
+            Some(d) => self.rate_per_s * (1.0 + d.amplitude),
+            None => self.rate_per_s,
+        };
         let mut rng = Rng::new(seed);
         let mut out = Vec::with_capacity(n);
         let mut t = 0.0f64;
         while out.len() < n {
-            // exponential inter-arrival
+            // exponential inter-arrival at the peak rate
             let u: f64 = rng.f64().max(1e-12);
-            t += -u.ln() / self.rate_per_s;
+            t += -u.ln() / peak_rate;
+            if let Some(d) = self.diurnal {
+                let lambda = self.rate_per_s
+                    * (1.0 + d.amplitude * (std::f64::consts::TAU * t / d.period_s).sin());
+                if !rng.chance(lambda / peak_rate) {
+                    continue; // thinned candidate — no arrival here
+                }
+            }
             let burst = if rng.chance(self.burst_prob) { self.burst_size } else { 1 };
             for _ in 0..burst.max(1) {
                 if out.len() >= n {
                     break;
                 }
-                let task = if samples_per_task.len() == 1 {
-                    0
-                } else {
-                    rng.range(0, samples_per_task.len())
+                let task = match &tenant_cdf {
+                    Some(cdf) => draw_cdf(&mut rng, cdf),
+                    None if samples_per_task.len() == 1 => 0,
+                    None => rng.range(0, samples_per_task.len()),
                 };
+                let bucket = match &bucket_cdf {
+                    Some(cdf) => draw_cdf(&mut rng, cdf),
+                    None => 0,
+                };
+                let (lo, hi) = bucket_sample_range(samples_per_task[task], n_buckets, bucket);
                 out.push(TaggedRequest {
                     id: out.len(),
                     task,
                     arrival_s: t,
-                    sample: rng.range(0, samples_per_task[task]),
+                    sample: rng.range(lo, hi),
+                    len_bucket: bucket as u8,
                 });
             }
         }
         out
     }
+}
+
+/// Normalized cumulative distribution from positive weights.
+fn cdf_from_weights(weights: &[f64]) -> Vec<f64> {
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    weights
+        .iter()
+        .map(|w| {
+            acc += w / total;
+            acc
+        })
+        .collect()
+}
+
+/// Inverse-CDF draw (linear scan — tenant/bucket counts are tiny).
+fn draw_cdf(rng: &mut Rng, cdf: &[f64]) -> usize {
+    let u = rng.f64();
+    cdf.iter().position(|&c| u < c).unwrap_or(cdf.len() - 1)
+}
+
+/// The slice of a tenant's `n_samples` that length-bucket `bucket` (of
+/// `n_buckets`) draws from. Datasets smaller than the bucket count fall
+/// back to the full range rather than producing empty slices.
+fn bucket_sample_range(n_samples: usize, n_buckets: usize, bucket: usize) -> (usize, usize) {
+    if n_samples < n_buckets {
+        return (0, n_samples);
+    }
+    let lo = bucket * n_samples / n_buckets;
+    let hi = if bucket + 1 == n_buckets {
+        n_samples
+    } else {
+        ((bucket + 1) * n_samples / n_buckets).max(lo + 1)
+    };
+    (lo, hi)
 }
 
 #[cfg(test)]
@@ -371,6 +526,112 @@ mod tests {
             assert_eq!(t.task, 2);
             assert_eq!(t.arrival_s, r.arrival_s);
             assert_eq!(t.sample, r.sample);
+        }
+    }
+
+    #[test]
+    fn plain_generators_leave_len_bucket_zero() {
+        let g = TraceGenerator::bursty(40.0, 0.2, 4);
+        let reqs = g.generate_tagged(200, &[9, 5], 3);
+        assert!(reqs.iter().all(|r| r.len_bucket == 0));
+        let tagged = tag_trace(&g.generate(20, 5, 3), 1);
+        assert!(tagged.iter().all(|r| r.len_bucket == 0));
+    }
+
+    #[test]
+    fn zipf_skews_tenant_traffic_toward_head() {
+        let g = TraceGenerator::poisson(100.0).with_zipf(1.2);
+        let reqs = g.generate_tagged(3000, &[8, 8, 8], 17);
+        let mut counts = [0usize; 3];
+        for r in &reqs {
+            counts[r.task] += 1;
+        }
+        // weights 1 : 0.435 : 0.268 → ordering is statistically safe at n=3000
+        assert!(
+            counts[0] > counts[1] && counts[1] > counts[2],
+            "zipf head should dominate: {counts:?}"
+        );
+        assert!(counts[2] > 0, "tail tenant still gets traffic");
+    }
+
+    #[test]
+    fn diurnal_modulation_shifts_arrival_mass_to_peaks() {
+        // amplitude 0.9: peak rate 19× the trough rate. With period 100s,
+        // sin peaks in [15,35) and troughs in [65,85) of every cycle.
+        let g = TraceGenerator::poisson(50.0).with_diurnal(100.0, 0.9);
+        let reqs = g.generate_tagged(8000, &[4], 23);
+        let phase_count = |lo: f64, hi: f64| {
+            reqs.iter()
+                .filter(|r| {
+                    let p = r.arrival_s % 100.0;
+                    p >= lo && p < hi
+                })
+                .count()
+        };
+        let peak = phase_count(15.0, 35.0);
+        let trough = phase_count(65.0, 85.0);
+        assert!(
+            peak as f64 > 3.0 * trough as f64,
+            "diurnal peak {peak} vs trough {trough}"
+        );
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s, "thinning keeps monotone time");
+        }
+    }
+
+    #[test]
+    fn seq_buckets_partition_samples_consistently() {
+        let g = TraceGenerator::poisson(80.0).with_seq_buckets(&[0.5, 0.5]);
+        let reqs = g.generate_tagged(600, &[10], 29);
+        let mut seen = [false; 2];
+        for r in &reqs {
+            assert!(r.len_bucket < 2);
+            seen[r.len_bucket as usize] = true;
+            // bucket b draws samples only from its half of the dataset
+            let (lo, hi) = if r.len_bucket == 0 { (0, 5) } else { (5, 10) };
+            assert!(
+                r.sample >= lo && r.sample < hi,
+                "bucket {} drew sample {}",
+                r.len_bucket,
+                r.sample
+            );
+        }
+        assert!(seen[0] && seen[1], "both buckets get traffic");
+    }
+
+    #[test]
+    fn bucket_sample_range_covers_and_never_empties() {
+        for n_samples in 1..40 {
+            for n_buckets in 1..6 {
+                let mut covered = vec![false; n_samples];
+                for b in 0..n_buckets {
+                    let (lo, hi) = bucket_sample_range(n_samples, n_buckets, b);
+                    assert!(lo < hi, "empty bucket range n={n_samples} b={b}/{n_buckets}");
+                    assert!(hi <= n_samples);
+                    for s in lo..hi {
+                        covered[s] = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "samples uncovered n={n_samples}");
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_tailed_preset_is_deterministic_and_well_formed() {
+        let g = TraceGenerator::heavy_tailed(120.0);
+        let counts = [30usize, 12, 7];
+        let a = g.generate_tagged(1000, &counts, 41);
+        assert_eq!(a, g.generate_tagged(1000, &counts, 41), "same seed, same trace");
+        assert_eq!(a.len(), 1000);
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert!(r.task < 3 && r.sample < counts[r.task]);
+            assert!((r.len_bucket as usize) < 3);
+            assert!(r.arrival_s.is_finite() && r.arrival_s >= 0.0);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
         }
     }
 

@@ -21,7 +21,9 @@ use anyhow::{bail, Context, Result};
 
 use svdquant::artifact::{write_artifact, QuantizedArtifact};
 use svdquant::calib::CalibStats;
-use svdquant::coordinator::server::{serve, Registry, ServerConfig};
+use svdquant::coordinator::server::{
+    serve, ChaosPlan, Registry, SchedPolicy, ServerConfig, ServiceModel,
+};
 use svdquant::coordinator::sweep::{run_sweep, SweepConfig, SweepResults};
 use svdquant::coordinator::{quantize_checkpoint, Artifacts, PreserveSpec, QuantizePipeline};
 use svdquant::data::TraceGenerator;
@@ -527,6 +529,38 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
          prepackaged models (millisecond cold start, weights shared across \
          workers) instead of scoring/packing in-process",
     )
+    .flag("sched", Some("fifo"), "batch scheduling policy (fifo|edf)")
+    .flag(
+        "slo-ms",
+        None,
+        "comma-separated per-tenant SLO targets in ms, one per --tasks entry \
+         (0 = best effort); drives EDF scheduling and SLO-attainment stats",
+    )
+    .flag("zipf", Some("0"), "Zipf exponent for tenant selection; 0 = uniform")
+    .flag("diurnal-period-s", Some("0"), "diurnal arrival-rate period; 0 = off")
+    .flag("diurnal-amp", Some("0.6"), "diurnal swing fraction in [0,1]")
+    .flag(
+        "seq-buckets",
+        None,
+        "comma-separated sequence-length bucket weights (batches never mix buckets)",
+    )
+    .flag(
+        "chaos",
+        None,
+        "failure-injection script: comma-separated kill@T | respawn@T | \
+         storm@T:NxTASK events on the serve clock (e.g. kill@5,respawn@8,storm@10:200x0)",
+    )
+    .flag(
+        "service-base-ms",
+        Some("0"),
+        "modeled per-batch execution cost (dispatch overhead), ms",
+    )
+    .flag("service-req-ms", Some("0"), "modeled per-request execution cost, ms")
+    .switch(
+        "simulate-exec",
+        "replace the forward pass with the service model entirely \
+         (discrete-event simulation; accuracy is meaningless)",
+    )
     .switch("bursty", "bursty arrivals instead of poisson")
     .switch("virtual", "replay the trace in virtual time (hermetic dry-run)");
     let a = p.parse(rest)?;
@@ -632,45 +666,119 @@ fn serve_deployed(
     for (name, qm, dev) in &deployed {
         registry.add(name, qm, dev);
     }
+    // per-tenant SLO targets (ms, 0 = best effort), aligned with --tasks
+    let slo_list = a.list("slo-ms");
+    if !slo_list.is_empty() {
+        anyhow::ensure!(
+            slo_list.len() == registry.len(),
+            "--slo-ms needs one entry per --tasks entry ({} tasks, {} SLOs)",
+            registry.len(),
+            slo_list.len()
+        );
+        for (task, s) in slo_list.iter().enumerate() {
+            let ms: f64 = s.parse().context("bad --slo-ms entry")?;
+            let slo = (ms > 0.0).then(|| std::time::Duration::from_secs_f64(ms / 1e3));
+            registry.set_slo(task, slo);
+        }
+    }
 
     let rate = a.f64("rate")?;
-    let gen = if a.bool("bursty") {
+    let mut gen = if a.bool("bursty") {
         TraceGenerator::bursty(rate, 0.2, 8)
     } else {
         TraceGenerator::poisson(rate)
     };
+    let zipf = a.f64("zipf")?;
+    if zipf > 0.0 {
+        gen = gen.with_zipf(zipf);
+    }
+    let period = a.f64("diurnal-period-s")?;
+    if period > 0.0 {
+        gen = gen.with_diurnal(period, a.f64("diurnal-amp")?);
+    }
+    let buckets = a.list("seq-buckets");
+    if !buckets.is_empty() {
+        let weights: Vec<f64> = buckets
+            .iter()
+            .map(|w| w.parse::<f64>().context("bad --seq-buckets weight"))
+            .collect::<Result<_>>()?;
+        gen = gen.with_seq_buckets(&weights);
+    }
     let trace = gen.generate_tagged(a.usize("requests")?, &registry.sample_counts(), 0xFEED);
+
     let deadline_ms = a.u64("deadline-ms")?;
+    let base_ms = a.f64("service-base-ms")?;
+    let req_ms = a.f64("service-req-ms")?;
+    let simulate = a.bool("simulate-exec");
+    let service = (simulate || base_ms > 0.0 || req_ms > 0.0).then(|| ServiceModel {
+        base_s: base_ms / 1e3,
+        per_req_s: req_ms / 1e3,
+        simulate,
+    });
+    let chaos = match a.get("chaos") {
+        Some(spec) => Some(ChaosPlan::parse(spec)?),
+        None => None,
+    };
     let scfg = ServerConfig {
         max_batch: a.usize("max-batch")?,
         max_wait: std::time::Duration::from_millis(a.u64("max-wait-ms")?),
         queue_cap: a.usize("queue-cap")?,
         workers: a.usize("workers")?,
         deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        sched: SchedPolicy::parse(a.str("sched")?)?,
+        service,
+        chaos,
         clock: if a.bool("virtual") { Clock::virt() } else { Clock::wall() },
     };
     let stats = serve(&registry, &trace, &scfg)?;
     println!(
-        "served {} requests ({} shed, {} expired) in {:.2}s on {} workers: \
-         {:.1} req/s, p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms, mean batch {:.1}, accuracy {:.4}",
+        "served {} of {} offered ({} shed, {} expired) in {:.2}s on {} workers [{}]: \
+         {:.1} req/s, p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms, mean batch {:.1}, \
+         accuracy {:.4}, SLO attainment {:.3}",
         stats.completions,
+        stats.offered,
         stats.shed,
         stats.expired,
         stats.wall_s,
         scfg.workers,
+        scfg.sched,
         stats.throughput_rps,
         stats.p50_ms,
         stats.p95_ms,
         stats.p99_ms,
         stats.mean_batch,
-        stats.accuracy
+        stats.accuracy,
+        stats.slo_attainment
     );
+    if stats.injected + stats.worker_kills + stats.worker_respawns > 0 {
+        println!(
+            "  chaos: {} storm-injected, {} worker kills, {} respawns",
+            stats.injected, stats.worker_kills, stats.worker_respawns
+        );
+    }
+    if stats.expired > 0 {
+        println!(
+            "  expired-wait tail: p50 {:.1}ms p99 {:.1}ms max {:.1}ms",
+            stats.expired_wait_p50_ms, stats.expired_wait_p99_ms, stats.expired_wait_max_ms
+        );
+    }
+    if stats.clamped > 0 {
+        eprintln!(
+            "warning: {} latency samples rejected (negative/non-finite) — \
+             time accounting is suspect",
+            stats.clamped
+        );
+    }
     for t in &stats.per_tenant {
+        let slo = match t.slo_ms {
+            Some(ms) => format!(" | SLO {ms:.0}ms att {:.3}", t.slo_attainment),
+            None => String::new(),
+        };
         println!(
             "  [{}] {} done / {} shed / {} expired | p50 {:.1}ms p95 {:.1}ms | \
-             mean batch {:.1} | acc {:.4}",
+             mean batch {:.1} | acc {:.4}{}",
             t.task, t.completions, t.shed, t.expired, t.p50_ms, t.p95_ms, t.mean_batch,
-            t.accuracy
+            t.accuracy, slo
         );
     }
     Ok(())

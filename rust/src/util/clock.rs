@@ -15,6 +15,15 @@
 //!   rather than of scheduler races. This is what makes
 //!   `rust/tests/serving.rs` hermetic and fast.
 //!
+//! The virtual clock is also the substrate for discrete-event simulation
+//! of the server itself: a worker that models execution cost calls
+//! `sleep_until(start + cost)`, and because virtual sleeps are a
+//! `fetch_max` the net effect is exactly parallel-service semantics —
+//! N workers "executing" concurrently advance the timeline to the latest
+//! completion, not the sum of costs. That is what lets the chaos and
+//! capacity suites replay five-figure request counts with realistic
+//! backlog dynamics in milliseconds (DESIGN.md §6).
+//!
 //! Timestamps are `f64` seconds since the clock's epoch — the same unit
 //! `data::Request::arrival_s` uses, so traces replay against either clock
 //! unchanged.
@@ -83,6 +92,21 @@ impl Clock {
         }
     }
 
+    /// Spend `d_s` seconds of clock time starting now: a wall clock
+    /// really sleeps, a virtual clock advances the shared timeline. The
+    /// relative-duration counterpart of [`Self::sleep_until`] for callers
+    /// that model a cost rather than chase a deadline.
+    pub fn sleep(&self, d_s: f64) {
+        match self {
+            Clock::Wall(_) => {
+                if d_s > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(d_s));
+                }
+            }
+            Clock::Virtual(_) => self.advance(d_s),
+        }
+    }
+
     /// A fresh clock of the same kind with its epoch reset to zero.
     /// `serve` re-bases the configured clock per run so one `ServerConfig`
     /// can drive many traces (a wall epoch captured at config time would
@@ -139,6 +163,16 @@ mod tests {
         assert!(c.is_virtual());
         assert_eq!(c.now_s(), 0.0);
         assert!((b.now_s() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn virtual_sleep_advances_relative() {
+        let c = Clock::virt();
+        c.sleep(0.5);
+        c.sleep(0.25);
+        assert!((c.now_s() - 0.75).abs() < 1e-9);
+        c.sleep(-1.0); // negative durations are a no-op, not a rewind
+        assert!((c.now_s() - 0.75).abs() < 1e-9);
     }
 
     #[test]

@@ -17,6 +17,13 @@
 //! observed maximum instead.
 
 /// Streaming histogram over non-negative millisecond values.
+///
+/// Negative and non-finite inputs are *rejected, not laundered*: they
+/// bump a separate [`Self::clamped`] counter and touch none of the
+/// buckets, the total, the sum, or the max. (An earlier version folded
+/// them into bucket 0, which both polluted `mean_ms` and made true
+/// zero-latency samples indistinguishable from clock-skew bugs.) A true
+/// `0.0` is a legitimate bucket-0 record.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     width_ms: f64,
@@ -25,6 +32,7 @@ pub struct Histogram {
     total: u64,
     sum_ms: f64,
     max_ms: f64,
+    clamped: u64,
 }
 
 impl Histogram {
@@ -39,6 +47,7 @@ impl Histogram {
             total: 0,
             sum_ms: 0.0,
             max_ms: 0.0,
+            clamped: 0,
         }
     }
 
@@ -49,10 +58,15 @@ impl Histogram {
         Self::new(0.5, 8192)
     }
 
-    /// Record one value. Negative / non-finite values clamp to 0 (they can
-    /// only arise from clock skew, which the virtual clock rules out).
+    /// Record one value. Negative / non-finite values (possible only via
+    /// clock skew or an arithmetic bug upstream) are counted in
+    /// [`Self::clamped`] and excluded from every statistic, so they are
+    /// observable instead of silently polluting the distribution.
     pub fn record(&mut self, ms: f64) {
-        let ms = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        if !ms.is_finite() || ms < 0.0 {
+            self.clamped += 1;
+            return;
+        }
         let b = (ms / self.width_ms) as usize;
         if b < self.counts.len() {
             self.counts[b] += 1;
@@ -79,6 +93,7 @@ impl Histogram {
         self.overflow += other.overflow;
         self.total += other.total;
         self.sum_ms += other.sum_ms;
+        self.clamped += other.clamped;
         if other.max_ms > self.max_ms {
             self.max_ms = other.max_ms;
         }
@@ -86,6 +101,12 @@ impl Histogram {
 
     pub fn total(&self) -> u64 {
         self.total
+    }
+
+    /// Samples rejected by [`Self::record`] for being negative or
+    /// non-finite. Nonzero means a time-accounting bug upstream.
+    pub fn clamped(&self) -> u64 {
+        self.clamped
     }
 
     pub fn width_ms(&self) -> f64 {
@@ -196,11 +217,31 @@ mod tests {
     }
 
     #[test]
-    fn negative_and_nan_clamp_to_zero() {
+    fn negative_and_nan_are_counted_not_laundered() {
         let mut h = Histogram::new(1.0, 8);
         h.record(-3.0);
         h.record(f64::NAN);
-        assert_eq!(h.total(), 2);
+        h.record(f64::INFINITY);
+        assert_eq!(h.total(), 0, "bad samples never enter the distribution");
+        assert_eq!(h.clamped(), 3);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean_ms(), 0.0, "sum stays unpolluted");
+        // a true zero is a legitimate bucket-0 sample, distinct from skew
+        h.record(0.0);
+        assert_eq!(h.total(), 1);
+        assert_eq!(h.clamped(), 3);
         assert_eq!(h.quantile(0.5), 0.5); // midpoint of bucket 0
+    }
+
+    #[test]
+    fn merge_carries_clamped_counts() {
+        let mut a = Histogram::new(1.0, 8);
+        let mut b = Histogram::new(1.0, 8);
+        a.record(-1.0);
+        b.record(f64::NAN);
+        b.record(2.5);
+        a.merge(&b);
+        assert_eq!(a.clamped(), 2);
+        assert_eq!(a.total(), 1);
     }
 }

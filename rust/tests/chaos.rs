@@ -1,0 +1,353 @@
+//! Chaos + SLO suite: the serving stack under scripted failure injection
+//! and deadline pressure, hermetic on the virtual clock (no sleeps, no
+//! artifacts — models come from `svdquant::fixture`, multi-minute traces
+//! replay in milliseconds of real time).
+//!
+//! The load-bearing assertion everywhere is request conservation,
+//! `completions + shed + expired == offered` where
+//! `offered = trace.len() + storm-injected`. `serve` *enforces* it with a
+//! descriptive error, so most tests only need `serve(..).unwrap()` plus
+//! checks that the chaos actually happened (kills consumed, storms shed,
+//! backlogs expired) — a vacuous pass is impossible.
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use svdquant::coordinator::server::{
+    serve, ChaosPlan, Registry, SchedPolicy, ServeStats, ServerConfig, ServiceModel,
+};
+use svdquant::data::TraceGenerator;
+use svdquant::fixture;
+use svdquant::util::clock::Clock;
+use svdquant::util::proptest::{check, Shrink};
+
+/// Honor the CI thread matrix (same contract as `serving.rs`).
+fn init_threads() {
+    if let Ok(v) = std::env::var("SVDQUANT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            svdquant::util::pool::set_global_parallelism(n);
+        }
+    }
+}
+
+/// Sanity bundle shared by every scenario: totals partition per tenant and
+/// completed ids are unique and within the offered id space.
+fn assert_books_balance(stats: &ServeStats, offered: usize) {
+    assert_eq!(stats.offered, offered);
+    assert_eq!(stats.completions + stats.shed + stats.expired, offered);
+    assert_eq!(
+        stats.per_tenant.iter().map(|t| t.completions).sum::<usize>(),
+        stats.completions
+    );
+    assert_eq!(stats.per_tenant.iter().map(|t| t.shed).sum::<usize>(), stats.shed);
+    assert_eq!(stats.per_tenant.iter().map(|t| t.expired).sum::<usize>(), stats.expired);
+    let ids: HashSet<usize> = stats.completions_log.iter().map(|c| c.id).collect();
+    assert_eq!(ids.len(), stats.completions_log.len(), "duplicate completion ids");
+    assert!(ids.iter().all(|&i| i < offered), "completion id outside the offered space");
+    assert_eq!(stats.clamped, 0, "latency samples must never be negative/non-finite");
+}
+
+#[test]
+fn kill_and_respawn_mid_drain_conserves_every_request() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm_a, ds_a) = fixture::deployed_fixture(&cfg, 11, 8, 10).unwrap();
+    let (qm_b, ds_b) = fixture::deployed_fixture(&cfg, 12, 8, 14).unwrap();
+    let mut reg = Registry::new();
+    reg.add("alpha", &qm_a, &ds_a);
+    reg.add("beta", &qm_b, &ds_b);
+
+    let trace =
+        TraceGenerator::bursty(10.0, 0.2, 6).generate_tagged(600, &reg.sample_counts(), 0xC1A0);
+    let span = trace.last().unwrap().arrival_s;
+    // real forward passes (no service model): the kill lands on a worker
+    // that is genuinely executing batches, not a pure simulation
+    let scfg = ServerConfig {
+        workers: 2,
+        queue_cap: 4096,
+        clock: Clock::virt(),
+        chaos: Some(ChaosPlan::new().kill_at(span * 0.25).respawn_at(span * 0.30)),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let stats = serve(&reg, &trace, &scfg).unwrap();
+    assert!(
+        t0.elapsed().as_secs_f64() < 5.0,
+        "chaos scenario must stay hermetic-fast on the virtual clock"
+    );
+
+    assert_books_balance(&stats, trace.len());
+    assert_eq!(stats.worker_kills, 1, "the kill token must be consumed");
+    assert_eq!(stats.worker_respawns, 1);
+    assert_eq!(stats.injected, 0);
+    assert_eq!(stats.expired, 0, "no deadline and a surviving pool: nothing expires");
+    assert_eq!(stats.completions, trace.len(), "cap is large: nothing sheds either");
+}
+
+#[test]
+fn killing_every_worker_strands_then_expires_the_backlog() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 13, 4, 8).unwrap();
+    let mut reg = Registry::new();
+    reg.add("solo", &qm, &ds);
+
+    let trace =
+        TraceGenerator::poisson(20.0).generate_tagged(600, &reg.sample_counts(), 0xDEAD);
+    let span = trace.last().unwrap().arrival_s;
+    let scfg = ServerConfig {
+        workers: 1,
+        queue_cap: 4096,
+        clock: Clock::virt(),
+        service: Some(ServiceModel::simulated(0.002, 0.001)),
+        chaos: Some(ChaosPlan::new().kill_at(span * 0.25)),
+        ..Default::default()
+    };
+    let stats = serve(&reg, &trace, &scfg).unwrap();
+
+    assert_books_balance(&stats, trace.len());
+    assert_eq!(stats.worker_kills, 1);
+    assert_eq!(stats.worker_respawns, 0);
+    // everything offered after the lone worker died can only leave through
+    // the post-drain sweep — and its queue waits must be visible
+    assert!(stats.expired > 200, "most of the trace strands: got {}", stats.expired);
+    assert!(stats.expired_wait_p50_ms > 0.0);
+    assert!(stats.expired_wait_p99_ms >= stats.expired_wait_p50_ms);
+    assert!(stats.expired_wait_max_ms >= stats.expired_wait_p99_ms - 1e-9);
+    assert_eq!(stats.per_tenant[0].expired, stats.expired);
+    assert!(stats.per_tenant[0].expired_wait_p99_ms > 0.0);
+}
+
+#[test]
+fn queue_storm_sheds_the_overflow_and_still_balances() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 14, 4, 8).unwrap();
+    let mut reg = Registry::new();
+    reg.add("solo", &qm, &ds);
+
+    let trace =
+        TraceGenerator::poisson(50.0).generate_tagged(300, &reg.sample_counts(), 0x5707);
+    let span = trace.last().unwrap().arrival_s;
+    let scfg = ServerConfig {
+        workers: 2,
+        queue_cap: 32,
+        clock: Clock::virt(),
+        service: Some(ServiceModel::simulated(0.002, 0.001)),
+        chaos: Some(ChaosPlan::new().storm_at(span * 0.5, 1000, 0)),
+        ..Default::default()
+    };
+    let stats = serve(&reg, &trace, &scfg).unwrap();
+
+    let offered = trace.len() + 1000;
+    assert_books_balance(&stats, offered);
+    assert_eq!(stats.injected, 1000);
+    // 1000 requests hit a 32-slot queue in one instant: the vast majority
+    // must shed (workers can drain at most a few batches mid-storm)
+    assert!(stats.shed > 200, "storm must overwhelm admission: shed {}", stats.shed);
+    assert!(stats.completions > 0);
+}
+
+#[test]
+fn edf_beats_fifo_on_a_bursty_zipf_trace() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 15, 4, 16).unwrap();
+    // one tight-SLO interactive tenant (the Zipf head, most traffic) and
+    // one best-effort bulk tenant sharing the same deployed model
+    let mut reg = Registry::new();
+    reg.add_with_slo("tight", &qm, &ds, Some(Duration::from_millis(100)));
+    reg.add("bulk", &qm, &ds);
+
+    // modeled capacity: cost(16) = 4 + 2·16 = 36ms → ~444 req/s on one
+    // worker; offered ~400 req/s (0.9× capacity) with bursts, so FIFO
+    // backlogs regularly push the tight tenant past its 100ms SLO while
+    // EDF keeps pulling the earliest deadline to the head
+    let service = ServiceModel::simulated(0.004, 0.002);
+    let trace = TraceGenerator::bursty(400.0, 0.2, 8)
+        .with_zipf(1.2)
+        .generate_tagged(4000, &reg.sample_counts(), 0xED9);
+
+    let run = |sched: SchedPolicy| {
+        let scfg = ServerConfig {
+            workers: 1,
+            queue_cap: 8192,
+            sched,
+            service: Some(service),
+            clock: Clock::virt(),
+            ..Default::default()
+        };
+        serve(&reg, &trace, &scfg).unwrap()
+    };
+    let fifo = run(SchedPolicy::Fifo);
+    let edf = run(SchedPolicy::Edf);
+    assert_books_balance(&fifo, trace.len());
+    assert_books_balance(&edf, trace.len());
+
+    assert!(
+        fifo.slo_attainment < 0.95,
+        "the trace must actually stress FIFO (attainment {:.3})",
+        fifo.slo_attainment
+    );
+    assert!(
+        edf.slo_attainment > fifo.slo_attainment + 0.05,
+        "EDF must measurably beat FIFO: edf {:.3} vs fifo {:.3}",
+        edf.slo_attainment,
+        fifo.slo_attainment
+    );
+    // the win comes from the SLO'd tenant, not from starving accounting
+    assert!(
+        edf.per_tenant[0].slo_attainment > fifo.per_tenant[0].slo_attainment,
+        "tight tenant: edf {:.3} vs fifo {:.3}",
+        edf.per_tenant[0].slo_attainment,
+        fifo.per_tenant[0].slo_attainment
+    );
+    assert_eq!(edf.per_tenant[1].slo_attainment, 1.0, "no SLO → trivially attained");
+}
+
+#[test]
+fn expired_waits_land_in_dedicated_histograms() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 16, 4, 8).unwrap();
+    let mut reg = Registry::new();
+    reg.add("solo", &qm, &ds);
+
+    // offered 2× modeled capacity with a 50ms budget: the backlog grows
+    // without bound, so a large fraction expires at batch time — and those
+    // waits must be observable, not silently dropped (they are the worst
+    // tail of the system)
+    let service = ServiceModel::simulated(0.004, 0.002);
+    let trace =
+        TraceGenerator::poisson(900.0).generate_tagged(3000, &reg.sample_counts(), 0xE19E);
+    let scfg = ServerConfig {
+        workers: 1,
+        queue_cap: 8192,
+        deadline: Some(Duration::from_millis(50)),
+        service: Some(service),
+        clock: Clock::virt(),
+        ..Default::default()
+    };
+    let stats = serve(&reg, &trace, &scfg).unwrap();
+
+    assert_books_balance(&stats, trace.len());
+    assert!(stats.expired > 500, "2x overload must expire heavily: {}", stats.expired);
+    // expired waits exceed the 50ms budget by construction
+    assert!(stats.expired_wait_p50_ms > 50.0);
+    assert!(stats.expired_wait_p99_ms >= stats.expired_wait_p50_ms);
+    // the completion histogram cannot see these waits: the live p99 stays
+    // bounded near the deadline while the expired tail keeps growing
+    assert!(stats.expired_wait_p99_ms > stats.p99_ms);
+}
+
+/// A random chaos scenario: trace shape, server shape, and a scripted
+/// plan, all drawn from ranges that cover under- and over-load.
+#[derive(Debug, Clone)]
+struct ChaosCase {
+    n: usize,
+    rate: f64,
+    workers: usize,
+    queue_cap: usize,
+    deadline_ms: Option<u64>,
+    edf: bool,
+    events: Vec<(u8, f64, usize)>, // (kind, time fraction of span, storm n)
+}
+
+impl ChaosCase {
+    fn plan(&self, span: f64) -> ChaosPlan {
+        let mut plan = ChaosPlan::new();
+        for &(kind, frac, storm_n) in &self.events {
+            let at = span * frac;
+            plan = match kind % 3 {
+                0 => plan.kill_at(at),
+                1 => plan.respawn_at(at),
+                _ => plan.storm_at(at, storm_n.max(1), 0),
+            };
+        }
+        plan
+    }
+}
+
+impl Shrink for ChaosCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.n > 20 {
+            out.push(ChaosCase { n: self.n / 2, ..self.clone() });
+        }
+        for i in 0..self.events.len() {
+            let mut c = self.clone();
+            c.events.remove(i);
+            out.push(c);
+        }
+        if self.workers > 1 {
+            out.push(ChaosCase { workers: 1, ..self.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn conservation_holds_under_every_random_chaos_scenario() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm_a, ds_a) = fixture::deployed_fixture(&cfg, 17, 4, 8).unwrap();
+    let (qm_b, ds_b) = fixture::deployed_fixture(&cfg, 18, 4, 12).unwrap();
+    let mut reg = Registry::new();
+    reg.add_with_slo("a", &qm_a, &ds_a, Some(Duration::from_millis(80)));
+    reg.add("b", &qm_b, &ds_b);
+
+    check(
+        "completions + shed + expired == offered under random chaos",
+        |rng| ChaosCase {
+            n: rng.range(50, 400),
+            rate: rng.uniform(50.0, 500.0),
+            workers: rng.range(1, 4),
+            queue_cap: [8, 64, 4096][rng.range(0, 3)],
+            deadline_ms: rng.chance(0.5).then(|| rng.range(10, 100) as u64),
+            edf: rng.chance(0.5),
+            events: (0..rng.range(0, 5))
+                .map(|_| (rng.range(0, 3) as u8, rng.f64(), rng.range(1, 200)))
+                .collect(),
+        },
+        |case| {
+            let trace = TraceGenerator::bursty(case.rate, 0.2, 6)
+                .with_zipf(1.1)
+                .generate_tagged(case.n, &reg.sample_counts(), 0xCA05);
+            let span = trace.last().map(|r| r.arrival_s).unwrap_or(0.0);
+            let plan = case.plan(span);
+            let offered = case.n + plan.injected();
+            let scfg = ServerConfig {
+                workers: case.workers,
+                queue_cap: case.queue_cap,
+                deadline: case.deadline_ms.map(Duration::from_millis),
+                sched: if case.edf { SchedPolicy::Edf } else { SchedPolicy::Fifo },
+                service: Some(ServiceModel::simulated(0.002, 0.001)),
+                chaos: Some(plan),
+                clock: Clock::virt(),
+                ..Default::default()
+            };
+            // serve() itself enforces conservation and shed-tally agreement
+            // in every build; an Err here IS the property failing
+            let stats = serve(&reg, &trace, &scfg).map_err(|e| format!("{e:#}"))?;
+            if stats.offered != offered {
+                return Err(format!("offered {} != {offered}", stats.offered));
+            }
+            if stats.completions + stats.shed + stats.expired != offered {
+                return Err("books do not balance".into());
+            }
+            let per: usize = stats.per_tenant.iter().map(|t| t.completions + t.shed + t.expired).sum();
+            if per != offered {
+                return Err(format!("per-tenant partition {per} != {offered}"));
+            }
+            let ids: HashSet<usize> =
+                stats.completions_log.iter().map(|c| c.id).collect();
+            if ids.len() != stats.completions_log.len() {
+                return Err("duplicate completion ids".into());
+            }
+            if stats.clamped != 0 {
+                return Err(format!("{} clamped latency samples", stats.clamped));
+            }
+            Ok(())
+        },
+    );
+}

@@ -64,8 +64,11 @@ fn quantize_pack_serve_virtual_time_multi_tenant() {
 
     // conservation: every request accounted for exactly once
     assert_eq!(stats.completions + stats.shed + stats.expired, trace.len());
+    assert_eq!(stats.offered, trace.len(), "no chaos storms: offered == trace");
     assert_eq!(stats.expired, 0, "no deadline configured");
     assert!(stats.completions > 0, "some requests must complete");
+    assert_eq!(stats.clamped, 0, "healthy run must not reject latency samples");
+    assert_eq!(stats.slo_attainment, 1.0, "no SLOs configured: attainment is trivial");
 
     // no request lost or duplicated across the worker pool
     assert_eq!(stats.completions_log.len(), stats.completions, "log covers this trace");
@@ -154,7 +157,7 @@ fn serve_handles_empty_trace_and_rejects_unknown_tasks() {
     let stats = serve(&reg, &[], &scfg).unwrap();
     assert_eq!(stats.completions + stats.shed + stats.expired, 0);
     // a request tagged for an unregistered tenant is an error, not a hang
-    let bad = [TaggedRequest { id: 0, task: 7, arrival_s: 0.0, sample: 0 }];
+    let bad = [TaggedRequest { id: 0, task: 7, arrival_s: 0.0, sample: 0, len_bucket: 0 }];
     assert!(serve(&reg, &bad, &scfg).is_err());
 }
 
@@ -175,7 +178,13 @@ fn queue_stress_no_request_lost_or_duplicated() {
                 scope.spawn(move || {
                     for i in 0..per {
                         let id = p * per + i;
-                        let r = TaggedRequest { id, task: id % 3, arrival_s: 0.0, sample: 0 };
+                        let r = TaggedRequest {
+                            id,
+                            task: id % 3,
+                            arrival_s: 0.0,
+                            sample: 0,
+                            len_bucket: 0,
+                        };
                         // cap 4096 ≥ n: nothing may shed in this test
                         assert_eq!(q.push(r), Enqueue::Accepted);
                     }
@@ -261,9 +270,8 @@ fn pop_batch_size_or_deadline_property() {
             let clock = Clock::virt();
             let q = BoundedQueue::new(4096, clock.clone());
             for (i, &task) in case.tasks.iter().enumerate() {
-                if q.push(TaggedRequest { id: i, task, arrival_s: 0.0, sample: 0 })
-                    != Enqueue::Accepted
-                {
+                let r = TaggedRequest { id: i, task, arrival_s: 0.0, sample: 0, len_bucket: 0 };
+                if q.push(r) != Enqueue::Accepted {
                     return Err("push refused below capacity".into());
                 }
             }
