@@ -83,7 +83,7 @@ pub fn write_bench_serving(key: &str, section: Json) {
     let doc = Json::object(pairs);
     match std::fs::write(path, doc.pretty()) {
         Ok(()) => println!("\n  serving trajectory -> {}", path.display()),
-        Err(e) => eprintln!("warn: could not write {}: {e}", path.display()),
+        Err(e) => svdquant::log_warn!("bench", "could not write {}: {e}", path.display()),
     }
 }
 

@@ -258,6 +258,63 @@ fn main() {
         vs.wall_s / virt_wall_s.max(1e-9)
     );
 
+    // ---- tracing overhead: off vs sampled vs full span recording ---------
+    // the same virtual replay with per-request span tracing disabled,
+    // sampled 1-in-16, and full: the delta is the observability tax on the
+    // serving hot path (ring pushes + one now_ns read per event). Gated at
+    // < 5% of the trace-off wall time (with a 5ms absolute slack floor, so
+    // sub-resolution jitter on a short replay can't fail the gate).
+    let obs_json = {
+        qm.set_kernel(GemmKernel::Int8);
+        let mut measure = |tracing: Option<svdquant::obs::TraceSpec>| {
+            let scfg = ServerConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(4),
+                queue_cap: 512,
+                workers: 2,
+                clock: Clock::virt(),
+                tracing,
+                ..ServerConfig::default()
+            };
+            let mut best_s = f64::INFINITY;
+            let mut completions = 0usize;
+            for _ in 0..3 {
+                let t0 = std::time::Instant::now();
+                let s = serve_trace(&qm, &dev, &trace, &scfg).expect("obs serve");
+                best_s = best_s.min(t0.elapsed().as_secs_f64());
+                completions = s.completions;
+            }
+            (completions as f64 * cfg.max_len as f64 / best_s.max(1e-9), best_s)
+        };
+        let (off_tps, off_s) = measure(None);
+        let (sampled_tps, _) = measure(Some(svdquant::obs::TraceSpec {
+            ring_cap: 1 << 16,
+            sample_every: 16,
+        }));
+        let (full_tps, full_s) = measure(Some(svdquant::obs::TraceSpec {
+            ring_cap: 1 << 16,
+            sample_every: 1,
+        }));
+        let overhead = (full_s - off_s) / off_s.max(1e-9);
+        println!(
+            "  tracing overhead: off {off_tps:.0} tok/s, sampled(1/16) {sampled_tps:.0}, \
+             full {full_tps:.0} ({:+.1}% wall)",
+            overhead * 1e2
+        );
+        assert!(
+            full_s - off_s < (0.05 * off_s).max(0.005),
+            "full span tracing costs {:.1}% of the untraced serve (> 5% gate)",
+            overhead * 1e2
+        );
+        Json::object(vec![
+            ("tokens_per_s_trace_off".to_string(), Json::from(off_tps)),
+            ("tokens_per_s_trace_sampled_16".to_string(), Json::from(sampled_tps)),
+            ("tokens_per_s_trace_full".to_string(), Json::from(full_tps)),
+            ("full_overhead_fraction".to_string(), Json::from(overhead)),
+            ("gate_full_overhead_lt_0p05".to_string(), Json::from(true)),
+        ])
+    };
+
     // ---- capacity-planning curves: offered load vs p99 / shed / SLO ------
     // the serving stack as a discrete-event simulation: the measured int8
     // forward costs calibrate a ServiceModel (cost(b) ≈ base + per_req·b),
@@ -319,8 +376,8 @@ fn main() {
                     deadline: Some(deadline),
                     sched,
                     service: Some(service),
-                    chaos: None,
                     clock: Clock::virt(),
+                    ..ServerConfig::default()
                 };
                 let s = serve(&registry, &trace, &scfg).expect("capacity serve");
                 att[pi] = s.slo_attainment;
@@ -375,6 +432,7 @@ fn main() {
                 service: Some(service),
                 chaos: Some(plan),
                 clock: Clock::virt(),
+                ..ServerConfig::default()
             };
             let s = serve(&registry, &trace, &scfg).expect("chaos serve");
             println!(
@@ -424,7 +482,7 @@ fn main() {
         let _ = std::fs::create_dir_all("results");
         match std::fs::write(path, doc.pretty()) {
             Ok(()) => println!("  capacity curves -> {}", path.display()),
-            Err(e) => eprintln!("warn: could not write {}: {e}", path.display()),
+            Err(e) => svdquant::log_warn!("bench", "could not write {}: {e}", path.display()),
         }
         Json::object(vec![
             ("path".to_string(), Json::from("results/capacity.json")),
@@ -520,6 +578,7 @@ fn main() {
             ("forward_by_width".to_string(), Json::object(width_fwd)),
             ("simd_forward".to_string(), simd_fwd),
             ("serving".to_string(), Json::Array(json_rows)),
+            ("obs".to_string(), obs_json),
             ("capacity".to_string(), capacity_json),
             (
                 "virtual_replay".to_string(),

@@ -35,6 +35,15 @@
 //! every transition (including a chaos kill's batch redelivery and the
 //! post-drain sweep that expires requests stranded by a total worker
 //! wipeout) preserves that. See `chaos.rs` for the full argument.
+//!
+//! **Observability** (DESIGN.md §11): with [`ServerConfig::tracing`] set,
+//! every request's lifecycle is recorded as span events into per-thread
+//! rings and exported as Chrome trace JSON + a Prometheus-style metrics
+//! snapshot in [`ServeStats`]. With [`ServerConfig::lockstep`] (virtual
+//! clock only), the front waits for full quiescence after every push and
+//! chaos event, serializing the whole serve so that two runs of the same
+//! trace produce byte-identical exports — the determinism anchor for
+//! `rust/tests/obs.rs` and the CI trace-diff gate.
 
 mod chaos;
 mod queue;
@@ -47,6 +56,7 @@ pub use queue::{BoundedQueue, Enqueue, QueueItem, SchedPolicy};
 pub use registry::{Registry, Tenant};
 pub use stats::{Completion, ServeStats, TenantStats, COMPLETION_LOG_CAP};
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::thread::Scope;
 use std::time::Duration;
@@ -55,6 +65,9 @@ use anyhow::{ensure, Result};
 
 use crate::data::{tag_trace, Dataset, Request, TaggedRequest};
 use crate::model::QuantizedModel;
+use crate::obs::metrics::{MetricsRegistry, PROM_PREFIX};
+use crate::obs::span::{instant_code, EventKind, NO_REQ, NO_TASK};
+use crate::obs::trace::{ThreadTrace, TraceSpec, Tracer, FRONT_TRACK};
 use crate::util::clock::Clock;
 
 use chaos::ChaosRuntime;
@@ -129,6 +142,18 @@ pub struct ServerConfig {
     pub chaos: Option<ChaosPlan>,
     /// time source; `serve` re-bases it per run ([`Clock::restarted`])
     pub clock: Clock,
+    /// per-request span tracing; `None` = tracing off (zero ring
+    /// allocations, one `Option` check per would-be event)
+    pub tracing: Option<TraceSpec>,
+    /// serialize the run for bit-determinism: after every push and every
+    /// chaos event the front waits until all offered requests have
+    /// settled (completed / shed / expired) or no worker is live.
+    /// Requires the virtual clock; `serve` rejects it on wall time.
+    pub lockstep: bool,
+    /// emit a Prometheus snapshot into [`ServeStats::metrics_dumps`]
+    /// every this many *clock* seconds (virtual-time periods replay
+    /// instantly); `None` = only the final snapshot
+    pub metrics_period_s: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -143,6 +168,9 @@ impl Default for ServerConfig {
             service: None,
             chaos: None,
             clock: Clock::wall(),
+            tracing: None,
+            lockstep: false,
+            metrics_period_s: None,
         }
     }
 }
@@ -158,12 +186,17 @@ pub fn serve(
 ) -> Result<ServeStats> {
     ensure!(!registry.is_empty(), "registry has no tenants");
     ensure!(cfg.max_batch > 0, "max_batch must be positive");
+    ensure!(
+        !cfg.lockstep || cfg.clock.is_virtual(),
+        "lockstep mode serializes on quiescence and only makes sense (and only \
+         terminates promptly) on the virtual clock; pass a virtual clock or drop lockstep"
+    );
     // announce the resolved kernel dispatch once per process so every
     // serving log records which ISA produced its numbers
     {
         static ISA_LOGGED: std::sync::Once = std::sync::Once::new();
         ISA_LOGGED.call_once(|| {
-            eprintln!("kernel dispatch: {}", crate::util::simd::active_isa().name());
+            crate::log_info!("serve", "kernel dispatch: {}", crate::util::simd::active_isa().name());
         });
     }
     for r in trace {
@@ -188,6 +221,17 @@ pub fn serve(
     let samples_per_task = registry.sample_counts();
     let workers = cfg.workers.max(1);
 
+    // per-run observability state: an owned registry (so parallel serves
+    // in one process never mix counters) and an optional tracer
+    let metrics = MetricsRegistry::new();
+    // registered up front so even a dump taken before any request
+    // settles renders a non-empty exposition
+    metrics.gauge_set("serve_workers", workers as f64);
+    let tracer = cfg.tracing.map(Tracer::new);
+    let settled = AtomicUsize::new(0);
+    let live_workers = AtomicUsize::new(workers);
+    let next_track = AtomicUsize::new(0);
+
     let ctx = ServeCtx {
         queue: &queue,
         registry,
@@ -196,8 +240,13 @@ pub fn serve(
         collector: &collector,
         chaos: &chaos,
         errors: &errors,
+        metrics: &metrics,
+        tracer: tracer.as_ref(),
+        next_track: &next_track,
+        settled: &settled,
+        live_workers: &live_workers,
     };
-    let shed_per_task = std::thread::scope(|scope| {
+    let (shed_per_task, metrics_dumps) = std::thread::scope(|scope| {
         // front: replay arrivals in clock time (firing chaos events as
         // the timeline passes them), count sheds per tenant, then close
         // the queue for a graceful drain
@@ -209,6 +258,7 @@ pub fn serve(
         front.join().expect("front thread panicked")
         // scope exit joins every worker, including chaos respawns
     });
+    drop(ctx); // release the &tracer borrow so finish() can consume it
 
     // post-drain sweep: if chaos killed every worker, admitted requests
     // are stranded in the (closed) queue — they can never complete, so
@@ -216,12 +266,25 @@ pub fn serve(
     // the last transition that keeps the conservation law exact.
     let leftovers = queue.drain_remaining();
     if !leftovers.is_empty() {
-        let end_s = clock.now_s();
+        let end_ns = clock.now_ns();
+        let end_s = end_ns as f64 * 1e-9;
+        let mut sweep_tt = tracer.as_ref().map(|t| t.thread(FRONT_TRACK));
         let mut g = collector.lock().unwrap();
         for it in &leftovers {
-            g.record_expired(it.req.task, &[(end_s - it.req.arrival_s) * 1e3]);
+            let wait_ms = (end_s - it.req.arrival_s) * 1e3;
+            g.record_expired(it.req.task, &[wait_ms]);
+            if let Some(tt) = sweep_tt.as_mut() {
+                tt.emit(
+                    end_ns,
+                    EventKind::Expire,
+                    it.req.id as u64,
+                    it.req.task,
+                    (wait_ms * 1e3) as u64, // wait in µs, like worker expiries
+                );
+            }
         }
     }
+    let trace_data = tracer.map(|t| t.finish());
 
     let errs = errors.into_inner().unwrap();
     ensure!(errs.is_empty(), "worker failure(s): {}", errs.join("; "));
@@ -252,32 +315,81 @@ pub fn serve(
         chaos.respawns()
     );
 
+    // fold the end-of-run books into the metrics registry so one text
+    // exposition carries everything: hot-path counters the workers
+    // recorded live, the latency histograms, and these totals
+    let mh = metrics.handle();
+    collector.export_metrics(&mh);
+    mh.counter_add("serve_offered_total", offered as u64);
+    mh.counter_add("serve_completions_total", completions as u64);
+    mh.counter_add("serve_shed_total", shed_total as u64);
+    mh.counter_add("serve_expired_total", expired as u64);
+    mh.counter_add("serve_injected_total", chaos.injected() as u64);
+    mh.counter_add("serve_worker_kills_total", chaos.kills() as u64);
+    mh.counter_add("serve_worker_respawns_total", chaos.respawns() as u64);
+    if let Some(td) = &trace_data {
+        mh.counter_add("serve_trace_dropped_events_total", td.dropped);
+    }
+    metrics.gauge_set("serve_queue_depth_high_water", queue.depth_high_water() as f64);
+    metrics.gauge_set("serve_wall_clock_seconds", wall_s);
+    metrics.gauge_set(
+        "serve_throughput_rps",
+        if wall_s > 0.0 { completions as f64 / wall_s } else { 0.0 },
+    );
+
     let mut stats = collector.into_stats(registry.names(), &shed_per_task, wall_s);
     stats.offered = offered;
     stats.injected = chaos.injected();
     stats.worker_kills = chaos.kills();
     stats.worker_respawns = chaos.respawns();
+    stats.queue_depth_high_water = queue.depth_high_water();
+    stats.metrics_text = metrics.snapshot().render_prometheus(PROM_PREFIX);
+    stats.metrics_dumps = metrics_dumps;
+    stats.trace = trace_data;
     Ok(stats)
+}
+
+/// Mutable state the front loop and its chaos events thread through —
+/// bundled so `fire_event` stays one call.
+struct FrontState<'t> {
+    /// per-tenant shed tally (the queue's verdicts, attributed)
+    shed: Vec<usize>,
+    /// storm requests injected so far (id allocation)
+    injected: usize,
+    /// pushes attempted so far — the lockstep quiescence target
+    offered: usize,
+    /// the front's span recorder, when tracing
+    tt: Option<ThreadTrace<'t>>,
+    /// periodic Prometheus snapshots: (clock seconds, rendered text)
+    dumps: Vec<(f64, String)>,
+    /// next scheduled dump, if `metrics_period_s` is set
+    next_dump_s: Option<f64>,
 }
 
 /// The admission front: merge trace arrivals with chaos events on the
 /// clock timeline, push arrivals (tallying sheds per tenant), and close
 /// the queue when everything has been offered. Returns the per-tenant
-/// shed tally. Needs the scope so RespawnWorker events can spawn
-/// replacement workers into the same pool.
+/// shed tally and any periodic metrics dumps. Needs the scope so
+/// RespawnWorker events can spawn replacement workers into the same pool.
 fn front_loop<'scope, 'a, 'reg>(
     scope: &'scope Scope<'scope, '_>,
     ctx: &'scope ServeCtx<'a, 'reg>,
     trace: &[TaggedRequest],
     plan: &ChaosPlan,
     samples_per_task: &[usize],
-) -> Vec<usize>
+) -> (Vec<usize>, Vec<(f64, String)>)
 where
     'a: 'scope,
     'reg: 'scope,
 {
-    let mut shed = vec![0usize; samples_per_task.len()];
-    let mut injected = 0usize;
+    let mut st = FrontState {
+        shed: vec![0usize; samples_per_task.len()],
+        injected: 0,
+        offered: 0,
+        tt: ctx.tracer.map(|t| t.thread(FRONT_TRACK)),
+        dumps: Vec::new(),
+        next_dump_s: ctx.cfg.metrics_period_s,
+    };
     let mut events = plan.events().iter();
     let mut next_event = events.next();
     for r in trace {
@@ -285,21 +397,83 @@ where
             if e.at_s > r.arrival_s {
                 break;
             }
-            fire_event(scope, ctx, e, trace.len(), samples_per_task, &mut shed, &mut injected);
+            fire_event(scope, ctx, e, trace.len(), samples_per_task, &mut st);
             next_event = events.next();
         }
         ctx.clock.sleep_until(r.arrival_s);
-        if ctx.queue.push(*r) == Enqueue::Shed {
-            shed[r.task] += 1;
-        }
+        maybe_dump_metrics(ctx, &mut st);
+        push_traced(ctx, &mut st, *r);
     }
     // events scheduled past the last arrival still fire, before close
     while let Some(e) = next_event {
-        fire_event(scope, ctx, e, trace.len(), samples_per_task, &mut shed, &mut injected);
+        fire_event(scope, ctx, e, trace.len(), samples_per_task, &mut st);
         next_event = events.next();
     }
     ctx.queue.close();
-    shed
+    if let Some(tt) = st.tt.as_mut() {
+        tt.emit(ctx.clock.now_ns(), EventKind::QueueClose, NO_REQ, NO_TASK, 0);
+    }
+    drop(st.tt); // flush the front ring before workers can outlive us
+    (st.shed, st.dumps)
+}
+
+/// Push one request, record its admission verdict as a span event, and —
+/// in lockstep mode — wait for the system to settle before returning.
+/// A shed is terminal at the front, so it settles immediately.
+fn push_traced(ctx: &ServeCtx<'_, '_>, st: &mut FrontState<'_>, r: TaggedRequest) {
+    let t_ns = ctx.clock.now_ns();
+    st.offered += 1;
+    let verdict = ctx.queue.push(r);
+    if let Some(tt) = st.tt.as_mut() {
+        let depth = ctx.queue.len() as u64;
+        let kind = match verdict {
+            Enqueue::Shed => EventKind::Shed,
+            _ => EventKind::Admit,
+        };
+        tt.emit(t_ns, kind, r.id as u64, r.task, depth);
+    }
+    if verdict == Enqueue::Shed {
+        st.shed[r.task] += 1;
+        ctx.settled.fetch_add(1, Ordering::SeqCst);
+    }
+    if ctx.cfg.lockstep {
+        wait_quiesce(ctx, st.offered);
+    }
+}
+
+/// Lockstep barrier: spin (politely) until every offered request has
+/// reached a terminal accounting, no worker is left to settle anything,
+/// or a worker has already failed (the error surfaces after the scope).
+fn wait_quiesce(ctx: &ServeCtx<'_, '_>, target: usize) {
+    loop {
+        if ctx.settled.load(Ordering::SeqCst) >= target
+            || ctx.live_workers.load(Ordering::SeqCst) == 0
+            || !ctx.errors.lock().unwrap().is_empty()
+        {
+            return;
+        }
+        std::thread::yield_now();
+        std::thread::sleep(Duration::from_micros(100));
+    }
+}
+
+/// Emit any periodic Prometheus snapshots whose clock time has passed.
+/// In lockstep the snapshot content is deterministic (everything offered
+/// has settled); otherwise it is a best-effort live view.
+fn maybe_dump_metrics(ctx: &ServeCtx<'_, '_>, st: &mut FrontState<'_>) {
+    let Some(period) = ctx.cfg.metrics_period_s else { return };
+    let t_ns = ctx.clock.now_ns();
+    let now_s = t_ns as f64 * 1e-9;
+    while let Some(due) = st.next_dump_s {
+        if now_s < due {
+            break;
+        }
+        st.dumps.push((due, ctx.metrics.snapshot().render_prometheus(PROM_PREFIX)));
+        if let Some(tt) = st.tt.as_mut() {
+            tt.emit(t_ns, EventKind::MetricsDump, NO_REQ, NO_TASK, st.dumps.len() as u64);
+        }
+        st.next_dump_s = Some(due + period);
+    }
 }
 
 /// Execute one chaos event at its scheduled clock time.
@@ -309,37 +483,52 @@ fn fire_event<'scope, 'a, 'reg>(
     e: &ChaosEvent,
     trace_len: usize,
     samples_per_task: &[usize],
-    shed: &mut [usize],
-    injected: &mut usize,
+    st: &mut FrontState<'_>,
 ) where
     'a: 'scope,
     'reg: 'scope,
 {
     ctx.clock.sleep_until(e.at_s);
+    let t_ns = ctx.clock.now_ns();
     match e.action {
-        ChaosAction::KillWorker => ctx.chaos.request_kill(),
+        ChaosAction::KillWorker => {
+            if let Some(tt) = st.tt.as_mut() {
+                tt.emit(t_ns, EventKind::Chaos, NO_REQ, NO_TASK, instant_code::KILL);
+            }
+            ctx.chaos.request_kill();
+        }
         ChaosAction::RespawnWorker => {
+            if let Some(tt) = st.tt.as_mut() {
+                tt.emit(t_ns, EventKind::Chaos, NO_REQ, NO_TASK, instant_code::RESPAWN);
+            }
             ctx.chaos.note_respawn();
+            // count it live *before* it runs so a lockstep front never
+            // sees a spurious "no workers" window during spawn
+            ctx.live_workers.fetch_add(1, Ordering::SeqCst);
             scope.spawn(move || worker_loop(ctx));
         }
         ChaosAction::QueueStorm { n, task } => {
+            if let Some(tt) = st.tt.as_mut() {
+                tt.emit(t_ns, EventKind::Chaos, NO_REQ, task, instant_code::STORM);
+            }
             // n synthetic requests for one tenant, back-to-back at one
             // instant; ids continue past the trace so uniqueness holds
             ctx.chaos.note_injected(n);
             for k in 0..n {
                 let r = TaggedRequest {
-                    id: trace_len + *injected,
+                    id: trace_len + st.injected,
                     task,
                     arrival_s: e.at_s,
                     sample: k % samples_per_task[task].max(1),
                     len_bucket: 0,
                 };
-                *injected += 1;
-                if ctx.queue.push(r) == Enqueue::Shed {
-                    shed[task] += 1;
-                }
+                st.injected += 1;
+                push_traced(ctx, st, r);
             }
         }
+    }
+    if ctx.cfg.lockstep {
+        wait_quiesce(ctx, st.offered);
     }
 }
 

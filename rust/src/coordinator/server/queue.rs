@@ -94,6 +94,18 @@ pub struct QueueItem {
 struct Inner {
     items: VecDeque<QueueItem>,
     closed: bool,
+    /// deepest occupancy ever observed — the backlog high-water mark
+    /// surfaced as a serve gauge (updated under the same lock as the
+    /// occupancy itself, so it is exact, not sampled)
+    high_water: usize,
+}
+
+impl Inner {
+    fn note_depth(&mut self) {
+        if self.items.len() > self.high_water {
+            self.high_water = self.items.len();
+        }
+    }
 }
 
 /// Bounded multi-producer/multi-consumer queue with condvar signaling.
@@ -125,7 +137,7 @@ impl BoundedQueue {
     ) -> Self {
         assert!(cap > 0, "queue capacity must be positive");
         Self {
-            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false, high_water: 0 }),
             not_empty: Condvar::new(),
             cap,
             clock,
@@ -152,6 +164,7 @@ impl BoundedQueue {
             None => f64::INFINITY,
         };
         g.items.push_back(QueueItem { req: r, enq_s: self.clock.now_s(), deadline_s });
+        g.note_depth();
         drop(g);
         self.not_empty.notify_one();
         Enqueue::Accepted
@@ -172,6 +185,7 @@ impl BoundedQueue {
         for it in batch.into_iter().rev() {
             g.items.push_front(it);
         }
+        g.note_depth();
         drop(g);
         self.not_empty.notify_all();
     }
@@ -206,6 +220,12 @@ impl BoundedQueue {
     /// it against this total at drain time.
     pub fn shed_count(&self) -> usize {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Deepest occupancy observed since construction (including
+    /// redelivered batches). The backlog gauge `serve` exports.
+    pub fn depth_high_water(&self) -> usize {
+        self.inner.lock().unwrap().high_water
     }
 
     /// Index of the item that anchors the next batch under `policy`.
@@ -498,6 +518,27 @@ mod tests {
         let b = q.pop_batch(4, Duration::ZERO);
         assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(q.shed_count(), 0);
+    }
+
+    #[test]
+    fn high_water_tracks_peak_depth_not_current() {
+        let q = BoundedQueue::new(8, Clock::virt());
+        assert_eq!(q.depth_high_water(), 0);
+        for i in 0..5 {
+            q.push(req(i, 0));
+        }
+        assert_eq!(q.depth_high_water(), 5);
+        let b = q.pop_batch(8, Duration::ZERO);
+        assert_eq!(b.len(), 5);
+        assert!(q.is_empty());
+        assert_eq!(q.depth_high_water(), 5, "peak survives the drain");
+        // redelivery can push the peak higher than admission ever did
+        q.push(req(9, 0));
+        q.push(req(10, 0));
+        let extra = q.pop_batch(8, Duration::ZERO);
+        q.requeue_front(b);
+        q.requeue_front(extra);
+        assert_eq!(q.depth_high_water(), 7);
     }
 
     #[test]

@@ -32,6 +32,8 @@
 //! exactly where it matters), and per-tenant SLO attainment counts every
 //! offered request, with sheds and expiries as misses.
 
+use crate::obs::metrics::MetricsHandle;
+use crate::obs::trace::TraceData;
 use crate::util::histogram::Histogram;
 
 /// How many per-request records [`ServeStats::completions_log`] retains —
@@ -126,6 +128,18 @@ pub struct ServeStats {
     pub per_tenant: Vec<TenantStats>,
     /// first [`COMPLETION_LOG_CAP`] completions, for diagnostics and tests
     pub completions_log: Vec<Completion>,
+    /// deepest queue occupancy observed during the run (exact, tracked
+    /// under the queue lock — the backlog gauge)
+    pub queue_depth_high_water: usize,
+    /// per-request span trace, present when `ServerConfig::tracing`
+    /// was set (export with [`TraceData::chrome_json`])
+    pub trace: Option<TraceData>,
+    /// Prometheus-style text exposition of the run's metrics registry,
+    /// snapshotted at exit
+    pub metrics_text: String,
+    /// periodic metrics snapshots `(clock_s, exposition)` taken every
+    /// `ServerConfig::metrics_period_s` of clock time
+    pub metrics_dumps: Vec<(f64, String)>,
 }
 
 /// Mutable accumulation state shared (behind a mutex) by the worker pool.
@@ -223,6 +237,15 @@ impl Collector {
         (self.completions, self.per_tenant.iter().map(|t| t.expired).sum())
     }
 
+    /// Fold the run's latency distributions into the metrics registry
+    /// (the histogram shapes behind the Prometheus `_bucket` ladders).
+    /// Clamped counts ride along inside the histograms and surface as
+    /// `*_rejected` series.
+    pub fn export_metrics(&self, h: &MetricsHandle) {
+        h.hist_merge("serve_latency_ms", &self.hist);
+        h.hist_merge("serve_expired_wait_ms", &self.expired_hist);
+    }
+
     /// Finalize into the public stats view. `shed_per_task` comes from the
     /// admission front; `names` from the registry (task-id order). Chaos
     /// fields (`offered`, `injected`, kill/respawn counts) are zeroed
@@ -303,6 +326,10 @@ impl Collector {
             clamped: self.hist.clamped() + self.expired_hist.clamped(),
             per_tenant,
             completions_log: self.log,
+            queue_depth_high_water: 0,
+            trace: None,
+            metrics_text: String::new(),
+            metrics_dumps: Vec::new(),
         }
     }
 }

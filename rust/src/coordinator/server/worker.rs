@@ -25,7 +25,17 @@
 //!   `simulate` mode skips the real forward pass entirely), turning a
 //!   virtual-clock serve into a discrete-event simulation with realistic
 //!   backlog dynamics.
+//!
+//! Observability (DESIGN.md §11) threads through without touching the
+//! locking structure: each worker owns a track id, a thread-local
+//! [`ThreadTrace`] ring (span events: popped / redeliver / expire /
+//! complete / batch slices — a ring push each, never a shared lock) and
+//! a [`MetricsHandle`] shard for hot-path counters. Timestamps come from
+//! single `Clock::now_ns` reads with the seconds values derived from
+//! them, so the latency bookkeeping is bit-identical to the span
+//! timestamps (and to the pre-tracing `now_s` numbers).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -36,6 +46,9 @@ use super::queue::{BoundedQueue, QueueItem};
 use super::registry::Registry;
 use super::stats::{Collector, Completion};
 use super::ServerConfig;
+use crate::obs::metrics::{MetricsHandle, MetricsRegistry};
+use crate::obs::span::{EventKind, NO_REQ, NO_TASK};
+use crate::obs::trace::{ThreadTrace, Tracer};
 use crate::util::clock::Clock;
 
 /// Everything a worker thread borrows, bundled so the front thread can
@@ -50,6 +63,19 @@ pub(super) struct ServeCtx<'a, 'reg> {
     /// worker failures land here instead of in scattered join results —
     /// chaos-respawned workers have no handle anyone joins on
     pub errors: &'a Mutex<Vec<String>>,
+    /// per-run metrics registry; each thread takes its own shard
+    pub metrics: &'a MetricsRegistry,
+    /// per-run span tracer, if tracing is enabled
+    pub tracer: Option<&'a Tracer>,
+    /// next worker track id — initial workers take 0..workers, chaos
+    /// respawns continue past them
+    pub next_track: &'a AtomicUsize,
+    /// requests that reached a terminal accounting (completed, shed, or
+    /// expired) — the front's lockstep quiescence target
+    pub settled: &'a AtomicUsize,
+    /// workers currently running their loop; 0 means nothing can settle
+    /// queued work (the lockstep wait bails instead of spinning forever)
+    pub live_workers: &'a AtomicUsize,
 }
 
 /// Partition a drained batch into live and expired requests — a request
@@ -78,15 +104,30 @@ pub(super) fn split_expired<'b>(
     (live, expired)
 }
 
-/// Worker entry point: runs the drain loop, reporting any error into the
-/// shared sink (a worker that fails must not strand the rest silently).
+/// Worker entry point: claims a track id, runs the drain loop, reports
+/// any error into the shared sink (a worker that fails must not strand
+/// the rest silently), and always decrements the live-worker count last
+/// so the lockstep front can observe "no one left to settle work".
 pub(super) fn worker_loop(ctx: &ServeCtx<'_, '_>) {
-    if let Err(e) = worker_run(ctx) {
+    let track = ctx.next_track.fetch_add(1, Ordering::SeqCst);
+    let mut tt = ctx.tracer.map(|t| t.thread(track));
+    let mh = ctx.metrics.handle();
+    let result = worker_run(ctx, &mut tt, &mh);
+    if let Some(tt) = tt.as_mut() {
+        tt.emit(ctx.clock.now_ns(), EventKind::WorkerExit, NO_REQ, NO_TASK, 0);
+    }
+    drop(tt); // flush the ring before anyone can snapshot
+    if let Err(e) = result {
         ctx.errors.lock().unwrap().push(format!("{e:#}"));
     }
+    ctx.live_workers.fetch_sub(1, Ordering::SeqCst);
 }
 
-fn worker_run(ctx: &ServeCtx<'_, '_>) -> Result<()> {
+fn worker_run(
+    ctx: &ServeCtx<'_, '_>,
+    tt: &mut Option<ThreadTrace<'_>>,
+    mh: &MetricsHandle,
+) -> Result<()> {
     let cfg = ctx.cfg;
     loop {
         let batch = ctx.queue.pop_batch(cfg.max_batch, cfg.max_wait);
@@ -94,14 +135,45 @@ fn worker_run(ctx: &ServeCtx<'_, '_>) -> Result<()> {
             // closed and drained — graceful exit
             return Ok(());
         }
+        // one now_ns read; the f64 seconds derive from it so span
+        // timestamps and latency math agree bit-for-bit
+        let popped_ns = ctx.clock.now_ns();
+        let popped_s = popped_ns as f64 * 1e-9;
         // chaos: a pending kill token means this worker "crashes" here,
         // mid-drain. The popped batch is redelivered, not processed —
         // at-least-once semantics keep the conservation law intact.
         if ctx.chaos.take_kill() {
+            if let Some(tt) = tt.as_mut() {
+                // each delivery attempt is a Popped, even one that dies —
+                // the chain grammar counts pops vs redeliveries
+                for it in &batch {
+                    tt.emit(
+                        popped_ns,
+                        EventKind::Popped,
+                        it.req.id as u64,
+                        it.req.task,
+                        batch.len() as u64,
+                    );
+                    tt.emit(popped_ns, EventKind::Redeliver, it.req.id as u64, it.req.task, 0);
+                }
+            }
+            mh.counter_add("serve_redelivered_total", batch.len() as u64);
             ctx.queue.requeue_front(batch);
             return Ok(());
         }
-        let popped_s = ctx.clock.now_s();
+        if let Some(tt) = tt.as_mut() {
+            for it in &batch {
+                tt.emit(
+                    popped_ns,
+                    EventKind::Popped,
+                    it.req.id as u64,
+                    it.req.task,
+                    batch.len() as u64,
+                );
+            }
+        }
+        mh.counter_add("serve_batches_total", 1);
+        mh.counter_add("serve_batch_requests_total", batch.len() as u64);
         let task = batch[0].req.task;
         let tenant = ctx
             .registry
@@ -117,13 +189,26 @@ fn worker_run(ctx: &ServeCtx<'_, '_>) -> Result<()> {
                 .map(|it| (popped_s - it.req.arrival_s) * 1e3)
                 .collect();
             ctx.collector.lock().unwrap().record_expired(task, &waits);
+            if let Some(tt) = tt.as_mut() {
+                for (it, w) in expired.iter().zip(&waits) {
+                    tt.emit(
+                        popped_ns,
+                        EventKind::Expire,
+                        it.req.id as u64,
+                        task,
+                        (w * 1e3) as u64, // wait in µs
+                    );
+                }
+            }
+            ctx.settled.fetch_add(expired.len(), Ordering::SeqCst);
         }
         if live.is_empty() {
             continue;
         }
 
         let bsize = live.len();
-        let exec_start_s = ctx.clock.now_s();
+        let exec_start_ns = ctx.clock.now_ns();
+        let exec_start_s = exec_start_ns as f64 * 1e-9;
         let simulate = cfg.service.map(|m| m.simulate).unwrap_or(false);
         // in simulate mode there are no logits: pred = -1, correct =
         // false, accuracy is meaningless by construction — the run
@@ -150,7 +235,19 @@ fn worker_run(ctx: &ServeCtx<'_, '_>) -> Result<()> {
             // summed costs; on a wall clock the cost acts as a floor.
             ctx.clock.sleep_until(exec_start_s + m.cost_s(bsize));
         }
-        let done_s = ctx.clock.now_s();
+        let done_ns = ctx.clock.now_ns();
+        let done_s = done_ns as f64 * 1e-9;
+        if let Some(tt) = tt.as_mut() {
+            // one X-slice per batch on this worker's track
+            tt.emit(
+                exec_start_ns,
+                EventKind::BatchExec,
+                bsize as u64,
+                task,
+                done_ns - exec_start_ns,
+            );
+        }
+        mh.hist_record_ms("serve_batch_exec_ms", (done_s - exec_start_s) * 1e3);
 
         let mut g = ctx.collector.lock().unwrap();
         for (bi, it) in live.iter().enumerate() {
@@ -182,6 +279,13 @@ fn worker_run(ctx: &ServeCtx<'_, '_>) -> Result<()> {
                 correct,
             );
         }
+        drop(g);
+        if let Some(tt) = tt.as_mut() {
+            for it in &live {
+                tt.emit(done_ns, EventKind::Complete, it.req.id as u64, task, bsize as u64);
+            }
+        }
+        ctx.settled.fetch_add(live.len(), Ordering::SeqCst);
     }
 }
 

@@ -374,6 +374,13 @@ impl TraceGenerator {
                 });
             }
         }
+        crate::log_debug!(
+            "data",
+            "generated {} tagged requests over {:.3}s ({} tenants, seed {seed})",
+            out.len(),
+            t,
+            samples_per_task.len()
+        );
         out
     }
 }

@@ -68,6 +68,7 @@ pub mod fixture;
 pub mod json;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

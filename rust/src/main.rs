@@ -562,7 +562,34 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
          (discrete-event simulation; accuracy is meaningless)",
     )
     .switch("bursty", "bursty arrivals instead of poisson")
-    .switch("virtual", "replay the trace in virtual time (hermetic dry-run)");
+    .switch("virtual", "replay the trace in virtual time (hermetic dry-run)")
+    .flag(
+        "trace-out",
+        None,
+        "write a Chrome trace-event JSON of every request's span chain here \
+         (load in Perfetto / chrome://tracing); enables span tracing",
+    )
+    .flag(
+        "trace-sample",
+        Some("1"),
+        "trace only requests with id % N == 0 (instants and batch slices \
+         are always kept); 1 = every request",
+    )
+    .flag(
+        "trace-ring-cap",
+        Some("65536"),
+        "per-thread span ring capacity; overflow drops oldest and is counted",
+    )
+    .flag("metrics-out", None, "write the final Prometheus-style metrics snapshot here")
+    .flag(
+        "metrics-every-s",
+        Some("0"),
+        "also snapshot metrics every N clock-seconds into the run (0 = off)",
+    )
+    .switch(
+        "lockstep",
+        "serialize the serve for bit-deterministic traces (virtual clock only)",
+    );
     let a = p.parse(rest)?;
     let tasks = a.list("tasks");
     anyhow::ensure!(!tasks.is_empty(), "--tasks needs at least one task");
@@ -719,6 +746,16 @@ fn serve_deployed(
         Some(spec) => Some(ChaosPlan::parse(spec)?),
         None => None,
     };
+    let trace_out = a.get("trace-out").map(std::path::PathBuf::from);
+    let tracing = if trace_out.is_some() {
+        Some(svdquant::obs::TraceSpec {
+            ring_cap: a.usize("trace-ring-cap")?,
+            sample_every: a.u64("trace-sample")?.max(1),
+        })
+    } else {
+        None
+    };
+    let metrics_period = a.f64("metrics-every-s")?;
     let scfg = ServerConfig {
         max_batch: a.usize("max-batch")?,
         max_wait: std::time::Duration::from_millis(a.u64("max-wait-ms")?),
@@ -729,6 +766,9 @@ fn serve_deployed(
         service,
         chaos,
         clock: if a.bool("virtual") { Clock::virt() } else { Clock::wall() },
+        tracing,
+        lockstep: a.bool("lockstep"),
+        metrics_period_s: (metrics_period > 0.0).then_some(metrics_period),
     };
     let stats = serve(&registry, &trace, &scfg)?;
     println!(
@@ -763,11 +803,40 @@ fn serve_deployed(
         );
     }
     if stats.clamped > 0 {
-        eprintln!(
-            "warning: {} latency samples rejected (negative/non-finite) — \
-             time accounting is suspect",
+        svdquant::log_warn!(
+            "serve",
+            "{} latency samples rejected (negative/non-finite) — time accounting is suspect",
             stats.clamped
         );
+    }
+    if let Some(path) = &trace_out {
+        let td = stats.trace.as_ref().expect("tracing was enabled with --trace-out");
+        let meta = svdquant::obs::TraceMeta {
+            captured_at_unix_s: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            clock_virtual: a.bool("virtual"),
+        };
+        std::fs::write(path, td.chrome_json(&meta).pretty())
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        println!(
+            "  trace -> {} ({} events, {} dropped, sampling 1/{})",
+            path.display(),
+            td.events.len(),
+            td.dropped,
+            td.sample_every
+        );
+    }
+    if let Some(path) = a.get("metrics-out") {
+        std::fs::write(path, &stats.metrics_text)
+            .with_context(|| format!("writing metrics to {path}"))?;
+        let dumps = stats.metrics_dumps.len();
+        if dumps > 0 {
+            println!("  metrics -> {path} (+{dumps} periodic snapshots folded into the run)");
+        } else {
+            println!("  metrics -> {path}");
+        }
     }
     for t in &stats.per_tenant {
         let slo = match t.slo_ms {

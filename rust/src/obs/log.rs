@@ -1,0 +1,214 @@
+//! Leveled stderr logger with an `SVDQUANT_LOG` environment filter —
+//! the single sink the crate's scattered `eprintln!` diagnostics were
+//! folded into (DESIGN.md §11).
+//!
+//! Spelling: `SVDQUANT_LOG=<spec>` where `<spec>` is a comma-separated
+//! list of either a bare level (`error|warn|info|debug|trace`, sets the
+//! default) or `target=level` (per-target override, longest-prefix
+//! match on the log target). Examples:
+//!
+//! * `SVDQUANT_LOG=debug` — everything at debug and above
+//! * `SVDQUANT_LOG=warn,serve=debug` — quiet globally, verbose serving
+//! * unset — `info` (startup banners like the ISA announcement still
+//!   print; debug/trace are off)
+//!
+//! Emission goes through the [`crate::log_error!`] / [`crate::log_warn!`]
+//! / [`crate::log_info!`] / [`crate::log_debug!`] macros, which take an
+//! explicit target as their first argument:
+//!
+//! ```
+//! svdquant::log_info!("serve", "kernel dispatch: {}", "avx2");
+//! ```
+//!
+//! The filter check is one `OnceLock` read plus a level compare — cheap
+//! enough for hot-path call sites; formatting only happens when the
+//! record is actually enabled.
+
+use std::sync::OnceLock;
+
+/// Log severity, most severe first. `Ord` follows verbosity: a filter
+/// set to `Info` enables `Error ≤ Warn ≤ Info` and mutes `Debug`/`Trace`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// unrecoverable or wrong-answer conditions
+    Error,
+    /// suspicious but non-fatal (e.g. rejected latency samples)
+    Warn,
+    /// startup banners, per-run summaries
+    Info,
+    /// per-phase diagnostics (trace generation, batch decisions)
+    Debug,
+    /// firehose
+    Trace,
+}
+
+impl Level {
+    /// Parse a filter spelling (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    /// Fixed-width display name used in the record prefix.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Parsed `SVDQUANT_LOG` filter: a default level plus per-target
+/// overrides matched by longest target prefix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Filter {
+    default: Level,
+    /// `(target_prefix, level)` overrides; longest matching prefix wins
+    targets: Vec<(String, Level)>,
+}
+
+impl Filter {
+    /// Parse a spec string; unknown entries are ignored rather than
+    /// fatal (a typo in an env var must not take the process down).
+    pub fn parse(spec: &str) -> Filter {
+        let mut default = Level::Info;
+        let mut targets = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once('=') {
+                Some((target, lvl)) => {
+                    if let Some(l) = Level::parse(lvl) {
+                        targets.push((target.trim().to_string(), l));
+                    }
+                }
+                None => {
+                    if let Some(l) = Level::parse(part) {
+                        default = l;
+                    }
+                }
+            }
+        }
+        Filter { default, targets }
+    }
+
+    /// The effective level for `target`: the longest configured prefix
+    /// override, or the default.
+    pub fn level_for(&self, target: &str) -> Level {
+        self.targets
+            .iter()
+            .filter(|(t, _)| target.starts_with(t.as_str()))
+            .max_by_key(|(t, _)| t.len())
+            .map(|(_, l)| *l)
+            .unwrap_or(self.default)
+    }
+
+    /// Would a record at `level` under `target` be emitted?
+    pub fn enabled(&self, level: Level, target: &str) -> bool {
+        level <= self.level_for(target)
+    }
+}
+
+static FILTER: OnceLock<Filter> = OnceLock::new();
+
+fn filter() -> &'static Filter {
+    FILTER.get_or_init(|| {
+        Filter::parse(&std::env::var("SVDQUANT_LOG").unwrap_or_default())
+    })
+}
+
+/// Whether a record at `level` under `target` would be emitted — for
+/// call sites that want to skip expensive argument preparation.
+pub fn enabled(level: Level, target: &str) -> bool {
+    filter().enabled(level, target)
+}
+
+/// Emit one record to stderr if the filter enables it. Prefer the
+/// [`crate::log_warn!`]-family macros, which build the
+/// `fmt::Arguments` lazily.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level, target) {
+        eprintln!("[{:<5} {target}] {args}", level.name());
+    }
+}
+
+/// Log at [`Level::Error`]; first argument is the target.
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Warn`]; first argument is the target.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Info`]; first argument is the target.
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Debug`]; first argument is the target.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse(" TRACE "), Some(Level::Trace));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn filter_defaults_to_info() {
+        let f = Filter::parse("");
+        assert!(f.enabled(Level::Info, "anything"));
+        assert!(f.enabled(Level::Warn, "anything"));
+        assert!(!f.enabled(Level::Debug, "anything"));
+    }
+
+    #[test]
+    fn filter_per_target_longest_prefix_wins() {
+        let f = Filter::parse("warn, serve=debug ,serve.queue=error");
+        assert!(!f.enabled(Level::Info, "pipeline"), "default is warn");
+        assert!(f.enabled(Level::Debug, "serve"), "serve override");
+        assert!(f.enabled(Level::Debug, "serve.worker"), "prefix match");
+        assert!(!f.enabled(Level::Warn, "serve.queue"), "longest prefix wins");
+        assert!(f.enabled(Level::Error, "serve.queue"));
+    }
+
+    #[test]
+    fn filter_ignores_garbage_entries() {
+        let f = Filter::parse("bogus,=,x=,=debug,debug");
+        assert_eq!(f, Filter { default: Level::Debug, targets: Vec::new() });
+    }
+}

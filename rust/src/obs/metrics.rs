@@ -1,0 +1,381 @@
+//! Unified metrics: counters, gauges, timers, and latency histograms
+//! with sharded (per-thread) accumulation merged on snapshot, plus a
+//! Prometheus-style text exposition.
+//!
+//! Two usage shapes:
+//!
+//! * **Per-run instance** — `serve` builds a [`MetricsRegistry`] per
+//!   invocation; each worker/front thread takes a [`MetricsHandle`]
+//!   (its own shard behind an uncontended mutex) so hot-path recording
+//!   never contends, and the registry merges every shard on
+//!   [`MetricsRegistry::snapshot`]. Per-run instances keep concurrent
+//!   serves (e.g. parallel tests in one process) from bleeding into
+//!   each other's exported numbers.
+//! * **Process-wide instance** — [`MetricsRegistry::global`] backs
+//!   `util::timer` (which used to take one global `Mutex` per
+//!   `record` call; it now accumulates into a thread-local shard and
+//!   only the snapshot path touches every shard).
+//!
+//! Histograms reuse [`crate::util::histogram::Histogram`], so the
+//! `clamped` rejected-sample counter from the serving stats surfaces
+//! in the Prometheus view too (`*_rejected` series).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::histogram::Histogram;
+
+/// One accumulated metric value inside a shard.
+#[derive(Debug, Clone)]
+enum Metric {
+    /// Monotonic event count.
+    Counter(u64),
+    /// Accumulated seconds + call count (the timer shape).
+    Sum { total_s: f64, count: u64 },
+    /// Bucketed latency distribution.
+    Hist(Histogram),
+}
+
+type ShardMap = BTreeMap<String, Metric>;
+
+/// A per-thread accumulation shard. The mutex is only ever contended
+/// by the snapshot/reset paths; the owning thread's records are
+/// effectively lock-free.
+#[derive(Debug, Default)]
+struct Shard {
+    metrics: Mutex<ShardMap>,
+}
+
+impl Shard {
+    fn add(&self, name: &str, delta: Metric) {
+        let mut m = self.metrics.lock().unwrap();
+        match m.get_mut(name) {
+            None => {
+                m.insert(name.to_string(), delta);
+            }
+            Some(slot) => merge_metric(slot, delta),
+        }
+    }
+}
+
+fn merge_metric(slot: &mut Metric, delta: Metric) {
+    match (slot, delta) {
+        (Metric::Counter(a), Metric::Counter(b)) => *a += b,
+        (Metric::Sum { total_s, count }, Metric::Sum { total_s: ts, count: c }) => {
+            *total_s += ts;
+            *count += c;
+        }
+        (Metric::Hist(a), Metric::Hist(b)) => a.merge(&b),
+        // a name registered under two different metric types is a
+        // programmer error; last writer wins rather than poisoning
+        // the whole registry
+        (slot, delta) => *slot = delta,
+    }
+}
+
+/// A registry of counters/gauges/timers/histograms. Cheap to create;
+/// `serve` makes one per run.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    /// every shard ever handed out (kept alive here so data survives
+    /// the recording thread's exit — workers are scoped threads that
+    /// finish before the snapshot)
+    shards: Mutex<Vec<Arc<Shard>>>,
+    /// last-write-wins values, set rarely (end-of-run), so a plain
+    /// shared map is fine
+    gauges: Mutex<BTreeMap<String, f64>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// The process-wide registry backing `util::timer` and other
+    /// run-agnostic instrumentation.
+    pub fn global() -> &'static MetricsRegistry {
+        static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(MetricsRegistry::new)
+    }
+
+    /// A new recording handle (fresh shard). Each thread that records
+    /// on the hot path should own one.
+    pub fn handle(&self) -> MetricsHandle {
+        let shard = Arc::new(Shard::default());
+        self.shards.lock().unwrap().push(Arc::clone(&shard));
+        MetricsHandle { shard }
+    }
+
+    /// Set a gauge to an absolute value (last write wins).
+    pub fn gauge_set(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Merge every shard (and the gauges) into one deterministic view.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut counters = BTreeMap::new();
+        let mut sums: BTreeMap<String, (f64, u64)> = BTreeMap::new();
+        let mut hists: BTreeMap<String, Histogram> = BTreeMap::new();
+        for shard in self.shards.lock().unwrap().iter() {
+            for (name, metric) in shard.metrics.lock().unwrap().iter() {
+                match metric {
+                    Metric::Counter(v) => {
+                        *counters.entry(name.clone()).or_insert(0) += v;
+                    }
+                    Metric::Sum { total_s, count } => {
+                        let e = sums.entry(name.clone()).or_insert((0.0, 0));
+                        e.0 += total_s;
+                        e.1 += count;
+                    }
+                    Metric::Hist(h) => match hists.get_mut(name) {
+                        None => {
+                            hists.insert(name.clone(), h.clone());
+                        }
+                        Some(acc) => acc.merge(h),
+                    },
+                }
+            }
+        }
+        let gauges = self.gauges.lock().unwrap().clone();
+        MetricsSnapshot { counters, sums, hists, gauges }
+    }
+
+    /// Remove every `Sum` (timer) entry from every shard — the
+    /// `util::timer::reset` semantic. Counters/hists/gauges are kept
+    /// so a timer reset cannot erase a concurrent serve's metrics.
+    pub fn reset_sums(&self) {
+        for shard in self.shards.lock().unwrap().iter() {
+            shard
+                .metrics
+                .lock()
+                .unwrap()
+                .retain(|_, m| !matches!(m, Metric::Sum { .. }));
+        }
+    }
+}
+
+/// A thread's recording handle: one shard, uncontended in steady
+/// state. Clone-free by design — take one per thread from
+/// [`MetricsRegistry::handle`].
+#[derive(Debug)]
+pub struct MetricsHandle {
+    shard: Arc<Shard>,
+}
+
+impl MetricsHandle {
+    /// Add `delta` to a counter.
+    pub fn counter_add(&self, name: &str, delta: u64) {
+        self.shard.add(name, Metric::Counter(delta));
+    }
+
+    /// Accumulate `secs` into a timer-shaped sum (one call).
+    pub fn sum_add(&self, name: &str, secs: f64) {
+        self.shard.add(name, Metric::Sum { total_s: secs, count: 1 });
+    }
+
+    /// Record one latency sample into a histogram with the standard
+    /// serving geometry ([`Histogram::latency_ms`]).
+    pub fn hist_record_ms(&self, name: &str, ms: f64) {
+        let mut m = self.shard.metrics.lock().unwrap();
+        match m.get_mut(name) {
+            Some(Metric::Hist(h)) => h.record(ms),
+            _ => {
+                let mut h = Histogram::latency_ms();
+                h.record(ms);
+                m.insert(name.to_string(), Metric::Hist(h));
+            }
+        }
+    }
+
+    /// Merge an already-aggregated histogram (e.g. the serve
+    /// collector's per-run latency histogram) under `name`.
+    pub fn hist_merge(&self, name: &str, h: &Histogram) {
+        self.shard.add(name, Metric::Hist(h.clone()));
+    }
+}
+
+/// Canonical metric-name prefix every exporter in this crate uses, so
+/// the serve path, the CLI dump, and CI scrapes agree on family names.
+pub const PROM_PREFIX: &str = "svdquant_";
+
+/// Cumulative `le` ladder (milliseconds) used for Prometheus histogram
+/// exposition — coarse on purpose; the full-resolution histogram stays
+/// in `ServeStats`.
+pub const LE_LADDER_MS: &[f64] =
+    &[0.5, 1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0];
+
+/// A merged, point-in-time view of a [`MetricsRegistry`].
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// monotonic counters by name
+    pub counters: BTreeMap<String, u64>,
+    /// timer sums by name: (total seconds, call count)
+    pub sums: BTreeMap<String, (f64, u64)>,
+    /// latency histograms by name
+    pub hists: BTreeMap<String, Histogram>,
+    /// last-write-wins gauges by name
+    pub gauges: BTreeMap<String, f64>,
+}
+
+/// Sanitize a metric name into the Prometheus charset
+/// (`[a-zA-Z0-9_:]`, non-digit first char).
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphanumeric() || c == '_' || c == ':';
+        let c = if ok { c } else { '_' };
+        if i == 0 && c.is_ascii_digit() {
+            out.push('_');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Deterministic float formatting for exposition lines: integral
+/// values print without a fraction, everything else via shortest
+/// round-trip `Display` (same rule as the in-repo JSON writer).
+fn prom_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl MetricsSnapshot {
+    /// Render the snapshot as Prometheus text exposition (v0.0.4
+    /// shaped). Output is fully deterministic: `BTreeMap` ordering,
+    /// integer-stable number formatting, trailing newline.
+    ///
+    /// Each histogram additionally exports a `*_rejected` counter —
+    /// the `Histogram::clamped()` count of non-finite/negative samples
+    /// refused at record time — so data-quality problems surface in
+    /// the metrics view, not only the serve-time warning.
+    pub fn render_prometheus(&self, prefix: &str) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let n = format!("{prefix}{}", prom_name(name));
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let n = format!("{prefix}{}", prom_name(name));
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", prom_num(*v)));
+        }
+        for (name, (total_s, count)) in &self.sums {
+            let n = format!("{prefix}{}_seconds", prom_name(name));
+            out.push_str(&format!(
+                "# TYPE {n} summary\n{n}_sum {}\n{n}_count {count}\n",
+                prom_num(*total_s)
+            ));
+        }
+        for (name, h) in &self.hists {
+            let n = format!("{prefix}{}", prom_name(name));
+            out.push_str(&format!("# TYPE {n} histogram\n"));
+            for le in LE_LADDER_MS {
+                out.push_str(&format!(
+                    "{n}_bucket{{le=\"{}\"}} {}\n",
+                    prom_num(*le),
+                    h.count_le(*le)
+                ));
+            }
+            out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", h.total()));
+            out.push_str(&format!("{n}_sum {}\n", prom_num(h.sum_ms())));
+            out.push_str(&format!("{n}_count {}\n", h.total()));
+            out.push_str(&format!(
+                "# TYPE {n}_rejected counter\n{n}_rejected {}\n",
+                h.clamped()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_merge_on_snapshot() {
+        let reg = MetricsRegistry::new();
+        let a = reg.handle();
+        let b = reg.handle();
+        a.counter_add("reqs", 3);
+        b.counter_add("reqs", 4);
+        a.sum_add("phase", 0.5);
+        b.sum_add("phase", 1.5);
+        reg.gauge_set("depth", 7.0);
+        reg.gauge_set("depth", 9.0);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters["reqs"], 7);
+        assert_eq!(snap.sums["phase"], (2.0, 2));
+        assert_eq!(snap.gauges["depth"], 9.0);
+    }
+
+    #[test]
+    fn snapshot_merges_across_thread_exit() {
+        let reg = MetricsRegistry::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = reg.handle();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        h.counter_add("n", 1);
+                        h.hist_record_ms("lat", 3.0);
+                    }
+                });
+            }
+        });
+        // all threads exited; their shards are still owned by the registry
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters["n"], 400);
+        assert_eq!(snap.hists["lat"].total(), 400);
+    }
+
+    #[test]
+    fn reset_sums_keeps_counters() {
+        let reg = MetricsRegistry::new();
+        let h = reg.handle();
+        h.counter_add("kept", 1);
+        h.sum_add("timer", 1.0);
+        reg.reset_sums();
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters["kept"], 1);
+        assert!(snap.sums.is_empty());
+    }
+
+    #[test]
+    fn prometheus_render_is_deterministic_and_typed() {
+        let reg = MetricsRegistry::new();
+        let h = reg.handle();
+        h.counter_add("serve.completions", 5);
+        h.sum_add("pipeline score", 0.25);
+        h.hist_record_ms("latency", 0.7);
+        h.hist_record_ms("latency", f64::NAN); // rejected
+        reg.gauge_set("queue_high_water", 12.0);
+        let text = reg.snapshot().render_prometheus("svdquant_");
+        let again = reg.snapshot().render_prometheus("svdquant_");
+        assert_eq!(text, again, "two renders of the same state must match");
+        assert!(text.contains("# TYPE svdquant_serve_completions counter\n"));
+        assert!(text.contains("svdquant_serve_completions 5\n"));
+        assert!(text.contains("# TYPE svdquant_queue_high_water gauge\n"));
+        assert!(text.contains("svdquant_queue_high_water 12\n"));
+        assert!(text.contains("# TYPE svdquant_pipeline_score_seconds summary\n"));
+        assert!(text.contains("svdquant_pipeline_score_seconds_count 1\n"));
+        assert!(text.contains("# TYPE svdquant_latency histogram\n"));
+        assert!(text.contains("svdquant_latency_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("svdquant_latency_rejected 1\n"), "clamped surfaces");
+        // 0.7ms sample lives in bucket [0.5, 1.0): not counted at le=0.5,
+        // counted at le=1.0
+        assert!(text.contains("svdquant_latency_bucket{le=\"0.5\"} 0\n"));
+        assert!(text.contains("svdquant_latency_bucket{le=\"1\"} 1\n"));
+        assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn prom_name_sanitizes() {
+        assert_eq!(prom_name("serve.queue wait-ms"), "serve_queue_wait_ms");
+        assert_eq!(prom_name("9lives"), "_9lives");
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability: structured tracing + unified metrics for the
+//! serving stack (DESIGN.md §11).
+//!
+//! Three std-only pieces, all deterministic under the virtual clock:
+//!
+//! * [`span`] — the event model: per-request lifecycle events
+//!   (admit → queue → batch → exec → complete | shed | expiry |
+//!   redelivery) recorded into bounded, drop-oldest
+//!   [`span::EventRing`]s that never block the hot path.
+//! * [`trace`] — the [`trace::Tracer`] collector, Chrome trace-event
+//!   JSON export (Perfetto-loadable: one track per worker, async
+//!   spans per request, instants for chaos/shed decisions), and a
+//!   structural validator tying every span chain to the
+//!   `completions + shed + expired == offered` conservation law.
+//! * [`metrics`] — the [`metrics::MetricsRegistry`]: sharded
+//!   counters/gauges/timers/histograms merged on snapshot, rendered
+//!   as Prometheus-style text exposition. `util::timer` and the serve
+//!   stats counters fold into it.
+//!
+//! Plus [`log`], the leveled stderr logger behind the
+//! [`crate::log_info!`]-family macros with an `SVDQUANT_LOG` filter.
+
+pub mod log;
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+pub use metrics::{MetricsHandle, MetricsRegistry, MetricsSnapshot, PROM_PREFIX};
+pub use span::{EventKind, EventRing, SpanEvent};
+pub use trace::{scrub_volatile, TraceData, TraceMeta, Tracer, TraceSpec, FRONT_TRACK};

@@ -1,0 +1,232 @@
+//! Span event model + the bounded, drop-oldest event ring.
+//!
+//! A request's lifetime through the serving stack is recorded as a
+//! chain of [`SpanEvent`]s — admission, queue pop, chaos redelivery,
+//! and one terminal (complete / shed / expire). Workers and the front
+//! loop append events to thread-owned [`EventRing`]s (no shared lock on
+//! the hot path); the rings are bounded and drop their *oldest* event
+//! on overflow, bumping a drop counter, so tracing can never block or
+//! grow without bound. Rings are drained into the
+//! [`Tracer`](super::trace::Tracer) when each thread's handle drops.
+//!
+//! Timestamps are integer nanoseconds from
+//! [`Clock::now_ns`](crate::util::clock::Clock::now_ns), so under the
+//! virtual clock an identical schedule produces bit-identical events.
+
+use std::collections::VecDeque;
+
+/// Sentinel request id for events not tied to one request
+/// (batch slices, chaos instants, queue-close markers).
+pub const NO_REQ: u64 = u64::MAX;
+
+/// Sentinel task id for events not tied to one tenant task.
+pub const NO_TASK: usize = usize::MAX;
+
+/// What happened. The per-request lifecycle grammar enforced by
+/// [`validate_chains`](super::trace::TraceData::validate_chains) is:
+///
+/// ```text
+/// Admit (Popped Redeliver)* (Popped Complete | Popped Expire | Expire)
+///   | Shed
+/// ```
+///
+/// (`Expire` without a preceding `Popped` covers the post-drain sweep
+/// of requests still queued when the trace ends.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// Request accepted into the bounded queue (front loop).
+    Admit,
+    /// Request rejected at admission: queue full (front loop).
+    Shed,
+    /// Request popped into a batch by a worker.
+    Popped,
+    /// Chaos kill hit after the pop: request pushed back to the
+    /// queue head for redelivery.
+    Redeliver,
+    /// Request finished exec and was recorded as a completion.
+    Complete,
+    /// Request's deadline passed before exec (worker split or
+    /// post-drain sweep).
+    Expire,
+    /// A batch execution slice on a worker track (duration event;
+    /// `req` carries the batch size, `arg` the exec nanoseconds).
+    BatchExec,
+    /// Chaos plan fired (kill/respawn/storm — which one is in `arg`
+    /// via [`instant_code`]).
+    Chaos,
+    /// Worker thread exited its loop (kill honored or queue closed).
+    WorkerExit,
+    /// Front loop closed the queue (end of offered trace).
+    QueueClose,
+    /// Periodic metrics snapshot was written (virtual-time dump).
+    MetricsDump,
+}
+
+impl EventKind {
+    /// Stable lowercase name used in Chrome-trace event names and in
+    /// the canonical event ordering.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Shed => "shed",
+            EventKind::Popped => "popped",
+            EventKind::Redeliver => "redeliver",
+            EventKind::Complete => "complete",
+            EventKind::Expire => "expire",
+            EventKind::BatchExec => "batch_exec",
+            EventKind::Chaos => "chaos",
+            EventKind::WorkerExit => "worker_exit",
+            EventKind::QueueClose => "queue_close",
+            EventKind::MetricsDump => "metrics_dump",
+        }
+    }
+}
+
+/// Codes carried in [`SpanEvent::arg`] for [`EventKind::Chaos`]
+/// instants. Kept as plain `u64` so the event struct stays `Copy`.
+pub mod instant_code {
+    /// chaos `kill@T` fired
+    pub const KILL: u64 = 1;
+    /// chaos `respawn@T` fired
+    pub const RESPAWN: u64 = 2;
+    /// chaos `storm@T:NxTASK` fired
+    pub const STORM: u64 = 3;
+
+    /// Human-readable name for a chaos instant code.
+    pub fn name(code: u64) -> &'static str {
+        match code {
+            KILL => "kill",
+            RESPAWN => "respawn",
+            STORM => "storm",
+            _ => "unknown",
+        }
+    }
+}
+
+/// One timestamped trace event. `Copy` and allocation-free so the hot
+/// path pays a ring push and nothing else.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    /// Clock timestamp in integer nanoseconds.
+    pub t_ns: u64,
+    /// Emitting track: worker index, or [`FRONT_TRACK`](crate::obs::trace::FRONT_TRACK)
+    /// for the front/admission loop.
+    pub track: usize,
+    /// Per-thread monotonic sequence number — breaks timestamp ties
+    /// deterministically within a track.
+    pub seq: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// Request id, or [`NO_REQ`].
+    pub req: u64,
+    /// Tenant task index, or [`NO_TASK`].
+    pub task: usize,
+    /// Kind-specific payload: queue depth at admit/shed, batch size at
+    /// popped/complete, wait ms (scaled ×1000) at expire, chaos code,
+    /// exec ns for batch slices. Zero when unused.
+    pub arg: u64,
+}
+
+/// Bounded drop-oldest ring of [`SpanEvent`]s. Owned by exactly one
+/// thread; never shared, never locked.
+#[derive(Debug)]
+pub struct EventRing {
+    buf: VecDeque<SpanEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl EventRing {
+    /// A ring holding at most `cap` events (`cap` ≥ 1 enforced).
+    pub fn new(cap: usize) -> EventRing {
+        let cap = cap.max(1);
+        EventRing { buf: VecDeque::with_capacity(cap.min(4096)), cap, dropped: 0 }
+    }
+
+    /// Append an event; if full, evict the oldest and count the drop.
+    pub fn push(&mut self, e: SpanEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(e);
+    }
+
+    /// Number of buffered events.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no events are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events evicted by overflow so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take the buffered events and the drop count, leaving the ring
+    /// empty (used by the collector drain).
+    pub fn take(&mut self) -> (Vec<SpanEvent>, u64) {
+        let events = std::mem::take(&mut self.buf).into();
+        (events, std::mem::take(&mut self.dropped))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(seq: u64) -> SpanEvent {
+        SpanEvent {
+            t_ns: seq * 10,
+            track: 0,
+            seq,
+            kind: EventKind::Admit,
+            req: seq,
+            task: 0,
+            arg: 0,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_order_under_capacity() {
+        let mut r = EventRing::new(8);
+        for i in 0..5 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.dropped(), 0);
+        let (events, dropped) = r.take();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let mut r = EventRing::new(3);
+        for i in 0..10 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 7);
+        let (events, dropped) = r.take();
+        assert_eq!(dropped, 7);
+        // the *newest* three survive
+        assert_eq!(events.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![7, 8, 9]);
+        // counters reset after take
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_capacity_floor_is_one() {
+        let mut r = EventRing::new(0);
+        r.push(ev(1));
+        r.push(ev(2));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 1);
+    }
+}

@@ -1,0 +1,594 @@
+//! Per-request tracing: the [`Tracer`] collector, thread-owned
+//! [`ThreadTrace`] recorders, Chrome trace-event JSON export, and the
+//! structural chain validator.
+//!
+//! Lifecycle (DESIGN.md §11): `serve` creates one [`Tracer`]; the
+//! front loop and every worker take a [`ThreadTrace`] (which owns a
+//! bounded [`EventRing`]); recording is a ring push with zero shared
+//! state. When a thread's recorder drops (worker exit / front done),
+//! its ring is flushed into the tracer under one short lock. After
+//! the serve scope joins, [`Tracer::finish`] sorts everything into a
+//! canonical order and hands back a [`TraceData`].
+//!
+//! Because every timestamp comes from `Clock::now_ns` and the
+//! canonical sort is a pure function of the events, two serves of the
+//! same seeded trace on the virtual clock (in lockstep mode) produce
+//! byte-identical [`TraceData::chrome_json`] output — modulo the
+//! wall-clock `captured_at_unix_s` header, which [`scrub_volatile`]
+//! strips for comparison.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::json::Json;
+use crate::obs::span::{instant_code, EventKind, EventRing, SpanEvent, NO_REQ, NO_TASK};
+
+/// Track id used by the front/admission loop (workers use their
+/// worker index).
+pub const FRONT_TRACK: usize = usize::MAX;
+
+/// Tracing configuration carried in `ServerConfig.tracing`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSpec {
+    /// Per-thread ring capacity in events; overflow drops the oldest
+    /// event and bumps the drop counter.
+    pub ring_cap: usize,
+    /// Record request-lifecycle events only for requests whose id is
+    /// `0 (mod sample_every)`. Batch slices and instants are always
+    /// recorded. `1` = trace every request.
+    pub sample_every: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> TraceSpec {
+        TraceSpec { ring_cap: 1 << 16, sample_every: 1 }
+    }
+}
+
+/// The per-serve trace collector. Threads record through
+/// [`ThreadTrace`] handles; the tracer only sees data when a handle
+/// drops (or is explicitly flushed).
+#[derive(Debug)]
+pub struct Tracer {
+    spec: TraceSpec,
+    /// flushed rings: (events, dropped) per recorder
+    done: Mutex<Vec<(Vec<SpanEvent>, u64)>>,
+}
+
+impl Tracer {
+    /// A tracer with the given spec.
+    pub fn new(spec: TraceSpec) -> Tracer {
+        Tracer { spec, done: Mutex::new(Vec::new()) }
+    }
+
+    /// A recorder for one thread/track. `track` is the worker index,
+    /// or [`FRONT_TRACK`] for the admission loop.
+    pub fn thread(&self, track: usize) -> ThreadTrace<'_> {
+        ThreadTrace {
+            tracer: self,
+            ring: EventRing::new(self.spec.ring_cap),
+            track,
+            seq: 0,
+        }
+    }
+
+    /// Collect every flushed ring into one canonically-ordered
+    /// [`TraceData`]. Call after all [`ThreadTrace`] handles dropped.
+    pub fn finish(self) -> TraceData {
+        let done = self.done.into_inner().unwrap();
+        let mut dropped = 0;
+        let mut events = Vec::with_capacity(done.iter().map(|(e, _)| e.len()).sum());
+        for (ev, d) in done {
+            dropped += d;
+            events.extend(ev);
+        }
+        // canonical order: time, then track, then the per-track
+        // sequence number (which alone already orders a track's
+        // events) — a pure function of the event set, so identical
+        // schedules render identically
+        events.sort_by_key(|e| (e.t_ns, e.track, e.seq));
+        TraceData { events, dropped, sample_every: self.spec.sample_every }
+    }
+}
+
+/// One thread's recorder: a bounded ring plus a monotonic sequence
+/// counter. Flushes into its [`Tracer`] on drop.
+#[derive(Debug)]
+pub struct ThreadTrace<'a> {
+    tracer: &'a Tracer,
+    ring: EventRing,
+    track: usize,
+    seq: u64,
+}
+
+/// Kinds subject to `sample_every` (they carry a real request id).
+fn is_lifecycle(kind: EventKind) -> bool {
+    matches!(
+        kind,
+        EventKind::Admit
+            | EventKind::Shed
+            | EventKind::Popped
+            | EventKind::Redeliver
+            | EventKind::Complete
+            | EventKind::Expire
+    )
+}
+
+impl ThreadTrace<'_> {
+    /// Record one event. `t_ns` must come from `Clock::now_ns` (or a
+    /// value derived from one read of it) so virtual-clock runs stay
+    /// bit-deterministic. Never blocks: overflow drops the ring's
+    /// oldest event.
+    pub fn emit(&mut self, t_ns: u64, kind: EventKind, req: u64, task: usize, arg: u64) {
+        if is_lifecycle(kind) && req % self.tracer.spec.sample_every != 0 {
+            return;
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.ring.push(SpanEvent { t_ns, track: self.track, seq, kind, req, task, arg });
+    }
+
+    /// Events evicted from this ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+}
+
+impl Drop for ThreadTrace<'_> {
+    fn drop(&mut self) {
+        let (events, dropped) = self.ring.take();
+        if !events.is_empty() || dropped > 0 {
+            self.tracer.done.lock().unwrap().push((events, dropped));
+        }
+    }
+}
+
+/// Chain tallies produced by [`TraceData::validate_chains`] — compare
+/// these against `ServeStats` to tie the trace to the books.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChainSummary {
+    /// distinct request ids seen in the trace
+    pub requests: u64,
+    /// chains that ended in a completion
+    pub completed: u64,
+    /// chains that were shed at admission
+    pub shed: u64,
+    /// chains that ended in a deadline expiry
+    pub expired: u64,
+    /// total chaos redeliveries across all chains
+    pub redelivered: u64,
+}
+
+/// Export metadata for [`TraceData::chrome_json`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TraceMeta {
+    /// Wall-clock capture time (volatile: the one field
+    /// [`scrub_volatile`] removes before byte comparison).
+    pub captured_at_unix_s: u64,
+    /// Whether the serve ran on the virtual clock.
+    pub clock_virtual: bool,
+}
+
+/// A finished, canonically-ordered trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceData {
+    /// all events, sorted by `(t_ns, track, seq)`
+    pub events: Vec<SpanEvent>,
+    /// events lost to ring overflow across all threads
+    pub dropped: u64,
+    /// the sampling stride the trace was recorded with
+    pub sample_every: u64,
+}
+
+fn num_u(v: u64) -> Json {
+    Json::Number(v as f64)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+impl TraceData {
+    /// Chrome tid for a track: the front loop gets 0, worker `w` gets
+    /// `w + 1`.
+    fn tid(track: usize) -> u64 {
+        if track == FRONT_TRACK {
+            0
+        } else {
+            track as u64 + 1
+        }
+    }
+
+    /// Render as a Chrome trace-event JSON object (Perfetto-loadable):
+    /// async nestable `b`/`n`/`e` spans per request, `X` duration
+    /// slices per worker batch, `i` instants for shed / chaos /
+    /// queue-close / worker-exit, and `M` metadata naming the tracks.
+    ///
+    /// The output is a pure function of `(self, meta)`: object keys
+    /// are BTreeMap-ordered and numbers format deterministically, so
+    /// identical traces serialize byte-identically.
+    pub fn chrome_json(&self, meta: &TraceMeta) -> Json {
+        let mut out: Vec<Json> = Vec::with_capacity(self.events.len() + 8);
+        out.push(obj(vec![
+            ("ph", Json::from("M")),
+            ("pid", num_u(1)),
+            ("tid", num_u(0)),
+            ("name", Json::from("process_name")),
+            ("args", obj(vec![("name", Json::from("svdquant serve"))])),
+        ]));
+        let mut tracks: Vec<usize> = self.events.iter().map(|e| e.track).collect();
+        tracks.sort_unstable();
+        tracks.dedup();
+        for track in tracks {
+            let name = if track == FRONT_TRACK {
+                "front".to_string()
+            } else {
+                format!("worker-{track}")
+            };
+            out.push(obj(vec![
+                ("ph", Json::from("M")),
+                ("pid", num_u(1)),
+                ("tid", num_u(Self::tid(track))),
+                ("name", Json::from("thread_name")),
+                ("args", obj(vec![("name", Json::from(name))])),
+            ]));
+        }
+        for e in &self.events {
+            out.push(Self::event_json(e));
+        }
+        Json::object(vec![
+            ("displayTimeUnit".to_string(), Json::from("ms")),
+            (
+                "metadata".to_string(),
+                Json::object(vec![
+                    (
+                        "captured_at_unix_s".to_string(),
+                        num_u(meta.captured_at_unix_s),
+                    ),
+                    (
+                        "clock".to_string(),
+                        Json::from(if meta.clock_virtual { "virtual" } else { "wall" }),
+                    ),
+                    ("dropped_events".to_string(), num_u(self.dropped)),
+                    ("sample_every".to_string(), num_u(self.sample_every)),
+                ]),
+            ),
+            ("traceEvents".to_string(), Json::Array(out)),
+        ])
+    }
+
+    fn event_json(e: &SpanEvent) -> Json {
+        let ts = Json::Number(e.t_ns as f64 / 1000.0); // µs
+        let tid = num_u(Self::tid(e.track));
+        let pid = num_u(1);
+        // async request-span pieces share (cat="request", id=req)
+        let async_piece = |ph: &str, args: Vec<(&str, Json)>| {
+            obj(vec![
+                ("ph", Json::from(ph)),
+                ("cat", Json::from("request")),
+                ("id", num_u(e.req)),
+                ("name", Json::from("req")),
+                ("pid", pid.clone()),
+                ("tid", tid.clone()),
+                ("ts", ts.clone()),
+                ("args", obj(args)),
+            ])
+        };
+        let instant = |name: String, scope: &str, args: Vec<(&str, Json)>| {
+            obj(vec![
+                ("ph", Json::from("i")),
+                ("s", Json::from(scope)),
+                ("name", Json::String(name)),
+                ("pid", pid.clone()),
+                ("tid", tid.clone()),
+                ("ts", ts.clone()),
+                ("args", obj(args)),
+            ])
+        };
+        match e.kind {
+            EventKind::Admit => async_piece(
+                "b",
+                vec![("task", num_u(e.task as u64)), ("queue_depth", num_u(e.arg))],
+            ),
+            EventKind::Popped => async_piece(
+                "n",
+                vec![("phase", Json::from("popped")), ("batch", num_u(e.arg))],
+            ),
+            EventKind::Redeliver => {
+                async_piece("n", vec![("phase", Json::from("redeliver"))])
+            }
+            EventKind::Complete => async_piece(
+                "e",
+                vec![("outcome", Json::from("complete")), ("batch", num_u(e.arg))],
+            ),
+            EventKind::Expire => async_piece(
+                "e",
+                vec![("outcome", Json::from("expire")), ("wait_us", num_u(e.arg))],
+            ),
+            EventKind::Shed => instant(
+                "shed".to_string(),
+                "g",
+                vec![
+                    ("req", num_u(e.req)),
+                    ("task", num_u(e.task as u64)),
+                    ("queue_depth", num_u(e.arg)),
+                ],
+            ),
+            EventKind::BatchExec => obj(vec![
+                ("ph", Json::from("X")),
+                ("name", Json::from("batch_exec")),
+                ("pid", pid),
+                ("tid", tid),
+                ("ts", ts),
+                ("dur", Json::Number(e.arg as f64 / 1000.0)),
+                ("args", obj(vec![("batch", num_u(e.req))])),
+            ]),
+            EventKind::Chaos => instant(
+                format!("chaos:{}", instant_code::name(e.arg)),
+                "g",
+                vec![("task", num_u(if e.task == NO_TASK { 0 } else { e.task as u64 }))],
+            ),
+            EventKind::WorkerExit => instant("worker_exit".to_string(), "t", vec![]),
+            EventKind::QueueClose => instant("queue_close".to_string(), "g", vec![]),
+            EventKind::MetricsDump => instant("metrics_dump".to_string(), "g", vec![]),
+        }
+    }
+
+    /// Structurally validate every request's span chain against the
+    /// lifecycle grammar
+    ///
+    /// ```text
+    /// Admit (Popped Redeliver)* (Popped Complete | Popped Expire | Expire)
+    ///   | Shed
+    /// ```
+    ///
+    /// using interleaving-invariant event *counts* (one `Admit`, one
+    /// terminal, `popped == redeliver` or `redeliver + 1`, a
+    /// completion requires the final pop). Requires a lossless trace:
+    /// `sample_every == 1` and no ring drops — a sampled or truncated
+    /// trace cannot be audited this way.
+    pub fn validate_chains(&self) -> Result<ChainSummary> {
+        if self.sample_every != 1 {
+            bail!("cannot validate chains of a sampled trace (sample_every = {})", self.sample_every);
+        }
+        if self.dropped > 0 {
+            bail!("cannot validate chains: {} events lost to ring overflow", self.dropped);
+        }
+        use std::collections::BTreeMap;
+        #[derive(Default)]
+        struct Counts {
+            admit: u64,
+            shed: u64,
+            popped: u64,
+            redeliver: u64,
+            complete: u64,
+            expire: u64,
+        }
+        let mut per_req: BTreeMap<u64, Counts> = BTreeMap::new();
+        for e in &self.events {
+            if !is_lifecycle(e.kind) {
+                continue;
+            }
+            if e.req == NO_REQ {
+                bail!("lifecycle event {:?} without a request id", e.kind);
+            }
+            let c = per_req.entry(e.req).or_default();
+            match e.kind {
+                EventKind::Admit => c.admit += 1,
+                EventKind::Shed => c.shed += 1,
+                EventKind::Popped => c.popped += 1,
+                EventKind::Redeliver => c.redeliver += 1,
+                EventKind::Complete => c.complete += 1,
+                EventKind::Expire => c.expire += 1,
+                _ => unreachable!(),
+            }
+        }
+        let mut summary = ChainSummary { requests: per_req.len() as u64, ..Default::default() };
+        for (req, c) in &per_req {
+            if c.shed > 0 {
+                if c.shed != 1 || c.admit + c.popped + c.redeliver + c.complete + c.expire != 0 {
+                    bail!("req {req}: shed chain has extra events");
+                }
+                summary.shed += 1;
+                continue;
+            }
+            if c.admit != 1 {
+                bail!("req {req}: expected exactly one Admit, saw {}", c.admit);
+            }
+            if c.complete + c.expire != 1 {
+                bail!(
+                    "req {req}: expected exactly one terminal, saw {} Complete + {} Expire",
+                    c.complete,
+                    c.expire
+                );
+            }
+            if c.complete == 1 && c.popped != c.redeliver + 1 {
+                bail!(
+                    "req {req}: completed with {} pops for {} redeliveries",
+                    c.popped,
+                    c.redeliver
+                );
+            }
+            if c.expire == 1 && c.popped != c.redeliver && c.popped != c.redeliver + 1 {
+                bail!(
+                    "req {req}: expired with {} pops for {} redeliveries",
+                    c.popped,
+                    c.redeliver
+                );
+            }
+            summary.completed += c.complete;
+            summary.expired += c.expire;
+            summary.redelivered += c.redeliver;
+        }
+        Ok(summary)
+    }
+}
+
+/// Strip the volatile wall-clock header line from a rendered trace so
+/// two virtual-clock runs can be byte-compared. (`Json::pretty` puts
+/// `"captured_at_unix_s": N` on its own line; CI does the same with
+/// `grep -v`.)
+pub fn scrub_volatile(rendered: &str) -> String {
+    let mut out = String::with_capacity(rendered.len());
+    for line in rendered.lines() {
+        if line.contains("\"captured_at_unix_s\"") {
+            continue;
+        }
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lifecycle(track: usize, t_ns: u64, kind: EventKind, req: u64) -> (usize, u64, EventKind, u64) {
+        (track, t_ns, kind, req)
+    }
+
+    fn record(tracer: &Tracer, events: &[(usize, u64, EventKind, u64)]) {
+        let mut handles: std::collections::BTreeMap<usize, ThreadTrace<'_>> =
+            std::collections::BTreeMap::new();
+        for &(track, t_ns, kind, req) in events {
+            handles
+                .entry(track)
+                .or_insert_with(|| tracer.thread(track))
+                .emit(t_ns, kind, req, 0, 0);
+        }
+        drop(handles);
+    }
+
+    #[test]
+    fn finish_sorts_canonically_across_tracks() {
+        let tracer = Tracer::new(TraceSpec::default());
+        record(
+            &tracer,
+            &[
+                lifecycle(1, 50, EventKind::Popped, 0),
+                lifecycle(FRONT_TRACK, 10, EventKind::Admit, 0),
+                lifecycle(FRONT_TRACK, 50, EventKind::Admit, 1),
+                lifecycle(1, 90, EventKind::Complete, 0),
+            ],
+        );
+        let data = tracer.finish();
+        let order: Vec<(u64, usize)> = data.events.iter().map(|e| (e.t_ns, e.track)).collect();
+        // same-timestamp tie at 50 breaks by track (worker 1 < FRONT_TRACK)
+        assert_eq!(order, vec![(10, FRONT_TRACK), (50, 1), (50, FRONT_TRACK), (90, 1)]);
+    }
+
+    #[test]
+    fn sampling_keeps_instants_and_strided_requests() {
+        let spec = TraceSpec { ring_cap: 1024, sample_every: 2 };
+        let tracer = Tracer::new(spec);
+        {
+            let mut t = tracer.thread(FRONT_TRACK);
+            t.emit(1, EventKind::Admit, 0, 0, 0); // kept (0 % 2 == 0)
+            t.emit(2, EventKind::Admit, 1, 0, 0); // sampled out
+            t.emit(3, EventKind::Chaos, NO_REQ, NO_TASK, instant_code::KILL); // always kept
+        }
+        let data = tracer.finish();
+        assert_eq!(data.events.len(), 2);
+        assert!(data.validate_chains().is_err(), "sampled traces refuse validation");
+    }
+
+    #[test]
+    fn chains_validate_including_redelivery_and_sweep_expiry() {
+        let tracer = Tracer::new(TraceSpec::default());
+        record(
+            &tracer,
+            &[
+                // req 0: admitted, popped, killed (redelivered), popped, completed
+                lifecycle(FRONT_TRACK, 10, EventKind::Admit, 0),
+                lifecycle(0, 20, EventKind::Popped, 0),
+                lifecycle(0, 21, EventKind::Redeliver, 0),
+                lifecycle(1, 30, EventKind::Popped, 0),
+                lifecycle(1, 40, EventKind::Complete, 0),
+                // req 1: shed at admission
+                lifecycle(FRONT_TRACK, 15, EventKind::Shed, 1),
+                // req 2: admitted, never popped, swept as expired
+                lifecycle(FRONT_TRACK, 16, EventKind::Admit, 2),
+                lifecycle(FRONT_TRACK, 99, EventKind::Expire, 2),
+                // req 3: popped then expired at the worker
+                lifecycle(FRONT_TRACK, 17, EventKind::Admit, 3),
+                lifecycle(0, 60, EventKind::Popped, 3),
+                lifecycle(0, 61, EventKind::Expire, 3),
+            ],
+        );
+        let s = tracer.finish().validate_chains().unwrap();
+        assert_eq!(
+            s,
+            ChainSummary { requests: 4, completed: 1, shed: 1, expired: 2, redelivered: 1 }
+        );
+    }
+
+    #[test]
+    fn broken_chains_are_rejected() {
+        // completion without a pop
+        let tracer = Tracer::new(TraceSpec::default());
+        record(
+            &tracer,
+            &[
+                lifecycle(FRONT_TRACK, 1, EventKind::Admit, 7),
+                lifecycle(0, 2, EventKind::Complete, 7),
+            ],
+        );
+        assert!(tracer.finish().validate_chains().is_err());
+        // two terminals
+        let tracer = Tracer::new(TraceSpec::default());
+        record(
+            &tracer,
+            &[
+                lifecycle(FRONT_TRACK, 1, EventKind::Admit, 7),
+                lifecycle(0, 2, EventKind::Popped, 7),
+                lifecycle(0, 3, EventKind::Complete, 7),
+                lifecycle(0, 4, EventKind::Expire, 7),
+            ],
+        );
+        assert!(tracer.finish().validate_chains().is_err());
+        // dropped events refuse validation
+        let tracer = Tracer::new(TraceSpec { ring_cap: 1, sample_every: 1 });
+        {
+            let mut t = tracer.thread(0);
+            t.emit(1, EventKind::Admit, 0, 0, 0);
+            t.emit(2, EventKind::Popped, 0, 0, 0);
+        }
+        let data = tracer.finish();
+        assert_eq!(data.dropped, 1);
+        assert!(data.validate_chains().is_err());
+    }
+
+    #[test]
+    fn chrome_json_is_deterministic_and_scrubbable() {
+        let build = |captured: u64| {
+            let tracer = Tracer::new(TraceSpec::default());
+            record(
+                &tracer,
+                &[
+                    lifecycle(FRONT_TRACK, 1_000, EventKind::Admit, 0),
+                    lifecycle(0, 2_500, EventKind::Popped, 0),
+                    lifecycle(0, 9_000, EventKind::Complete, 0),
+                ],
+            );
+            let meta = TraceMeta { captured_at_unix_s: captured, clock_virtual: true };
+            tracer.finish().chrome_json(&meta).pretty()
+        };
+        let a = build(111);
+        let b = build(222);
+        assert_ne!(a, b, "wall-clock header differs");
+        assert_eq!(scrub_volatile(&a), scrub_volatile(&b), "scrubbed renders match");
+        // parses back, and the structure is what Perfetto expects
+        let parsed = Json::parse(&a).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_array().unwrap();
+        // 1 process_name + 2 thread_name + 3 span events
+        assert_eq!(events.len(), 6);
+        assert_eq!(parsed.at(&["metadata", "clock"]).unwrap().as_str(), Some("virtual"));
+        let phases: Vec<&str> =
+            events.iter().filter_map(|e| e.get("ph").and_then(|p| p.as_str())).collect();
+        assert_eq!(phases, vec!["M", "M", "M", "b", "n", "e"]);
+        // ts is microseconds: 2500 ns → 2.5
+        assert_eq!(events[4].get("ts").unwrap().as_f64(), Some(2.5));
+    }
+}

@@ -202,7 +202,7 @@ impl Bench {
         ]);
         let path = dir.join(format!("{}.json", self.name));
         if let Err(e) = std::fs::write(&path, doc.pretty()) {
-            eprintln!("warn: could not write {}: {e}", path.display());
+            crate::log_warn!("bench", "could not write {}: {e}", path.display());
         } else {
             println!("\n  results -> {}", path.display());
         }

@@ -125,6 +125,26 @@ impl Histogram {
         }
     }
 
+    /// Sum of all accepted samples in milliseconds (rejected samples
+    /// contribute nothing).
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_ms
+    }
+
+    /// Number of recorded samples whose bucket lies entirely at or
+    /// below `ms` — the cumulative count behind a Prometheus
+    /// `_bucket{le="..."}` series. Resolution is one bucket width:
+    /// a sample in a bucket straddling `ms` is *not* counted (its true
+    /// value may exceed `ms`). `+Inf`/NaN thresholds return the total;
+    /// overflow-bucket samples only appear there.
+    pub fn count_le(&self, ms: f64) -> u64 {
+        if !ms.is_finite() {
+            return self.total;
+        }
+        let k = ((ms / self.width_ms) as usize).min(self.counts.len());
+        self.counts[..k].iter().sum()
+    }
+
     /// The p-quantile (p in [0, 1]) under the same rank rule the old
     /// sort-at-end pass used: rank `min((n·p) as usize, n-1)`. Returns the
     /// midpoint of the bucket holding that rank; 0 when empty; the
@@ -231,6 +251,23 @@ mod tests {
         assert_eq!(h.total(), 1);
         assert_eq!(h.clamped(), 3);
         assert_eq!(h.quantile(0.5), 0.5); // midpoint of bucket 0
+    }
+
+    #[test]
+    fn count_le_is_cumulative_and_bucket_resolved() {
+        let mut h = Histogram::new(0.5, 4); // range 0..2ms + overflow
+        h.record(0.1); // bucket 0
+        h.record(0.7); // bucket 1
+        h.record(1.9); // bucket 3
+        h.record(50.0); // overflow
+        assert_eq!(h.count_le(0.0), 0);
+        assert_eq!(h.count_le(0.5), 1);
+        assert_eq!(h.count_le(1.0), 2);
+        assert_eq!(h.count_le(2.0), 3, "in-range buckets only");
+        assert_eq!(h.count_le(1000.0), 3, "overflow never counted at finite le");
+        assert_eq!(h.count_le(f64::INFINITY), 4, "+Inf sees everything");
+        assert_eq!(h.count_le(-1.0), 0);
+        assert!((h.sum_ms() - 52.7).abs() < 1e-9);
     }
 
     #[test]

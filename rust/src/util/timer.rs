@@ -1,10 +1,19 @@
-//! Wall-clock timing scopes + a tiny metrics registry used by the
-//! coordinator to prove it is not the bottleneck (DESIGN.md §8 L3 target:
-//! coordination overhead < 5% of sweep wall time).
+//! Wall-clock timing scopes backed by the unified metrics registry
+//! (DESIGN.md §8 L3 target: coordination overhead < 5% of sweep wall
+//! time; §11 for the registry itself).
+//!
+//! `record` used to take one process-global `Mutex` per call, which
+//! put lock contention on every pipeline stage boundary once scoring
+//! went thread-parallel. It now accumulates into a **thread-local
+//! shard** of [`MetricsRegistry::global`] — an uncontended lock owned
+//! by the recording thread — and only `snapshot`/`render` touch every
+//! shard. The public `record`/`scope`/`snapshot`/`reset`/`render`
+//! surface is unchanged.
 
-use std::collections::BTreeMap;
-use std::sync::{Mutex, OnceLock};
+use std::cell::OnceCell;
 use std::time::{Duration, Instant};
+
+use crate::obs::metrics::{MetricsHandle, MetricsRegistry};
 
 /// A simple stopwatch.
 #[derive(Debug)]
@@ -30,24 +39,20 @@ impl Timer {
     }
 }
 
-#[derive(Default, Clone, Debug)]
-struct Stat {
-    total: Duration,
-    count: u64,
+thread_local! {
+    /// This thread's shard of the global registry, created on first
+    /// record. The registry keeps the shard's data alive after the
+    /// thread exits, so short-lived pool workers still count.
+    static LOCAL: OnceCell<MetricsHandle> = const { OnceCell::new() };
 }
 
-static REGISTRY: OnceLock<Mutex<BTreeMap<String, Stat>>> = OnceLock::new();
-
-fn registry() -> &'static Mutex<BTreeMap<String, Stat>> {
-    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+fn with_local<R>(f: impl FnOnce(&MetricsHandle) -> R) -> R {
+    LOCAL.with(|cell| f(cell.get_or_init(|| MetricsRegistry::global().handle())))
 }
 
-/// Accumulate `dur` under `name` in the global registry.
+/// Accumulate `dur` under `name` (thread-local shard; no global lock).
 pub fn record(name: &str, dur: Duration) {
-    let mut reg = registry().lock().unwrap();
-    let stat = reg.entry(name.to_string()).or_default();
-    stat.total += dur;
-    stat.count += 1;
+    with_local(|h| h.sum_add(name, dur.as_secs_f64()));
 }
 
 /// Time a closure and record it.
@@ -58,19 +63,21 @@ pub fn scope<R>(name: &str, f: impl FnOnce() -> R) -> R {
     r
 }
 
-/// Snapshot of `(name, total_seconds, count)` sorted by name.
+/// Snapshot of `(name, total_seconds, count)` sorted by name, merged
+/// across every thread's shard.
 pub fn snapshot() -> Vec<(String, f64, u64)> {
-    registry()
-        .lock()
-        .unwrap()
-        .iter()
-        .map(|(k, v)| (k.clone(), v.total.as_secs_f64(), v.count))
+    MetricsRegistry::global()
+        .snapshot()
+        .sums
+        .into_iter()
+        .map(|(name, (total_s, count))| (name, total_s, count))
         .collect()
 }
 
-/// Clear the registry (tests / between sweep phases).
+/// Clear all timer entries (tests / between sweep phases). Counters,
+/// gauges, and histograms registered by other subsystems survive.
 pub fn reset() {
-    registry().lock().unwrap().clear();
+    MetricsRegistry::global().reset_sums();
 }
 
 /// Render the registry as an aligned table.
@@ -98,7 +105,19 @@ mod tests {
         assert!(row.1 >= 0.004);
         assert!(render().contains("unit.test.sleep"));
         reset();
-        assert!(snapshot().is_empty());
+        // assert on our own key, not global emptiness: other tests in
+        // this binary may be recording timers concurrently
+        assert!(!snapshot().iter().any(|(n, _, _)| n == "unit.test.sleep"));
+        // cross-thread shards merge into one row (kept in this test so
+        // the reset above cannot race it from a parallel test thread)
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| record("unit.test.sharded", Duration::from_millis(1)));
+            }
+        });
+        let snap = snapshot();
+        let row = snap.iter().find(|(n, _, _)| n == "unit.test.sharded").unwrap();
+        assert!(row.2 >= 3, "all three threads' shards merged: {}", row.2);
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Observability suite: span tracing, Chrome-trace export, Prometheus
+//! metrics, and the lockstep determinism contract (DESIGN.md §11),
+//! hermetic on the virtual clock.
+//!
+//! The load-bearing scenario is one chaos serve — kill → storm →
+//! respawn against a tiny queue with a deadline — that produces every
+//! chain shape at once: completions, admission sheds, worker-side
+//! expiries, and a redelivered batch. Run in lockstep mode, two
+//! executions of it are byte-identical after scrubbing the wall-clock
+//! header, and the trace's chain tallies must equal the serve's own
+//! books — a trace that disagrees with
+//! `completions + shed + expired == offered` is a bug in one of them.
+
+use std::time::Duration;
+
+use svdquant::coordinator::server::{
+    serve, ChaosPlan, Registry, ServeStats, ServerConfig, ServiceModel,
+};
+use svdquant::data::TraceGenerator;
+use svdquant::fixture;
+use svdquant::json::Json;
+use svdquant::obs::span::{instant_code, EventKind};
+use svdquant::obs::{scrub_volatile, TraceMeta, TraceSpec};
+use svdquant::util::clock::Clock;
+
+/// Honor the CI thread matrix (same contract as `serving.rs`).
+fn init_threads() {
+    if let Ok(v) = std::env::var("SVDQUANT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            svdquant::util::pool::set_global_parallelism(n);
+        }
+    }
+}
+
+const STORM_N: usize = 20;
+
+/// The canonical lockstep chaos serve: 40 trace arrivals + a 20-request
+/// storm against a cap-4 queue and one worker that is killed mid-trace
+/// and respawned after a window longer than the 50ms deadline — so the
+/// dead-window backlog expires, the storm mostly sheds, the
+/// kill-interrupted batch redelivers, and everything offered after the
+/// respawn completes. Returns the stats and the offered total.
+fn chaos_lockstep_serve(spec: TraceSpec) -> (ServeStats, usize) {
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 21, 4, 8).unwrap();
+    let mut reg = Registry::new();
+    reg.add("solo", &qm, &ds);
+    let trace =
+        TraceGenerator::poisson(100.0).generate_tagged(40, &reg.sample_counts(), 0x0B5);
+    let span = trace.last().unwrap().arrival_s;
+    let scfg = ServerConfig {
+        workers: 1,
+        max_batch: 16,
+        max_wait: Duration::from_millis(5),
+        queue_cap: 4,
+        deadline: Some(Duration::from_millis(50)),
+        clock: Clock::virt(),
+        service: Some(ServiceModel::simulated(0.002, 0.001)),
+        chaos: Some(
+            ChaosPlan::new()
+                .kill_at(span * 0.30)
+                .storm_at(span * 0.35, STORM_N, 0)
+                .respawn_at(span * 0.60),
+        ),
+        tracing: Some(spec),
+        lockstep: true,
+        ..Default::default()
+    };
+    let stats = serve(&reg, &trace, &scfg).unwrap();
+    (stats, trace.len() + STORM_N)
+}
+
+#[test]
+fn lockstep_chaos_serve_is_byte_deterministic() {
+    init_threads();
+    let run = |captured: u64| {
+        let (stats, _) = chaos_lockstep_serve(TraceSpec::default());
+        let meta = TraceMeta { captured_at_unix_s: captured, clock_virtual: true };
+        let json = stats.trace.as_ref().unwrap().chrome_json(&meta).pretty();
+        (json, stats.metrics_text)
+    };
+    let (a_json, a_metrics) = run(111);
+    let (b_json, b_metrics) = run(999_999);
+    assert_ne!(a_json, b_json, "the wall-clock capture header must differ");
+    assert_eq!(
+        scrub_volatile(&a_json),
+        scrub_volatile(&b_json),
+        "two lockstep virtual-clock serves must render byte-identical traces"
+    );
+    assert_eq!(a_metrics, b_metrics, "and byte-identical Prometheus snapshots");
+}
+
+#[test]
+fn trace_chains_tie_to_the_books_and_chrome_json_parses() {
+    init_threads();
+    let (stats, offered) = chaos_lockstep_serve(TraceSpec::default());
+    // the scenario must actually exercise every chain shape
+    assert!(stats.completions > 0, "post-respawn tail completes");
+    assert!(stats.shed > 0, "the storm overwhelms the cap-4 queue");
+    assert!(stats.expired > 0, "the dead-window backlog outlives the deadline");
+    assert_eq!(stats.worker_kills, 1);
+    assert_eq!(stats.worker_respawns, 1);
+    assert!(stats.queue_depth_high_water >= 4, "the queue filled during the outage");
+
+    let td = stats.trace.as_ref().unwrap();
+    assert_eq!(td.dropped, 0, "default ring must not overflow on this trace");
+    let s = td.validate_chains().unwrap();
+    assert_eq!(s.requests as usize, offered, "every offered request has a chain");
+    assert_eq!(s.completed as usize, stats.completions);
+    assert_eq!(s.shed as usize, stats.shed);
+    assert_eq!(s.expired as usize, stats.expired);
+    assert!(s.redelivered >= 1, "the killed batch must appear as a redelivery");
+
+    // the rendered export is real JSON with the structure Perfetto wants
+    let meta = TraceMeta { captured_at_unix_s: 0, clock_virtual: true };
+    let parsed = Json::parse(&td.chrome_json(&meta).pretty()).unwrap();
+    assert_eq!(parsed.at(&["metadata", "clock"]).unwrap().as_str(), Some("virtual"));
+    let events = parsed.get("traceEvents").unwrap().as_array().unwrap();
+    let names: Vec<&str> =
+        events.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+    for instant in ["chaos:kill", "chaos:storm", "chaos:respawn", "queue_close", "worker_exit"]
+    {
+        assert!(names.contains(&instant), "missing {instant} instant");
+    }
+    let begins = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("b"))
+        .count();
+    assert_eq!(begins, offered - stats.shed, "one async span opens per admitted request");
+}
+
+#[test]
+fn prometheus_snapshot_exports_families_and_rejected_counter() {
+    init_threads();
+    let (stats, offered) = chaos_lockstep_serve(TraceSpec::default());
+    let text = &stats.metrics_text;
+    assert!(text.contains("# TYPE svdquant_serve_completions_total counter"));
+    assert!(text.contains(&format!("svdquant_serve_completions_total {}", stats.completions)));
+    assert!(text.contains(&format!("svdquant_serve_offered_total {offered}")));
+    assert!(text.contains(&format!("svdquant_serve_shed_total {}", stats.shed)));
+    assert!(text.contains(&format!("svdquant_serve_expired_total {}", stats.expired)));
+    assert!(text.contains("svdquant_serve_worker_kills_total 1"));
+    assert!(text.contains(&format!("svdquant_serve_redelivered_total {}", 1)));
+    assert!(text.contains("svdquant_serve_batches_total"));
+    assert!(text.contains("# TYPE svdquant_serve_latency_ms histogram"));
+    assert!(text.contains("svdquant_serve_latency_ms_bucket{le=\"+Inf\"}"));
+    // satellite (b): the histogram's clamped counter is part of every
+    // exported view — zero here, but present and typed
+    assert!(text.contains("# TYPE svdquant_serve_latency_ms_rejected counter"));
+    assert!(text.contains("svdquant_serve_latency_ms_rejected 0"));
+    assert!(text.contains("# TYPE svdquant_serve_expired_wait_ms_rejected counter"));
+    assert!(text.contains("# TYPE svdquant_serve_queue_depth_high_water gauge"));
+    assert!(text.contains("svdquant_serve_trace_dropped_events_total 0"));
+}
+
+#[test]
+fn ring_overflow_counts_drops_and_refuses_validation() {
+    init_threads();
+    let (stats, _) = chaos_lockstep_serve(TraceSpec { ring_cap: 8, sample_every: 1 });
+    let td = stats.trace.as_ref().unwrap();
+    assert!(td.dropped > 0, "a cap-8 ring cannot hold a 60-request serve");
+    let err = td.validate_chains().unwrap_err().to_string();
+    assert!(err.contains("ring overflow"), "got: {err}");
+    // the loss is visible in the export header, not silent
+    let parsed = Json::parse(&td.chrome_json(&TraceMeta::default()).pretty()).unwrap();
+    assert_eq!(
+        parsed.at(&["metadata", "dropped_events"]).unwrap().as_f64(),
+        Some(td.dropped as f64)
+    );
+    assert!(stats
+        .metrics_text
+        .contains(&format!("svdquant_serve_trace_dropped_events_total {}", td.dropped)));
+}
+
+#[test]
+fn sampling_thins_lifecycle_events_but_keeps_instants() {
+    init_threads();
+    let (full, _) = chaos_lockstep_serve(TraceSpec::default());
+    let (sampled, _) =
+        chaos_lockstep_serve(TraceSpec { ring_cap: 1 << 16, sample_every: 4 });
+    let full_td = full.trace.as_ref().unwrap();
+    let sampled_td = sampled.trace.as_ref().unwrap();
+    assert!(
+        sampled_td.events.len() < full_td.events.len(),
+        "1-in-4 sampling must shrink the event stream ({} vs {})",
+        sampled_td.events.len(),
+        full_td.events.len()
+    );
+    // instants are never sampled out
+    assert!(sampled_td
+        .events
+        .iter()
+        .any(|e| e.kind == EventKind::Chaos && e.arg == instant_code::KILL));
+    // and a sampled trace refuses structural validation rather than
+    // reporting bogus tallies
+    assert!(sampled_td.validate_chains().is_err());
+}
+
+#[test]
+fn lockstep_demands_the_virtual_clock() {
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 22, 4, 4).unwrap();
+    let mut reg = Registry::new();
+    reg.add("solo", &qm, &ds);
+    let trace = TraceGenerator::poisson(50.0).generate_tagged(4, &reg.sample_counts(), 1);
+    let scfg = ServerConfig { lockstep: true, clock: Clock::wall(), ..Default::default() };
+    let err = serve(&reg, &trace, &scfg).unwrap_err().to_string();
+    assert!(err.contains("lockstep"), "got: {err}");
+}
+
+#[test]
+fn periodic_metrics_dumps_fire_on_the_virtual_timeline() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 23, 4, 8).unwrap();
+    let mut reg = Registry::new();
+    reg.add("solo", &qm, &ds);
+    let trace =
+        TraceGenerator::poisson(50.0).generate_tagged(40, &reg.sample_counts(), 0xD0D0);
+    let scfg = ServerConfig {
+        workers: 1,
+        clock: Clock::virt(),
+        service: Some(ServiceModel::simulated(0.001, 0.0005)),
+        metrics_period_s: Some(0.05),
+        tracing: Some(TraceSpec::default()),
+        lockstep: true,
+        ..Default::default()
+    };
+    let stats = serve(&reg, &trace, &scfg).unwrap();
+    assert!(
+        stats.metrics_dumps.len() >= 2,
+        "a ~0.8s trace at a 50ms period must dump repeatedly, got {}",
+        stats.metrics_dumps.len()
+    );
+    let times: Vec<f64> = stats.metrics_dumps.iter().map(|(t, _)| *t).collect();
+    assert!(times.windows(2).all(|w| w[1] > w[0]), "dump times strictly increase");
+    for (_, text) in &stats.metrics_dumps {
+        assert!(text.contains("svdquant_"), "each dump is a rendered exposition");
+    }
+    // each dump also leaves a MetricsDump instant on the trace timeline
+    let dumps_in_trace = stats
+        .trace
+        .as_ref()
+        .unwrap()
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::MetricsDump)
+        .count();
+    assert_eq!(dumps_in_trace, stats.metrics_dumps.len());
+}
