@@ -44,15 +44,26 @@
 //! chaos event, serializing the whole serve so that two runs of the same
 //! trace produce byte-identical exports — the determinism anchor for
 //! `rust/tests/obs.rs` and the CI trace-diff gate.
+//!
+//! **Socket ingress** (DESIGN.md §12): the [`net`] submodule puts a real
+//! TCP front door on the same admission path — a poll(2) reactor decodes
+//! length-prefixed request frames, pushes them through the identical
+//! `push_traced` front helpers (so spans, lockstep, chaos, and the
+//! conservation law are shared, not re-implemented), and answers each
+//! connection with the request's terminal outcome. Workers can run in
+//! [`BatchMode::Continuous`], refilling batches from the live queue
+//! instead of waiting out fixed straggler windows.
 
 mod chaos;
+pub mod net;
 mod queue;
 mod registry;
 mod stats;
 mod worker;
 
 pub use chaos::{ChaosAction, ChaosEvent, ChaosPlan};
-pub use queue::{BoundedQueue, Enqueue, QueueItem, SchedPolicy};
+pub use net::{NetConfig, NetServer, NetStats, StopHandle};
+pub use queue::{BatchMode, BoundedQueue, Enqueue, QueueItem, SchedPolicy};
 pub use registry::{Registry, Tenant};
 pub use stats::{Completion, ServeStats, TenantStats, COMPLETION_LOG_CAP};
 
@@ -154,6 +165,9 @@ pub struct ServerConfig {
     /// every this many *clock* seconds (virtual-time periods replay
     /// instantly); `None` = only the final snapshot
     pub metrics_period_s: Option<f64>,
+    /// how workers assemble batches: `Fixed` size-or-deadline windows, or
+    /// `Continuous` refill from whatever is queued right now
+    pub batching: BatchMode,
 }
 
 impl Default for ServerConfig {
@@ -171,8 +185,18 @@ impl Default for ServerConfig {
             tracing: None,
             lockstep: false,
             metrics_period_s: None,
+            batching: BatchMode::Fixed,
         }
     }
+}
+
+/// Announce the resolved kernel dispatch once per process so every
+/// serving log records which ISA produced its numbers.
+fn log_isa_once() {
+    static ISA_LOGGED: std::sync::Once = std::sync::Once::new();
+    ISA_LOGGED.call_once(|| {
+        crate::log_info!("serve", "kernel dispatch: {}", crate::util::simd::active_isa().name());
+    });
 }
 
 /// Serve a tagged multi-tenant trace against the registry; returns
@@ -191,14 +215,7 @@ pub fn serve(
         "lockstep mode serializes on quiescence and only makes sense (and only \
          terminates promptly) on the virtual clock; pass a virtual clock or drop lockstep"
     );
-    // announce the resolved kernel dispatch once per process so every
-    // serving log records which ISA produced its numbers
-    {
-        static ISA_LOGGED: std::sync::Once = std::sync::Once::new();
-        ISA_LOGGED.call_once(|| {
-            crate::log_info!("serve", "kernel dispatch: {}", crate::util::simd::active_isa().name());
-        });
-    }
+    log_isa_once();
     for r in trace {
         ensure!(
             r.task < registry.len(),
@@ -245,6 +262,7 @@ pub fn serve(
         next_track: &next_track,
         settled: &settled,
         live_workers: &live_workers,
+        net: None,
     };
     let (shed_per_task, metrics_dumps) = std::thread::scope(|scope| {
         // front: replay arrivals in clock time (firing chaos events as
@@ -260,14 +278,51 @@ pub fn serve(
     });
     drop(ctx); // release the &tracer borrow so finish() can consume it
 
+    finalize_serve(
+        registry,
+        &queue,
+        &clock,
+        collector,
+        &metrics,
+        tracer,
+        &chaos,
+        errors,
+        shed_per_task,
+        trace.len(),
+        metrics_dumps,
+    )
+}
+
+/// The shared end-of-serve epilogue: post-drain sweep, error surfacing,
+/// the two accounting cross-checks (shed attribution and the request
+/// conservation law), the metrics fold, and the [`ServeStats`] assembly.
+/// Both front doors — the in-process trace replay ([`serve`]) and the
+/// socket reactor ([`net::NetServer::serve`]) — end here, so the books
+/// are enforced identically no matter how requests arrived.
+/// `offered_direct` is the number of non-storm admission attempts
+/// (trace length, or wire requests that reached the queue).
+/// Private, but reachable from the `net` child module.
+#[allow(clippy::too_many_arguments)]
+fn finalize_serve(
+    registry: &Registry<'_>,
+    queue: &BoundedQueue,
+    clock: &Clock,
+    collector: Mutex<Collector>,
+    metrics: &MetricsRegistry,
+    tracer: Option<Tracer>,
+    chaos: &ChaosRuntime,
+    errors: Mutex<Vec<String>>,
+    shed_per_task: Vec<usize>,
+    offered_direct: usize,
+    metrics_dumps: Vec<(f64, String)>,
+) -> Result<ServeStats> {
     // post-drain sweep: if chaos killed every worker, admitted requests
     // are stranded in the (closed) queue — they can never complete, so
     // they are accounted as expired with their waits recorded. This is
     // the last transition that keeps the conservation law exact.
     let leftovers = queue.drain_remaining();
     if !leftovers.is_empty() {
-        let end_ns = clock.now_ns();
-        let end_s = end_ns as f64 * 1e-9;
+        let (end_ns, end_s) = clock.stamp();
         let mut sweep_tt = tracer.as_ref().map(|t| t.thread(FRONT_TRACK));
         let mut g = collector.lock().unwrap();
         for it in &leftovers {
@@ -303,13 +358,12 @@ pub fn serve(
         queue.shed_count()
     );
     let (completions, expired) = collector.totals();
-    let offered = trace.len() + chaos.injected();
+    let offered = offered_direct + chaos.injected();
     ensure!(
         completions + shed_total + expired == offered,
         "request conservation broken: {completions} completed + {shed_total} shed + \
-         {expired} expired != {offered} offered ({} trace + {} injected; \
+         {expired} expired != {offered} offered ({offered_direct} direct + {} injected; \
          {} kills, {} respawns)",
-        trace.len(),
         chaos.injected(),
         chaos.kills(),
         chaos.respawns()
@@ -349,21 +403,49 @@ pub fn serve(
     Ok(stats)
 }
 
-/// Mutable state the front loop and its chaos events thread through —
-/// bundled so `fire_event` stays one call.
+/// Mutable state the admission front and its chaos events thread through
+/// — bundled so `fire_event` stays one call. Shared between the trace
+/// replay front ([`front_loop`]) and the socket reactor (`net::reactor`),
+/// so both ingress paths get identical span, shed, lockstep, and
+/// id-allocation semantics.
 struct FrontState<'t> {
     /// per-tenant shed tally (the queue's verdicts, attributed)
     shed: Vec<usize>,
-    /// storm requests injected so far (id allocation)
+    /// storm requests injected so far
     injected: usize,
     /// pushes attempted so far — the lockstep quiescence target
     offered: usize,
+    /// next request id to allocate (trace replay seeds this past the
+    /// trace so storm ids stay unique; the reactor starts at 0 and
+    /// allocates every id there)
+    next_id: usize,
     /// the front's span recorder, when tracing
     tt: Option<ThreadTrace<'t>>,
     /// periodic Prometheus snapshots: (clock seconds, rendered text)
     dumps: Vec<(f64, String)>,
     /// next scheduled dump, if `metrics_period_s` is set
     next_dump_s: Option<f64>,
+}
+
+impl<'t> FrontState<'t> {
+    fn new(ctx: &ServeCtx<'_, '_>, tasks: usize, next_id: usize) -> FrontState<'t> {
+        FrontState {
+            shed: vec![0usize; tasks],
+            injected: 0,
+            offered: 0,
+            next_id,
+            tt: None,
+            dumps: Vec::new(),
+            next_dump_s: ctx.cfg.metrics_period_s,
+        }
+    }
+
+    /// Claim the next unique request id.
+    fn alloc_id(&mut self) -> usize {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
 }
 
 /// The admission front: merge trace arrivals with chaos events on the
@@ -382,14 +464,8 @@ where
     'a: 'scope,
     'reg: 'scope,
 {
-    let mut st = FrontState {
-        shed: vec![0usize; samples_per_task.len()],
-        injected: 0,
-        offered: 0,
-        tt: ctx.tracer.map(|t| t.thread(FRONT_TRACK)),
-        dumps: Vec::new(),
-        next_dump_s: ctx.cfg.metrics_period_s,
-    };
+    let mut st = FrontState::new(ctx, samples_per_task.len(), trace.len());
+    st.tt = ctx.tracer.map(|t| t.thread(FRONT_TRACK));
     let mut events = plan.events().iter();
     let mut next_event = events.next();
     for r in trace {
@@ -397,7 +473,7 @@ where
             if e.at_s > r.arrival_s {
                 break;
             }
-            fire_event(scope, ctx, e, trace.len(), samples_per_task, &mut st);
+            fire_event(scope, ctx, e, samples_per_task, &mut st);
             next_event = events.next();
         }
         ctx.clock.sleep_until(r.arrival_s);
@@ -406,7 +482,7 @@ where
     }
     // events scheduled past the last arrival still fire, before close
     while let Some(e) = next_event {
-        fire_event(scope, ctx, e, trace.len(), samples_per_task, &mut st);
+        fire_event(scope, ctx, e, samples_per_task, &mut st);
         next_event = events.next();
     }
     ctx.queue.close();
@@ -419,8 +495,13 @@ where
 
 /// Push one request, record its admission verdict as a span event, and —
 /// in lockstep mode — wait for the system to settle before returning.
-/// A shed is terminal at the front, so it settles immediately.
-fn push_traced(ctx: &ServeCtx<'_, '_>, st: &mut FrontState<'_>, r: TaggedRequest) {
+/// A shed is terminal at the front, so it settles immediately. Returns
+/// the verdict so the socket front can answer the wire.
+fn push_traced(
+    ctx: &ServeCtx<'_, '_>,
+    st: &mut FrontState<'_>,
+    r: TaggedRequest,
+) -> Enqueue {
     let t_ns = ctx.clock.now_ns();
     st.offered += 1;
     let verdict = ctx.queue.push(r);
@@ -439,6 +520,7 @@ fn push_traced(ctx: &ServeCtx<'_, '_>, st: &mut FrontState<'_>, r: TaggedRequest
     if ctx.cfg.lockstep {
         wait_quiesce(ctx, st.offered);
     }
+    verdict
 }
 
 /// Lockstep barrier: spin (politely) until every offered request has
@@ -481,7 +563,6 @@ fn fire_event<'scope, 'a, 'reg>(
     scope: &'scope Scope<'scope, '_>,
     ctx: &'scope ServeCtx<'a, 'reg>,
     e: &ChaosEvent,
-    trace_len: usize,
     samples_per_task: &[usize],
     st: &mut FrontState<'_>,
 ) where
@@ -516,7 +597,7 @@ fn fire_event<'scope, 'a, 'reg>(
             ctx.chaos.note_injected(n);
             for k in 0..n {
                 let r = TaggedRequest {
-                    id: trace_len + st.injected,
+                    id: st.alloc_id(),
                     task,
                     arrival_s: e.at_s,
                     sample: k % samples_per_task[task].max(1),

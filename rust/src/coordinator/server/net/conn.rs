@@ -1,0 +1,231 @@
+//! Per-connection state for the socket front door: an incremental
+//! frame decoder on the read side, a bounded response buffer on the
+//! write side, and the backpressure gate that ties them together.
+//!
+//! **Backpressure is read-gating.** A connection wants `POLLIN` only
+//! while (a) its buffered-but-unsent response bytes are under
+//! [`NetConfig::write_buf_cap`](super::NetConfig::write_buf_cap) and
+//! (b) its admitted-but-unanswered request count is under
+//! [`NetConfig::max_inflight_per_conn`](super::NetConfig::max_inflight_per_conn).
+//! A client that pipelines faster than it reads responses therefore
+//! stalls *itself* (its bytes back up into the kernel socket buffer and
+//! TCP flow control pushes back), while the server's memory per
+//! connection stays bounded by `write_buf_cap` + one response frame +
+//! the decoder's ≤ 2-frame carryover. No unbounded buffering, no
+//! disconnect-the-slow-reader policy — the slow reader just gets
+//! exactly-once responses at its own pace.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+use super::proto::{encode_response, FrameDecoder, WireResponse};
+use super::NetConfig;
+
+/// What one nonblocking read produced.
+#[derive(Debug)]
+pub(super) enum ReadOutcome {
+    /// `n` fresh bytes were fed to the decoder
+    Data(usize),
+    /// orderly EOF: the client is done sending (half-close supported —
+    /// responses still owed are delivered before the server closes)
+    Eof,
+    /// nothing available right now
+    WouldBlock,
+    /// hard I/O error; the connection is dead
+    Failed(io::Error),
+}
+
+/// One accepted client connection and its buffers.
+pub(super) struct Conn {
+    pub stream: TcpStream,
+    pub decoder: FrameDecoder,
+    /// connection id for spans/metrics (monotonic per serve)
+    pub id: u64,
+    /// encoded-but-unsent response bytes (`wstart` = consumed prefix)
+    wbuf: Vec<u8>,
+    wstart: usize,
+    /// admitted requests whose responses have not been buffered yet
+    pub inflight: usize,
+    /// read side alive (no EOF seen)
+    pub open: bool,
+    /// fatal protocol error: stop reading, flush what is owed, close
+    pub poisoned: bool,
+    /// write side failed (peer gone): drop buffers, close immediately
+    pub dead: bool,
+    /// deepest unsent-response backlog ever buffered — the bound the
+    /// backpressure test asserts
+    pub wbuf_high_water: usize,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, id: u64, max_frame: usize) -> Self {
+        Conn {
+            stream,
+            decoder: FrameDecoder::new(max_frame),
+            id,
+            wbuf: Vec::new(),
+            wstart: 0,
+            inflight: 0,
+            open: true,
+            poisoned: false,
+            dead: false,
+            wbuf_high_water: 0,
+        }
+    }
+
+    /// Unsent response bytes currently buffered.
+    pub fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wstart
+    }
+
+    /// Should the reactor ask for read readiness? False once either
+    /// backpressure gate trips — the decoder may still hold buffered
+    /// frames, which `process_decoded` drains when the gate reopens.
+    pub fn wants_read(&self, cfg: &NetConfig) -> bool {
+        self.open
+            && !self.poisoned
+            && !self.dead
+            && self.pending_write() <= cfg.write_buf_cap
+            && self.inflight < cfg.max_inflight_per_conn
+    }
+
+    /// Should the reactor ask for write readiness?
+    pub fn wants_write(&self) -> bool {
+        !self.dead && self.pending_write() > 0
+    }
+
+    /// Every obligation met: eligible to close and reap.
+    pub fn finished(&self) -> bool {
+        self.dead || ((self.poisoned || !self.open) && self.inflight == 0 && self.pending_write() == 0)
+    }
+
+    /// Buffer one response frame for this connection.
+    pub fn push_response(&mut self, resp: &WireResponse) {
+        // compact the consumed prefix before growing (same lazy scheme
+        // as the decoder: amortized O(bytes), memory ≤ ~2× pending)
+        if self.wstart > 0 && self.wstart >= self.wbuf.len() - self.wstart {
+            self.wbuf.drain(..self.wstart);
+            self.wstart = 0;
+        }
+        self.wbuf.extend_from_slice(&encode_response(resp));
+        self.wbuf_high_water = self.wbuf_high_water.max(self.pending_write());
+    }
+
+    /// Nonblocking read into the decoder via `scratch`.
+    pub fn read_chunk(&mut self, scratch: &mut [u8]) -> ReadOutcome {
+        loop {
+            match self.stream.read(scratch) {
+                Ok(0) => {
+                    self.open = false;
+                    return ReadOutcome::Eof;
+                }
+                Ok(n) => {
+                    self.decoder.feed(&scratch[..n]);
+                    return ReadOutcome::Data(n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return ReadOutcome::WouldBlock,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    self.open = false;
+                    self.dead = true;
+                    return ReadOutcome::Failed(e);
+                }
+            }
+        }
+    }
+
+    /// Write as much buffered response data as the socket accepts right
+    /// now; returns bytes written. A hard error (peer vanished) marks
+    /// the connection dead and discards its buffers — the outcomes were
+    /// already accounted, only their delivery is lost (counted by the
+    /// reactor as dropped responses).
+    pub fn flush(&mut self) -> usize {
+        let mut written = 0usize;
+        while self.pending_write() > 0 {
+            match self.stream.write(&self.wbuf[self.wstart..]) {
+                Ok(0) => {
+                    self.mark_dead();
+                    break;
+                }
+                Ok(n) => {
+                    self.wstart += n;
+                    written += n;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.mark_dead();
+                    break;
+                }
+            }
+        }
+        if self.wstart == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wstart = 0;
+        }
+        written
+    }
+
+    fn mark_dead(&mut self) {
+        self.dead = true;
+        self.open = false;
+        self.wbuf.clear();
+        self.wstart = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::net::proto::WireStatus;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = l.accept().unwrap();
+        (server, client)
+    }
+
+    fn resp(corr: u32) -> WireResponse {
+        WireResponse { corr, status: WireStatus::Ok, pred: 1, lat_us: 10 }
+    }
+
+    #[test]
+    fn backpressure_gates_reads_on_write_backlog_and_inflight() {
+        let (s, _c) = pair();
+        let cfg = NetConfig { write_buf_cap: 64, max_inflight_per_conn: 2, ..NetConfig::default() };
+        let mut conn = Conn::new(s, 0, cfg.max_frame);
+        assert!(conn.wants_read(&cfg));
+        conn.inflight = 2;
+        assert!(!conn.wants_read(&cfg), "inflight cap closes the read gate");
+        conn.inflight = 1;
+        assert!(conn.wants_read(&cfg));
+        for i in 0..4 {
+            conn.push_response(&resp(i));
+        }
+        assert!(conn.pending_write() > cfg.write_buf_cap);
+        assert!(!conn.wants_read(&cfg), "write backlog closes the read gate");
+        assert_eq!(conn.wbuf_high_water, conn.pending_write());
+    }
+
+    #[test]
+    fn flush_drains_and_finishes_after_half_close() {
+        let (s, mut c) = pair();
+        s.set_nonblocking(true).unwrap();
+        let cfg = NetConfig::default();
+        let mut conn = Conn::new(s, 0, cfg.max_frame);
+        conn.push_response(&resp(5));
+        assert!(conn.wants_write());
+        let n = conn.flush();
+        assert_eq!(n, 4 + super::super::proto::RESP_BODY_LEN);
+        assert!(!conn.wants_write());
+        let got = super::super::proto::read_response(&mut c).unwrap();
+        assert_eq!(got.corr, 5);
+        // half-close: EOF with nothing owed → finished
+        assert!(!conn.finished());
+        conn.open = false;
+        assert!(conn.finished());
+    }
+}

@@ -1,0 +1,302 @@
+//! The socket front door: a std-only TCP listener that feeds decoded
+//! wire requests into the exact same admission path as the in-process
+//! trace replay (DESIGN.md §12).
+//!
+//! Layout:
+//!
+//! * [`proto`] — the length-prefixed little-endian frame grammar, an
+//!   incremental [`FrameDecoder`](proto::FrameDecoder), and the response
+//!   encoding (public: clients and tests speak it too);
+//! * `conn` — per-connection state: decoder carryover, bounded response
+//!   buffer, and the read-gating backpressure rule;
+//! * `poll` — raw-FFI `poll(2)` readiness (no external crates), unix
+//!   only;
+//! * `reactor` — the single-threaded readiness loop that accepts,
+//!   decodes, admits (through the shared `push_traced` front helper, so
+//!   spans / lockstep / chaos / conservation are inherited, not
+//!   re-implemented), and writes responses back.
+//!
+//! Admission verdicts map onto the wire: `Accepted` answers later with
+//! the worker-reported outcome (`Ok` or `Expired`), `Shed` answers
+//! immediately, and a request that lands after drain began answers
+//! `Closed`. Requests the parser rejects never reach the queue, so the
+//! conservation law (`completions + shed + expired == offered`) holds
+//! over exactly the requests that were offered to admission.
+//!
+//! Everything here is hermetic by construction: tests bind
+//! `127.0.0.1:0`, drive the server over loopback, and stop it via
+//! [`StopHandle`] — no fixed ports, no sleeps, no external processes.
+
+pub mod proto;
+
+mod conn;
+mod poll;
+#[cfg(unix)]
+mod reactor;
+
+pub use proto::{WireRequest, WireResponse, WireStatus};
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Context, Result};
+
+use super::chaos::ChaosRuntime;
+use super::queue::BoundedQueue;
+use super::registry::Registry;
+use super::stats::Collector;
+use super::worker::{worker_loop, ServeCtx};
+use super::{ServeStats, ServerConfig};
+use crate::obs::metrics::MetricsRegistry;
+use crate::obs::trace::Tracer;
+
+/// Front-door tuning knobs, separate from [`ServerConfig`] because they
+/// describe the wire, not the scheduler.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// largest accepted frame body in bytes; an oversized length prefix
+    /// is a fatal protocol error for its connection
+    pub max_frame: usize,
+    /// accepted-connection cap; beyond it the listener simply stops
+    /// accepting until a connection closes (TCP backlog absorbs the rest)
+    pub max_conns: usize,
+    /// per-connection unsent-response byte cap: past it the reactor stops
+    /// *reading* that connection (backpressure, see `conn`)
+    pub write_buf_cap: usize,
+    /// per-connection admitted-but-unanswered request cap — the second
+    /// read gate, bounding queue occupancy any one client can claim
+    pub max_inflight_per_conn: usize,
+    /// stop serving once this many requests have settled (completed /
+    /// shed / expired) — lets a self-driving harness end a run without
+    /// racing the stop flag; `None` = run until [`StopHandle::stop`]
+    pub stop_after: Option<usize>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            max_frame: proto::DEFAULT_MAX_FRAME,
+            max_conns: 256,
+            write_buf_cap: 64 * 1024,
+            max_inflight_per_conn: 1024,
+            stop_after: None,
+        }
+    }
+}
+
+/// Wire-level counters for one serve, reported in
+/// [`ServeStats::net`](super::ServeStats::net).
+///
+/// All fields except `write_buf_high_water` are deterministic under
+/// lockstep replay and are also folded into the Prometheus registry
+/// (`serve_net_*`). The high-water mark depends on flush timing, so it
+/// stays here and is deliberately **not** exported as a metric — the CI
+/// determinism gate byte-compares metric expositions.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// connections accepted
+    pub connections: usize,
+    /// request frames decoded (valid or not) — parse errors count here
+    /// and in `parse_errors`
+    pub frames_in: u64,
+    /// response frames buffered for delivery
+    pub frames_out: u64,
+    /// payload bytes read off sockets
+    pub bytes_in: u64,
+    /// payload bytes written to sockets
+    pub bytes_out: u64,
+    /// frames rejected before admission (bad version/opcode/size, unknown
+    /// task or sample, oversized length prefix)
+    pub parse_errors: u64,
+    /// requests refused with `Closed` because drain had already begun
+    /// (never offered to the queue, so outside the conservation law)
+    pub refused_closed: u64,
+    /// outcomes whose connection was gone at delivery time (the work was
+    /// still done and accounted; only the reply had no destination)
+    pub responses_dropped: u64,
+    /// deepest per-connection unsent-response backlog observed — bounded
+    /// by `write_buf_cap` plus one response frame per inflight request
+    /// (outcomes already owed are delivered regardless of the gate;
+    /// refusing them would deadlock), asserted by the backpressure test
+    pub write_buf_high_water: usize,
+}
+
+/// Cross-thread switch that ends a [`NetServer::serve`] run: the reactor
+/// notices on its next tick, fires remaining chaos events, closes the
+/// queue, drains workers, flushes owed responses, and returns.
+#[derive(Clone)]
+pub struct StopHandle {
+    flag: Arc<AtomicBool>,
+}
+
+impl StopHandle {
+    /// Request a graceful stop (idempotent).
+    pub fn stop(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+}
+
+/// One request's terminal outcome, reported by a worker for the reactor
+/// to route back to the originating connection.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct NetDone {
+    pub id: usize,
+    pub status: WireStatus,
+    pub pred: i32,
+    pub lat_us: u64,
+}
+
+/// Worker → reactor outcome mailbox. Workers push under a short lock;
+/// the reactor drains at the top of every tick (the poll timeout doubles
+/// as the wakeup, so no self-pipe is needed). Outcomes with no routing
+/// entry — chaos-storm injections, or requests whose connection died —
+/// are simply dropped after accounting.
+#[derive(Default)]
+pub(super) struct NetBridge {
+    outbox: Mutex<Vec<NetDone>>,
+}
+
+impl NetBridge {
+    pub(super) fn push(&self, done: NetDone) {
+        self.outbox.lock().unwrap().push(done);
+    }
+
+    fn drain(&self) -> Vec<NetDone> {
+        std::mem::take(&mut *self.outbox.lock().unwrap())
+    }
+
+    fn is_empty(&self) -> bool {
+        self.outbox.lock().unwrap().is_empty()
+    }
+}
+
+/// The TCP front door. `bind` → hand [`StopHandle`] + `local_addr` to
+/// the driver → `serve` blocks until stopped, returning the same
+/// [`ServeStats`] (books enforced identically) as the in-process replay,
+/// plus [`NetStats`] wire counters.
+pub struct NetServer {
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    ncfg: NetConfig,
+}
+
+impl NetServer {
+    /// Bind a nonblocking listener. Pass `127.0.0.1:0` for a hermetic
+    /// ephemeral port. Fails on non-unix hosts (the reactor needs
+    /// `poll(2)`), keeping every other platform's build green.
+    pub fn bind(addr: &str, ncfg: NetConfig) -> Result<Self> {
+        ensure!(
+            cfg!(unix),
+            "the socket front door drives readiness via poll(2) and is unix-only"
+        );
+        ensure!(
+            ncfg.max_frame >= proto::REQ_BODY_LEN,
+            "max_frame {} cannot even hold a request body ({} bytes)",
+            ncfg.max_frame,
+            proto::REQ_BODY_LEN
+        );
+        ensure!(ncfg.max_conns >= 1, "max_conns must be at least 1");
+        ensure!(ncfg.max_inflight_per_conn >= 1, "max_inflight_per_conn must be at least 1");
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
+        listener.set_nonblocking(true).context("setting listener nonblocking")?;
+        Ok(NetServer { listener, stop: Arc::new(AtomicBool::new(false)), ncfg })
+    }
+
+    /// The bound address — the ephemeral port a test's client connects to.
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading bound listener address")
+    }
+
+    /// A cloneable stop switch usable from any thread.
+    pub fn stop_handle(&self) -> StopHandle {
+        StopHandle { flag: Arc::clone(&self.stop) }
+    }
+
+    /// Serve socket ingress against the registry until stopped, then
+    /// drain gracefully. Mirrors [`super::serve`]: same queue, same
+    /// workers, same chaos plan, same lockstep rules, same conservation
+    /// law — only the arrival source differs.
+    pub fn serve(&self, registry: &Registry<'_>, cfg: &ServerConfig) -> Result<ServeStats> {
+        #[cfg(not(unix))]
+        {
+            let _ = (registry, cfg);
+            unreachable!("bind() refuses to construct a NetServer on non-unix hosts");
+        }
+        #[cfg(unix)]
+        {
+            ensure!(!registry.is_empty(), "registry has no tenants");
+            ensure!(cfg.max_batch > 0, "max_batch must be positive");
+            ensure!(
+                !cfg.lockstep || cfg.clock.is_virtual(),
+                "lockstep mode serializes on quiescence and only makes sense (and only \
+                 terminates promptly) on the virtual clock; pass a virtual clock or drop lockstep"
+            );
+            super::log_isa_once();
+            let plan = cfg.chaos.clone().unwrap_or_default();
+            plan.validate(registry.len())?;
+
+            let clock = cfg.clock.restarted();
+            let slo_s = registry.slos_s();
+            let queue =
+                BoundedQueue::with_policy(cfg.queue_cap, clock.clone(), cfg.sched, slo_s.clone());
+            let slo_ms: Vec<Option<f64>> = slo_s.iter().map(|o| o.map(|s| s * 1e3)).collect();
+            let collector = Mutex::new(Collector::new(slo_ms));
+            let chaos = ChaosRuntime::new();
+            let errors = Mutex::new(Vec::new());
+            let samples_per_task = registry.sample_counts();
+            let workers = cfg.workers.max(1);
+
+            let metrics = MetricsRegistry::new();
+            metrics.gauge_set("serve_workers", workers as f64);
+            let tracer = cfg.tracing.map(Tracer::new);
+            let settled = AtomicUsize::new(0);
+            let live_workers = AtomicUsize::new(workers);
+            let next_track = AtomicUsize::new(0);
+            let bridge = NetBridge::default();
+
+            let ctx = ServeCtx {
+                queue: &queue,
+                registry,
+                cfg,
+                clock: &clock,
+                collector: &collector,
+                chaos: &chaos,
+                errors: &errors,
+                metrics: &metrics,
+                tracer: tracer.as_ref(),
+                next_track: &next_track,
+                settled: &settled,
+                live_workers: &live_workers,
+                net: Some(&bridge),
+            };
+            let (shed_per_task, metrics_dumps, offered_direct, net_stats) =
+                std::thread::scope(|scope| {
+                    let front =
+                        scope.spawn(|| reactor::run(scope, &ctx, self, &plan, &samples_per_task));
+                    for _ in 0..workers {
+                        scope.spawn(|| worker_loop(&ctx));
+                    }
+                    front.join().expect("reactor thread panicked")
+                });
+            drop(ctx); // release the &tracer borrow so finish() can consume it
+
+            let mut stats = super::finalize_serve(
+                registry,
+                &queue,
+                &clock,
+                collector,
+                &metrics,
+                tracer,
+                &chaos,
+                errors,
+                shed_per_task,
+                offered_direct,
+                metrics_dumps,
+            )?;
+            stats.net = Some(net_stats);
+            Ok(stats)
+        }
+    }
+}

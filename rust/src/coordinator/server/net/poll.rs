@@ -1,0 +1,104 @@
+//! Raw-FFI `poll(2)` readiness for the socket front door — no `libc`
+//! crate, no mio/tokio; the same direct-syscall precedent as the
+//! raw-FFI mmap in `artifact/mmap.rs` (this repo builds fully offline).
+//!
+//! The reactor registers the listener plus every connection with the
+//! interest bits it currently wants (`POLLIN` gated by backpressure,
+//! `POLLOUT` only while a write buffer is non-empty) and waits with a
+//! short tick timeout — the tick doubles as the wakeup for
+//! worker-completed outcomes sitting in the bridge outbox, so the loop
+//! needs no self-pipe. On non-unix hosts there is no `poll(2)`;
+//! [`NetServer::bind`](super::NetServer::bind) refuses before this
+//! module's stub could ever be reached.
+
+#[cfg(unix)]
+pub(super) use unix::{poll_fds, PollFd, POLLERR, POLLHUP, POLLIN, POLLOUT};
+
+#[cfg(unix)]
+mod unix {
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    /// readable (or a peer hangup pending read)
+    pub const POLLIN: i16 = 0x001;
+    /// writable without blocking
+    pub const POLLOUT: i16 = 0x004;
+    /// error condition (always reported, never requested)
+    pub const POLLERR: i16 = 0x008;
+    /// peer hung up (always reported, never requested)
+    pub const POLLHUP: i16 = 0x010;
+
+    /// `struct pollfd` from `poll(2)`, bit-for-bit.
+    #[repr(C)]
+    #[derive(Debug, Clone, Copy)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    impl PollFd {
+        pub fn new(fd: RawFd, events: i16) -> Self {
+            PollFd { fd, events, revents: 0 }
+        }
+    }
+
+    // nfds_t is `unsigned long` on Linux and `unsigned int` on macOS
+    #[cfg(target_os = "macos")]
+    type NfdsT = core::ffi::c_uint;
+    #[cfg(not(target_os = "macos"))]
+    type NfdsT = core::ffi::c_ulong;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: core::ffi::c_int) -> core::ffi::c_int;
+    }
+
+    /// Wait until at least one registered fd is ready or `timeout_ms`
+    /// elapses; returns the number of ready fds (0 = tick). EINTR is
+    /// retried internally — the reactor's tick cadence does not care
+    /// which signal interrupted the wait.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(err);
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use std::io::Write;
+        use std::os::unix::io::AsRawFd;
+        use std::os::unix::net::UnixStream;
+
+        #[test]
+        fn poll_times_out_on_idle_and_reports_readable() {
+            let (mut a, b) = UnixStream::pair().unwrap();
+            let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+            // nothing written yet: the wait must tick out, not hang
+            assert_eq!(poll_fds(&mut fds, 10).unwrap(), 0);
+            a.write_all(b"x").unwrap();
+            let n = poll_fds(&mut fds, 1000).unwrap();
+            assert_eq!(n, 1);
+            assert_ne!(fds[0].revents & POLLIN, 0, "readable after the peer wrote");
+        }
+
+        #[test]
+        fn poll_reports_hangup_or_readable_on_peer_drop() {
+            let (a, b) = UnixStream::pair().unwrap();
+            drop(a);
+            let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+            let n = poll_fds(&mut fds, 1000).unwrap();
+            assert_eq!(n, 1);
+            // EOF surfaces as POLLIN (read returns 0) and/or POLLHUP
+            assert_ne!(fds[0].revents & (POLLIN | POLLHUP), 0);
+        }
+    }
+}

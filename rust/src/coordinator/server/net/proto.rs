@@ -1,0 +1,386 @@
+//! Wire protocol for the socket front door: length-prefixed binary
+//! frames (DESIGN.md §12).
+//!
+//! Framing grammar (all integers little-endian):
+//!
+//! ```text
+//! frame    := len:u32 body[len]
+//! body     := ver:u8 opcode:u8 payload
+//! request  := ver=1 op=0x01 task:u16 sample:u32 len_bucket:u8
+//!             arrival_ns:u64 corr:u32          (body = 21 bytes)
+//! response := ver=1 op=0x81 corr:u32 status:u8 pred:i32 lat_us:u64
+//!             (body = 19 bytes)
+//! ```
+//!
+//! The 4-byte length prefix is the *invariant layer*: it is
+//! version-independent, so a frame whose body fails validation (bad
+//! version, unknown opcode, wrong payload size) can be skipped exactly
+//! — the stream stays decodable and the server answers a
+//! [`WireStatus::Error`] response instead of dropping the connection.
+//! Only a length prefix larger than the configured frame cap is
+//! *fatal*: at that point the stream itself can no longer be trusted
+//! (the "frame" may be garbage or a resource attack), so the server
+//! responds once and closes.
+//!
+//! `arrival_ns` stamps the request's arrival on the server's serve
+//! clock: `0` means "now" (wall-clock clients), a nonzero value replays
+//! a recorded trace deterministically on the virtual clock — the
+//! reactor advances the timeline to the stamp before admission, exactly
+//! like the in-process trace replay. `corr` is an opaque client
+//! correlation id echoed in the response, so clients may pipeline
+//! requests freely.
+//!
+//! [`FrameDecoder`] is incremental: bytes are fed in whatever chunks
+//! the socket produces, and the decode is byte-split-invariant — the
+//! property suite in `rust/tests/net.rs` fuzzes arbitrary chunkings
+//! against one-shot decodes.
+
+use anyhow::{bail, Context, Result};
+
+/// Protocol version carried in every frame body.
+pub const WIRE_VERSION: u8 = 1;
+/// Opcode: client → server inference request.
+pub const OP_REQUEST: u8 = 0x01;
+/// Opcode: server → client response.
+pub const OP_RESPONSE: u8 = 0x81;
+/// Request body size in bytes (after the length prefix).
+pub const REQ_BODY_LEN: usize = 21;
+/// Response body size in bytes (after the length prefix).
+pub const RESP_BODY_LEN: usize = 19;
+/// Default cap on `len` — far above [`REQ_BODY_LEN`], so the cap only
+/// trips on garbage or hostile streams, never on well-formed traffic.
+pub const DEFAULT_MAX_FRAME: usize = 1024;
+
+/// Terminal verdict carried in a response frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WireStatus {
+    /// completed; `pred` is the model's argmax (or -1 under a simulated
+    /// service model)
+    Ok = 0,
+    /// shed at admission (queue full)
+    Shed = 1,
+    /// refused: the server is draining and admits nothing new
+    Closed = 2,
+    /// admitted but expired against its deadline before execution
+    Expired = 3,
+    /// protocol error in the *request* frame (never admitted)
+    Error = 4,
+}
+
+impl WireStatus {
+    /// Decode a status byte (client side).
+    pub fn from_u8(b: u8) -> Result<Self> {
+        Ok(match b {
+            0 => WireStatus::Ok,
+            1 => WireStatus::Shed,
+            2 => WireStatus::Closed,
+            3 => WireStatus::Expired,
+            4 => WireStatus::Error,
+            other => bail!("unknown wire status byte {other}"),
+        })
+    }
+}
+
+/// A decoded client request frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireRequest {
+    /// tenant/task id (bounds-checked against the registry at admission)
+    pub task: u16,
+    /// dataset sample index within the task
+    pub sample: u32,
+    /// sequence-length bucket (the batch key's second component)
+    pub len_bucket: u8,
+    /// serve-clock arrival stamp in nanoseconds; 0 = "stamp on decode"
+    pub arrival_ns: u64,
+    /// opaque correlation id echoed in the response
+    pub corr: u32,
+}
+
+/// A response frame (server → client).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireResponse {
+    /// the request's correlation id
+    pub corr: u32,
+    /// terminal verdict
+    pub status: WireStatus,
+    /// argmax prediction for `Ok` (else -1)
+    pub pred: i32,
+    /// arrival → terminal latency in microseconds (queue wait for
+    /// expiries, 0 for front-door verdicts)
+    pub lat_us: u64,
+}
+
+/// Why a frame failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The length framing itself is untrustworthy (oversize prefix);
+    /// the connection must be closed after an error response.
+    Fatal(String),
+    /// This frame's body is invalid but the framing is intact; the
+    /// frame is skipped, an error response is owed, and the connection
+    /// stays usable. `corr` is echoed when the layout allowed
+    /// recovering it, else 0.
+    Frame {
+        /// correlation id to echo, 0 when unrecoverable
+        corr: u32,
+        /// human-readable cause
+        msg: String,
+    },
+}
+
+/// Encode a request as one full frame (length prefix included).
+pub fn encode_request(r: &WireRequest) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + REQ_BODY_LEN);
+    out.extend_from_slice(&(REQ_BODY_LEN as u32).to_le_bytes());
+    out.push(WIRE_VERSION);
+    out.push(OP_REQUEST);
+    out.extend_from_slice(&r.task.to_le_bytes());
+    out.extend_from_slice(&r.sample.to_le_bytes());
+    out.push(r.len_bucket);
+    out.extend_from_slice(&r.arrival_ns.to_le_bytes());
+    out.extend_from_slice(&r.corr.to_le_bytes());
+    debug_assert_eq!(out.len(), 4 + REQ_BODY_LEN);
+    out
+}
+
+/// Encode a response as one full frame (length prefix included).
+pub fn encode_response(r: &WireResponse) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + RESP_BODY_LEN);
+    out.extend_from_slice(&(RESP_BODY_LEN as u32).to_le_bytes());
+    out.push(WIRE_VERSION);
+    out.push(OP_RESPONSE);
+    out.extend_from_slice(&r.corr.to_le_bytes());
+    out.push(r.status as u8);
+    out.extend_from_slice(&r.pred.to_le_bytes());
+    out.extend_from_slice(&r.lat_us.to_le_bytes());
+    debug_assert_eq!(out.len(), 4 + RESP_BODY_LEN);
+    out
+}
+
+fn u16le(b: &[u8]) -> u16 {
+    u16::from_le_bytes([b[0], b[1]])
+}
+
+fn u32le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn u64le(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Parse one request *body* (length prefix already stripped).
+fn parse_request_body(body: &[u8]) -> Result<WireRequest, FrameError> {
+    if body.len() < 2 {
+        return Err(FrameError::Frame {
+            corr: 0,
+            msg: format!("body too short for header: {} bytes", body.len()),
+        });
+    }
+    if body[0] != WIRE_VERSION {
+        return Err(FrameError::Frame {
+            corr: 0,
+            msg: format!("unsupported wire version {}", body[0]),
+        });
+    }
+    if body[1] != OP_REQUEST {
+        return Err(FrameError::Frame {
+            corr: 0,
+            msg: format!("unexpected opcode {:#04x}", body[1]),
+        });
+    }
+    if body.len() != REQ_BODY_LEN {
+        return Err(FrameError::Frame {
+            corr: 0,
+            msg: format!("request body is {} bytes, expected {REQ_BODY_LEN}", body.len()),
+        });
+    }
+    Ok(WireRequest {
+        task: u16le(&body[2..4]),
+        sample: u32le(&body[4..8]),
+        len_bucket: body[8],
+        arrival_ns: u64le(&body[9..17]),
+        corr: u32le(&body[17..21]),
+    })
+}
+
+/// Incremental frame decoder: feed socket chunks in, pull whole frames
+/// out. Decoding is invariant under how the byte stream was chunked —
+/// the property the hermetic fuzz suite pins.
+#[derive(Debug)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// bytes before this offset are consumed (compacted lazily so feed
+    /// and decode stay amortized O(bytes))
+    start: usize,
+    max_frame: usize,
+}
+
+impl FrameDecoder {
+    /// A decoder rejecting length prefixes above `max_frame` as fatal.
+    pub fn new(max_frame: usize) -> Self {
+        FrameDecoder { buf: Vec::new(), start: 0, max_frame }
+    }
+
+    /// Append freshly read socket bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // compact before growing: consumed prefix is reclaimed once it
+        // dominates the buffer, keeping memory ≤ ~2 frames + one chunk
+        if self.start > 0 && self.start >= self.buf.len().saturating_sub(self.start) {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed (partial-frame carryover).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Try to decode the next frame. `None` = need more bytes. A
+    /// `Frame` error consumes the bad frame (the stream continues); a
+    /// `Fatal` error consumes nothing (the connection is done).
+    pub fn next_frame(&mut self) -> Option<Result<WireRequest, FrameError>> {
+        let avail = self.buf.len() - self.start;
+        if avail < 4 {
+            return None;
+        }
+        let len = u32le(&self.buf[self.start..self.start + 4]) as usize;
+        if len > self.max_frame {
+            return Some(Err(FrameError::Fatal(format!(
+                "frame length {len} exceeds the {}-byte cap",
+                self.max_frame
+            ))));
+        }
+        if avail < 4 + len {
+            return None;
+        }
+        let body_start = self.start + 4;
+        let res = parse_request_body(&self.buf[body_start..body_start + len]);
+        self.start += 4 + len;
+        Some(res)
+    }
+}
+
+/// Blocking client-side read of one response frame (driver + tests).
+pub fn read_response<R: std::io::Read>(r: &mut R) -> Result<WireResponse> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf).context("reading response length prefix")?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len != RESP_BODY_LEN {
+        bail!("response body is {len} bytes, expected {RESP_BODY_LEN}");
+    }
+    let mut body = [0u8; RESP_BODY_LEN];
+    r.read_exact(&mut body).context("reading response body")?;
+    if body[0] != WIRE_VERSION {
+        bail!("unsupported wire version {}", body[0]);
+    }
+    if body[1] != OP_RESPONSE {
+        bail!("unexpected opcode {:#04x} in response", body[1]);
+    }
+    Ok(WireResponse {
+        corr: u32le(&body[2..6]),
+        status: WireStatus::from_u8(body[6])?,
+        pred: i32::from_le_bytes([body[7], body[8], body[9], body[10]]),
+        lat_us: u64le(&body[11..19]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_req(corr: u32) -> WireRequest {
+        WireRequest { task: 3, sample: 77, len_bucket: 2, arrival_ns: 1_250_000_000, corr }
+    }
+
+    #[test]
+    fn request_roundtrips_through_the_decoder() {
+        let r = sample_req(42);
+        let frame = encode_request(&r);
+        assert_eq!(frame.len(), 4 + REQ_BODY_LEN);
+        let mut d = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        d.feed(&frame);
+        assert_eq!(d.next_frame(), Some(Ok(r)));
+        assert_eq!(d.next_frame(), None);
+        assert_eq!(d.buffered(), 0);
+    }
+
+    #[test]
+    fn response_roundtrips_through_read_response() {
+        let resp = WireResponse { corr: 9, status: WireStatus::Expired, pred: -1, lat_us: 1234 };
+        let frame = encode_response(&resp);
+        let mut cursor = &frame[..];
+        assert_eq!(read_response(&mut cursor).unwrap(), resp);
+    }
+
+    #[test]
+    fn byte_at_a_time_decode_matches_one_shot() {
+        let frames: Vec<u8> = (0..5).flat_map(|i| encode_request(&sample_req(i))).collect();
+        let mut d = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        let mut got = Vec::new();
+        for &b in &frames {
+            d.feed(&[b]);
+            while let Some(f) = d.next_frame() {
+                got.push(f.unwrap());
+            }
+        }
+        assert_eq!(got.iter().map(|r| r.corr).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn bad_version_and_opcode_are_skippable_frame_errors() {
+        let mut frame = encode_request(&sample_req(1));
+        frame[4] = 9; // version byte
+        let mut d = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        d.feed(&frame);
+        d.feed(&encode_request(&sample_req(2)));
+        match d.next_frame() {
+            Some(Err(FrameError::Frame { corr: 0, .. })) => {}
+            other => panic!("expected frame error, got {other:?}"),
+        }
+        // the stream keeps decoding after the bad frame
+        assert_eq!(d.next_frame().unwrap().unwrap().corr, 2);
+    }
+
+    #[test]
+    fn wrong_body_size_is_a_frame_error_not_a_desync() {
+        // a well-framed body of the wrong size: 10 zero bytes
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&10u32.to_le_bytes());
+        bad.push(WIRE_VERSION);
+        bad.push(OP_REQUEST);
+        bad.extend_from_slice(&[0u8; 8]);
+        let mut d = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        d.feed(&bad);
+        d.feed(&encode_request(&sample_req(7)));
+        assert!(matches!(d.next_frame(), Some(Err(FrameError::Frame { .. }))));
+        assert_eq!(d.next_frame().unwrap().unwrap().corr, 7);
+    }
+
+    #[test]
+    fn oversize_length_prefix_is_fatal_and_sticky() {
+        let mut d = FrameDecoder::new(64);
+        d.feed(&(65u32).to_le_bytes());
+        assert!(matches!(d.next_frame(), Some(Err(FrameError::Fatal(_)))));
+        // fatal errors consume nothing: the stream stays poisoned
+        assert!(matches!(d.next_frame(), Some(Err(FrameError::Fatal(_)))));
+    }
+
+    #[test]
+    fn compaction_keeps_partial_frames_intact() {
+        let frame = encode_request(&sample_req(5));
+        let mut d = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        // feed many full frames to trigger compaction, then a split one
+        for _ in 0..100 {
+            d.feed(&frame);
+            assert!(d.next_frame().unwrap().is_ok());
+        }
+        d.feed(&frame[..7]);
+        assert_eq!(d.next_frame(), None);
+        d.feed(&frame[7..]);
+        assert_eq!(d.next_frame().unwrap().unwrap().corr, 5);
+    }
+}

@@ -1,0 +1,606 @@
+//! The poll(2) readiness loop behind [`NetServer::serve`]: one thread
+//! that accepts, reads, decodes, admits, and writes — the socket
+//! counterpart of `front_loop` (DESIGN.md §12).
+//!
+//! Tick structure (one iteration of [`run`]'s loop):
+//!
+//! 1. **deliver** worker-reported outcomes from the [`NetBridge`] to
+//!    their originating connections (route map: request id → slot /
+//!    connection generation / correlation id);
+//! 2. **decode** any frames already buffered whose backpressure gate
+//!    has reopened (outcome delivery in step 1 frees inflight slots);
+//! 3. **stop check** — on the stop flag or the `stop_after` settle
+//!    target: fire remaining chaos events, close the queue (workers
+//!    drain and exit), then keep ticking until workers are gone and the
+//!    outcome mailbox is empty;
+//! 4. **poll** the listener (unless stopping or at `max_conns`) plus
+//!    every connection with its *current* interest set — `POLLIN` only
+//!    while the read gate is open, `POLLOUT` only while response bytes
+//!    are owed — with a short tick timeout that doubles as the wakeup
+//!    for outcomes (no self-pipe needed);
+//! 5. **read/decode/admit** readable connections and **flush** writable
+//!    ones; **reap** connections that have met every obligation.
+//!
+//! Admission reuses the exact front helpers of the trace replay
+//! (`push_traced`, `fire_event`, `maybe_dump_metrics`), so spans,
+//! per-tenant shed attribution, lockstep quiescence, and chaos firing
+//! are identical regardless of ingress. The wire adds only: a `Closed`
+//! refusal for frames that land after drain begins (counted separately,
+//! never offered to the queue — the conservation law stays exact), and
+//! response routing for everything else.
+
+use std::collections::HashMap;
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::Ordering;
+use std::thread::Scope;
+use std::time::Duration;
+
+use super::conn::{Conn, ReadOutcome};
+use super::poll::{poll_fds, PollFd, POLLERR, POLLHUP, POLLIN, POLLOUT};
+use super::proto::{FrameError, WireRequest, WireResponse, WireStatus, RESP_BODY_LEN};
+use super::{NetServer, NetStats};
+use crate::coordinator::server::chaos::{ChaosEvent, ChaosPlan};
+use crate::coordinator::server::worker::ServeCtx;
+use crate::coordinator::server::{
+    fire_event, maybe_dump_metrics, push_traced, Enqueue, FrontState,
+};
+use crate::data::TaggedRequest;
+use crate::obs::span::{EventKind, NO_REQ, NO_TASK};
+use crate::obs::trace::FRONT_TRACK;
+
+/// Poll timeout per tick, in milliseconds. Small enough that worker
+/// outcomes reach their connections promptly, large enough that an idle
+/// server burns no measurable CPU.
+const TICK_MS: i32 = 2;
+/// Bounded post-drain flush: at most this many write-only poll rounds
+/// before undelivered responses are counted dropped and the run returns.
+const FLUSH_ROUNDS: usize = 256;
+
+/// Where an admitted request's response must go.
+struct RouteEntry {
+    /// index into the connection slab
+    slot: usize,
+    /// connection id at admission time — a stale slot reuse can never
+    /// misdeliver
+    conn_id: u64,
+    /// client correlation id to echo
+    corr: u32,
+}
+
+/// Ordered cursor over the chaos plan, mirroring `front_loop`'s
+/// peek-and-fire: events fire when the arrival timeline passes them,
+/// and anything left fires at stop before the queue closes.
+struct EventCursor<'p> {
+    it: std::slice::Iter<'p, ChaosEvent>,
+    next: Option<&'p ChaosEvent>,
+}
+
+impl<'p> EventCursor<'p> {
+    fn new(plan: &'p ChaosPlan) -> Self {
+        let mut it = plan.events().iter();
+        let next = it.next();
+        EventCursor { it, next }
+    }
+
+    /// The next event at or before `t_s`, advancing past it.
+    fn due(&mut self, t_s: f64) -> Option<&'p ChaosEvent> {
+        match self.next {
+            Some(e) if e.at_s <= t_s => {
+                self.next = self.it.next();
+                Some(e)
+            }
+            _ => None,
+        }
+    }
+
+    /// The next event unconditionally (stop-time flush), advancing.
+    fn take(&mut self) -> Option<&'p ChaosEvent> {
+        let e = self.next;
+        if e.is_some() {
+            self.next = self.it.next();
+        }
+        e
+    }
+}
+
+fn front_resp(corr: u32, status: WireStatus) -> WireResponse {
+    WireResponse { corr, status, pred: -1, lat_us: 0 }
+}
+
+/// The reactor entry point; runs on the front thread inside
+/// `NetServer::serve`'s scope. Returns the per-tenant shed tally, the
+/// periodic metrics dumps, the number of *direct* (non-storm) admission
+/// attempts, and the wire counters.
+pub(super) fn run<'scope, 'a, 'reg>(
+    scope: &'scope Scope<'scope, '_>,
+    ctx: &'scope ServeCtx<'a, 'reg>,
+    srv: &NetServer,
+    plan: &ChaosPlan,
+    samples_per_task: &[usize],
+) -> (Vec<usize>, Vec<(f64, String)>, usize, NetStats)
+where
+    'a: 'scope,
+    'reg: 'scope,
+{
+    let mut st = FrontState::new(ctx, samples_per_task.len(), 0);
+    st.tt = ctx.tracer.map(|t| t.thread(FRONT_TRACK));
+    let mut net = NetStats::default();
+    // connection slab: slots are append-only per serve (no reuse), so a
+    // RouteEntry's slot+conn_id pair is unambiguous for the whole run
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut route: HashMap<usize, RouteEntry> = HashMap::new();
+    let mut events = EventCursor::new(plan);
+    let mut scratch = vec![0u8; 16 * 1024];
+    let mut next_conn_id: u64 = 0;
+    let mut stopping = false;
+    let mut poll_failed = false;
+
+    loop {
+        deliver_outcomes(ctx, &mut conns, &mut route, &mut net);
+
+        // frames buffered behind a gate that outcome delivery reopened
+        for slot in 0..conns.len() {
+            if let Some(mut c) = conns[slot].take() {
+                drain_frames(
+                    scope, ctx, srv, samples_per_task, &mut st, &mut events, &mut route,
+                    &mut net, &mut c, slot, stopping,
+                );
+                conns[slot] = Some(c);
+            }
+        }
+
+        if !stopping {
+            let stop_wanted = srv.stop.load(Ordering::SeqCst)
+                || srv
+                    .ncfg
+                    .stop_after
+                    .map_or(false, |n| ctx.settled.load(Ordering::SeqCst) >= n);
+            if stop_wanted {
+                stopping = true;
+                // events scheduled past the last arrival still fire,
+                // before close — same ordering as the trace replay front
+                while let Some(e) = events.take() {
+                    fire_event(scope, ctx, e, samples_per_task, &mut st);
+                }
+                ctx.queue.close();
+                if let Some(tt) = st.tt.as_mut() {
+                    tt.emit(ctx.clock.now_ns(), EventKind::QueueClose, NO_REQ, NO_TASK, 0);
+                }
+            }
+        }
+
+        // drained: every worker exited (queue closed and empty) and every
+        // reported outcome has been routed to a response buffer
+        if stopping
+            && ctx.live_workers.load(Ordering::SeqCst) == 0
+            && ctx.net.map_or(true, |b| b.is_empty())
+        {
+            break;
+        }
+
+        // build this tick's interest set
+        let mut fds: Vec<PollFd> = Vec::new();
+        let mut fd_slot: Vec<usize> = Vec::new();
+        let active = conns.iter().flatten().count();
+        if !stopping && active < srv.ncfg.max_conns {
+            fds.push(PollFd::new(srv.listener.as_raw_fd(), POLLIN));
+            fd_slot.push(usize::MAX);
+        }
+        for (slot, c) in conns.iter().enumerate() {
+            if let Some(c) = c {
+                let mut interest = 0i16;
+                if c.wants_read(&srv.ncfg) {
+                    interest |= POLLIN;
+                }
+                if c.wants_write() {
+                    interest |= POLLOUT;
+                }
+                if interest != 0 {
+                    fds.push(PollFd::new(c.stream.as_raw_fd(), interest));
+                    fd_slot.push(slot);
+                }
+            }
+        }
+
+        let nready = match poll_fds(&mut fds, TICK_MS) {
+            Ok(n) => n,
+            Err(e) => {
+                if !poll_failed {
+                    // unrecoverable readiness failure: surface it (the
+                    // serve returns Err) and start draining so workers
+                    // and the scope can still exit cleanly
+                    poll_failed = true;
+                    ctx.errors.lock().unwrap().push(format!("poll(2) failed: {e}"));
+                    if !stopping {
+                        stopping = true;
+                        ctx.queue.close();
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(TICK_MS as u64));
+                0
+            }
+        };
+
+        if nready > 0 {
+            for i in 0..fds.len() {
+                let revents = fds[i].revents;
+                if revents == 0 {
+                    continue;
+                }
+                let slot = fd_slot[i];
+                if slot == usize::MAX {
+                    accept_ready(srv, ctx, &mut conns, &mut next_conn_id, &mut st, &mut net);
+                    continue;
+                }
+                if revents & (POLLIN | POLLHUP | POLLERR) != 0 {
+                    if let Some(mut c) = conns[slot].take() {
+                        read_and_decode(
+                            scope, ctx, srv, samples_per_task, &mut st, &mut events,
+                            &mut route, &mut net, &mut c, slot, stopping, &mut scratch,
+                        );
+                        conns[slot] = Some(c);
+                    }
+                }
+                if revents & POLLOUT != 0 {
+                    if let Some(c) = conns[slot].as_mut() {
+                        net.bytes_out += c.flush() as u64;
+                    }
+                }
+            }
+        }
+
+        reap_finished(ctx, &mut conns, &mut st, &mut net);
+    }
+
+    // strand sweep with wire responses: if chaos killed every worker,
+    // admitted requests sit in the closed queue forever — account them
+    // expired (as `serve` does) *and* answer their connections, so a
+    // client never hangs on a request the server has given up on.
+    let leftovers = ctx.queue.drain_remaining();
+    if !leftovers.is_empty() {
+        let (end_ns, end_s) = ctx.clock.stamp();
+        let mut g = ctx.collector.lock().unwrap();
+        for it in &leftovers {
+            let wait_ms = (end_s - it.req.arrival_s) * 1e3;
+            g.record_expired(it.req.task, &[wait_ms]);
+            if let Some(tt) = st.tt.as_mut() {
+                tt.emit(
+                    end_ns,
+                    EventKind::Expire,
+                    it.req.id as u64,
+                    it.req.task,
+                    (wait_ms * 1e3) as u64, // wait in µs, like worker expiries
+                );
+            }
+            if let Some(rt) = route.remove(&it.req.id) {
+                match conns.get_mut(rt.slot).and_then(|o| o.as_mut()) {
+                    Some(c) if c.id == rt.conn_id && !c.dead => {
+                        c.inflight = c.inflight.saturating_sub(1);
+                        c.push_response(&WireResponse {
+                            corr: rt.corr,
+                            status: WireStatus::Expired,
+                            pred: -1,
+                            lat_us: (wait_ms * 1e3) as u64,
+                        });
+                        net.frames_out += 1;
+                    }
+                    _ => net.responses_dropped += 1,
+                }
+            }
+        }
+    }
+
+    // bounded final flush: deliver owed responses, then close everything
+    for _ in 0..FLUSH_ROUNDS {
+        let mut fds: Vec<PollFd> = Vec::new();
+        let mut fd_slot: Vec<usize> = Vec::new();
+        for (slot, c) in conns.iter().enumerate() {
+            if let Some(c) = c {
+                if c.wants_write() {
+                    fds.push(PollFd::new(c.stream.as_raw_fd(), POLLOUT));
+                    fd_slot.push(slot);
+                }
+            }
+        }
+        if fds.is_empty() {
+            break;
+        }
+        if poll_fds(&mut fds, TICK_MS).is_err() {
+            break;
+        }
+        for i in 0..fds.len() {
+            if fds[i].revents != 0 {
+                if let Some(c) = conns[fd_slot[i]].as_mut() {
+                    net.bytes_out += c.flush() as u64;
+                }
+            }
+        }
+    }
+    for slot in 0..conns.len() {
+        if let Some(c) = conns[slot].take() {
+            net.write_buf_high_water = net.write_buf_high_water.max(c.wbuf_high_water);
+            // whole response frames that never made it out
+            net.responses_dropped += (c.pending_write() / (4 + RESP_BODY_LEN)) as u64;
+            if let Some(tt) = st.tt.as_mut() {
+                tt.emit(ctx.clock.now_ns(), EventKind::ConnClose, NO_REQ, NO_TASK, c.id);
+            }
+        }
+    }
+
+    // fold the deterministic wire counters into the run's Prometheus
+    // registry (the high-water mark stays out: flush timing is not
+    // lockstep-reproducible and CI byte-compares expositions)
+    let mh = ctx.metrics.handle();
+    mh.counter_add("serve_net_connections_total", net.connections as u64);
+    mh.counter_add("serve_net_frames_in_total", net.frames_in);
+    mh.counter_add("serve_net_frames_out_total", net.frames_out);
+    mh.counter_add("serve_net_bytes_in_total", net.bytes_in);
+    mh.counter_add("serve_net_bytes_out_total", net.bytes_out);
+    mh.counter_add("serve_net_parse_errors_total", net.parse_errors);
+    mh.counter_add("serve_net_refused_closed_total", net.refused_closed);
+    mh.counter_add("serve_net_responses_dropped_total", net.responses_dropped);
+
+    drop(st.tt); // flush the front ring before the scope joins workers
+    (st.shed, st.dumps, st.offered - st.injected, net)
+}
+
+/// Route every worker-reported outcome to its connection's write buffer.
+/// Outcomes without a route are chaos-storm injections (no wire origin);
+/// outcomes whose connection died are counted dropped — the work was
+/// done and accounted either way.
+fn deliver_outcomes(
+    ctx: &ServeCtx<'_, '_>,
+    conns: &mut [Option<Conn>],
+    route: &mut HashMap<usize, RouteEntry>,
+    net: &mut NetStats,
+) {
+    let Some(bridge) = ctx.net else { return };
+    for d in bridge.drain() {
+        let Some(rt) = route.remove(&d.id) else { continue };
+        match conns.get_mut(rt.slot).and_then(|o| o.as_mut()) {
+            Some(c) if c.id == rt.conn_id && !c.dead => {
+                c.inflight = c.inflight.saturating_sub(1);
+                c.push_response(&WireResponse {
+                    corr: rt.corr,
+                    status: d.status,
+                    pred: d.pred,
+                    lat_us: d.lat_us,
+                });
+                net.frames_out += 1;
+            }
+            _ => net.responses_dropped += 1,
+        }
+    }
+}
+
+/// Accept until the listener would block (or the connection cap bites).
+fn accept_ready(
+    srv: &NetServer,
+    ctx: &ServeCtx<'_, '_>,
+    conns: &mut Vec<Option<Conn>>,
+    next_conn_id: &mut u64,
+    st: &mut FrontState<'_>,
+    net: &mut NetStats,
+) {
+    loop {
+        if conns.iter().flatten().count() >= srv.ncfg.max_conns {
+            return;
+        }
+        match srv.listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue; // the peer is already gone; move on
+                }
+                let _ = stream.set_nodelay(true); // latency over batching; best-effort
+                let id = *next_conn_id;
+                *next_conn_id += 1;
+                net.connections += 1;
+                if let Some(tt) = st.tt.as_mut() {
+                    tt.emit(ctx.clock.now_ns(), EventKind::ConnOpen, NO_REQ, NO_TASK, id);
+                }
+                conns.push(Some(Conn::new(stream, id, srv.ncfg.max_frame)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return, // transient accept failure; retry next tick
+        }
+    }
+}
+
+/// Read a connection until it would block (or its gate closes), decoding
+/// and admitting between chunks so the per-connection memory bound holds
+/// even against a firehose sender.
+#[allow(clippy::too_many_arguments)]
+fn read_and_decode<'scope, 'a, 'reg>(
+    scope: &'scope Scope<'scope, '_>,
+    ctx: &'scope ServeCtx<'a, 'reg>,
+    srv: &NetServer,
+    samples_per_task: &[usize],
+    st: &mut FrontState<'_>,
+    events: &mut EventCursor<'_>,
+    route: &mut HashMap<usize, RouteEntry>,
+    net: &mut NetStats,
+    c: &mut Conn,
+    slot: usize,
+    stopping: bool,
+    scratch: &mut [u8],
+) where
+    'a: 'scope,
+    'reg: 'scope,
+{
+    loop {
+        if !c.wants_read(&srv.ncfg) {
+            return;
+        }
+        match c.read_chunk(scratch) {
+            ReadOutcome::Data(n) => {
+                net.bytes_in += n as u64;
+                drain_frames(
+                    scope, ctx, srv, samples_per_task, st, events, route, net, c, slot, stopping,
+                );
+            }
+            // EOF: half-close — drain what the decoder still holds, keep
+            // the write side until every owed response is delivered
+            ReadOutcome::Eof => {
+                drain_frames(
+                    scope, ctx, srv, samples_per_task, st, events, route, net, c, slot, stopping,
+                );
+                return;
+            }
+            ReadOutcome::WouldBlock => return,
+            // hard error: the conn is marked dead; routed responses for
+            // its inflight requests will count as dropped at delivery
+            ReadOutcome::Failed(_) => return,
+        }
+    }
+}
+
+/// Decode and admit every complete frame the gate allows right now.
+#[allow(clippy::too_many_arguments)]
+fn drain_frames<'scope, 'a, 'reg>(
+    scope: &'scope Scope<'scope, '_>,
+    ctx: &'scope ServeCtx<'a, 'reg>,
+    srv: &NetServer,
+    samples_per_task: &[usize],
+    st: &mut FrontState<'_>,
+    events: &mut EventCursor<'_>,
+    route: &mut HashMap<usize, RouteEntry>,
+    net: &mut NetStats,
+    c: &mut Conn,
+    slot: usize,
+    stopping: bool,
+) where
+    'a: 'scope,
+    'reg: 'scope,
+{
+    loop {
+        if c.poisoned || c.dead {
+            return;
+        }
+        if c.pending_write() > srv.ncfg.write_buf_cap
+            || c.inflight >= srv.ncfg.max_inflight_per_conn
+        {
+            return; // gate closed; buffered frames wait for the reopen
+        }
+        match c.decoder.next_frame() {
+            None => return,
+            Some(Ok(req)) => {
+                net.frames_in += 1;
+                admit(scope, ctx, samples_per_task, st, events, route, net, c, slot, req, stopping);
+            }
+            Some(Err(FrameError::Frame { corr, .. })) => {
+                // skippable: answer Error, keep decoding the stream
+                net.frames_in += 1;
+                net.parse_errors += 1;
+                c.push_response(&front_resp(corr, WireStatus::Error));
+                net.frames_out += 1;
+            }
+            Some(Err(FrameError::Fatal(_))) => {
+                // framing untrustworthy: answer once, poison, stop reading
+                net.parse_errors += 1;
+                c.push_response(&front_resp(0, WireStatus::Error));
+                net.frames_out += 1;
+                c.poisoned = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Admit one decoded request through the shared front path, answering
+/// front-door verdicts (Shed/Closed/Error) immediately and routing
+/// accepted requests for their eventual worker outcome.
+#[allow(clippy::too_many_arguments)]
+fn admit<'scope, 'a, 'reg>(
+    scope: &'scope Scope<'scope, '_>,
+    ctx: &'scope ServeCtx<'a, 'reg>,
+    samples_per_task: &[usize],
+    st: &mut FrontState<'_>,
+    events: &mut EventCursor<'_>,
+    route: &mut HashMap<usize, RouteEntry>,
+    net: &mut NetStats,
+    c: &mut Conn,
+    slot: usize,
+    req: WireRequest,
+    stopping: bool,
+) where
+    'a: 'scope,
+    'reg: 'scope,
+{
+    if stopping {
+        // drain has begun: nothing new is offered to the queue, so the
+        // refusal lives outside the conservation law by construction
+        net.refused_closed += 1;
+        c.push_response(&front_resp(req.corr, WireStatus::Closed));
+        net.frames_out += 1;
+        return;
+    }
+    let task = req.task as usize;
+    if task >= samples_per_task.len() || (req.sample as usize) >= samples_per_task[task] {
+        // well-formed frame, nonsense content (unknown tenant or sample
+        // index): rejected before admission, like a parse error
+        net.parse_errors += 1;
+        c.push_response(&front_resp(req.corr, WireStatus::Error));
+        net.frames_out += 1;
+        return;
+    }
+    // `arrival_ns` = 0 means "stamp now"; a nonzero stamp replays a
+    // recorded timeline (the virtual clock advances monotonically — a
+    // stale stamp keeps its arrival time but cannot move time backwards)
+    let arrival_s =
+        if req.arrival_ns > 0 { req.arrival_ns as f64 * 1e-9 } else { ctx.clock.now_s() };
+    while let Some(e) = events.due(arrival_s) {
+        fire_event(scope, ctx, e, samples_per_task, st);
+    }
+    ctx.clock.sleep_until(arrival_s);
+    maybe_dump_metrics(ctx, st);
+    let r = TaggedRequest {
+        id: st.alloc_id(),
+        task,
+        arrival_s,
+        sample: req.sample as usize,
+        len_bucket: req.len_bucket,
+    };
+    match push_traced(ctx, st, r) {
+        Enqueue::Accepted => {
+            route.insert(r.id, RouteEntry { slot, conn_id: c.id, corr: req.corr });
+            c.inflight += 1;
+        }
+        Enqueue::Shed => {
+            c.push_response(&front_resp(req.corr, WireStatus::Shed));
+            net.frames_out += 1;
+        }
+        Enqueue::Closed => {
+            // unreachable by construction: this reactor is the only
+            // closer and it refuses with `stopping` before pushing. If it
+            // ever fires, the books are off — surface it as a hard error.
+            ctx.errors
+                .lock()
+                .unwrap()
+                .push("internal: socket front pushed after queue close".into());
+            c.push_response(&front_resp(req.corr, WireStatus::Closed));
+            net.frames_out += 1;
+        }
+    }
+}
+
+/// Reap connections that have met every obligation (EOF or poison, no
+/// inflight, nothing buffered — or dead), folding their high-water marks
+/// into the run's stats.
+fn reap_finished(
+    ctx: &ServeCtx<'_, '_>,
+    conns: &mut [Option<Conn>],
+    st: &mut FrontState<'_>,
+    net: &mut NetStats,
+) {
+    for slot_conn in conns.iter_mut() {
+        let finished = slot_conn.as_ref().map_or(false, |c| c.finished());
+        if finished {
+            let c = slot_conn.take().unwrap();
+            net.write_buf_high_water = net.write_buf_high_water.max(c.wbuf_high_water);
+            if let Some(tt) = st.tt.as_mut() {
+                tt.emit(ctx.clock.now_ns(), EventKind::ConnClose, NO_REQ, NO_TASK, c.id);
+            }
+        }
+    }
+}

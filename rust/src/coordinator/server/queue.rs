@@ -75,6 +75,45 @@ impl std::fmt::Display for SchedPolicy {
     }
 }
 
+/// How workers form batches from the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchMode {
+    /// Fixed windows: every batch is a fresh [`BoundedQueue::pop_batch`]
+    /// — wait for a head, spend up to `max_wait` of clock time on
+    /// stragglers, execute. The straggler window is paid per batch even
+    /// when the queue already holds a backlog of rotting requests.
+    #[default]
+    Fixed,
+    /// Continuous batching: after each execution the worker first tries
+    /// a non-blocking [`BoundedQueue::pop_refill`] — whatever same-key
+    /// requests landed while it was executing become the next batch
+    /// immediately, with no straggler window in between. Only when the
+    /// refill comes back empty does the worker fall back to a blocking
+    /// `pop_batch` (cold start / idle queue), so the size-or-deadline
+    /// semantics still govern the first batch of every busy period.
+    Continuous,
+}
+
+impl BatchMode {
+    /// Parse a CLI spelling (`fixed` | `continuous`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fixed" => Ok(BatchMode::Fixed),
+            "continuous" => Ok(BatchMode::Continuous),
+            other => bail!("unknown batching mode '{other}' (expected fixed|continuous)"),
+        }
+    }
+}
+
+impl std::fmt::Display for BatchMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BatchMode::Fixed => "fixed",
+            BatchMode::Continuous => "continuous",
+        })
+    }
+}
+
 /// A queued request plus its queue-side timestamps (clock seconds).
 #[derive(Debug, Clone, Copy)]
 pub struct QueueItem {
@@ -315,29 +354,8 @@ impl BoundedQueue {
                 }
             }
             // phase 3: drain up to max_batch items with the head's batch
-            // key in ONE forward pass. A stable in-place compaction —
-            // kept items slide left over the holes the batched ones leave
-            // — so every other request keeps its relative queue position.
-            // (The previous implementation called `VecDeque::remove(i)`
-            // per batched item, shifting the tail each time: O(cap·batch)
-            // on a deep mixed-tenant queue. This is O(cap).)
-            let mut batch = Vec::with_capacity(max_batch.min(g.items.len()));
-            let mut write = 0usize;
-            for read in 0..g.items.len() {
-                let it = g.items[read];
-                if batch.len() < max_batch
-                    && it.req.task == task
-                    && it.req.len_bucket == bucket
-                {
-                    batch.push(it);
-                } else {
-                    if write != read {
-                        g.items.swap(write, read);
-                    }
-                    write += 1;
-                }
-            }
-            g.items.truncate(write);
+            // key in one forward pass (see `drain_key`)
+            let batch = Self::drain_key(&mut g.items, task, bucket, max_batch);
             if !batch.is_empty() {
                 return batch;
             }
@@ -346,6 +364,82 @@ impl BoundedQueue {
             // here does NOT mean drained-and-closed, so go back to waiting
             // instead of handing the caller a false shutdown signal
         }
+    }
+
+    /// Drain up to `max_batch` items with batch key `(task, bucket)` in
+    /// ONE forward pass. A stable in-place compaction — kept items slide
+    /// left over the holes the batched ones leave — so every other
+    /// request keeps its relative queue position. (An earlier
+    /// implementation called `VecDeque::remove(i)` per batched item,
+    /// shifting the tail each time: O(cap·batch) on a deep mixed-tenant
+    /// queue. This is O(cap).)
+    fn drain_key(
+        items: &mut VecDeque<QueueItem>,
+        task: usize,
+        bucket: u8,
+        max_batch: usize,
+    ) -> Vec<QueueItem> {
+        let mut batch = Vec::with_capacity(max_batch.min(items.len()));
+        let mut write = 0usize;
+        for read in 0..items.len() {
+            let it = items[read];
+            if batch.len() < max_batch && it.req.task == task && it.req.len_bucket == bucket {
+                batch.push(it);
+            } else {
+                if write != read {
+                    items.swap(write, read);
+                }
+                write += 1;
+            }
+        }
+        items.truncate(write);
+        batch
+    }
+
+    /// Refill a batch without blocking and without a straggler window —
+    /// the continuous-batching pop ([`BatchMode::Continuous`]). Returns
+    /// empty immediately when nothing is queued (the worker then falls
+    /// back to a blocking [`Self::pop_batch`]); otherwise drains up to
+    /// `max_batch` same-key items exactly like `pop_batch` phase 3.
+    ///
+    /// Key selection preserves the scheduling policy's guarantees:
+    ///
+    /// * **EDF** always anchors at the queue-wide EDF head, so the
+    ///   minimum-deadline request is in every refilled batch (within one
+    ///   key the tenant's SLO is uniform, so FIFO position order *is*
+    ///   deadline order and the EDF-minimal item is that key's first
+    ///   match) — a refill can never starve the most urgent request.
+    /// * **FIFO** prefers `hint` (the key of the worker's previous
+    ///   batch) when a matching request is queued — batch-key affinity
+    ///   keeps a hot bucket streaming through one worker instead of
+    ///   re-anchoring on an interleaved queue every pop — and otherwise
+    ///   anchors at the FIFO head.
+    pub fn pop_refill(&self, hint: Option<(usize, u8)>, max_batch: usize) -> Vec<QueueItem> {
+        assert!(max_batch > 0, "max_batch must be positive");
+        let mut g = self.inner.lock().unwrap();
+        if g.items.is_empty() {
+            return Vec::new();
+        }
+        let (task, bucket) = match self.policy {
+            SchedPolicy::Edf => {
+                let head = Self::head_index(&g.items, SchedPolicy::Edf);
+                let it = &g.items[head];
+                (it.req.task, it.req.len_bucket)
+            }
+            SchedPolicy::Fifo => {
+                let hinted = hint.filter(|&(t, b)| {
+                    g.items.iter().any(|it| it.req.task == t && it.req.len_bucket == b)
+                });
+                match hinted {
+                    Some(key) => key,
+                    None => {
+                        let it = &g.items[0];
+                        (it.req.task, it.req.len_bucket)
+                    }
+                }
+            }
+        };
+        Self::drain_key(&mut g.items, task, bucket, max_batch)
     }
 }
 
@@ -550,6 +644,73 @@ mod tests {
         let left = q.drain_remaining();
         assert_eq!(left.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn refill_is_nonblocking_and_respects_max_batch() {
+        let q = BoundedQueue::new(64, Clock::virt());
+        assert!(q.pop_refill(None, 4).is_empty(), "empty queue refills empty, instantly");
+        for i in 0..6 {
+            q.push(req(i, 0));
+        }
+        let b = q.pop_refill(None, 4);
+        assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        let b = q.pop_refill(None, 4);
+        assert_eq!(b.len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn refill_never_advances_the_clock() {
+        let clock = Clock::virt();
+        let q = BoundedQueue::new(8, clock.clone());
+        q.push(req(0, 0));
+        let b = q.pop_refill(None, 16);
+        assert_eq!(b.len(), 1);
+        assert_eq!(clock.now_s(), 0.0, "no straggler window: refill must not spend clock time");
+    }
+
+    #[test]
+    fn refill_prefers_the_hinted_key_under_fifo() {
+        let q = BoundedQueue::new(64, Clock::virt());
+        // interleaved tenants; FIFO head is tenant 0, but the worker just
+        // executed a tenant-1 batch
+        for i in 0..8 {
+            q.push(req(i, i % 2));
+        }
+        let b = q.pop_refill(Some((1, 0)), 16);
+        assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![1, 3, 5, 7]);
+        // hint key drained → falls back to the FIFO head
+        let b = q.pop_refill(Some((1, 0)), 16);
+        assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn refill_never_mixes_len_buckets() {
+        let q = BoundedQueue::new(64, Clock::virt());
+        for i in 0..8 {
+            let mut r = req(i, 0);
+            r.len_bucket = (i % 2) as u8;
+            q.push(r);
+        }
+        let b = q.pop_refill(None, 16);
+        assert!(b.iter().all(|it| it.req.len_bucket == 0));
+        let b = q.pop_refill(None, 16);
+        assert!(b.iter().all(|it| it.req.len_bucket == 1));
+    }
+
+    #[test]
+    fn edf_refill_always_includes_the_min_deadline_head_ignoring_hints() {
+        // tenant 0 loose SLO, tenant 1 tight SLO
+        let slos = vec![Some(10.0), Some(0.05)];
+        let q = BoundedQueue::with_policy(64, Clock::virt(), SchedPolicy::Edf, slos);
+        q.push(req_at(0, 0, 0.0));
+        q.push(req_at(1, 1, 0.2)); // deadline 0.25 — queue-wide EDF head
+        q.push(req_at(2, 0, 0.1));
+        // a stale tenant-0 hint must NOT override urgency under EDF
+        let b = q.pop_refill(Some((0, 0)), 16);
+        assert_eq!(b.iter().map(|it| it.req.id).collect::<Vec<_>>(), vec![1]);
+        assert!((b[0].deadline_s - 0.25).abs() < 1e-9);
     }
 
     /// Regression for the O(cap·batch) phase-3 drain: a deep queue of

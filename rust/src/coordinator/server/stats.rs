@@ -140,6 +140,9 @@ pub struct ServeStats {
     /// periodic metrics snapshots `(clock_s, exposition)` taken every
     /// `ServerConfig::metrics_period_s` of clock time
     pub metrics_dumps: Vec<(f64, String)>,
+    /// wire-level counters, present when the run came through the socket
+    /// front door ([`super::net::NetServer::serve`])
+    pub net: Option<super::net::NetStats>,
 }
 
 /// Mutable accumulation state shared (behind a mutex) by the worker pool.
@@ -330,6 +333,7 @@ impl Collector {
             trace: None,
             metrics_text: String::new(),
             metrics_dumps: Vec::new(),
+            net: None,
         }
     }
 }

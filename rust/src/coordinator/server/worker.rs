@@ -42,7 +42,8 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::chaos::ChaosRuntime;
-use super::queue::{BoundedQueue, QueueItem};
+use super::net::{NetBridge, NetDone, WireStatus};
+use super::queue::{BatchMode, BoundedQueue, QueueItem};
 use super::registry::Registry;
 use super::stats::{Collector, Completion};
 use super::ServerConfig;
@@ -76,6 +77,11 @@ pub(super) struct ServeCtx<'a, 'reg> {
     /// workers currently running their loop; 0 means nothing can settle
     /// queued work (the lockstep wait bails instead of spinning forever)
     pub live_workers: &'a AtomicUsize,
+    /// socket-ingress bridge: when serving over the network front door,
+    /// workers report each request's terminal outcome here so the
+    /// reactor can answer the originating connection. `None` for the
+    /// in-process trace replay.
+    pub net: Option<&'a NetBridge>,
 }
 
 /// Partition a drained batch into live and expired requests — a request
@@ -129,16 +135,37 @@ fn worker_run(
     mh: &MetricsHandle,
 ) -> Result<()> {
     let cfg = ctx.cfg;
+    // continuous batching: the key of the last drained batch, offered to
+    // `pop_refill` as a locality hint so a worker keeps draining the
+    // bucket it just warmed up (EDF ignores the hint — urgency wins)
+    let mut refill_key: Option<(usize, u8)> = None;
     loop {
-        let batch = ctx.queue.pop_batch(cfg.max_batch, cfg.max_wait);
+        let batch = match cfg.batching {
+            BatchMode::Fixed => ctx.queue.pop_batch(cfg.max_batch, cfg.max_wait),
+            BatchMode::Continuous => {
+                // refill immediately from whatever is queued right now —
+                // no `max_wait` straggler window, so a partial batch costs
+                // zero queue time instead of aging the whole backlog
+                let b = ctx.queue.pop_refill(refill_key, cfg.max_batch);
+                if b.is_empty() {
+                    // nothing queued: fall back to the blocking pop so an
+                    // idle worker parks instead of spinning, and so close
+                    // + drain still means a clean empty-batch exit
+                    ctx.queue.pop_batch(cfg.max_batch, cfg.max_wait)
+                } else {
+                    mh.counter_add("serve_refilled_batches_total", 1);
+                    b
+                }
+            }
+        };
         if batch.is_empty() {
             // closed and drained — graceful exit
             return Ok(());
         }
+        refill_key = Some((batch[0].req.task, batch[0].req.len_bucket));
         // one now_ns read; the f64 seconds derive from it so span
         // timestamps and latency math agree bit-for-bit
-        let popped_ns = ctx.clock.now_ns();
-        let popped_s = popped_ns as f64 * 1e-9;
+        let (popped_ns, popped_s) = ctx.clock.stamp();
         // chaos: a pending kill token means this worker "crashes" here,
         // mid-drain. The popped batch is redelivered, not processed —
         // at-least-once semantics keep the conservation law intact.
@@ -200,6 +227,18 @@ fn worker_run(
                     );
                 }
             }
+            if let Some(nb) = ctx.net {
+                for (it, w) in expired.iter().zip(&waits) {
+                    nb.push(NetDone {
+                        id: it.req.id,
+                        status: WireStatus::Expired,
+                        pred: -1,
+                        lat_us: (w * 1e3) as u64,
+                    });
+                }
+            }
+            // outcomes land in the bridge before the settled count moves,
+            // so a reactor that stops on a settle target still drains them
             ctx.settled.fetch_add(expired.len(), Ordering::SeqCst);
         }
         if live.is_empty() {
@@ -207,8 +246,7 @@ fn worker_run(
         }
 
         let bsize = live.len();
-        let exec_start_ns = ctx.clock.now_ns();
-        let exec_start_s = exec_start_ns as f64 * 1e-9;
+        let (exec_start_ns, exec_start_s) = ctx.clock.stamp();
         let simulate = cfg.service.map(|m| m.simulate).unwrap_or(false);
         // in simulate mode there are no logits: pred = -1, correct =
         // false, accuracy is meaningless by construction — the run
@@ -235,8 +273,7 @@ fn worker_run(
             // summed costs; on a wall clock the cost acts as a floor.
             ctx.clock.sleep_until(exec_start_s + m.cost_s(bsize));
         }
-        let done_ns = ctx.clock.now_ns();
-        let done_s = done_ns as f64 * 1e-9;
+        let (done_ns, done_s) = ctx.clock.stamp();
         if let Some(tt) = tt.as_mut() {
             // one X-slice per batch on this worker's track
             tt.emit(
@@ -278,6 +315,14 @@ fn worker_run(
                 },
                 correct,
             );
+            if let Some(nb) = ctx.net {
+                nb.push(NetDone {
+                    id: it.req.id,
+                    status: WireStatus::Ok,
+                    pred,
+                    lat_us: ((done_s - it.req.arrival_s) * 1e6) as u64,
+                });
+            }
         }
         drop(g);
         if let Some(tt) = tt.as_mut() {

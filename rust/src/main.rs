@@ -22,7 +22,8 @@ use anyhow::{bail, Context, Result};
 use svdquant::artifact::{write_artifact, QuantizedArtifact};
 use svdquant::calib::CalibStats;
 use svdquant::coordinator::server::{
-    serve, ChaosPlan, Registry, SchedPolicy, ServerConfig, ServiceModel,
+    serve, BatchMode, ChaosPlan, NetConfig, NetServer, Registry, SchedPolicy, ServerConfig,
+    ServeStats, ServiceModel,
 };
 use svdquant::coordinator::sweep::{run_sweep, SweepConfig, SweepResults};
 use svdquant::coordinator::{quantize_checkpoint, Artifacts, PreserveSpec, QuantizePipeline};
@@ -589,6 +590,19 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     .switch(
         "lockstep",
         "serialize the serve for bit-deterministic traces (virtual clock only)",
+    )
+    .flag(
+        "listen",
+        None,
+        "serve over TCP instead of in-process: bind this address (e.g. \
+         127.0.0.1:0), replay the generated trace through a loopback wire \
+         client, and report wire-level stats alongside the serving books",
+    )
+    .flag(
+        "batching",
+        Some("fixed"),
+        "batch assembly mode: fixed size-or-deadline windows, or continuous \
+         refill from the live queue (no straggler wait)",
     );
     let a = p.parse(rest)?;
     let tasks = a.list("tasks");
@@ -769,8 +783,12 @@ fn serve_deployed(
         tracing,
         lockstep: a.bool("lockstep"),
         metrics_period_s: (metrics_period > 0.0).then_some(metrics_period),
+        batching: BatchMode::parse(a.str("batching")?)?,
     };
-    let stats = serve(&registry, &trace, &scfg)?;
+    let stats = match a.get("listen") {
+        Some(addr) => serve_over_socket(addr, &registry, &trace, &scfg)?,
+        None => serve(&registry, &trace, &scfg)?,
+    };
     println!(
         "served {} of {} offered ({} shed, {} expired) in {:.2}s on {} workers [{}]: \
          {:.1} req/s, p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms, mean batch {:.1}, \
@@ -850,7 +868,111 @@ fn serve_deployed(
             t.accuracy, slo
         );
     }
+    if let Some(n) = &stats.net {
+        println!(
+            "  wire: {} conns, {} frames in / {} out, {} bytes in / {} out, \
+             {} parse errors, {} refused closed, {} responses dropped",
+            n.connections,
+            n.frames_in,
+            n.frames_out,
+            n.bytes_in,
+            n.bytes_out,
+            n.parse_errors,
+            n.refused_closed,
+            n.responses_dropped
+        );
+    }
     Ok(())
+}
+
+/// `serve --listen`: bind the socket front door, replay the generated
+/// trace through a pipelining loopback wire client on a second thread,
+/// and stop the server once every response has come back. The same
+/// trace therefore exercises the full network path — framing, reactor
+/// admission, response routing — with the same books as the in-process
+/// replay.
+fn serve_over_socket(
+    addr: &str,
+    registry: &Registry<'_>,
+    trace: &[svdquant::data::TaggedRequest],
+    scfg: &ServerConfig,
+) -> Result<ServeStats> {
+    use svdquant::coordinator::server::net::proto::{encode_request, read_response, WireRequest};
+
+    // pipeline window: small enough that responses always fit the
+    // server's write buffer, large enough to keep the wire busy
+    const WINDOW: usize = 256;
+
+    let srv = NetServer::bind(addr, NetConfig::default())?;
+    let bound = srv.local_addr()?;
+    let stop = srv.stop_handle();
+    println!("listening on {bound}; replaying {} requests over loopback", trace.len());
+    let reqs: Vec<WireRequest> = trace
+        .iter()
+        .map(|r| WireRequest {
+            task: r.task as u16,
+            sample: r.sample as u32,
+            len_bucket: r.len_bucket,
+            // 0 on the wire means "stamp at decode", so a t=0 arrival is
+            // clamped to 1ns to stay an explicit replay stamp
+            arrival_ns: ((r.arrival_s * 1e9).round() as u64).max(1),
+            corr: r.id as u32,
+        })
+        .collect();
+    let driver = std::thread::spawn(move || -> Result<[usize; 5]> {
+        use std::io::Write;
+        let mut sock = std::net::TcpStream::connect(bound)
+            .with_context(|| format!("wire client connecting to {bound}"))?;
+        // if chaos wipes out every worker, accepted requests only get
+        // their Expired responses once drain begins — so a stalled read
+        // requests the stop itself instead of deadlocking
+        sock.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+        let mut stop_sent = false;
+        let mut tally = [0usize; 5]; // indexed by WireStatus discriminant
+        for window in reqs.chunks(WINDOW) {
+            for r in window {
+                sock.write_all(&encode_request(r)).context("wire client send")?;
+            }
+            let mut got = 0;
+            while got < window.len() {
+                match read_response(&mut sock) {
+                    Ok(resp) => {
+                        tally[resp.status as usize] += 1;
+                        got += 1;
+                    }
+                    Err(e) if !stop_sent => {
+                        let timed_out = e.downcast_ref::<std::io::Error>().map_or(false, |io| {
+                            matches!(
+                                io.kind(),
+                                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                            )
+                        });
+                        if !timed_out {
+                            return Err(e.context("wire client receive"));
+                        }
+                        stop_sent = true;
+                        stop.stop(); // drain answers the rest (Expired)
+                    }
+                    Err(e) => return Err(e.context("wire client receive")),
+                }
+            }
+        }
+        stop.stop();
+        Ok(tally)
+    });
+    let res = srv.serve(registry, scfg);
+    // close the listener before joining: if the serve failed before
+    // accepting, the stranded wire client unblocks with an error instead
+    // of deadlocking the join
+    drop(srv);
+    let drv = driver.join().expect("wire client thread panicked");
+    let stats = res?;
+    let tally = drv?;
+    println!(
+        "  wire client: {} ok, {} shed, {} closed, {} expired, {} protocol errors",
+        tally[0], tally[1], tally[2], tally[3], tally[4]
+    );
+    Ok(stats)
 }
 
 fn cmd_artifact(rest: &[String]) -> Result<()> {

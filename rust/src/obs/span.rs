@@ -60,6 +60,12 @@ pub enum EventKind {
     QueueClose,
     /// Periodic metrics snapshot was written (virtual-time dump).
     MetricsDump,
+    /// Network front door accepted a client connection (`arg` carries
+    /// the connection id). Not part of the request lifecycle grammar.
+    ConnOpen,
+    /// Network front door closed a client connection (`arg` carries the
+    /// connection id). Not part of the request lifecycle grammar.
+    ConnClose,
 }
 
 impl EventKind {
@@ -78,6 +84,8 @@ impl EventKind {
             EventKind::WorkerExit => "worker_exit",
             EventKind::QueueClose => "queue_close",
             EventKind::MetricsDump => "metrics_dump",
+            EventKind::ConnOpen => "conn_open",
+            EventKind::ConnClose => "conn_close",
         }
     }
 }

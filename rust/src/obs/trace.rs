@@ -332,6 +332,12 @@ impl TraceData {
             EventKind::WorkerExit => instant("worker_exit".to_string(), "t", vec![]),
             EventKind::QueueClose => instant("queue_close".to_string(), "g", vec![]),
             EventKind::MetricsDump => instant("metrics_dump".to_string(), "g", vec![]),
+            EventKind::ConnOpen => {
+                instant("conn_open".to_string(), "g", vec![("conn", num_u(e.arg))])
+            }
+            EventKind::ConnClose => {
+                instant("conn_close".to_string(), "g", vec![("conn", num_u(e.arg))])
+            }
         }
     }
 

@@ -77,6 +77,16 @@ impl Clock {
         }
     }
 
+    /// One clock read as both integer nanoseconds and derived `f64`
+    /// seconds: `(now_ns, now_ns · 1e-9)`. Span timestamps and latency
+    /// arithmetic derived from the *same* read can never disagree; the
+    /// two-read spelling (`now_ns()` then `now_s()`) can straddle a
+    /// concurrent virtual advance and skew the books by a batch cost.
+    pub fn stamp(&self) -> (u64, f64) {
+        let ns = self.now_ns();
+        (ns, ns as f64 * 1e-9)
+    }
+
     /// Block (wall) or advance the timeline (virtual) until `t_s` seconds
     /// after the epoch. A target already in the past is a no-op — virtual
     /// time never moves backwards (`fetch_max`), so concurrent sleepers
@@ -164,6 +174,16 @@ mod tests {
         let a = w.now_ns();
         let b = w.now_ns();
         assert!(b >= a, "wall now_ns is monotone");
+    }
+
+    #[test]
+    fn stamp_is_one_read_with_exact_derived_seconds() {
+        let c = Clock::virt();
+        c.advance(0.125);
+        let (ns, s) = c.stamp();
+        assert_eq!(ns, 125_000_000);
+        assert_eq!(s, ns as f64 * 1e-9);
+        assert_eq!(s, c.now_s());
     }
 
     #[test]

@@ -1,0 +1,597 @@
+//! Hermetic network tests for the socket front door (DESIGN.md §12):
+//! every test binds `127.0.0.1:0` (an ephemeral loopback port), drives
+//! the server over a real TCP connection, and stops it with either a
+//! settle target ([`NetConfig::stop_after`]) or a [`StopHandle`] — no
+//! fixed ports, no sleeps, no external processes, and the whole suite
+//! holds to the repo's wall-time budget under plain `cargo test -q`.
+//!
+//! The concurrency assertions are interleaving-invariant, mirroring
+//! `rust/tests/serving.rs`: the conservation law (`completions + shed +
+//! expired == offered`), exactly-one-response-per-request, bounded
+//! write buffers under a slow reader, and no worker hangs after a
+//! client vanishes mid-request — true under every legal schedule.
+//!
+//! The frame decoder is additionally property-tested: decoding is
+//! invariant under arbitrary byte-split chunkings, and malformed or
+//! oversize frames produce protocol errors — never a panic, and never
+//! a queue permit (parse rejects stay outside the conservation law,
+//! which the mixed valid/garbage end-to-end test pins).
+#![cfg(unix)]
+
+use std::collections::HashSet;
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use svdquant::coordinator::server::net::proto::{
+    self, encode_request, read_response, FrameDecoder, FrameError, WireRequest, WireStatus,
+    REQ_BODY_LEN, RESP_BODY_LEN, WIRE_VERSION,
+};
+use svdquant::coordinator::server::{
+    BatchMode, ChaosPlan, NetConfig, NetServer, Registry, ServerConfig, ServiceModel,
+};
+use svdquant::fixture;
+use svdquant::util::clock::Clock;
+use svdquant::util::proptest::{check, Shrink};
+
+/// Honor the CI thread matrix (see `rust/tests/serving.rs`).
+fn init_threads() {
+    if let Ok(v) = std::env::var("SVDQUANT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            svdquant::util::pool::set_global_parallelism(n);
+        }
+    }
+}
+
+/// A valid request frame for tenant `task`, sample `sample`. The
+/// arrival stamp is 1ns — an explicit virtual-clock replay stamp, so
+/// admission timing is independent of when the reactor decodes it.
+fn wire_req(task: u16, sample: u32, corr: u32) -> WireRequest {
+    WireRequest { task, sample, len_bucket: 0, arrival_ns: 1, corr }
+}
+
+/// Connect to `addr` with a failsafe read timeout: a server bug makes a
+/// test *fail* on the timeout instead of hanging the suite.
+fn connect(addr: std::net::SocketAddr) -> TcpStream {
+    let sock = TcpStream::connect(addr).expect("connecting to loopback server");
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    sock
+}
+
+#[test]
+fn pipelined_requests_on_one_connection_all_answer_and_conserve() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm_a, ds_a) = fixture::deployed_fixture(&cfg, 21, 8, 10).unwrap();
+    let (qm_b, ds_b) = fixture::deployed_fixture(&cfg, 22, 8, 12).unwrap();
+    let mut reg = Registry::new();
+    reg.add("alpha", &qm_a, &ds_a);
+    reg.add("beta", &qm_b, &ds_b);
+
+    let n = 60u32;
+    let srv = NetServer::bind(
+        "127.0.0.1:0",
+        NetConfig { stop_after: Some(n as usize), ..NetConfig::default() },
+    )
+    .unwrap();
+    let addr = srv.local_addr().unwrap();
+    let scfg = ServerConfig {
+        workers: 2,
+        clock: Clock::virt(),
+        batching: BatchMode::Continuous,
+        ..Default::default()
+    };
+
+    let t0 = Instant::now();
+    let (stats, resps) = std::thread::scope(|s| {
+        let server = s.spawn(|| srv.serve(&reg, &scfg));
+        let mut sock = connect(addr);
+        // pipeline everything in one write: the reactor must decode and
+        // admit frames back-to-back off a single connection
+        let mut wire = Vec::new();
+        for i in 0..n {
+            let (task, samples) = if i % 2 == 0 { (0u16, 10u32) } else { (1u16, 12u32) };
+            wire.extend(encode_request(&wire_req(task, i % samples, 1000 + i)));
+        }
+        sock.write_all(&wire).unwrap();
+        let resps: Vec<_> =
+            (0..n).map(|_| read_response(&mut sock).expect("response")).collect();
+        (server.join().expect("server thread").unwrap(), resps)
+    });
+    assert!(t0.elapsed().as_secs_f64() < 5.0, "hermetic suite must stay fast");
+
+    // exactly one response per correlation id, every one completed
+    let corrs: HashSet<u32> = resps.iter().map(|r| r.corr).collect();
+    assert_eq!(corrs.len(), n as usize, "duplicate or missing correlation ids");
+    assert!(corrs.iter().all(|c| (1000..1000 + n).contains(c)));
+    assert!(resps.iter().all(|r| r.status == WireStatus::Ok), "all must complete: {resps:?}");
+    assert!(resps.iter().all(|r| r.pred >= 0), "real forward pass returns an argmax");
+
+    // the same books as the in-process replay, fed from the wire
+    assert_eq!(stats.offered, n as usize);
+    assert_eq!(stats.completions + stats.shed + stats.expired, stats.offered);
+    assert_eq!(stats.completions, n as usize);
+    let net = stats.net.expect("socket ingress reports wire counters");
+    assert_eq!(net.connections, 1);
+    assert_eq!(net.frames_in, n as u64);
+    assert_eq!(net.frames_out, n as u64);
+    assert_eq!(net.parse_errors, 0);
+    assert_eq!(net.refused_closed, 0);
+    assert_eq!(net.responses_dropped, 0);
+    assert_eq!(net.bytes_in, n as u64 * (4 + REQ_BODY_LEN) as u64);
+    assert_eq!(net.bytes_out, n as u64 * (4 + RESP_BODY_LEN) as u64);
+    // wire metrics surface in the exposition (deterministic families only)
+    assert!(stats.metrics_text.contains("serve_net_frames_in_total"));
+    assert!(!stats.metrics_text.contains("high_water"), "flush-timing metric must stay out");
+}
+
+#[test]
+fn slow_reader_backpressure_keeps_write_buffers_bounded() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 23, 8, 10).unwrap();
+    let reg = Registry::single("only", &qm, &ds);
+
+    let n = 300u32;
+    let write_buf_cap = 256usize;
+    let max_inflight = 8usize;
+    let srv = NetServer::bind(
+        "127.0.0.1:0",
+        NetConfig {
+            write_buf_cap,
+            max_inflight_per_conn: max_inflight,
+            stop_after: Some(n as usize),
+            ..NetConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = srv.local_addr().unwrap();
+    let scfg = ServerConfig {
+        workers: 2,
+        clock: Clock::virt(),
+        batching: BatchMode::Continuous,
+        service: Some(ServiceModel { base_s: 1e-4, per_req_s: 1e-5, simulate: true }),
+        ..Default::default()
+    };
+
+    let (stats, resps) = std::thread::scope(|s| {
+        let server = s.spawn(|| srv.serve(&reg, &scfg));
+        let mut sock = connect(addr);
+        // fire the whole burst before reading a single response: the
+        // server may only buffer what the read gates admit
+        let mut wire = Vec::new();
+        for i in 0..n {
+            wire.extend(encode_request(&wire_req(0, i % 10, i)));
+        }
+        sock.write_all(&wire).unwrap();
+        let resps: Vec<_> =
+            (0..n).map(|_| read_response(&mut sock).expect("response")).collect();
+        (server.join().expect("server thread").unwrap(), resps)
+    });
+
+    assert_eq!(resps.len(), n as usize);
+    assert!(resps.iter().all(|r| r.status == WireStatus::Ok));
+    let corrs: HashSet<u32> = resps.iter().map(|r| r.corr).collect();
+    assert_eq!(corrs.len(), n as usize);
+    assert_eq!(stats.completions, n as usize);
+    assert_eq!(stats.completions + stats.shed + stats.expired, stats.offered);
+
+    // the backpressure bound: unsent responses never exceed the cap plus
+    // one frame per admitted-but-unanswered request (outcomes already
+    // owed are delivered regardless — refusing them would deadlock)
+    let net = stats.net.unwrap();
+    let frame = 4 + RESP_BODY_LEN;
+    assert!(
+        net.write_buf_high_water <= write_buf_cap + (max_inflight + 1) * frame,
+        "write buffer grew past the backpressure bound: {} > {} + {}",
+        net.write_buf_high_water,
+        write_buf_cap,
+        (max_inflight + 1) * frame
+    );
+    assert_eq!(net.frames_out, n as u64);
+    assert_eq!(net.responses_dropped, 0);
+}
+
+#[test]
+fn client_disconnect_mid_request_leaves_no_hang_and_balanced_books() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 24, 8, 10).unwrap();
+    let reg = Registry::single("only", &qm, &ds);
+
+    let k = 12u32;
+    let srv = NetServer::bind(
+        "127.0.0.1:0",
+        NetConfig { stop_after: Some(k as usize), ..NetConfig::default() },
+    )
+    .unwrap();
+    let addr = srv.local_addr().unwrap();
+    let scfg = ServerConfig {
+        workers: 2,
+        clock: Clock::virt(),
+        service: Some(ServiceModel { base_s: 1e-4, per_req_s: 1e-5, simulate: true }),
+        ..Default::default()
+    };
+
+    let t0 = Instant::now();
+    let stats = std::thread::scope(|s| {
+        let server = s.spawn(|| srv.serve(&reg, &scfg));
+        let mut sock = connect(addr);
+        let mut wire = Vec::new();
+        for i in 0..k {
+            wire.extend(encode_request(&wire_req(0, i % 10, i)));
+        }
+        // a torn 13th frame, then vanish without reading anything
+        wire.extend(&encode_request(&wire_req(0, 0, 999))[..10]);
+        sock.write_all(&wire).unwrap();
+        drop(sock);
+        server.join().expect("server thread").unwrap()
+    });
+    assert!(t0.elapsed().as_secs_f64() < 5.0, "disconnect must not hang the serve");
+
+    // all admitted work completes and the books balance even though the
+    // replies had nowhere to go; the torn frame never became a request
+    assert_eq!(stats.offered, k as usize);
+    assert_eq!(stats.completions + stats.shed + stats.expired, stats.offered);
+    assert_eq!(stats.completions, k as usize);
+    let net = stats.net.unwrap();
+    assert_eq!(net.frames_in, k as u64, "the partial frame must not decode");
+    assert_eq!(net.parse_errors, 0);
+    assert_eq!(net.connections, 1);
+}
+
+#[test]
+fn deadline_expiry_answers_on_the_wire() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 25, 8, 10).unwrap();
+    let reg = Registry::single("only", &qm, &ds);
+
+    // a zero deadline with a straggler window: every popped request has
+    // aged past its (zero) budget by pop time, so all of them expire —
+    // deterministically, because the batcher's max_wait burn advances
+    // the virtual clock past the 1ns arrival stamps
+    let n = 8u32;
+    let srv = NetServer::bind(
+        "127.0.0.1:0",
+        NetConfig { stop_after: Some(n as usize), ..NetConfig::default() },
+    )
+    .unwrap();
+    let addr = srv.local_addr().unwrap();
+    let scfg = ServerConfig {
+        workers: 1,
+        clock: Clock::virt(),
+        deadline: Some(Duration::ZERO),
+        ..Default::default()
+    };
+
+    let (stats, resps) = std::thread::scope(|s| {
+        let server = s.spawn(|| srv.serve(&reg, &scfg));
+        let mut sock = connect(addr);
+        let mut wire = Vec::new();
+        for i in 0..n {
+            wire.extend(encode_request(&wire_req(0, i % 10, i)));
+        }
+        sock.write_all(&wire).unwrap();
+        let resps: Vec<_> =
+            (0..n).map(|_| read_response(&mut sock).expect("response")).collect();
+        (server.join().expect("server thread").unwrap(), resps)
+    });
+
+    assert!(resps.iter().all(|r| r.status == WireStatus::Expired), "{resps:?}");
+    assert!(resps.iter().all(|r| r.pred == -1));
+    assert!(resps.iter().all(|r| r.lat_us > 0), "expiries report their queue wait");
+    assert_eq!(stats.expired, n as usize);
+    assert_eq!(stats.completions, 0);
+    assert_eq!(stats.completions + stats.shed + stats.expired, stats.offered);
+}
+
+#[test]
+fn shed_and_strand_sweep_answer_on_the_wire() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 26, 8, 10).unwrap();
+    let reg = Registry::single("only", &qm, &ds);
+
+    // kill the only worker before the first arrival: nothing ever
+    // drains, so the tiny queue fills (at most cap, +1 for the dying
+    // worker's pop-and-redeliver window) and every later push sheds.
+    // After the explicit stop, the strand sweep must answer the
+    // accepted-but-stranded requests as Expired — a client never hangs
+    // on a request the server has given up on.
+    let n = 40u32;
+    let queue_cap = 4usize;
+    let srv = NetServer::bind("127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = srv.local_addr().unwrap();
+    let stop = srv.stop_handle();
+    let scfg = ServerConfig {
+        workers: 1,
+        queue_cap,
+        max_batch: 1,
+        chaos: Some(ChaosPlan::parse("kill@0").unwrap()),
+        clock: Clock::virt(),
+        ..Default::default()
+    };
+
+    let (stats, front, swept) = std::thread::scope(|s| {
+        let server = s.spawn(|| srv.serve(&reg, &scfg));
+        let mut sock = connect(addr);
+        let mut wire = Vec::new();
+        for i in 0..n {
+            wire.extend(encode_request(&wire_req(0, i % 10, i)));
+        }
+        sock.write_all(&wire).unwrap();
+        // per-connection responses are FIFO, and with the worker dead
+        // the last request is guaranteed to shed — so reading up to its
+        // correlation id collects exactly the front-door verdicts
+        let mut front = Vec::new();
+        loop {
+            let r = read_response(&mut sock).expect("front-door verdict");
+            let last = r.corr == n - 1;
+            front.push(r);
+            if last {
+                break;
+            }
+        }
+        stop.stop();
+        // everything still unanswered is stranded in the queue; the
+        // sweep owes each one an Expired response before shutdown
+        let swept: Vec<_> = (front.len()..n as usize)
+            .map(|_| read_response(&mut sock).expect("strand-sweep response"))
+            .collect();
+        (server.join().expect("server thread").unwrap(), front, swept)
+    });
+
+    assert!(front.iter().all(|r| r.status == WireStatus::Shed), "{front:?}");
+    assert!(swept.iter().all(|r| r.status == WireStatus::Expired), "{swept:?}");
+    // cap or cap+1 requests were admitted (the dying worker may briefly
+    // pop one before redelivering), the rest shed
+    assert!(
+        (queue_cap..=queue_cap + 1).contains(&swept.len()),
+        "expected ~queue_cap stranded requests, got {}",
+        swept.len()
+    );
+    assert_eq!(stats.worker_kills, 1);
+    assert_eq!(stats.completions, 0);
+    assert_eq!(stats.shed, front.len());
+    assert_eq!(stats.expired, swept.len());
+    assert_eq!(stats.offered, n as usize);
+    assert_eq!(stats.completions + stats.shed + stats.expired, stats.offered);
+    // every correlation id answered exactly once across both phases
+    let corrs: HashSet<u32> =
+        front.iter().chain(&swept).map(|r| r.corr).collect();
+    assert_eq!(corrs.len(), n as usize);
+}
+
+#[test]
+fn malformed_frames_answer_error_and_never_take_a_queue_permit() {
+    init_threads();
+    let cfg = fixture::tiny_config();
+    let (qm, ds) = fixture::deployed_fixture(&cfg, 27, 8, 10).unwrap();
+    let reg = Registry::single("only", &qm, &ds);
+
+    let valid = 10u32;
+    let srv = NetServer::bind(
+        "127.0.0.1:0",
+        NetConfig { stop_after: Some(valid as usize), ..NetConfig::default() },
+    )
+    .unwrap();
+    let addr = srv.local_addr().unwrap();
+    let scfg = ServerConfig {
+        workers: 2,
+        clock: Clock::virt(),
+        service: Some(ServiceModel { base_s: 1e-4, per_req_s: 1e-5, simulate: true }),
+        ..Default::default()
+    };
+
+    let (stats, resps) = std::thread::scope(|s| {
+        let server = s.spawn(|| srv.serve(&reg, &scfg));
+        let mut sock = connect(addr);
+        // interleave valid frames with three kinds of garbage: a bad
+        // version byte (unrecoverable corr → echoed as 0), an unknown
+        // tenant, and an out-of-range sample index
+        let mut wire = Vec::new();
+        let mut junk = 0u32;
+        for i in 0..valid {
+            wire.extend(encode_request(&wire_req(0, i % 10, i)));
+            match i % 3 {
+                0 => {
+                    let mut bad = encode_request(&wire_req(0, 0, 7000 + i));
+                    bad[4] = WIRE_VERSION + 9;
+                    wire.extend(bad);
+                }
+                1 => wire.extend(encode_request(&wire_req(9, 0, 7000 + i))),
+                _ => wire.extend(encode_request(&wire_req(0, 10_000, 7000 + i))),
+            }
+            junk += 1;
+        }
+        sock.write_all(&wire).unwrap();
+        let resps: Vec<_> = (0..valid + junk)
+            .map(|_| read_response(&mut sock).expect("response"))
+            .collect();
+        (server.join().expect("server thread").unwrap(), resps)
+    });
+
+    let oks: Vec<_> = resps.iter().filter(|r| r.status == WireStatus::Ok).collect();
+    let errs: Vec<_> = resps.iter().filter(|r| r.status == WireStatus::Error).collect();
+    assert_eq!(oks.len(), valid as usize, "{resps:?}");
+    assert_eq!(errs.len(), valid as usize, "one error verdict per garbage frame");
+    let ok_corrs: HashSet<u32> = oks.iter().map(|r| r.corr).collect();
+    assert_eq!(ok_corrs, (0..valid).collect::<HashSet<_>>());
+
+    // the conservation law covers exactly the valid requests: garbage
+    // was refused at the door and never took a queue permit
+    assert_eq!(stats.offered, valid as usize);
+    assert_eq!(stats.completions, valid as usize);
+    assert_eq!(stats.completions + stats.shed + stats.expired, stats.offered);
+    let net = stats.net.unwrap();
+    assert_eq!(net.parse_errors, valid as u64);
+    assert_eq!(net.frames_in, (valid * 2) as u64, "well-framed garbage still counts as a frame");
+}
+
+// ---------------------------------------------------------------------------
+// decoder properties: chunking invariance and malformed-stream safety
+// ---------------------------------------------------------------------------
+
+/// One decode outcome, normalized for comparison across chunkings.
+type Outcome = Result<WireRequest, FrameError>;
+
+/// Pull every decodable frame, stopping after a fatal error (which is
+/// sticky by contract). Returns true when the stream turned fatal.
+fn drain_outcomes(d: &mut FrameDecoder, out: &mut Vec<Outcome>) -> bool {
+    loop {
+        match d.next_frame() {
+            None => return false,
+            Some(Ok(r)) => out.push(Ok(r)),
+            Some(Err(e @ FrameError::Frame { .. })) => out.push(Err(e)),
+            Some(Err(e @ FrameError::Fatal(_))) => {
+                out.push(Err(e));
+                return true;
+            }
+        }
+    }
+}
+
+/// A byte stream assembled from well-formed, malformed, and garbage
+/// segments, plus the chunk sizes it will be fed in.
+#[derive(Debug)]
+struct StreamCase {
+    bytes: Vec<u8>,
+    chunks: Vec<usize>,
+    max_frame: usize,
+}
+
+impl Shrink for StreamCase {
+    fn shrink(&self) -> Vec<Self> {
+        if self.bytes.len() <= 1 {
+            return Vec::new();
+        }
+        let half = self.bytes.len() / 2;
+        vec![
+            StreamCase {
+                bytes: self.bytes[..half].to_vec(),
+                chunks: self.chunks.clone(),
+                max_frame: self.max_frame,
+            },
+            StreamCase {
+                bytes: self.bytes[half..].to_vec(),
+                chunks: self.chunks.clone(),
+                max_frame: self.max_frame,
+            },
+        ]
+    }
+}
+
+#[test]
+fn decode_is_invariant_under_arbitrary_chunking() {
+    check(
+        "frame decode is byte-split invariant, malformed segments included",
+        |rng| {
+            let mut bytes = Vec::new();
+            for _ in 0..rng.range(1, 12) {
+                match rng.range(0, 4) {
+                    // a well-formed request
+                    0 | 1 => bytes.extend(encode_request(&WireRequest {
+                        task: rng.range(0, 4) as u16,
+                        sample: rng.range(0, 1000) as u32,
+                        len_bucket: rng.range(0, 3) as u8,
+                        arrival_ns: rng.range(0, 1_000_000) as u64,
+                        corr: rng.range(0, 1 << 20) as u32,
+                    })),
+                    // a well-framed body with a corrupted header byte
+                    2 => {
+                        let mut f = encode_request(&wire_req(0, 0, 1));
+                        let at = 4 + rng.range(0, 2);
+                        f[at] ^= 0x5A;
+                        bytes.extend(f);
+                    }
+                    // raw garbage: may desync into a fatal length prefix
+                    _ => {
+                        for _ in 0..rng.range(1, 30) {
+                            bytes.push(rng.range(0, 256) as u8);
+                        }
+                    }
+                }
+            }
+            // random cut widths; the tail chunk takes the remainder
+            let chunks = (0..rng.range(1, 20)).map(|_| rng.range(1, 40)).collect();
+            StreamCase { bytes, chunks, max_frame: rng.range(REQ_BODY_LEN, 256) }
+        },
+        |case| {
+            // one-shot decode
+            let mut one = FrameDecoder::new(case.max_frame);
+            one.feed(&case.bytes);
+            let mut want = Vec::new();
+            drain_outcomes(&mut one, &mut want);
+
+            // chunked decode: same bytes, arbitrary splits
+            let mut d = FrameDecoder::new(case.max_frame);
+            let mut got = Vec::new();
+            let mut off = 0usize;
+            let mut ci = 0usize;
+            let mut fatal = false;
+            while off < case.bytes.len() && !fatal {
+                let w = case.chunks.get(ci).copied().unwrap_or(case.bytes.len());
+                ci += 1;
+                let end = (off + w).min(case.bytes.len());
+                d.feed(&case.bytes[off..end]);
+                off = end;
+                fatal = drain_outcomes(&mut d, &mut got);
+            }
+            if got != want {
+                return Err(format!("chunked {got:?} != one-shot {want:?}"));
+            }
+            if fatal {
+                // fatal errors are sticky: the poisoned stream keeps
+                // reporting fatal, consuming nothing
+                match d.next_frame() {
+                    Some(Err(FrameError::Fatal(_))) => {}
+                    other => return Err(format!("fatal must be sticky, got {other:?}")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn oversize_length_prefix_is_fatal_for_the_connection_stream() {
+    // the reactor-facing contract behind `drain_frames`: an oversize
+    // prefix yields Fatal without consuming bytes, so a poisoned
+    // connection can answer once and stop reading at a deterministic
+    // stream position
+    let mut d = FrameDecoder::new(64);
+    d.feed(&encode_request(&wire_req(0, 3, 11)));
+    d.feed(&(65u32).to_le_bytes());
+    d.feed(&[0u8; 8]);
+    let mut out = Vec::new();
+    let fatal = drain_outcomes(&mut d, &mut out);
+    assert!(fatal);
+    assert_eq!(out.len(), 2, "the good frame decodes, then the stream dies: {out:?}");
+    assert_eq!(out[0].as_ref().unwrap().corr, 11);
+    assert!(matches!(out[1], Err(FrameError::Fatal(_))));
+}
+
+#[test]
+fn wire_status_bytes_roundtrip() {
+    for s in [
+        WireStatus::Ok,
+        WireStatus::Shed,
+        WireStatus::Closed,
+        WireStatus::Expired,
+        WireStatus::Error,
+    ] {
+        assert_eq!(WireStatus::from_u8(s as u8).unwrap(), s);
+    }
+    assert!(WireStatus::from_u8(250).is_err());
+    // response encoding roundtrips through the client reader
+    let resp = proto::encode_response(&proto::WireResponse {
+        corr: 77,
+        status: WireStatus::Shed,
+        pred: -1,
+        lat_us: 42,
+    });
+    let got = read_response(&mut &resp[..]).unwrap();
+    assert_eq!(got.corr, 77);
+    assert_eq!(got.status, WireStatus::Shed);
+}
